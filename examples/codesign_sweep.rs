@@ -1,0 +1,70 @@
+//! Hardware-algorithm co-design sweep: how the sharing window, expanded
+//! margin, and alpha-record length trade quality against performance —
+//! the design space the paper's Figs. 23-24 explore.
+//!
+//! Run with: `cargo run --release --example codesign_sweep`
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::Coordinator;
+use lumina::metrics::psnr;
+
+fn run(cfg: LuminaConfig, frames: usize) -> anyhow::Result<(f64, f64, f64)> {
+    let mut coord = Coordinator::new(cfg)?;
+    let (mut t, mut q, mut hits, mut lookups) = (0.0, 0.0, 0u64, 0u64);
+    for i in 0..frames {
+        let pose = coord.trajectory.poses[i];
+        let (reference, _, _, _) = coord.reference_frame(&pose);
+        let f = coord.step()?;
+        t += f.report.time_s;
+        q += psnr(&reference, &f.image);
+        hits += f.report.cache.hits;
+        lookups += f.report.cache.lookups;
+    }
+    Ok((
+        q / frames as f64,
+        t / frames as f64,
+        hits as f64 / lookups.max(1) as f64,
+    ))
+}
+
+fn base_cfg() -> LuminaConfig {
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.count = 15_000;
+    cfg.camera.frames = 12;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let frames = 10;
+    println!("== sharing window sweep (S2-Acc, margin 2) ==");
+    println!("{:>8} {:>10} {:>10}", "window", "psnr dB", "ms/frame");
+    for window in [1usize, 2, 4, 6, 8, 12] {
+        let mut cfg = base_cfg();
+        cfg.variant = HardwareVariant::S2Acc;
+        cfg.s2.sharing_window = window;
+        cfg.s2.expanded_margin = 2;
+        let (q, t, _) = run(cfg, frames)?;
+        println!("{:>8} {:>10.2} {:>10.3}", window, q, t * 1e3);
+    }
+
+    println!("\n== expanded margin sweep (S2-Acc, window 6) ==");
+    println!("{:>8} {:>10} {:>10}", "margin", "psnr dB", "ms/frame");
+    for margin in [0usize, 1, 2, 4, 8] {
+        let mut cfg = base_cfg();
+        cfg.variant = HardwareVariant::S2Acc;
+        cfg.s2.expanded_margin = margin;
+        let (q, t, _) = run(cfg, frames)?;
+        println!("{:>8} {:>10.2} {:>10.3}", margin, q, t * 1e3);
+    }
+
+    println!("\n== alpha-record sweep (RC-Acc) ==");
+    println!("{:>8} {:>10} {:>10} {:>10}", "k", "psnr dB", "ms/frame", "hit-rate");
+    for k in [1usize, 2, 3, 5, 7, 10] {
+        let mut cfg = base_cfg();
+        cfg.variant = HardwareVariant::RcAcc;
+        cfg.rc.alpha_record = k;
+        let (q, t, h) = run(cfg, frames)?;
+        println!("{:>8} {:>10.2} {:>10.3} {:>9.1}%", k, q, t * 1e3, h * 100.0);
+    }
+    Ok(())
+}

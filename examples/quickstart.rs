@@ -1,0 +1,40 @@
+//! Quickstart: render a few frames of a synthetic scene with the full
+//! Lumina pipeline and print per-frame metrics.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    // A small scene so this finishes in seconds.
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.count = 20_000;
+    cfg.camera.frames = 10;
+    cfg.variant = HardwareVariant::Lumina;
+
+    let mut coord = Coordinator::new(cfg)?;
+    println!(
+        "scene: {} Gaussians | image: {}x{} | variant: {}",
+        coord.scene.len(),
+        coord.intr.width,
+        coord.intr.height,
+        coord.cfg.variant.label()
+    );
+
+    let mut report = lumina::coordinator::RunReport::new("quickstart");
+    while coord.remaining() > 0 {
+        let frame = coord.step()?;
+        println!(
+            "frame {:>2}: {:>7.3} ms | raster {:>7.3} ms | hit {:>5.1}% | sorted={}",
+            frame.report.frame,
+            frame.report.time_s * 1e3,
+            frame.report.raster_s * 1e3,
+            frame.report.cache.hit_rate() * 100.0,
+            frame.report.sorted_this_frame
+        );
+        report.push(frame.report);
+    }
+    println!("\n{}", report.summary());
+    Ok(())
+}

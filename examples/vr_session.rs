@@ -1,0 +1,110 @@
+//! End-to-end driver (DESIGN.md §"End-to-end validation"): a simulated
+//! VR session exercising every layer of the stack on a real workload:
+//!
+//! 1. loads the AOT HLO artifacts and executes them via PJRT (Layer 1/2
+//!    compute on the request path),
+//! 2. runs the full LuminSys frame loop — S^2 speculative sorting,
+//!    radiance caching, LuminCore simulation (Layer 3),
+//! 3. cross-checks one rendered tile per sampled frame against the AOT
+//!    kernel,
+//! 4. reports the paper's headline metrics (FPS, speedup vs GPU, energy,
+//!    hit rate, PSNR) for the session.
+//!
+//! Run with: `cargo run --release --example vr_session`
+//! (requires `make artifacts`)
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::constants::TILE;
+use lumina::coordinator::Coordinator;
+use lumina::metrics::psnr;
+use lumina::runtime::ArtifactRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // --- Layer 1/2: load AOT artifacts -------------------------------
+    let rt = ArtifactRuntime::load("artifacts")?;
+    println!("PJRT platform: {} | artifacts: {:?}", rt.platform(), rt.artifact_names());
+
+    // --- Session config ----------------------------------------------
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.count = 40_000;
+    cfg.camera.frames = 30;
+    cfg.variant = HardwareVariant::Lumina;
+    let mut lumina_coord = Coordinator::new(cfg.clone())?;
+    cfg.variant = HardwareVariant::Gpu;
+    let mut gpu_coord = Coordinator::new(cfg)?;
+
+    println!(
+        "session: {} frames @ {} FPS trajectory | {} Gaussians",
+        lumina_coord.cfg.camera.frames,
+        lumina_coord.trajectory.fps,
+        lumina_coord.scene.len()
+    );
+
+    let mut lumina_report = lumina::coordinator::RunReport::new("Lumina");
+    let mut gpu_report = lumina::coordinator::RunReport::new("GPU");
+    let mut psnr_sum = 0.0;
+    let mut checked_tiles = 0usize;
+    let mut q_frames = 0u32;
+
+    for i in 0..lumina_coord.cfg.camera.frames {
+        let pose = lumina_coord.trajectory.poses[i];
+        let frame = lumina_coord.step()?;
+        gpu_report.push(gpu_coord.step()?.report);
+
+        // Quality vs the exact pipeline every 5th frame.
+        if i % 5 == 0 {
+            let (reference, _, _, _) = lumina_coord.reference_frame(&pose);
+            psnr_sum += psnr(&reference, &frame.image);
+            q_frames += 1;
+
+            // Cross-check one tile against the AOT Pallas kernel via PJRT:
+            // proves the Rust hot path and the Layer-1 kernel agree.
+            let p = lumina::pipeline::project::project(
+                &lumina_coord.scene, &pose, &lumina_coord.intr, 0.2, 1000.0, 0.0,
+            );
+            let bins =
+                lumina::pipeline::sort::bin_and_sort(&p, &lumina_coord.intr, TILE, 0.0);
+            let tile = (0..bins.lists.len())
+                .max_by_key(|&t| bins.lists[t].len())
+                .unwrap();
+            let list = &bins.lists[tile];
+            if !list.is_empty() {
+                let (ox, oy) = bins.tile_origin(tile);
+                let means: Vec<[f32; 2]> =
+                    list.iter().map(|&i| p.means[i as usize]).collect();
+                let conics: Vec<[f32; 3]> = list
+                    .iter()
+                    .map(|&i| {
+                        let c = p.conics[i as usize];
+                        [c.a, c.b, c.c]
+                    })
+                    .collect();
+                let opacs: Vec<f32> = list.iter().map(|&i| p.opacity[i as usize]).collect();
+                let colors: Vec<[f32; 3]> =
+                    list.iter().map(|&i| p.colors[i as usize]).collect();
+                let hlo = rt.raster_tile_full(&means, &conics, &opacs, &colors, [ox, oy])?;
+                let (native, _, _, _, _) = lumina::pipeline::raster::composite_pixel(
+                    &p, list, ox + 8.5, oy + 8.5, 0,
+                );
+                let off = 8 * TILE + 8;
+                let diff = (native[0] - hlo.color[off * 3]).abs();
+                assert!(diff < 1e-3, "HLO/native divergence {diff}");
+                checked_tiles += 1;
+            }
+        }
+        lumina_report.push(frame.report);
+    }
+
+    println!("\n--- session results ---");
+    println!("{}", gpu_report.summary());
+    println!("{}", lumina_report.summary());
+    println!(
+        "speedup vs GPU: {:.2}x | energy: {:.2}x | PSNR vs exact: {:.2} dB | \
+         HLO tile checks passed: {}",
+        gpu_report.mean_time_s() / lumina_report.mean_time_s(),
+        lumina_report.mean_energy_j() / gpu_report.mean_energy_j(),
+        psnr_sum / q_frames as f64,
+        checked_tiles
+    );
+    Ok(())
+}

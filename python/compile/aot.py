@@ -1,0 +1,119 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all shapes fixed; the Rust runtime pads to them):
+  raster_tile.hlo.txt   one tile x G_CHUNK Gaussians, carried (C, T, done)
+  raster_batch.hlo.txt  TILE_BATCH tiles at once (vmapped)
+  alpha_front.hlo.txt   frontend alphas, one tile x G_CHUNK
+  sh_eval.hlo.txt       SH_CHUNK Gaussians of degree-3 SH color
+  manifest.json         shapes + compositing constants for runtime checks
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import common, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """(name, fn, example_args) for every AOT artifact."""
+    g = common.G_CHUNK
+    t = common.TILE
+    b = common.TILE_BATCH
+    n = common.SH_CHUNK
+    raster_args = (
+        _spec((g, 2)), _spec((g, 3)), _spec((g,)), _spec((g, 3)),
+        _spec((2,)), _spec((t, t, 3)), _spec((t, t)), _spec((t, t)),
+    )
+    batch_args = (
+        _spec((b, g, 2)), _spec((b, g, 3)), _spec((b, g)), _spec((b, g, 3)),
+        _spec((b, 2)), _spec((b, t, t, 3)), _spec((b, t, t)), _spec((b, t, t)),
+    )
+    return [
+        ("raster_tile", model.raster_chunk, raster_args),
+        ("raster_batch", model.raster_chunk_batch, batch_args),
+        ("alpha_front", model.alpha_chunk, (_spec((g, 2)), _spec((g, 3)), _spec((g,)), _spec((2,)))),
+        ("sh_eval", model.sh_chunk, (_spec((n, 3)), _spec((n, 16, 3)))),
+    ]
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "constants": {
+            "tile": common.TILE,
+            "g_chunk": common.G_CHUNK,
+            "tile_batch": common.TILE_BATCH,
+            "sh_chunk": common.SH_CHUNK,
+            "alpha_min": common.ALPHA_MIN,
+            "alpha_max": common.ALPHA_MAX,
+            "t_eps": common.T_EPS,
+        },
+        "artifacts": {},
+    }
+    for name, fn, args in entry_points():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "num_inputs": len(args),
+            "input_shapes": [list(a.shape) for a in args],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TOML twin for the Rust runtime (parsed by util::minitoml).
+    with open(os.path.join(out_dir, "manifest.toml"), "w") as f:
+        f.write("version = 1\n\n[constants]\n")
+        for k, v in manifest["constants"].items():
+            f.write(f"{k} = {v}\n")
+        for name, a in manifest["artifacts"].items():
+            f.write(f"\n[artifacts.{name}]\n")
+            f.write(f"file = \"{a['file']}\"\n")
+            f.write(f"num_inputs = {a['num_inputs']}\n")
+            f.write(f"sha256 = \"{a['sha256']}\"\n")
+            f.write(f"bytes = {a['bytes']}\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build(args.out)
+    print(f"manifest -> {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Shared constants and the scene binary format for the Lumina stack.
+
+These constants are mirrored in ``rust/src/constants.rs`` — the two sides
+must agree bit-for-bit on the compositing semantics (Eqn. 1 of the paper)
+so that the native Rust rasterizer, the Pallas kernels, and the AOT HLO
+artifacts all produce identical images.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+# --- Compositing semantics (match the official 3DGS rasterizer) ----------
+TILE = 16  # image tile edge, pixels (paper: 16x16 tiles)
+ALPHA_MIN = 1.0 / 255.0  # "significant Gaussian" threshold (paper Sec. 2.1)
+ALPHA_MAX = 0.99  # opacity clamp of the reference CUDA rasterizer
+T_EPS = 1e-4  # early-termination threshold theta on transmittance
+G_CHUNK = 256  # Gaussians per rasterization chunk (AOT artifact shape)
+TILE_BATCH = 32  # tiles per batched-raster artifact
+SH_CHUNK = 4096  # Gaussians per SH-eval artifact call
+SH_C0 = 0.28209479177387814  # degree-0 real SH constant
+
+# --- Scene binary format ("LGSC") -----------------------------------------
+# Shared with rust/src/scene/io.rs. Little-endian:
+#   magic:  4 bytes  b"LGSC"
+#   version:u32      (1)
+#   count:  u32      N
+#   sh_deg: u32      (3)
+#   pos:    f32[N,3]
+#   scale:  f32[N,3]      (linear scale, not log)
+#   quat:   f32[N,4]      (w, x, y, z; unnormalized ok)
+#   opacity:f32[N]        (post-sigmoid, in [0,1])
+#   sh:     f32[N,16,3]   (RGB SH coefficients, degree 3)
+SCENE_MAGIC = b"LGSC"
+SCENE_VERSION = 1
+SH_COEFFS = 16
+
+
+def write_scene(path: str, pos, scale, quat, opacity, sh) -> None:
+    """Serialize a Gaussian scene to the LGSC binary format."""
+    n = pos.shape[0]
+    assert pos.shape == (n, 3) and scale.shape == (n, 3)
+    assert quat.shape == (n, 4) and opacity.shape == (n,)
+    assert sh.shape == (n, SH_COEFFS, 3)
+    with open(path, "wb") as f:
+        f.write(SCENE_MAGIC)
+        f.write(struct.pack("<III", SCENE_VERSION, n, 3))
+        for arr in (pos, scale, quat, opacity, sh):
+            f.write(np.ascontiguousarray(arr, dtype=np.float32).tobytes())
+
+
+def read_scene(path: str):
+    """Deserialize an LGSC scene. Returns (pos, scale, quat, opacity, sh)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != SCENE_MAGIC:
+            raise ValueError(f"bad scene magic {magic!r}")
+        version, n, sh_deg = struct.unpack("<III", f.read(12))
+        if version != SCENE_VERSION:
+            raise ValueError(f"unsupported scene version {version}")
+        if sh_deg != 3:
+            raise ValueError(f"unsupported sh degree {sh_deg}")
+
+        def rd(shape):
+            cnt = int(np.prod(shape))
+            buf = f.read(4 * cnt)
+            return np.frombuffer(buf, dtype="<f4").reshape(shape).copy()
+
+        pos = rd((n, 3))
+        scale = rd((n, 3))
+        quat = rd((n, 4))
+        opacity = rd((n,))
+        sh = rd((n, SH_COEFFS, 3))
+    return pos, scale, quat, opacity, sh

@@ -1,0 +1,207 @@
+"""Cache-aware fine-tuning (paper Sec. 3.3, Eqn. 4).
+
+The radiance cache assumes the first few significant Gaussians a ray hits
+are *small*, so matching their IDs implies matching rays. Oversized
+Gaussians break that assumption and cause artifacts (paper Fig. 13). The
+fix is a scale-constrained loss:
+
+    L_total = L_orig + alpha * L_scale(S, theta)
+
+where S is the geometric mean of a Gaussian's three scale parameters and
+L_scale penalizes S > theta. Sorting and cache lookup stay outside the
+gradient (the permutation is stop-gradient'ed in model.render_image).
+
+This module runs at *build time*: it synthesizes a scene with a tail of
+oversized Gaussians, fine-tunes it against its own renders, and writes
+both the original and fine-tuned scenes to LGSC files that the Rust fig21
+harness replays through the radiance cache.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, model
+
+
+def synth_scene(rng, n: int, big_frac: float = 0.1, extent: float = 1.2):
+    """Procedural Gaussian cloud with a fraction of oversized Gaussians.
+
+    Mirrors the statistics the Rust scene generator targets: cluster-heavy
+    placement, log-normal scales, mostly-opaque splats — plus ``big_frac``
+    of Gaussians with ~10x scale to trigger the Fig. 13 failure mode.
+    """
+    pos = rng.normal(0.0, extent / 2.0, (n, 3))
+    scale = np.exp(rng.normal(np.log(0.04), 0.4, (n, 3)))
+    nbig = int(n * big_frac)
+    big_idx = rng.choice(n, nbig, replace=False)
+    scale[big_idx] *= 10.0
+    quat = rng.normal(size=(n, 4))
+    opac_logit = rng.normal(1.0, 1.0, n)
+    sh = rng.normal(0.0, 0.25, (n, 16, 3))
+    sh[:, 0, :] += rng.uniform(-0.5, 1.0, (n, 3))
+    return dict(
+        pos=jnp.asarray(pos, jnp.float32),
+        log_scale=jnp.asarray(np.log(scale), jnp.float32),
+        quat=jnp.asarray(quat, jnp.float32),
+        opacity_logit=jnp.asarray(opac_logit, jnp.float32),
+        sh=jnp.asarray(sh, jnp.float32),
+    )
+
+
+def orbit_cameras(n_views: int, radius: float = 3.0, height: float = 0.5):
+    """Camera ring around the origin; returns list of (view, eye)."""
+    out = []
+    for i in range(n_views):
+        th = 2.0 * np.pi * i / n_views
+        eye = jnp.array([radius * np.sin(th), height, -radius * np.cos(th)], jnp.float32)
+        out.append((model.look_at(eye, jnp.zeros(3)), eye))
+    return out
+
+
+def scale_loss(log_scale, theta: float):
+    """L_scale: mean penalty on geometric-mean scale exceeding theta."""
+    s_geo = jnp.exp(jnp.mean(log_scale, axis=-1))  # geometric mean of 3 scales
+    return jnp.mean(jnp.maximum(s_geo - theta, 0.0) ** 2)
+
+
+def l1_ssim_loss(img, target):
+    """L_orig: the 3DGS training loss shape (L1 + 0.2 * (1 - SSIM-lite)).
+
+    SSIM-lite uses 8x8 local windows via average pooling — enough signal
+    for fine-tuning-scale images without a full Gaussian pyramid.
+    """
+    l1 = jnp.mean(jnp.abs(img - target))
+
+    def pool(x):
+        h, w = x.shape[0] // 8, x.shape[1] // 8
+        return x[: h * 8, : w * 8].reshape(h, 8, w, 8, -1).mean(axis=(1, 3))
+
+    mu_x, mu_y = pool(img), pool(target)
+    mu_x2, mu_y2 = pool(img**2), pool(target**2)
+    mu_xy = pool(img * target)
+    var_x = jnp.maximum(mu_x2 - mu_x**2, 0.0)
+    var_y = jnp.maximum(mu_y2 - mu_y**2, 0.0)
+    cov = mu_xy - mu_x * mu_y
+    c1, c2 = 0.01**2, 0.03**2
+    ssim = ((2 * mu_x * mu_y + c1) * (2 * cov + c2)) / (
+        (mu_x**2 + mu_y**2 + c1) * (var_x + var_y + c2)
+    )
+    return l1 + 0.2 * (1.0 - jnp.mean(ssim))
+
+
+def finetune(
+    params,
+    cameras,
+    targets,
+    hw,
+    intr,
+    steps: int = 200,
+    lr: float = 5e-3,
+    alpha: float = 0.0,
+    theta: float = 0.08,
+):
+    """Adam fine-tune of all Gaussian parameters against target renders.
+
+    alpha = 0 disables the scale constraint (the ablation baseline).
+    Returns (params, history) where history logs total/orig/scale losses.
+    """
+    h, w = hw
+    fx, fy, cx, cy = intr
+
+    def total_loss(p, view, eye, target):
+        img = model.render_image(p, view, eye, h, w, fx, fy, cx, cy)
+        lo = l1_ssim_loss(img, target)
+        ls = scale_loss(p["log_scale"], theta)
+        return lo + alpha * ls, (lo, ls)
+
+    grad_fn = jax.jit(jax.value_and_grad(total_loss, has_aux=True))
+
+    # Minimal Adam (no optax dependency in the build image).
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    history = []
+    for step in range(steps):
+        k = step % len(cameras)
+        (loss, (lo, ls)), g = grad_fn(params, cameras[k][0], cameras[k][1], targets[k])
+        t = step + 1
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        history.append(dict(step=step, total=float(loss), orig=float(lo), scale=float(ls)))
+    return params, history
+
+
+def params_to_scene_arrays(params):
+    """Convert the optimization pytree to the LGSC array tuple."""
+    pos = np.asarray(params["pos"], np.float32)
+    scale = np.exp(np.asarray(params["log_scale"], np.float32))
+    quat = np.asarray(params["quat"], np.float32)
+    q = quat / (np.linalg.norm(quat, axis=-1, keepdims=True) + 1e-12)
+    opac = 1.0 / (1.0 + np.exp(-np.asarray(params["opacity_logit"], np.float32)))
+    sh = np.asarray(params["sh"], np.float32)
+    return pos, scale.astype(np.float32), q.astype(np.float32), opac.astype(np.float32), sh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/finetune", help="output dir")
+    ap.add_argument("--n", type=int, default=512, help="Gaussian count")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--views", type=int, default=8)
+    ap.add_argument("--res", type=int, default=64)
+    ap.add_argument("--alpha", type=float, default=0.05, help="L_scale weight")
+    ap.add_argument("--theta", type=float, default=0.08, help="scale threshold")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    rng = np.random.default_rng(args.seed)
+    params = synth_scene(rng, args.n)
+    cams = orbit_cameras(args.views)
+    hw = (args.res, args.res)
+    intr = (args.res * 0.9, args.res * 0.9, args.res / 2, args.res / 2)
+
+    render = jax.jit(
+        lambda p, view, eye: model.render_image(p, view, eye, *hw, *intr)
+    )
+    targets = [render(params, v, e) for v, e in cams]
+
+    base = params_to_scene_arrays(params)
+    common.write_scene(os.path.join(args.out, "scene_base.lgsc"), *base)
+
+    tuned, hist = finetune(
+        params, cams, targets, hw, intr, steps=args.steps,
+        alpha=args.alpha, theta=args.theta,
+    )
+    common.write_scene(
+        os.path.join(args.out, "scene_finetuned.lgsc"), *params_to_scene_arrays(tuned)
+    )
+    # Ablation: same budget, no scale constraint.
+    plain, hist0 = finetune(
+        params, cams, targets, hw, intr, steps=args.steps, alpha=0.0
+    )
+    common.write_scene(
+        os.path.join(args.out, "scene_plain.lgsc"), *params_to_scene_arrays(plain)
+    )
+    with open(os.path.join(args.out, "history.json"), "w") as f:
+        json.dump({"with_scale": hist, "without_scale": hist0}, f, indent=2)
+    print(
+        f"finetune done: L_scale {hist[0]['scale']:.5f} -> {hist[-1]['scale']:.5f}, "
+        f"L_orig {hist[0]['orig']:.4f} -> {hist[-1]['orig']:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+* ``raster_tile``  -- chunked front-to-back alpha compositing over a tile.
+* ``alpha_front``  -- dense frontend alpha/significance pass.
+* ``sh_eval``      -- degree-3 SH view-dependent color.
+* ``ref``          -- pure-jnp oracles for all of the above.
+"""
+
+from .alpha_front import alpha_front
+from .raster_tile import raster_tile, raster_tile_fresh
+from .sh_eval import sh_eval
+
+__all__ = ["alpha_front", "raster_tile", "raster_tile_fresh", "sh_eval"]

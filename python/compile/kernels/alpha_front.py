@@ -1,0 +1,52 @@
+"""Pallas kernel: the LuminCore *frontend* pass in isolation.
+
+Computes the alpha of every Gaussian at every pixel of a tile — the cheap,
+dense computation the paper assigns to the NRU frontend PEs. The Rust
+coordinator uses this to (a) form radiance-cache tags (IDs of the first k
+significant Gaussians per pixel) and (b) drive the cycle-accurate simulator
+with real significance masks.
+
+Lowered with ``interpret=True`` (see raster_tile.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import ALPHA_MAX
+
+
+def _alpha_kernel(means_ref, conics_ref, opacs_ref, origin_ref, out_ref, *, tile: int):
+    row = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 0)
+    col = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 1)
+    px = origin_ref[0] + col + 0.5
+    py = origin_ref[1] + row + 0.5
+
+    means = means_ref[...]
+    conics = conics_ref[...]
+    opacs = opacs_ref[...]
+
+    # Dense over (G, tile, tile): broadcast Gaussians against the pixel
+    # block. This is exactly the frontend's "apply to all Gaussians" shape.
+    dx = px[None, :, :] - means[:, 0][:, None, None]
+    dy = py[None, :, :] - means[:, 1][:, None, None]
+    a = conics[:, 0][:, None, None]
+    b = conics[:, 1][:, None, None]
+    c = conics[:, 2][:, None, None]
+    power = -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy
+    alpha = jnp.minimum(ALPHA_MAX, opacs[:, None, None] * jnp.exp(power))
+    out_ref[...] = jnp.where(power > 0.0, 0.0, alpha)
+
+
+def alpha_front(means, conics, opacs, origin, tile: int):
+    """Alphas of a Gaussian chunk over a tile: (G,2),(G,3),(G,),(2,) -> (G,T,T)."""
+    g = means.shape[0]
+    kernel = functools.partial(_alpha_kernel, tile=tile)
+    out_shape = jax.ShapeDtypeStruct((g, tile, tile), jnp.float32)
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+        means, conics, opacs, origin
+    )

@@ -1,0 +1,119 @@
+"""Pallas kernel: per-tile front-to-back alpha compositing (the paper's
+Rasterization hot-spot, Eqn. 1).
+
+Hardware-adaptation note (DESIGN.md §Hardware-Adaptation): the paper fixes
+GPU warp divergence with LuminCore's frontend/backend split. On a
+TPU-shaped target the same insight becomes *masked dense lanes*: the kernel
+evaluates the cheap alpha test for the whole 16x16 pixel block at once
+(VPU-dense, the "frontend"), and carries a per-pixel (transmittance, done)
+mask through a ``fori_loop`` over depth-sorted Gaussians so the expensive
+accumulate only contributes where the mask is live (the "backend"), with no
+divergent control flow. The HBM->VMEM schedule the paper expresses with its
+double-buffered Feature Buffer is expressed here by chunking: callers stream
+G_CHUNK Gaussians per invocation and carry (C, T, done) between chunks.
+
+Lowered with ``interpret=True`` — the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU perf is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import ALPHA_MAX, ALPHA_MIN, T_EPS, TILE
+
+
+def _raster_kernel(
+    means_ref,
+    conics_ref,
+    opacs_ref,
+    colors_ref,
+    origin_ref,
+    c_in_ref,
+    t_in_ref,
+    done_in_ref,
+    c_out_ref,
+    t_out_ref,
+    done_out_ref,
+    *,
+    tile: int,
+):
+    # Pixel-center grid for this tile (tile x tile), built from 2D iota so
+    # the kernel also lowers on real TPU targets (1D iota is not allowed).
+    row = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 0)
+    col = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 1)
+    px = origin_ref[0] + col + 0.5
+    py = origin_ref[1] + row + 0.5
+
+    means = means_ref[...]
+    conics = conics_ref[...]
+    opacs = opacs_ref[...]
+    colors = colors_ref[...]
+    n = means.shape[0]
+
+    def body(i, carry):
+        c, t, done = carry
+        mean = means[i]
+        conic = conics[i]
+        dx = px - mean[0]
+        dy = py - mean[1]
+        power = -0.5 * (conic[0] * dx * dx + conic[2] * dy * dy) - conic[1] * dx * dy
+        alpha = jnp.minimum(ALPHA_MAX, opacs[i] * jnp.exp(power))
+        alpha = jnp.where(power > 0.0, 0.0, alpha)
+        sig = alpha >= ALPHA_MIN
+        test_t = t * (1.0 - alpha)
+        live = done < 0.5
+        newly_done = sig & (test_t < T_EPS) & live
+        active = sig & (test_t >= T_EPS) & live
+        w = jnp.where(active, alpha * t, 0.0)
+        c = c + w[..., None] * colors[i]
+        t = jnp.where(active, test_t, t)
+        done = jnp.where(newly_done, 1.0, done)
+        return c, t, done
+
+    c0 = c_in_ref[...]
+    t0 = t_in_ref[...]
+    done0 = done_in_ref[...]
+    c, t, done = jax.lax.fori_loop(0, n, body, (c0, t0, done0))
+    c_out_ref[...] = c
+    t_out_ref[...] = t
+    done_out_ref[...] = done
+
+
+def raster_tile(means, conics, opacs, colors, origin, c_in, t_in, done_in):
+    """Composite one chunk of depth-sorted Gaussians onto one tile.
+
+    Args:
+      means:  (G, 2) projected 2D means (pixel coords).
+      conics: (G, 3) inverse 2D covariance packed (a, b, c).
+      opacs:  (G,)   opacity after sigmoid; padding rows use 0.
+      colors: (G, 3) per-Gaussian RGB (already SH-evaluated for this view).
+      origin: (2,)   tile origin in pixels (x, y).
+      c_in:   (T, T, 3) accumulated color carried from previous chunks.
+      t_in:   (T, T)    carried transmittance (starts at 1).
+      done_in:(T, T)    carried termination flag as f32 0/1.
+
+    Returns (c_out, t_out, done_out) with the same shapes as the carries.
+    """
+    tile = c_in.shape[0]
+    kernel = functools.partial(_raster_kernel, tile=tile)
+    out_shapes = (
+        jax.ShapeDtypeStruct((tile, tile, 3), jnp.float32),
+        jax.ShapeDtypeStruct((tile, tile), jnp.float32),
+        jax.ShapeDtypeStruct((tile, tile), jnp.float32),
+    )
+    return pl.pallas_call(kernel, out_shape=out_shapes, interpret=True)(
+        means, conics, opacs, colors, origin, c_in, t_in, done_in
+    )
+
+
+def raster_tile_fresh(means, conics, opacs, colors, origin, tile: int = TILE):
+    """Convenience wrapper starting from an empty carry (first chunk)."""
+    c0 = jnp.zeros((tile, tile, 3), jnp.float32)
+    t0 = jnp.ones((tile, tile), jnp.float32)
+    d0 = jnp.zeros((tile, tile), jnp.float32)
+    return raster_tile(means, conics, opacs, colors, origin, c0, t0, d0)

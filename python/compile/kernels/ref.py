@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: slow, obvious implementations of
+per-tile alpha compositing (Eqn. 1 of the paper), the frontend alpha pass,
+and degree-3 spherical-harmonic color evaluation. The Pallas kernels and
+the Rust native rasterizer are both validated against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import ALPHA_MAX, ALPHA_MIN, SH_C0, T_EPS
+
+# Real SH basis constants, degrees 1-3 (same as the reference 3DGS impl).
+SH_C1 = 0.4886025119029199
+SH_C2 = (
+    1.0925484305920792,
+    -1.0925484305920792,
+    0.31539156525252005,
+    -1.0925484305920792,
+    0.5462742152960396,
+)
+SH_C3 = (
+    -0.5900435899266435,
+    2.890611442640554,
+    -0.4570457994644658,
+    0.3731763325901154,
+    -0.4570457994644658,
+    1.445305721320277,
+    -0.5900435899266435,
+)
+
+
+def pixel_grid(origin, tile: int):
+    """Pixel-center coordinates of a ``tile`` x ``tile`` block at ``origin``.
+
+    Returns (px, py) each of shape (tile, tile); pixel centers are at
+    integer coordinates + 0.5.
+    """
+    ys = origin[1] + jnp.arange(tile, dtype=jnp.float32) + 0.5
+    xs = origin[0] + jnp.arange(tile, dtype=jnp.float32) + 0.5
+    py, px = jnp.meshgrid(ys, xs, indexing="ij")
+    return px, py
+
+
+def gaussian_alpha(mean, conic, opac, px, py):
+    """Alpha of one projected Gaussian at pixel centers (px, py).
+
+    Matches the official rasterizer: positive exponent -> discard,
+    alpha clamped to ALPHA_MAX, conic is the inverse 2D covariance
+    packed as (a, b, c) with exponent -0.5*(a dx^2 + c dy^2) - b dx dy.
+    """
+    dx = px - mean[0]
+    dy = py - mean[1]
+    power = -0.5 * (conic[0] * dx * dx + conic[2] * dy * dy) - conic[1] * dx * dy
+    alpha = jnp.minimum(ALPHA_MAX, opac * jnp.exp(power))
+    return jnp.where(power > 0.0, 0.0, alpha)
+
+
+def alpha_front_ref(means, conics, opacs, origin, tile: int):
+    """Frontend pass: alpha of every Gaussian at every pixel of the tile.
+
+    Returns (G, tile, tile) float32. This is what the LuminCore frontend
+    PEs compute; significance is alpha >= ALPHA_MIN.
+    """
+    px, py = pixel_grid(origin, tile)
+    out = []
+    for i in range(means.shape[0]):
+        out.append(gaussian_alpha(means[i], conics[i], opacs[i], px, py))
+    return jnp.stack(out, axis=0)
+
+
+def raster_tile_ref(means, conics, opacs, colors, origin, c_in, t_in, done_in, tile: int):
+    """Reference front-to-back compositing over one tile (Eqn. 1).
+
+    Semantics (official 3DGS rasterizer):
+      * skip Gaussians with positive exponent or alpha < ALPHA_MIN,
+      * test_T = T * (1 - alpha); if test_T < T_EPS the pixel is done and
+        this Gaussian is NOT accumulated,
+      * otherwise C += alpha * T * color and T = test_T.
+
+    Carries (c, t, done) so chunked invocations compose exactly.
+    """
+    px, py = pixel_grid(origin, tile)
+    c = jnp.asarray(c_in, dtype=jnp.float32)
+    t = jnp.asarray(t_in, dtype=jnp.float32)
+    done = jnp.asarray(done_in, dtype=jnp.float32)
+    for i in range(means.shape[0]):
+        alpha = gaussian_alpha(means[i], conics[i], opacs[i], px, py)
+        sig = alpha >= ALPHA_MIN
+        test_t = t * (1.0 - alpha)
+        newly_done = sig & (test_t < T_EPS) & (done < 0.5)
+        active = sig & (test_t >= T_EPS) & (done < 0.5)
+        w = jnp.where(active, alpha * t, 0.0)
+        c = c + w[..., None] * colors[i]
+        t = jnp.where(active, test_t, t)
+        done = jnp.where(newly_done, 1.0, done)
+    return c, t, done
+
+
+def raster_pixel_scalar(means, conics, opacs, colors, px: float, py: float):
+    """Scalar (numpy, per-pixel) compositor — the most literal transcription
+    of the algorithm, used to cross-check the vectorized references and as
+    documentation of the exact skip/terminate order."""
+    c = np.zeros(3, dtype=np.float64)
+    t = 1.0
+    n_iter = 0
+    n_sig = 0
+    for i in range(len(means)):
+        n_iter += 1
+        dx = px - means[i][0]
+        dy = py - means[i][1]
+        power = (
+            -0.5 * (conics[i][0] * dx * dx + conics[i][2] * dy * dy)
+            - conics[i][1] * dx * dy
+        )
+        if power > 0.0:
+            continue
+        alpha = min(ALPHA_MAX, opacs[i] * np.exp(power))
+        if alpha < ALPHA_MIN:
+            continue
+        n_sig += 1
+        test_t = t * (1.0 - alpha)
+        if test_t < T_EPS:
+            break
+        c += alpha * t * np.asarray(colors[i], dtype=np.float64)
+        t = test_t
+    return c, t, n_iter, n_sig
+
+
+def sh_basis(dirs):
+    """Degree-3 real SH basis evaluated at unit directions (N, 3) -> (N, 16)."""
+    x, y, z = dirs[:, 0], dirs[:, 1], dirs[:, 2]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+    one = jnp.ones_like(x)
+    basis = [
+        SH_C0 * one,
+        -SH_C1 * y,
+        SH_C1 * z,
+        -SH_C1 * x,
+        SH_C2[0] * xy,
+        SH_C2[1] * yz,
+        SH_C2[2] * (2.0 * zz - xx - yy),
+        SH_C2[3] * xz,
+        SH_C2[4] * (xx - yy),
+        SH_C3[0] * y * (3.0 * xx - yy),
+        SH_C3[1] * xy * z,
+        SH_C3[2] * y * (4.0 * zz - xx - yy),
+        SH_C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+        SH_C3[4] * x * (4.0 * zz - xx - yy),
+        SH_C3[5] * z * (xx - yy),
+        SH_C3[6] * x * (xx - 3.0 * yy),
+    ]
+    return jnp.stack(basis, axis=1)
+
+
+def sh_eval_ref(dirs, coeffs):
+    """View-dependent RGB from degree-3 SH: (N,3) dirs, (N,16,3) coeffs.
+
+    Matches 3DGS: result + 0.5, clamped at 0 from below.
+    """
+    basis = sh_basis(dirs)  # (N, 16)
+    rgb = jnp.einsum("nk,nkc->nc", basis, coeffs) + 0.5
+    return jnp.maximum(rgb, 0.0)

@@ -1,0 +1,58 @@
+"""Pallas kernel: degree-3 spherical-harmonic color evaluation.
+
+S² sorting-shared rendering reuses a stale sort but MUST recompute each
+Gaussian's view-dependent RGB at the *current* pose (paper Sec. 3.1), so
+this runs every frame and is worth a kernel. The basis construction is
+element-wise (VPU); the (N,16) x (N,16,3) contraction is the MXU-friendly
+part on a real TPU (bf16 matmul after blocking over N).
+
+Lowered with ``interpret=True`` (see raster_tile.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import SH_C0
+from .ref import SH_C1, SH_C2, SH_C3
+
+
+def _sh_kernel(dirs_ref, coeffs_ref, out_ref):
+    d = dirs_ref[...]
+    coeffs = coeffs_ref[...]
+    x, y, z = d[:, 0], d[:, 1], d[:, 2]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+    one = jnp.ones_like(x)
+    basis = jnp.stack(
+        [
+            SH_C0 * one,
+            -SH_C1 * y,
+            SH_C1 * z,
+            -SH_C1 * x,
+            SH_C2[0] * xy,
+            SH_C2[1] * yz,
+            SH_C2[2] * (2.0 * zz - xx - yy),
+            SH_C2[3] * xz,
+            SH_C2[4] * (xx - yy),
+            SH_C3[0] * y * (3.0 * xx - yy),
+            SH_C3[1] * xy * z,
+            SH_C3[2] * y * (4.0 * zz - xx - yy),
+            SH_C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+            SH_C3[4] * x * (4.0 * zz - xx - yy),
+            SH_C3[5] * z * (xx - yy),
+            SH_C3[6] * x * (xx - 3.0 * yy),
+        ],
+        axis=1,
+    )  # (N, 16)
+    rgb = jnp.einsum("nk,nkc->nc", basis, coeffs) + 0.5
+    out_ref[...] = jnp.maximum(rgb, 0.0)
+
+
+def sh_eval(dirs, coeffs):
+    """View-dependent RGB: (N,3) unit dirs, (N,16,3) coeffs -> (N,3)."""
+    n = dirs.shape[0]
+    out_shape = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    return pl.pallas_call(_sh_kernel, out_shape=out_shape, interpret=True)(dirs, coeffs)

@@ -1,0 +1,221 @@
+"""Layer-2: the JAX 3DGS compute graph (build-time only).
+
+Two roles:
+
+1. **AOT entry points** — the per-frame compute the Rust coordinator runs
+   via PJRT: chunked tile rasterization (calls the L1 Pallas kernel), the
+   frontend alpha pass, and SH color evaluation. These are lowered to HLO
+   text by ``aot.py`` with fixed artifact shapes (common.G_CHUNK etc.).
+
+2. **Differentiable renderer** — a pure-jnp, fully differentiable 3DGS
+   forward pass (projection -> depth sort -> dense compositing) used by
+   ``finetune.py`` for the paper's cache-aware fine-tuning (Eqn. 4). The
+   sort is a stop-gradient permutation, matching the paper's note that
+   sorting and cache lookup do not participate in gradient descent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .kernels import alpha_front, raster_tile, sh_eval
+from .kernels.ref import sh_basis
+
+# --------------------------------------------------------------------------
+# AOT entry points (fixed shapes; called from the Rust hot path via PJRT)
+# --------------------------------------------------------------------------
+
+
+def raster_chunk(means, conics, opacs, colors, origin, c_in, t_in, done_in):
+    """One (tile, Gaussian-chunk) compositing step. Shapes: see aot.py."""
+    return raster_tile(means, conics, opacs, colors, origin, c_in, t_in, done_in)
+
+
+def raster_chunk_batch(means, conics, opacs, colors, origins, c_in, t_in, done_in):
+    """Batched variant: leading axis = common.TILE_BATCH tiles."""
+    return jax.vmap(raster_tile)(means, conics, opacs, colors, origins, c_in, t_in, done_in)
+
+
+def alpha_chunk(means, conics, opacs, origin):
+    """Frontend alphas for one tile chunk: -> (G, TILE, TILE)."""
+    return alpha_front(means, conics, opacs, origin, common.TILE)
+
+
+def sh_chunk(dirs, coeffs):
+    """View-dependent RGB for a chunk of Gaussians: -> (N, 3)."""
+    return sh_eval(dirs, coeffs)
+
+
+# --------------------------------------------------------------------------
+# Differentiable mini-renderer (fine-tuning path)
+# --------------------------------------------------------------------------
+
+
+def quat_to_rotmat(q):
+    """Unit-normalized quaternion (..., 4) [w,x,y,z] -> rotation matrix (...,3,3)."""
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    w, x, y, z = q[..., 0], q[..., 1], q[..., 2], q[..., 3]
+    r00 = 1 - 2 * (y * y + z * z)
+    r01 = 2 * (x * y - w * z)
+    r02 = 2 * (x * z + w * y)
+    r10 = 2 * (x * y + w * z)
+    r11 = 1 - 2 * (x * x + z * z)
+    r12 = 2 * (y * z - w * x)
+    r20 = 2 * (x * z - w * y)
+    r21 = 2 * (y * z + w * x)
+    r22 = 1 - 2 * (x * x + y * y)
+    return jnp.stack(
+        [
+            jnp.stack([r00, r01, r02], -1),
+            jnp.stack([r10, r11, r12], -1),
+            jnp.stack([r20, r21, r22], -1),
+        ],
+        -2,
+    )
+
+
+def covariance_3d(scale, quat):
+    """Sigma = R S S^T R^T for (N,3) scales and (N,4) quaternions."""
+    r = quat_to_rotmat(quat)  # (N,3,3)
+    m = r * scale[:, None, :]  # R @ diag(s), without a vmapped gather
+    return m @ jnp.swapaxes(m, -1, -2)
+
+
+def project_gaussians(pos, scale, quat, view, fx, fy, cx, cy):
+    """EWA projection of 3D Gaussians to screen space.
+
+    Args:
+      pos: (N,3) world positions. scale: (N,3). quat: (N,4).
+      view: (4,4) world-to-camera matrix (camera looks down +z).
+      fx, fy, cx, cy: pinhole intrinsics.
+
+    Returns (means2d (N,2), conics (N,3), depths (N,), radii (N,)).
+    Gaussians behind the camera get depth <= 0 and conic of a point
+    (callers mask on depth > near).
+    """
+    n = pos.shape[0]
+    r = view[:3, :3]
+    t = view[:3, 3]
+    cam = pos @ r.T + t  # (N,3) camera-space
+    z = cam[:, 2]
+    zc = jnp.maximum(z, 1e-6)
+
+    # Perspective means.
+    mx = fx * cam[:, 0] / zc + cx
+    my = fy * cam[:, 1] / zc + cy
+
+    # Jacobian of the projection at each Gaussian center.
+    j00 = fx / zc
+    j02 = -fx * cam[:, 0] / (zc * zc)
+    j11 = fy / zc
+    j12 = -fy * cam[:, 1] / (zc * zc)
+    zero = jnp.zeros(n, dtype=pos.dtype)
+    jmat = jnp.stack(
+        [
+            jnp.stack([j00, zero, j02], -1),
+            jnp.stack([zero, j11, j12], -1),
+        ],
+        -2,
+    )  # (N,2,3)
+
+    sigma = covariance_3d(scale, quat)  # (N,3,3)
+    w = jnp.broadcast_to(r, (n, 3, 3))
+    cov_cam = w @ sigma @ jnp.swapaxes(w, -1, -2)
+    cov2d = jmat @ cov_cam @ jnp.swapaxes(jmat, -1, -2)  # (N,2,2)
+
+    # Low-pass: ensure each splat covers >= ~1px (official +0.3 dilation).
+    a = cov2d[:, 0, 0] + 0.3
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + 0.3
+    det = a * c - b * b
+    det = jnp.maximum(det, 1e-12)
+    inv_a = c / det
+    inv_b = -b / det
+    inv_c = a / det
+    conics = jnp.stack([inv_a, inv_b, inv_c], -1)
+
+    # 3-sigma cutoff radius from the max eigenvalue of cov2d.
+    mid = 0.5 * (a + c)
+    eig = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 0.0))
+    radii = 3.0 * jnp.sqrt(eig)
+
+    means2d = jnp.stack([mx, my], -1)
+    return means2d, conics, z, radii
+
+
+def eval_colors(pos, sh, cam_center):
+    """Per-Gaussian view-dependent RGB from degree-3 SH (differentiable)."""
+    dirs = pos - cam_center[None, :]
+    dirs = dirs / (jnp.linalg.norm(dirs, axis=-1, keepdims=True) + 1e-12)
+    basis = sh_basis(dirs)  # (N,16)
+    rgb = jnp.einsum("nk,nkc->nc", basis, sh) + 0.5
+    return jnp.maximum(rgb, 0.0)
+
+
+def render_image(params, view, cam_center, height, width, fx, fy, cx, cy, near=0.2):
+    """Dense differentiable render: every pixel composites every Gaussian
+    in depth order. O(H*W*N) — for fine-tuning-scale scenes only.
+
+    params: dict(pos, scale, quat, opacity_logit, sh).
+    Returns (H, W, 3) image on white=0 background (black).
+    """
+    pos = params["pos"]
+    scale = jnp.exp(params["log_scale"])
+    quat = params["quat"]
+    opac = jax.nn.sigmoid(params["opacity_logit"])
+    sh = params["sh"]
+
+    means2d, conics, depth, _radii = project_gaussians(pos, scale, quat, view, fx, fy, cx, cy)
+    colors = eval_colors(pos, sh, cam_center)
+
+    visible = depth > near
+    # Depth sort (stop-gradient permutation; paper: sorting is not
+    # differentiated through).
+    order = jnp.argsort(jax.lax.stop_gradient(jnp.where(visible, depth, jnp.inf)))
+    means2d = means2d[order]
+    conics = conics[order]
+    opac = jnp.where(visible[order], opac[order], 0.0)
+    colors = colors[order]
+
+    ys = jnp.arange(height, dtype=jnp.float32) + 0.5
+    xs = jnp.arange(width, dtype=jnp.float32) + 0.5
+    py, px = jnp.meshgrid(ys, xs, indexing="ij")  # (H,W)
+
+    def body(carry, g):
+        c, t = carry
+        mean, conic, op, col = g
+        dx = px - mean[0]
+        dy = py - mean[1]
+        power = -0.5 * (conic[0] * dx * dx + conic[2] * dy * dy) - conic[1] * dx * dy
+        alpha = jnp.minimum(common.ALPHA_MAX, op * jnp.exp(power))
+        alpha = jnp.where(power > 0.0, 0.0, alpha)
+        # Smooth significance for differentiability; hard mask in fwd.
+        sig = alpha >= common.ALPHA_MIN
+        test_t = t * (1.0 - alpha)
+        active = sig & (test_t >= common.T_EPS)
+        w = jnp.where(active, alpha * t, 0.0)
+        c = c + w[..., None] * col
+        t = jnp.where(active, test_t, t)
+        return (c, t), None
+
+    c0 = jnp.zeros((height, width, 3), jnp.float32)
+    t0 = jnp.ones((height, width), jnp.float32)
+    (c, _t), _ = jax.lax.scan(body, (c0, t0), (means2d, conics, opac, colors))
+    return c
+
+
+def look_at(eye, target, up=jnp.array([0.0, 1.0, 0.0])):
+    """World-to-camera (4,4) view matrix, camera looks down +z at target."""
+    fwd = target - eye
+    fwd = fwd / (jnp.linalg.norm(fwd) + 1e-12)
+    right = jnp.cross(up, fwd)
+    right = right / (jnp.linalg.norm(right) + 1e-12)
+    true_up = jnp.cross(fwd, right)
+    r = jnp.stack([right, true_up, fwd], axis=0)  # (3,3) rows
+    t = -r @ eye
+    view = jnp.eye(4)
+    view = view.at[:3, :3].set(r)
+    view = view.at[:3, 3].set(t)
+    return view

@@ -1,0 +1,24 @@
+"""Shared fixtures/helpers for the python-side test suite."""
+
+import numpy as np
+import pytest
+
+
+def make_splats(rng, g, extent=16.0, opac_range=(0.0, 1.0)):
+    """Random projected Gaussians: means, conics (SPD inverse cov), opacity, colors."""
+    means = rng.uniform(-2.0, extent + 2.0, (g, 2)).astype(np.float32)
+    l1 = rng.uniform(0.02, 0.8, g)
+    l2 = rng.uniform(0.02, 0.8, g)
+    th = rng.uniform(0, np.pi, g)
+    a = l1 * np.cos(th) ** 2 + l2 * np.sin(th) ** 2
+    c = l1 * np.sin(th) ** 2 + l2 * np.cos(th) ** 2
+    b = (l1 - l2) * np.sin(th) * np.cos(th)
+    conics = np.stack([a, b, c], 1).astype(np.float32)
+    opacs = rng.uniform(*opac_range, g).astype(np.float32)
+    colors = rng.uniform(0, 1, (g, 3)).astype(np.float32)
+    return means, conics, opacs, colors
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,94 @@
+"""Cache-aware fine-tuning tests (Eqn. 4): the scale-constrained loss
+shrinks oversized Gaussians while preserving render fidelity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, finetune, model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(5)
+    params = finetune.synth_scene(rng, 96, big_frac=0.15)
+    cams = finetune.orbit_cameras(3)
+    hw = (32, 32)
+    intr = (28.0, 28.0, 16.0, 16.0)
+    targets = [model.render_image(params, v, e, *hw, *intr) for v, e in cams]
+    return params, cams, targets, hw, intr
+
+
+class TestScaleLoss:
+    def test_zero_when_all_small(self):
+        log_scale = jnp.full((10, 3), np.log(0.01))
+        assert float(finetune.scale_loss(log_scale, theta=0.05)) == 0.0
+
+    def test_positive_when_oversized(self):
+        log_scale = jnp.full((4, 3), np.log(0.5))
+        assert float(finetune.scale_loss(log_scale, theta=0.05)) > 0.0
+
+    def test_uses_geometric_mean(self):
+        # One huge axis with two tiny ones can stay under theta.
+        log_scale = jnp.log(jnp.array([[1.0, 1e-4, 1e-4]]))
+        geo = float(jnp.exp(jnp.mean(log_scale)))
+        assert geo < 0.05
+        assert float(finetune.scale_loss(log_scale, theta=0.05)) == 0.0
+
+
+class TestL1Ssim:
+    def test_zero_for_identical(self):
+        img = jnp.ones((32, 32, 3)) * 0.5
+        assert float(finetune.l1_ssim_loss(img, img)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_positive_for_different(self):
+        a = jnp.zeros((32, 32, 3))
+        b = jnp.ones((32, 32, 3))
+        assert float(finetune.l1_ssim_loss(a, b)) > 0.5
+
+
+class TestFinetune:
+    def test_scale_constraint_shrinks_big_gaussians(self, setup):
+        params, cams, targets, hw, intr = setup
+        tuned, hist = finetune.finetune(
+            params, cams, targets, hw, intr, steps=30, alpha=1.0, theta=0.03,
+        )
+        assert hist[-1]["scale"] < hist[0]["scale"], "L_scale did not decrease"
+        # The oversized tail shrinks.
+        geo = lambda p: np.exp(np.mean(np.asarray(p["log_scale"]), axis=1))
+        assert np.percentile(geo(tuned), 99) < np.percentile(geo(params), 99)
+
+    def test_without_constraint_scales_drift_free(self, setup):
+        params, cams, targets, hw, intr = setup
+        plain, hist = finetune.finetune(
+            params, cams, targets, hw, intr, steps=10, alpha=0.0,
+        )
+        # alpha=0: the scale term is reported but not optimized against.
+        assert "scale" in hist[0]
+        assert np.isfinite(np.asarray(plain["log_scale"])).all()
+
+    def test_history_records_every_step(self, setup):
+        params, cams, targets, hw, intr = setup
+        _, hist = finetune.finetune(params, cams, targets, hw, intr, steps=7)
+        assert [h["step"] for h in hist] == list(range(7))
+
+
+class TestSceneExport:
+    def test_params_to_scene_arrays_valid(self, setup):
+        params, _, _, _, _ = setup
+        pos, scale, quat, opac, sh = finetune.params_to_scene_arrays(params)
+        n = pos.shape[0]
+        assert scale.shape == (n, 3) and np.all(scale > 0)
+        assert quat.shape == (n, 4)
+        np.testing.assert_allclose(np.linalg.norm(quat, axis=1), 1.0, atol=1e-5)
+        assert np.all((opac >= 0) & (opac <= 1))
+        assert sh.shape == (n, common.SH_COEFFS, 3)
+
+    def test_lgsc_roundtrip_of_export(self, setup, tmp_path):
+        params, _, _, _, _ = setup
+        arrays = finetune.params_to_scene_arrays(params)
+        path = str(tmp_path / "export.lgsc")
+        common.write_scene(path, *arrays)
+        back = common.read_scene(path)
+        for a, b in zip(arrays, back):
+            np.testing.assert_array_equal(a, b)

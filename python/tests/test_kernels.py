@@ -1,0 +1,196 @@
+"""L1 Pallas kernels vs pure-jnp oracle (the core correctness signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import common
+from compile.kernels import alpha_front, raster_tile, raster_tile_fresh, sh_eval
+from compile.kernels import ref
+
+from .conftest import make_splats
+
+
+def fresh_carry(tile):
+    return (
+        np.zeros((tile, tile, 3), np.float32),
+        np.ones((tile, tile), np.float32),
+        np.zeros((tile, tile), np.float32),
+    )
+
+
+class TestRasterTile:
+    def test_matches_ref_random(self, rng):
+        means, conics, opacs, colors = make_splats(rng, 64)
+        origin = np.zeros(2, np.float32)
+        c0, t0, d0 = fresh_carry(common.TILE)
+        got = raster_tile(means, conics, opacs, colors, origin, c0, t0, d0)
+        want = ref.raster_tile_ref(
+            means, conics, opacs, colors, origin, c0, t0, d0, common.TILE
+        )
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+    def test_matches_scalar_loop(self, rng):
+        """Cross-check the vectorized kernel against the literal per-pixel loop."""
+        means, conics, opacs, colors = make_splats(rng, 48)
+        origin = np.array([4.0, 8.0], np.float32)
+        c, t, _ = raster_tile_fresh(means, conics, opacs, colors, origin, 8)
+        c, t = np.asarray(c), np.asarray(t)
+        for iy, ix in [(0, 0), (3, 5), (7, 7)]:
+            cs, ts, _, _ = ref.raster_pixel_scalar(
+                means, conics, opacs, colors, origin[0] + ix + 0.5, origin[1] + iy + 0.5
+            )
+            np.testing.assert_allclose(c[iy, ix], cs, atol=1e-5)
+            np.testing.assert_allclose(t[iy, ix], ts, atol=1e-5)
+
+    def test_chunked_equals_monolithic(self, rng):
+        """Carry semantics: 4 chunks of 32 == one call with 128 Gaussians."""
+        means, conics, opacs, colors = make_splats(rng, 128)
+        origin = np.zeros(2, np.float32)
+        mono = raster_tile_fresh(means, conics, opacs, colors, origin, common.TILE)
+        c, t, d = fresh_carry(common.TILE)
+        for s in range(0, 128, 32):
+            c, t, d = raster_tile(
+                means[s : s + 32], conics[s : s + 32], opacs[s : s + 32],
+                colors[s : s + 32], origin, c, t, d,
+            )
+        for g, w in zip((c, t, d), mono):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+    def test_zero_opacity_padding_is_identity(self, rng):
+        means, conics, _, colors = make_splats(rng, 16)
+        opacs = np.zeros(16, np.float32)
+        origin = np.zeros(2, np.float32)
+        c, t, d = raster_tile_fresh(means, conics, opacs, colors, origin, common.TILE)
+        assert np.all(np.asarray(c) == 0.0)
+        assert np.all(np.asarray(t) == 1.0)
+        assert np.all(np.asarray(d) == 0.0)
+
+    def test_opaque_wall_terminates(self):
+        """A huge opaque Gaussian saturates every pixel; later ones are ignored."""
+        g = 8
+        means = np.full((g, 2), 8.0, np.float32)
+        conics = np.tile(np.array([1e-6, 0.0, 1e-6], np.float32), (g, 1))
+        opacs = np.full(g, 0.995, np.float32)
+        colors = np.zeros((g, 3), np.float32)
+        colors[0] = 1.0  # only the first contributes fully
+        origin = np.zeros(2, np.float32)
+        c, t, d = raster_tile_fresh(means, conics, opacs, colors, origin, common.TILE)
+        # alpha clamps to .99: after the first Gaussian T=0.01; the second
+        # would push test_T to 1e-4-eps < T_EPS -> done, T keeps its value.
+        assert np.all(np.asarray(d) == 1.0)
+        assert np.all(np.asarray(t) <= 0.01 + 1e-6)
+        # Only the first Gaussian accumulated: C = 0.99 * color0.
+        np.testing.assert_allclose(np.asarray(c)[..., 0], 0.99, atol=1e-6)
+
+    def test_transmittance_monotone_nonincreasing(self, rng):
+        means, conics, opacs, colors = make_splats(rng, 32)
+        origin = np.zeros(2, np.float32)
+        c, t, d = fresh_carry(common.TILE)
+        prev_t = t.copy()
+        for s in range(0, 32, 8):
+            c, t, d = raster_tile(
+                means[s : s + 8], conics[s : s + 8], opacs[s : s + 8],
+                colors[s : s + 8], origin, c, t, d,
+            )
+            assert np.all(np.asarray(t) <= prev_t + 1e-7)
+            prev_t = np.asarray(t).copy()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        g=st.integers(1, 40),
+        tile=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, g, tile, seed):
+        """Shape sweep: kernel == oracle for arbitrary (G, tile) combos."""
+        rng = np.random.default_rng(seed)
+        means, conics, opacs, colors = make_splats(rng, g, extent=float(tile))
+        origin = rng.uniform(-8, 8, 2).astype(np.float32)
+        c0 = rng.uniform(0, 1, (tile, tile, 3)).astype(np.float32)
+        t0 = rng.uniform(0, 1, (tile, tile)).astype(np.float32)
+        d0 = (rng.uniform(0, 1, (tile, tile)) < 0.2).astype(np.float32)
+        got = raster_tile(means, conics, opacs, colors, origin, c0, t0, d0)
+        want = ref.raster_tile_ref(means, conics, opacs, colors, origin, c0, t0, d0, tile)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+class TestAlphaFront:
+    def test_matches_ref(self, rng):
+        means, conics, opacs, _ = make_splats(rng, 96)
+        origin = np.array([16.0, 32.0], np.float32)
+        got = alpha_front(means, conics, opacs, origin, common.TILE)
+        want = ref.alpha_front_ref(means, conics, opacs, origin, common.TILE)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+    def test_alpha_bounds(self, rng):
+        means, conics, opacs, _ = make_splats(rng, 64)
+        origin = np.zeros(2, np.float32)
+        a = np.asarray(alpha_front(means, conics, opacs, origin, common.TILE))
+        assert np.all(a >= 0.0)
+        assert np.all(a <= common.ALPHA_MAX + 1e-7)
+
+    def test_alpha_peaks_at_center(self):
+        """Alpha is maximal at the pixel nearest the Gaussian mean."""
+        means = np.array([[8.5, 8.5]], np.float32)
+        conics = np.array([[0.5, 0.0, 0.5]], np.float32)
+        opacs = np.array([0.9], np.float32)
+        a = np.asarray(alpha_front(means, conics, opacs, np.zeros(2, np.float32), 16))[0]
+        iy, ix = np.unravel_index(np.argmax(a), a.shape)
+        assert (iy, ix) == (8, 8)
+        np.testing.assert_allclose(a[8, 8], 0.9, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(g=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, g, seed):
+        rng = np.random.default_rng(seed)
+        means, conics, opacs, _ = make_splats(rng, g)
+        origin = rng.uniform(-4, 4, 2).astype(np.float32)
+        got = alpha_front(means, conics, opacs, origin, 8)
+        want = ref.alpha_front_ref(means, conics, opacs, origin, 8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+class TestShEval:
+    def test_matches_ref(self, rng):
+        n = 128
+        dirs = rng.normal(size=(n, 3)).astype(np.float32)
+        dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+        coeffs = (rng.normal(size=(n, 16, 3)) * 0.3).astype(np.float32)
+        got = sh_eval(dirs, coeffs)
+        want = ref.sh_eval_ref(dirs, coeffs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_dc_only(self, rng):
+        """With only the DC coefficient set, color is view-independent."""
+        n = 8
+        coeffs = np.zeros((n, 16, 3), np.float32)
+        coeffs[:, 0, :] = 1.0
+        dirs = rng.normal(size=(n, 3)).astype(np.float32)
+        dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+        got = np.asarray(sh_eval(dirs, coeffs))
+        expect = common.SH_C0 * 1.0 + 0.5
+        np.testing.assert_allclose(got, expect, atol=1e-6)
+
+    def test_clamped_at_zero(self, rng):
+        n = 16
+        coeffs = np.zeros((n, 16, 3), np.float32)
+        coeffs[:, 0, :] = -10.0  # strongly negative DC
+        dirs = np.tile(np.array([0.0, 0.0, 1.0], np.float32), (n, 1))
+        got = np.asarray(sh_eval(dirs, coeffs))
+        assert np.all(got == 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n, seed):
+        rng = np.random.default_rng(seed)
+        dirs = rng.normal(size=(n, 3)).astype(np.float32)
+        dirs /= np.linalg.norm(dirs, axis=1, keepdims=True) + 1e-9
+        coeffs = (rng.normal(size=(n, 16, 3)) * 0.5).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(sh_eval(dirs, coeffs)),
+            np.asarray(ref.sh_eval_ref(dirs, coeffs)),
+            atol=1e-5,
+        )

@@ -1,0 +1,172 @@
+"""L2 model tests: projection geometry, differentiability, scene IO."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model
+
+
+def make_params(rng, n):
+    return dict(
+        pos=jnp.asarray(rng.normal(0, 0.5, (n, 3)), jnp.float32),
+        log_scale=jnp.asarray(np.log(rng.uniform(0.02, 0.2, (n, 3))), jnp.float32),
+        quat=jnp.asarray(rng.normal(size=(n, 4)), jnp.float32),
+        opacity_logit=jnp.asarray(rng.normal(0, 1, n), jnp.float32),
+        sh=jnp.asarray(rng.normal(0, 0.3, (n, 16, 3)), jnp.float32),
+    )
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+class TestProjection:
+    def test_center_gaussian_projects_to_principal_point(self):
+        pos = jnp.array([[0.0, 0.0, 0.0]])
+        scale = jnp.full((1, 3), 0.1)
+        quat = jnp.array([[1.0, 0.0, 0.0, 0.0]])
+        eye = jnp.array([0.0, 0.0, -4.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        means, conics, depth, radii = model.project_gaussians(
+            pos, scale, quat, view, 100.0, 100.0, 64.0, 64.0
+        )
+        np.testing.assert_allclose(np.asarray(means[0]), [64.0, 64.0], atol=1e-4)
+        np.testing.assert_allclose(float(depth[0]), 4.0, atol=1e-5)
+        assert float(radii[0]) > 0.0
+
+    def test_depth_increases_along_view_axis(self):
+        pos = jnp.array([[0.0, 0.0, z] for z in (-1.0, 0.0, 2.0)])
+        scale = jnp.full((3, 3), 0.1)
+        quat = jnp.tile(jnp.array([[1.0, 0.0, 0.0, 0.0]]), (3, 1))
+        eye = jnp.array([0.0, 0.0, -4.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        _, _, depth, _ = model.project_gaussians(pos, scale, quat, view, 50.0, 50.0, 32.0, 32.0)
+        d = np.asarray(depth)
+        assert d[0] < d[1] < d[2]
+
+    def test_conic_is_spd(self, rng):
+        n = 64
+        p = make_params(rng, n)
+        eye = jnp.array([0.0, 0.0, -3.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        _, conics, depth, _ = model.project_gaussians(
+            p["pos"], jnp.exp(p["log_scale"]), p["quat"], view, 60.0, 60.0, 32.0, 32.0
+        )
+        conics = np.asarray(conics)[np.asarray(depth) > 0.2]
+        a, b, c = conics[:, 0], conics[:, 1], conics[:, 2]
+        assert np.all(a > 0) and np.all(c > 0)
+        assert np.all(a * c - b * b > 0)  # positive determinant
+
+    def test_isotropic_conic_for_isotropic_gaussian(self):
+        """A spherical Gaussian at the optical axis projects to an
+        isotropic conic (a == c, b == 0)."""
+        pos = jnp.array([[0.0, 0.0, 0.0]])
+        scale = jnp.full((1, 3), 0.3)
+        quat = jnp.array([[1.0, 0.0, 0.0, 0.0]])
+        eye = jnp.array([0.0, 0.0, -5.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        _, conics, _, _ = model.project_gaussians(pos, scale, quat, view, 80.0, 80.0, 0.0, 0.0)
+        a, b, c = (float(x) for x in conics[0])
+        assert abs(a - c) < 1e-5
+        assert abs(b) < 1e-6
+
+    def test_rotation_invariance_of_sphere(self, rng):
+        """Rotating a spherical Gaussian must not change its projection."""
+        pos = jnp.array([[0.3, -0.2, 0.1]])
+        scale = jnp.full((1, 3), 0.2)
+        eye = jnp.array([0.0, 0.0, -3.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        qs = [jnp.array([[1.0, 0, 0, 0]]), jnp.asarray(rng.normal(size=(1, 4)), jnp.float32)]
+        outs = [
+            np.asarray(model.project_gaussians(pos, scale, q, view, 60.0, 60.0, 32.0, 32.0)[1])
+            for q in qs
+        ]
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
+
+
+class TestQuatRotation:
+    def test_identity(self):
+        r = model.quat_to_rotmat(jnp.array([1.0, 0.0, 0.0, 0.0]))
+        np.testing.assert_allclose(np.asarray(r), np.eye(3), atol=1e-6)
+
+    def test_orthonormal(self, rng):
+        q = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+        r = model.quat_to_rotmat(q)
+        rtr = np.asarray(r @ jnp.swapaxes(r, -1, -2))
+        np.testing.assert_allclose(rtr, np.tile(np.eye(3), (32, 1, 1)), atol=1e-5)
+
+    def test_determinant_one(self, rng):
+        q = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+        det = np.linalg.det(np.asarray(model.quat_to_rotmat(q)))
+        np.testing.assert_allclose(det, 1.0, atol=1e-5)
+
+
+class TestRenderImage:
+    def test_render_shape_and_range(self, rng):
+        p = make_params(rng, 48)
+        eye = jnp.array([0.0, 0.0, -3.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        img = model.render_image(p, view, eye, 24, 24, 30.0, 30.0, 12.0, 12.0)
+        assert img.shape == (24, 24, 3)
+        assert float(img.min()) >= 0.0
+        assert np.isfinite(np.asarray(img)).all()
+
+    def test_empty_scene_is_black(self):
+        p = dict(
+            pos=jnp.zeros((4, 3)),
+            log_scale=jnp.full((4, 3), -3.0),
+            quat=jnp.tile(jnp.array([[1.0, 0, 0, 0]]), (4, 1)),
+            opacity_logit=jnp.full((4,), -20.0),  # sigmoid ~ 0
+            sh=jnp.zeros((4, 16, 3)),
+        )
+        eye = jnp.array([0.0, 0.0, -3.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        img = model.render_image(p, view, eye, 8, 8, 10.0, 10.0, 4.0, 4.0)
+        np.testing.assert_allclose(np.asarray(img), 0.0, atol=1e-6)
+
+    def test_gradients_finite(self, rng):
+        p = make_params(rng, 32)
+        eye = jnp.array([0.0, 0.0, -3.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        loss = lambda q: jnp.mean(model.render_image(q, view, eye, 16, 16, 20.0, 20.0, 8.0, 8.0) ** 2)
+        g = jax.grad(loss)(p)
+        for k, v in g.items():
+            assert np.isfinite(np.asarray(v)).all(), k
+
+    def test_behind_camera_invisible(self):
+        """A Gaussian behind the eye must not contribute."""
+        p = dict(
+            pos=jnp.array([[0.0, 0.0, -10.0]]),  # behind eye at z=-4
+            log_scale=jnp.full((1, 3), -1.0),
+            quat=jnp.array([[1.0, 0, 0, 0]]),
+            opacity_logit=jnp.array([5.0]),
+            sh=jnp.ones((1, 16, 3)),
+        )
+        eye = jnp.array([0.0, 0.0, -4.0])
+        view = model.look_at(eye, jnp.zeros(3))
+        img = model.render_image(p, view, eye, 8, 8, 10.0, 10.0, 4.0, 4.0)
+        np.testing.assert_allclose(np.asarray(img), 0.0, atol=1e-6)
+
+
+class TestSceneIO:
+    def test_roundtrip(self, rng, tmp_path):
+        n = 37
+        pos = rng.normal(size=(n, 3)).astype(np.float32)
+        scale = rng.uniform(0.01, 0.5, (n, 3)).astype(np.float32)
+        quat = rng.normal(size=(n, 4)).astype(np.float32)
+        opac = rng.uniform(0, 1, n).astype(np.float32)
+        sh = rng.normal(size=(n, 16, 3)).astype(np.float32)
+        path = str(tmp_path / "scene.lgsc")
+        common.write_scene(path, pos, scale, quat, opac, sh)
+        got = common.read_scene(path)
+        for a, b in zip((pos, scale, quat, opac, sh), got):
+            np.testing.assert_array_equal(a, b)
+
+    def test_bad_magic_rejected(self, tmp_path):
+        path = tmp_path / "bad.lgsc"
+        path.write_bytes(b"XXXX" + b"\0" * 32)
+        with pytest.raises(ValueError, match="magic"):
+            common.read_scene(str(path))

@@ -1,0 +1,58 @@
+//! Radiance-cache benchmarks: lookup/insert microcosts and the cached
+//! rasterization path (paper Table/Fig. 22's RC rows reduce to these).
+
+use lumina::camera::{Intrinsics, Pose};
+use lumina::constants::TILE;
+use lumina::lumina::rc::{rasterize_cached, GroupedRadianceCache, RadianceCache};
+use lumina::math::Vec3;
+use lumina::pipeline::project::project;
+use lumina::pipeline::sort::bin_and_sort;
+use lumina::scene::synth::{synth_scene, SceneClass};
+use lumina::util::bench::Runner;
+use lumina::util::prng::Pcg32;
+
+fn main() {
+    let mut r = Runner::new("cache");
+    r.header();
+
+    // Micro: lookup / insert against a warm bank.
+    let mut bank = RadianceCache::paper_default(5);
+    let mut rng = Pcg32::seeded(7);
+    let tags: Vec<[u32; 5]> = (0..4096)
+        .map(|_| std::array::from_fn(|_| rng.next_u32() >> 10))
+        .collect();
+    for t in &tags {
+        bank.insert(t, [0.5, 0.5, 0.5]);
+    }
+    let mut i = 0usize;
+    r.bench("lookup/warm", || {
+        i = (i + 1) & 4095;
+        bank.lookup(&tags[i])
+    });
+    let mut j = 0usize;
+    r.bench("insert/evicting", || {
+        j = j.wrapping_add(1);
+        let tag: [u32; 5] = std::array::from_fn(|k| (j as u32) << 7 | k as u32);
+        bank.insert(&tag, [0.1, 0.2, 0.3]);
+    });
+
+    // Macro: cached rasterization, cold vs warm cache.
+    let scene = synth_scene(SceneClass::SyntheticSmall, 42, 40_000);
+    let pose = Pose::look_at(Vec3::new(0.0, 0.3, -2.3), Vec3::ZERO);
+    let intr = Intrinsics::with_fov(256, 256, 0.87);
+    let p = project(&scene, &pose, &intr, 0.2, 1000.0, 0.0);
+    let bins = bin_and_sort(&p, &intr, TILE, 0.0);
+
+    r.bench("rasterize_cached/cold", || {
+        let mut cache = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+        rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache)
+    });
+
+    let mut warm = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+    rasterize_cached(&p, &bins, intr.width, intr.height, &mut warm);
+    r.bench("rasterize_cached/warm", || {
+        rasterize_cached(&p, &bins, intr.width, intr.height, &mut warm)
+    });
+
+    r.finish();
+}

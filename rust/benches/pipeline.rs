@@ -1,0 +1,56 @@
+//! Pipeline hot-path benchmarks: projection, binning+sorting,
+//! rasterization — the per-stage costs behind every end-to-end number.
+//! (Custom harness: the offline vendor set has no criterion.)
+
+use lumina::camera::{Intrinsics, Pose};
+use lumina::constants::TILE;
+use lumina::math::Vec3;
+use lumina::pipeline::project::{project, refresh_colors, reproject_geometry};
+use lumina::pipeline::raster::{rasterize, RasterConfig};
+use lumina::pipeline::sort::bin_and_sort;
+use lumina::scene::synth::{synth_scene, SceneClass};
+use lumina::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::new("pipeline");
+    r.header();
+
+    let scene = synth_scene(SceneClass::SyntheticSmall, 42, 60_000);
+    let pose = Pose::look_at(Vec3::new(0.0, 0.3, -2.3), Vec3::ZERO);
+    let intr = Intrinsics::with_fov(256, 256, 0.87);
+
+    r.bench("project/60k", || project(&scene, &pose, &intr, 0.2, 1000.0, 0.0));
+
+    let projected = project(&scene, &pose, &intr, 0.2, 1000.0, 0.0);
+    r.bench("bin_and_sort/60k", || bin_and_sort(&projected, &intr, TILE, 0.0));
+
+    let bins = bin_and_sort(&projected, &intr, TILE, 0.0);
+    let plain = RasterConfig::default();
+    r.bench("rasterize/256px/60k", || {
+        rasterize(&projected, &bins, intr.width, intr.height, &plain)
+    });
+
+    let stats_cfg = RasterConfig { collect_stats: true, sig_record_k: 5 };
+    r.bench("rasterize+stats+records/256px/60k", || {
+        rasterize(&projected, &bins, intr.width, intr.height, &stats_cfg)
+    });
+
+    r.bench("reproject_geometry/visible", || {
+        let mut p = projected.clone();
+        reproject_geometry(&mut p, &scene, &pose, &intr);
+        p
+    });
+
+    r.bench("refresh_colors/visible", || {
+        let mut p = projected.clone();
+        refresh_colors(&mut p, &scene, &pose);
+        p
+    });
+
+    // Large-scene projection (the U360-class frustum-cull workload).
+    let big = synth_scene(SceneClass::RealUnbounded, 42, 600_000);
+    let big_pose = Pose::look_at(Vec3::new(0.0, 3.0, -25.0), Vec3::ZERO);
+    r.bench("project/600k", || project(&big, &big_pose, &intr, 0.2, 1000.0, 0.0));
+
+    r.finish();
+}

@@ -1,0 +1,60 @@
+//! Simulator benchmarks: the cycle-accurate LuminCore model and the GPU
+//! warp-aggregate extraction must stay cheap relative to the functional
+//! render they annotate.
+
+use lumina::camera::{Intrinsics, Pose};
+use lumina::config::HardwareVariant;
+use lumina::config::LuminaConfig;
+use lumina::constants::TILE;
+use lumina::coordinator::Coordinator;
+use lumina::math::Vec3;
+use lumina::pipeline::project::project;
+use lumina::pipeline::raster::{rasterize, RasterConfig};
+use lumina::pipeline::sort::bin_and_sort;
+use lumina::scene::synth::{synth_scene, SceneClass};
+use lumina::sim::gpu::WarpAggregates;
+use lumina::sim::lumincore::{tiles_from_stats, LuminCoreSim};
+use lumina::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::new("simulator");
+    r.header();
+
+    let scene = synth_scene(SceneClass::SyntheticSmall, 42, 40_000);
+    let pose = Pose::look_at(Vec3::new(0.0, 0.3, -2.3), Vec3::ZERO);
+    let intr = Intrinsics::with_fov(256, 256, 0.87);
+    let p = project(&scene, &pose, &intr, 0.2, 1000.0, 0.0);
+    let bins = bin_and_sort(&p, &intr, TILE, 0.0);
+    let cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
+    let out = rasterize(&p, &bins, intr.width, intr.height, &cfg);
+    let stats = out.stats.unwrap();
+
+    r.bench("warp_aggregates/256px", || {
+        WarpAggregates::from_stats(&stats, intr.width, intr.height)
+    });
+
+    let lists: Vec<usize> = bins.lists.iter().map(|l| l.len()).collect();
+    r.bench("tiles_from_stats/256px", || {
+        tiles_from_stats(
+            &lists, bins.tiles_x, bins.tiles_y, TILE, intr.width, intr.height,
+            &stats.iterated, &stats.significant, None,
+        )
+    });
+
+    let tiles = tiles_from_stats(
+        &lists, bins.tiles_x, bins.tiles_y, TILE, intr.width, intr.height,
+        &stats.iterated, &stats.significant, None,
+    );
+    let sim = LuminCoreSim::paper_default();
+    r.bench("lumincore_frame/256tiles", || sim.frame(&tiles, 0));
+
+    // Whole-coordinator frame (the end-to-end unit everything builds on).
+    let mut cc = LuminaConfig::quick_test();
+    cc.scene.count = 20_000;
+    cc.camera.frames = 100_000; // effectively unbounded for the bench
+    cc.variant = HardwareVariant::Lumina;
+    let mut coord = Coordinator::new(cc).unwrap();
+    r.bench("coordinator_step/lumina/20k", || coord.step().unwrap());
+
+    r.finish();
+}

@@ -1,0 +1,38 @@
+//! Fig. 2 — model size and GPU rendering performance vs scene complexity.
+//! Paper: S-NeRF <1M Gaussians at 66 FPS down to U360 >6M at 5 FPS.
+
+use anyhow::Result;
+use lumina::camera::trajectory::TrajectoryKind;
+use lumina::config::HardwareVariant;
+use lumina::harness;
+
+fn main() -> Result<()> {
+    harness::banner(
+        "Fig. 2",
+        "model size & GPU FPS vs scene complexity",
+        "66 -> 5 FPS as scenes go synthetic -> unbounded real; >10x model growth",
+    );
+    println!(
+        "{:<10} {:>12} {:>12} {:>10} {:>12}",
+        "dataset", "paper-size", "our-size", "gpu-fps", "frame-ms"
+    );
+    for (label, class) in harness::all_classes() {
+        let traj = if label == "S-NeRF" {
+            TrajectoryKind::VrHeadMotion
+        } else {
+            TrajectoryKind::Walkthrough
+        };
+        let cfg = harness::harness_config(class, traj, HardwareVariant::Gpu);
+        let count = cfg.gaussian_count();
+        let report = harness::run_variant(cfg)?;
+        println!(
+            "{:<10} {:>12} {:>12} {:>10.1} {:>12.3}",
+            label,
+            class.default_count(),
+            count,
+            report.fps(),
+            report.mean_time_s() * 1e3
+        );
+    }
+    Ok(())
+}

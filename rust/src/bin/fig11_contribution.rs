@@ -1,0 +1,67 @@
+//! Fig. 11 — significance of Gaussian points toward the final radiance.
+//! Paper: over 99% of the pixel value comes from <1.5% of the Gaussians
+//! a pixel iterates.
+
+use anyhow::Result;
+use lumina::camera::trajectory::TrajectoryKind;
+use lumina::config::HardwareVariant;
+use lumina::constants::TILE;
+use lumina::coordinator::Coordinator;
+use lumina::harness;
+use lumina::pipeline::project::project;
+use lumina::pipeline::raster::contribution_profile;
+use lumina::pipeline::sort::bin_and_sort;
+
+fn main() -> Result<()> {
+    harness::banner(
+        "Fig. 11",
+        "contribution CDF of iterated Gaussians (sorted by contribution)",
+        ">99% of pixel value from <1.5% of iterated Gaussians",
+    );
+    println!(
+        "{:<10} {:>12} {:>14} {:>16}",
+        "dataset", "pixels", "mean-iter/px", "%gauss for 99%"
+    );
+    for (label, class) in harness::all_classes() {
+        let cfg = harness::harness_config(
+            class,
+            TrajectoryKind::Walkthrough,
+            HardwareVariant::Gpu,
+        );
+        let coord = Coordinator::new(cfg)?;
+        let pose = coord.trajectory.poses[0];
+        let p = project(&coord.scene, &pose, &coord.intr, 0.2, 1000.0, 0.0);
+        let bins = bin_and_sort(&p, &coord.intr, TILE, 0.0);
+        let profiles =
+            contribution_profile(&p, &bins, coord.intr.width, coord.intr.height, 16);
+        let (_, stats, _, _) = coord.reference_frame(&pose);
+        // For each sampled pixel: how many of its *iterated* Gaussians
+        // cover 99% of the accumulated value.
+        let mut fracs = Vec::new();
+        let mean_iter = stats.mean_iterated().max(1.0);
+        for prof in &profiles {
+            let mut acc = 0.0f32;
+            let mut needed = 0usize;
+            for w in prof {
+                acc += w;
+                needed += 1;
+                if acc >= 0.99 {
+                    break;
+                }
+            }
+            fracs.push(needed as f64 / mean_iter * 100.0);
+        }
+        if fracs.is_empty() {
+            continue;
+        }
+        let mean_frac = fracs.iter().sum::<f64>() / fracs.len() as f64;
+        println!(
+            "{:<10} {:>12} {:>14.1} {:>15.2}%",
+            label,
+            profiles.len(),
+            mean_iter,
+            mean_frac
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Fig. 19 — user study (SIMULATED; see DESIGN.md §5).
+//!
+//! The paper ran a 30-participant 2IFC study: 73% noticed no difference
+//! between Lumina and baseline 3DGS; of those who did, preference split
+//! ~50/50. We have no human subjects, so a psychometric observer model
+//! stands in: per frame pair, detection probability follows a Weber-
+//! contrast psychometric curve on the per-pixel error map (detection
+//! requires a cluster of super-threshold pixels); preference among
+//! detected differences is an unbiased coin flip at sub-JND severity.
+//! This reproduces the *claim structure* (error below JND -> mostly
+//! "no difference", tie preference), not human data.
+
+use anyhow::Result;
+use lumina::config::HardwareVariant;
+use lumina::coordinator::Coordinator;
+use lumina::harness;
+use lumina::util::prng::Pcg32;
+
+/// Fraction of clearly-super-threshold pixels above which an observer
+/// reports a difference with high probability (Weber ~2% contrast over
+/// a cluster of pixels).
+const JND_PIXEL_LEVEL: f32 = 8.0 / 255.0;
+const DETECT_SLOPE: f64 = 2200.0;
+
+fn main() -> Result<()> {
+    harness::banner(
+        "Fig. 19 (simulated observers)",
+        "2IFC user study: variant vs baseline 3DGS",
+        "~73% notice no difference; detected cases split ~50/50",
+    );
+    // The paper studies full Lumina on *trained* scenes, whose RC error
+    // sits below the JND (Fig. 12: <0.5/255). Our procedural scenes give
+    // RC a heavier error tail (EXPERIMENTS.md), so we report the
+    // psychometric observer on both variants: S2-only demonstrates the
+    // sub-JND regime the paper's system occupies; Lumina shows the
+    // observer correctly flagging super-JND error at our scene
+    // statistics.
+    for variant in [HardwareVariant::S2Acc, HardwareVariant::Lumina] {
+        run_study(variant)?;
+    }
+    Ok(())
+}
+
+fn run_study(variant: HardwareVariant) -> Result<()> {
+    let mut rng = Pcg32::seeded(2026);
+    let mut no_diff = 0u32;
+    let mut prefer_ours = 0u32;
+    let mut prefer_base = 0u32;
+    let mut trials = 0u32;
+    for (label, class, traj) in harness::eval_settings() {
+        let cfg = harness::harness_config(class, traj, variant);
+        let mut coord = Coordinator::new(cfg)?;
+        // Fine-tuned regime: clamp the oversized tail (Sec. 3.3).
+        for s in coord.scene.scale.iter_mut() {
+            let cap = 0.005 * coord.cfg.scene.class.extent() * 4.0;
+            s.x = s.x.min(cap);
+            s.y = s.y.min(cap);
+            s.z = s.z.min(cap);
+        }
+        let mut frames = 0;
+        while coord.remaining() > 0 && frames < 12 {
+            let pose = coord.trajectory.poses[coord.trajectory.poses.len() - coord.remaining()];
+            let f = coord.step()?;
+            let (reference, _, _, _) = coord.reference_frame(&pose);
+            // Super-threshold pixel fraction.
+            let mut bad = 0usize;
+            for (a, b) in f.image.data.iter().zip(&reference.data) {
+                let d = ((a[0] - b[0]).abs() + (a[1] - b[1]).abs() + (a[2] - b[2]).abs())
+                    / 3.0;
+                if d > JND_PIXEL_LEVEL {
+                    bad += 1;
+                }
+            }
+            let frac = bad as f64 / f.image.data.len() as f64;
+            // Psychometric detection probability (repeated 3x per trace
+            // like the paper's protocol; 30 observers).
+            for _ in 0..3 {
+                trials += 1;
+                let p_detect = 1.0 - (-frac * DETECT_SLOPE).exp();
+                if rng.f64() < p_detect {
+                    // Detected: sub-JND severity -> unbiased preference.
+                    if rng.chance(0.5) {
+                        prefer_ours += 1;
+                    } else {
+                        prefer_base += 1;
+                    }
+                } else {
+                    no_diff += 1;
+                }
+            }
+            frames += 1;
+        }
+        let _ = label;
+    }
+    let no_diff_pct = 100.0 * no_diff as f64 / trials as f64;
+    let detected = prefer_ours + prefer_base;
+    println!("--- {} vs baseline ---", variant.label());
+    println!("trials:               {trials}");
+    println!("no difference:        {no_diff_pct:.1}%   (paper, full Lumina: ~73%)");
+    if detected > 0 {
+        println!(
+            "prefer variant:       {:.1}% of detected   (paper: ~50%)",
+            100.0 * prefer_ours as f64 / detected as f64
+        );
+    }
+    println!();
+    Ok(())
+}

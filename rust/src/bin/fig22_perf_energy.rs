@@ -1,0 +1,45 @@
+//! Fig. 22 — speedup and normalized energy of every variant vs the GPU
+//! baseline, across the paper's two evaluation settings.
+//! Paper: S2-GPU 1.2x, RC-GPU <1x, NRU+GPU 1.9x, S2-Acc 3.1x,
+//! RC-Acc 1.7-2.7x, Lumina 4.5x; energy savings 20%..81%.
+
+use anyhow::Result;
+use lumina::config::HardwareVariant;
+use lumina::harness;
+
+fn main() -> Result<()> {
+    harness::banner(
+        "Fig. 22",
+        "speedup & normalized energy vs mobile-GPU baseline",
+        "S2-GPU 1.2x | RC-GPU <1x | NRU+GPU 1.9x | S2-Acc 3.1x | RC-Acc 1.7-2.7x | Lumina 4.5x; energy -20%..-81%",
+    );
+    for (setting, class, traj) in harness::eval_settings() {
+        println!("--- {setting} ---");
+        println!(
+            "{:<10} {:>10} {:>10} {:>12} {:>10}",
+            "variant", "fps", "speedup", "norm-energy", "hit-rate"
+        );
+        let mut base_t = None;
+        let mut base_e = None;
+        for variant in HardwareVariant::evaluation_set() {
+            let cfg = harness::harness_config(class, traj, variant);
+            let report = harness::run_variant(cfg)?;
+            let t = report.mean_time_s();
+            let e = report.mean_energy_j();
+            if variant == HardwareVariant::Gpu {
+                base_t = Some(t);
+                base_e = Some(e);
+            }
+            println!(
+                "{:<10} {:>10.1} {:>9.2}x {:>12.3} {:>9.1}%",
+                variant.label(),
+                report.fps(),
+                base_t.unwrap() / t,
+                e / base_e.unwrap(),
+                report.cache_hit_rate() * 100.0
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

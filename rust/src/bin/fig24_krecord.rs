@@ -1,0 +1,68 @@
+//! Fig. 24 — sensitivity to the alpha-record length k (significant
+//! Gaussians per cache tag), RC-only on the accelerator.
+//! Paper: quality rises to the baseline as k grows; rasterization
+//! speedup falls 2.3x -> 0.7x as the hit rate drops 82% -> 31%.
+
+use anyhow::Result;
+use lumina::camera::trajectory::TrajectoryKind;
+use lumina::config::HardwareVariant;
+use lumina::coordinator::Coordinator;
+use lumina::harness;
+use lumina::metrics::psnr;
+use lumina::scene::synth::SceneClass;
+
+fn main() -> Result<()> {
+    harness::banner(
+        "Fig. 24",
+        "alpha-record length k: quality, raster speedup, hit rate (RC-only)",
+        "PSNR -> baseline as k grows; raster speedup 2.3x -> 0.7x; hits 82% -> 31%",
+    );
+    // Raster-stage time with RC disabled (the normalization target).
+    let base_cfg = harness::harness_config(
+        SceneClass::SyntheticSmall,
+        TrajectoryKind::VrHeadMotion,
+        HardwareVariant::NruGpu,
+    );
+    let base_raster: f64 = {
+        let mut coord = Coordinator::new(base_cfg)?;
+        let mut sum = 0.0;
+        for _ in 0..10 {
+            sum += coord.step()?.report.raster_s;
+        }
+        sum / 10.0
+    };
+    println!(
+        "{:>4} {:>10} {:>16} {:>10}",
+        "k", "psnr dB", "raster-speedup", "hit-rate"
+    );
+    for k in 1..=10usize {
+        let mut cfg = harness::harness_config(
+            SceneClass::SyntheticSmall,
+            TrajectoryKind::VrHeadMotion,
+            HardwareVariant::RcAcc,
+        );
+        cfg.rc.alpha_record = k;
+        let mut coord = Coordinator::new(cfg)?;
+        let mut raster = 0.0;
+        let mut q = 0.0;
+        let mut hits = 0u64;
+        let mut lookups = 0u64;
+        for i in 0..10usize {
+            let pose = coord.trajectory.poses[i];
+            let (reference, _, _, _) = coord.reference_frame(&pose);
+            let f = coord.step()?;
+            raster += f.report.raster_s;
+            q += psnr(&reference, &f.image);
+            hits += f.report.cache.hits;
+            lookups += f.report.cache.lookups;
+        }
+        println!(
+            "{:>4} {:>10.2} {:>15.2}x {:>9.1}%",
+            k,
+            q / 10.0,
+            base_raster / (raster / 10.0),
+            100.0 * hits as f64 / lookups.max(1) as f64
+        );
+    }
+    Ok(())
+}

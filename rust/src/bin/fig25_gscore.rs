@@ -1,0 +1,44 @@
+//! Fig. 25 — Lumina vs GSCore. For fairness the paper hosts projection
+//! and sorting on GSCore's CCU + GSU for all Lumina variants.
+//! Paper (normalized to the GPU baseline): GSCore 3.2x; Lumina baseline
+//! hardware 9.6x; +S2 12.8x; +RC 16.4x; full Lumina 29.6x.
+
+use anyhow::Result;
+use lumina::config::HardwareVariant;
+use lumina::coordinator::{Coordinator, FrontendHw};
+use lumina::harness;
+
+fn main() -> Result<()> {
+    harness::banner(
+        "Fig. 25",
+        "speedup vs GSCore (all on CCU/GSU frontends)",
+        "GSCore 3.2x | base-HW 9.6x | +S2 12.8x | +RC 16.4x | Lumina 29.6x over GPU",
+    );
+    for (setting, class, traj) in harness::eval_settings() {
+        println!("--- {setting} ---");
+        // GPU baseline for normalization.
+        let gpu = harness::run_variant(harness::harness_config(class, traj, HardwareVariant::Gpu))?;
+        let base_t = gpu.mean_time_s();
+        println!("{:<18} {:>10} {:>10}", "config", "fps", "speedup");
+        println!("{:<18} {:>10.1} {:>9.2}x", "GPU", gpu.fps(), 1.0);
+        let entries: Vec<(&str, HardwareVariant)> = vec![
+            ("GSCore", HardwareVariant::GsCore),
+            ("base-HW (NRU)", HardwareVariant::LuminaOnGscoreFrontend),
+            ("+S2", HardwareVariant::S2Acc),
+            ("+RC", HardwareVariant::RcAcc),
+            ("Lumina", HardwareVariant::Lumina),
+        ];
+        for (name, variant) in entries {
+            let cfg = harness::harness_config(class, traj, variant);
+            let mut coord = Coordinator::new(cfg)?;
+            // All accelerator variants use the CCU/GSU frontend here.
+            if variant != HardwareVariant::GsCore {
+                coord.frontend = FrontendHw::CcuGsu;
+            }
+            let r = coord.run()?;
+            println!("{:<18} {:>10.1} {:>9.2}x", name, r.fps(), base_t / r.mean_time_s());
+        }
+        println!();
+    }
+    Ok(())
+}

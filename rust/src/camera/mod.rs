@@ -1,0 +1,225 @@
+//! Camera substrate: intrinsics, SE(3) poses, and motion trajectories.
+//!
+//! Trajectories substitute for the paper's capture data (DESIGN.md §5):
+//! a smooth VR head-motion model (~25 deg/s average rotation at 90 FPS,
+//! matching the paper's Synthetic-NeRF VR simulation) and a slower,
+//! noisier 30 FPS walk standing in for the Tanks&Temples video clips.
+
+pub mod trajectory;
+
+use crate::math::{Mat3, Quat, Vec3};
+
+/// Pinhole camera intrinsics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Intrinsics {
+    pub width: usize,
+    pub height: usize,
+    pub fx: f32,
+    pub fy: f32,
+    pub cx: f32,
+    pub cy: f32,
+}
+
+impl Intrinsics {
+    /// Square image with a given vertical field of view (radians).
+    pub fn with_fov(width: usize, height: usize, fov_y: f32) -> Self {
+        let fy = 0.5 * height as f32 / (0.5 * fov_y).tan();
+        Intrinsics {
+            width,
+            height,
+            fx: fy,
+            fy,
+            cx: width as f32 / 2.0,
+            cy: height as f32 / 2.0,
+        }
+    }
+
+    /// Number of 16x16 tiles in x and y (ceiling division).
+    pub fn tiles(&self, tile: usize) -> (usize, usize) {
+        (self.width.div_ceil(tile), self.height.div_ceil(tile))
+    }
+}
+
+/// A camera pose: position + orientation (camera-to-world rotation).
+///
+/// Convention: the camera looks down its local +z axis; `rotation` maps
+/// camera-space vectors to world space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pose {
+    pub position: Vec3,
+    pub rotation: Quat,
+}
+
+impl Pose {
+    pub fn new(position: Vec3, rotation: Quat) -> Self {
+        Pose { position, rotation }
+    }
+
+    /// Pose at `eye` looking at `target` with +y up.
+    pub fn look_at(eye: Vec3, target: Vec3) -> Self {
+        let fwd = (target - eye).normalized();
+        let up = Vec3::new(0.0, 1.0, 0.0);
+        let right = up.cross(fwd).normalized();
+        let true_up = fwd.cross(right);
+        // Camera-to-world: columns are the camera axes in world space.
+        let m = Mat3::from_rows(
+            [right.x, true_up.x, fwd.x],
+            [right.y, true_up.y, fwd.y],
+            [right.z, true_up.z, fwd.z],
+        );
+        Pose { position: eye, rotation: mat3_to_quat(&m) }
+    }
+
+    /// World-to-camera rotation matrix.
+    pub fn world_to_cam(&self) -> Mat3 {
+        self.rotation.to_mat3().transpose()
+    }
+
+    /// Transform a world point into camera space.
+    #[inline]
+    pub fn to_camera(&self, p: Vec3) -> Vec3 {
+        self.world_to_cam().mul_vec(p - self.position)
+    }
+
+    /// Linear position + slerp rotation interpolation.
+    pub fn interpolate(&self, other: &Pose, t: f32) -> Pose {
+        Pose {
+            position: self.position.lerp(other.position, t),
+            rotation: self.rotation.slerp(other.rotation, t),
+        }
+    }
+
+    /// Constant-velocity extrapolation used by S^2 speculative sorting
+    /// (paper Eqns. 2-3): velocity from (prev -> cur), extrapolated
+    /// `steps` frame intervals past `cur`. Rotation extrapolates by
+    /// applying the inter-frame delta rotation `steps` times (slerp with
+    /// t > 1 equivalent, numerically stabler stepwise).
+    pub fn extrapolate(prev: &Pose, cur: &Pose, steps: f32) -> Pose {
+        let vel = cur.position - prev.position;
+        let position = cur.position + vel * steps;
+        // Delta rotation prev -> cur.
+        let delta = cur.rotation.mul(conjugate(prev.rotation)).normalized();
+        let mut rotation = cur.rotation;
+        let whole = steps.floor() as i32;
+        for _ in 0..whole.max(0) {
+            rotation = delta.mul(rotation).normalized();
+        }
+        let frac = steps - whole.max(0) as f32;
+        if frac > 1e-6 {
+            let next = delta.mul(rotation).normalized();
+            rotation = rotation.slerp(next, frac);
+        }
+        Pose { position, rotation }
+    }
+
+    /// Angular distance to another pose's rotation, in radians.
+    pub fn angular_distance(&self, other: &Pose) -> f32 {
+        let a = self.rotation.normalized();
+        let b = other.rotation.normalized();
+        let dot = (a.w * b.w + a.x * b.x + a.y * b.y + a.z * b.z).abs().min(1.0);
+        2.0 * dot.acos()
+    }
+}
+
+fn conjugate(q: Quat) -> Quat {
+    Quat::new(q.w, -q.x, -q.y, -q.z)
+}
+
+/// Shepperd's method: rotation matrix -> quaternion.
+fn mat3_to_quat(m: &Mat3) -> Quat {
+    let t = m.m[0][0] + m.m[1][1] + m.m[2][2];
+    if t > 0.0 {
+        let s = (t + 1.0).sqrt() * 2.0;
+        Quat::new(
+            0.25 * s,
+            (m.m[2][1] - m.m[1][2]) / s,
+            (m.m[0][2] - m.m[2][0]) / s,
+            (m.m[1][0] - m.m[0][1]) / s,
+        )
+        .normalized()
+    } else if m.m[0][0] > m.m[1][1] && m.m[0][0] > m.m[2][2] {
+        let s = (1.0 + m.m[0][0] - m.m[1][1] - m.m[2][2]).sqrt() * 2.0;
+        Quat::new(
+            (m.m[2][1] - m.m[1][2]) / s,
+            0.25 * s,
+            (m.m[0][1] + m.m[1][0]) / s,
+            (m.m[0][2] + m.m[2][0]) / s,
+        )
+        .normalized()
+    } else if m.m[1][1] > m.m[2][2] {
+        let s = (1.0 + m.m[1][1] - m.m[0][0] - m.m[2][2]).sqrt() * 2.0;
+        Quat::new(
+            (m.m[0][2] - m.m[2][0]) / s,
+            (m.m[0][1] + m.m[1][0]) / s,
+            0.25 * s,
+            (m.m[1][2] + m.m[2][1]) / s,
+        )
+        .normalized()
+    } else {
+        let s = (1.0 + m.m[2][2] - m.m[0][0] - m.m[1][1]).sqrt() * 2.0;
+        Quat::new(
+            (m.m[1][0] - m.m[0][1]) / s,
+            (m.m[0][2] + m.m[2][0]) / s,
+            (m.m[1][2] + m.m[2][1]) / s,
+            0.25 * s,
+        )
+        .normalized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn look_at_puts_target_on_axis() {
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let cam = pose.to_camera(Vec3::ZERO);
+        assert!(cam.x.abs() < 1e-5 && cam.y.abs() < 1e-5);
+        assert!((cam.z - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn to_camera_preserves_distance() {
+        let pose = Pose::look_at(Vec3::new(1.0, 2.0, -3.0), Vec3::new(0.5, 0.0, 0.0));
+        let p = Vec3::new(0.3, -0.8, 1.2);
+        let cam = pose.to_camera(p);
+        assert!((cam.norm() - (p - pose.position).norm()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn extrapolate_linear_position() {
+        let p0 = Pose::new(Vec3::new(0.0, 0.0, 0.0), Quat::IDENTITY);
+        let p1 = Pose::new(Vec3::new(0.1, 0.0, 0.0), Quat::IDENTITY);
+        let pred = Pose::extrapolate(&p0, &p1, 3.0);
+        assert!((pred.position.x - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extrapolate_rotation_continues() {
+        let step = Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), 0.05);
+        let p0 = Pose::new(Vec3::ZERO, Quat::IDENTITY);
+        let p1 = Pose::new(Vec3::ZERO, step);
+        let pred = Pose::extrapolate(&p0, &p1, 2.0);
+        let expect = step.mul(step).mul(step); // identity + 3 steps total
+        let d = pred.rotation.w * expect.w
+            + pred.rotation.x * expect.x
+            + pred.rotation.y * expect.y
+            + pred.rotation.z * expect.z;
+        assert!(d.abs() > 1.0 - 1e-4, "rotation extrapolation off: {d}");
+    }
+
+    #[test]
+    fn angular_distance_symmetric() {
+        let a = Pose::new(Vec3::ZERO, Quat::from_axis_angle(Vec3::new(1.0, 0.0, 0.0), 0.3));
+        let b = Pose::new(Vec3::ZERO, Quat::from_axis_angle(Vec3::new(1.0, 0.0, 0.0), 0.8));
+        assert!((a.angular_distance(&b) - 0.5).abs() < 1e-4);
+        assert!((b.angular_distance(&a) - 0.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn intrinsics_tiles_round_up() {
+        let intr = Intrinsics::with_fov(100, 50, 0.8);
+        assert_eq!(intr.tiles(16), (7, 4));
+    }
+}

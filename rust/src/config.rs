@@ -1,0 +1,486 @@
+//! Run configuration: the TOML-backed config system of the launcher.
+//!
+//! A [`LuminaConfig`] fully determines a run: scene class/size, trajectory,
+//! camera, algorithm parameters (S^2 window/margin, RC k), and which
+//! hardware variant the simulator models. `configs/*.toml` hold the
+//! presets used by the experiment harnesses; CLI `--set key=value`
+//! overrides individual fields (dotted paths).
+
+use anyhow::{bail, Context, Result};
+
+use crate::camera::trajectory::TrajectoryKind;
+use crate::constants::{
+    DEFAULT_ALPHA_RECORD, DEFAULT_EXPANDED_MARGIN, DEFAULT_SHARING_WINDOW,
+};
+use crate::scene::synth::SceneClass;
+use crate::util::minitoml::{self, Value};
+
+/// Which hardware the cost models simulate (paper Sec. 5 "Variants").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HardwareVariant {
+    /// Mobile Volta GPU baseline (full 3DGS on GPU).
+    Gpu,
+    /// S^2 algorithm on GPU, no radiance cache.
+    S2Gpu,
+    /// RC mechanism on GPU (slower than baseline; Sec. 6.2).
+    RcGpu,
+    /// GPU for Projection+Sorting, NRU for Rasterization, no cache, no S^2.
+    NruGpu,
+    /// S^2 on the accelerator, RC disabled.
+    S2Acc,
+    /// RC on the accelerator, S^2 disabled.
+    RcAcc,
+    /// Full Lumina: S^2 + RC + LuminCore.
+    Lumina,
+    /// GSCore comparator (CCU + GSU + GSCore rasterizer).
+    GsCore,
+    /// Lumina's baseline hardware hosted on GSCore's CCU/GSU frontend
+    /// (Sec. 6.4 comparison).
+    LuminaOnGscoreFrontend,
+}
+
+impl HardwareVariant {
+    /// True when the variant runs the S^2 sorting-sharing algorithm.
+    pub fn uses_s2(self) -> bool {
+        matches!(
+            self,
+            HardwareVariant::S2Gpu | HardwareVariant::S2Acc | HardwareVariant::Lumina
+        )
+    }
+
+    /// True when the variant runs radiance caching.
+    pub fn uses_rc(self) -> bool {
+        matches!(
+            self,
+            HardwareVariant::RcGpu | HardwareVariant::RcAcc | HardwareVariant::Lumina
+        )
+    }
+
+    /// True when rasterization runs on LuminCore NRUs.
+    pub fn uses_nru(self) -> bool {
+        matches!(
+            self,
+            HardwareVariant::NruGpu
+                | HardwareVariant::S2Acc
+                | HardwareVariant::RcAcc
+                | HardwareVariant::Lumina
+                | HardwareVariant::LuminaOnGscoreFrontend
+        )
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            HardwareVariant::Gpu => "GPU",
+            HardwareVariant::S2Gpu => "S2-GPU",
+            HardwareVariant::RcGpu => "RC-GPU",
+            HardwareVariant::NruGpu => "NRU+GPU",
+            HardwareVariant::S2Acc => "S2-Acc",
+            HardwareVariant::RcAcc => "RC-Acc",
+            HardwareVariant::Lumina => "Lumina",
+            HardwareVariant::GsCore => "GSCore",
+            HardwareVariant::LuminaOnGscoreFrontend => "Lumina(CCU/GSU)",
+        }
+    }
+
+    /// Parse the kebab-case config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gpu" => HardwareVariant::Gpu,
+            "s2-gpu" => HardwareVariant::S2Gpu,
+            "rc-gpu" => HardwareVariant::RcGpu,
+            "nru-gpu" => HardwareVariant::NruGpu,
+            "s2-acc" => HardwareVariant::S2Acc,
+            "rc-acc" => HardwareVariant::RcAcc,
+            "lumina" => HardwareVariant::Lumina,
+            "gscore" => HardwareVariant::GsCore,
+            "lumina-gscore-frontend" => HardwareVariant::LuminaOnGscoreFrontend,
+            other => bail!("unknown hardware variant: {other}"),
+        })
+    }
+
+    /// Kebab-case config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            HardwareVariant::Gpu => "gpu",
+            HardwareVariant::S2Gpu => "s2-gpu",
+            HardwareVariant::RcGpu => "rc-gpu",
+            HardwareVariant::NruGpu => "nru-gpu",
+            HardwareVariant::S2Acc => "s2-acc",
+            HardwareVariant::RcAcc => "rc-acc",
+            HardwareVariant::Lumina => "lumina",
+            HardwareVariant::GsCore => "gscore",
+            HardwareVariant::LuminaOnGscoreFrontend => "lumina-gscore-frontend",
+        }
+    }
+
+    /// All paper variants in evaluation order (Fig. 22).
+    pub fn evaluation_set() -> [HardwareVariant; 7] {
+        [
+            HardwareVariant::Gpu,
+            HardwareVariant::S2Gpu,
+            HardwareVariant::RcGpu,
+            HardwareVariant::NruGpu,
+            HardwareVariant::S2Acc,
+            HardwareVariant::RcAcc,
+            HardwareVariant::Lumina,
+        ]
+    }
+}
+
+fn scene_class_name(c: SceneClass) -> &'static str {
+    match c {
+        SceneClass::SyntheticSmall => "synthetic-small",
+        SceneClass::RealMedium => "real-medium",
+        SceneClass::RealIndoor => "real-indoor",
+        SceneClass::RealUnbounded => "real-unbounded",
+    }
+}
+
+fn parse_scene_class(s: &str) -> Result<SceneClass> {
+    Ok(match s {
+        "synthetic-small" => SceneClass::SyntheticSmall,
+        "real-medium" => SceneClass::RealMedium,
+        "real-indoor" => SceneClass::RealIndoor,
+        "real-unbounded" => SceneClass::RealUnbounded,
+        other => bail!("unknown scene class: {other}"),
+    })
+}
+
+fn trajectory_name(t: TrajectoryKind) -> &'static str {
+    match t {
+        TrajectoryKind::VrHeadMotion => "vr-head-motion",
+        TrajectoryKind::Walkthrough => "walkthrough",
+        TrajectoryKind::RapidRotation => "rapid-rotation",
+    }
+}
+
+fn parse_trajectory(s: &str) -> Result<TrajectoryKind> {
+    Ok(match s {
+        "vr-head-motion" => TrajectoryKind::VrHeadMotion,
+        "walkthrough" => TrajectoryKind::Walkthrough,
+        "rapid-rotation" => TrajectoryKind::RapidRotation,
+        other => bail!("unknown trajectory kind: {other}"),
+    })
+}
+
+/// Scene block of the config.
+#[derive(Debug, Clone)]
+pub struct SceneConfig {
+    pub class: SceneClass,
+    /// Gaussian count; 0 = the class default (paper-scale).
+    pub count: usize,
+    pub seed: u64,
+    /// Optional LGSC file to load instead of synthesizing.
+    pub path: Option<String>,
+}
+
+/// Camera/trajectory block.
+#[derive(Debug, Clone)]
+pub struct CameraConfig {
+    pub width: usize,
+    pub height: usize,
+    /// Vertical field of view in degrees.
+    pub fov_deg: f32,
+    pub trajectory: TrajectoryKind,
+    pub frames: usize,
+    pub seed: u64,
+}
+
+/// S^2 algorithm block (paper Sec. 3.1).
+#[derive(Debug, Clone)]
+pub struct S2Config {
+    pub sharing_window: usize,
+    /// Expanded viewport margin in pixels per dimension.
+    pub expanded_margin: usize,
+}
+
+impl Default for S2Config {
+    fn default() -> Self {
+        S2Config {
+            sharing_window: DEFAULT_SHARING_WINDOW,
+            expanded_margin: DEFAULT_EXPANDED_MARGIN,
+        }
+    }
+}
+
+/// Radiance-cache block (paper Sec. 3.2 + Sec. 5).
+#[derive(Debug, Clone)]
+pub struct RcConfig {
+    /// Alpha-record length k: significant-Gaussian IDs per tag.
+    pub alpha_record: usize,
+}
+
+impl Default for RcConfig {
+    fn default() -> Self {
+        RcConfig { alpha_record: DEFAULT_ALPHA_RECORD }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct LuminaConfig {
+    pub scene: SceneConfig,
+    pub camera: CameraConfig,
+    pub s2: S2Config,
+    pub rc: RcConfig,
+    pub variant: HardwareVariant,
+    /// Near clip plane.
+    pub near: f32,
+    /// Far clip plane.
+    pub far: f32,
+}
+
+impl LuminaConfig {
+    /// A fast default config for tests and the quickstart example.
+    pub fn quick_test() -> Self {
+        LuminaConfig {
+            scene: SceneConfig {
+                class: SceneClass::SyntheticSmall,
+                count: 20_000,
+                seed: 42,
+                path: None,
+            },
+            camera: CameraConfig {
+                width: 256,
+                height: 256,
+                fov_deg: 50.0,
+                trajectory: TrajectoryKind::VrHeadMotion,
+                frames: 24,
+                seed: 42,
+            },
+            s2: S2Config::default(),
+            rc: RcConfig::default(),
+            variant: HardwareVariant::Lumina,
+            near: 0.2,
+            far: 1000.0,
+        }
+    }
+
+    /// Parse from a TOML string (missing fields take defaults).
+    pub fn from_toml(s: &str) -> Result<Self> {
+        let root = minitoml::parse(s).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        Self::from_value(&root)
+    }
+
+    fn from_value(root: &Value) -> Result<Self> {
+        let mut cfg = Self::quick_test();
+        if let Some(v) = root.get_path("variant") {
+            cfg.variant =
+                HardwareVariant::parse(v.as_str().context("variant must be a string")?)?;
+        }
+        if let Some(v) = root.get_path("near") {
+            cfg.near = v.as_float().context("near must be a number")? as f32;
+        }
+        if let Some(v) = root.get_path("far") {
+            cfg.far = v.as_float().context("far must be a number")? as f32;
+        }
+        if let Some(v) = root.get_path("scene.class") {
+            cfg.scene.class = parse_scene_class(v.as_str().context("scene.class")?)?;
+            // A class change without explicit count means class default.
+            cfg.scene.count = 0;
+        }
+        if let Some(v) = root.get_path("scene.count") {
+            cfg.scene.count = v.as_int().context("scene.count")? as usize;
+        }
+        if let Some(v) = root.get_path("scene.seed") {
+            cfg.scene.seed = v.as_int().context("scene.seed")? as u64;
+        }
+        if let Some(v) = root.get_path("scene.path") {
+            cfg.scene.path = Some(v.as_str().context("scene.path")?.to_string());
+        }
+        if let Some(v) = root.get_path("camera.width") {
+            cfg.camera.width = v.as_int().context("camera.width")? as usize;
+        }
+        if let Some(v) = root.get_path("camera.height") {
+            cfg.camera.height = v.as_int().context("camera.height")? as usize;
+        }
+        if let Some(v) = root.get_path("camera.fov_deg") {
+            cfg.camera.fov_deg = v.as_float().context("camera.fov_deg")? as f32;
+        }
+        if let Some(v) = root.get_path("camera.trajectory") {
+            cfg.camera.trajectory = parse_trajectory(v.as_str().context("camera.trajectory")?)?;
+        }
+        if let Some(v) = root.get_path("camera.frames") {
+            cfg.camera.frames = v.as_int().context("camera.frames")? as usize;
+        }
+        if let Some(v) = root.get_path("camera.seed") {
+            cfg.camera.seed = v.as_int().context("camera.seed")? as u64;
+        }
+        if let Some(v) = root.get_path("s2.sharing_window") {
+            cfg.s2.sharing_window = v.as_int().context("s2.sharing_window")? as usize;
+        }
+        if let Some(v) = root.get_path("s2.expanded_margin") {
+            cfg.s2.expanded_margin = v.as_int().context("s2.expanded_margin")? as usize;
+        }
+        if let Some(v) = root.get_path("rc.alpha_record") {
+            let k = v.as_int().context("rc.alpha_record")? as usize;
+            if k == 0 || k > crate::pipeline::raster::MAX_SIG_K {
+                bail!(
+                    "rc.alpha_record must be 1..={}, got {k}",
+                    crate::pipeline::raster::MAX_SIG_K
+                );
+            }
+            cfg.rc.alpha_record = k;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to TOML text.
+    pub fn to_toml(&self) -> String {
+        let mut root = Value::Table(Default::default());
+        let set = |root: &mut Value, k: &str, v: Value| {
+            root.set_path(k, v).expect("set_path on fresh table");
+        };
+        set(&mut root, "variant", Value::String(self.variant.name().into()));
+        set(&mut root, "near", Value::Float(self.near as f64));
+        set(&mut root, "far", Value::Float(self.far as f64));
+        set(&mut root, "scene.class", Value::String(scene_class_name(self.scene.class).into()));
+        set(&mut root, "scene.count", Value::Integer(self.scene.count as i64));
+        set(&mut root, "scene.seed", Value::Integer(self.scene.seed as i64));
+        if let Some(p) = &self.scene.path {
+            set(&mut root, "scene.path", Value::String(p.clone()));
+        }
+        set(&mut root, "camera.width", Value::Integer(self.camera.width as i64));
+        set(&mut root, "camera.height", Value::Integer(self.camera.height as i64));
+        set(&mut root, "camera.fov_deg", Value::Float(self.camera.fov_deg as f64));
+        set(
+            &mut root,
+            "camera.trajectory",
+            Value::String(trajectory_name(self.camera.trajectory).into()),
+        );
+        set(&mut root, "camera.frames", Value::Integer(self.camera.frames as i64));
+        set(&mut root, "camera.seed", Value::Integer(self.camera.seed as i64));
+        set(&mut root, "s2.sharing_window", Value::Integer(self.s2.sharing_window as i64));
+        set(&mut root, "s2.expanded_margin", Value::Integer(self.s2.expanded_margin as i64));
+        set(&mut root, "rc.alpha_record", Value::Integer(self.rc.alpha_record as i64));
+        minitoml::serialize(&root)
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_toml(
+            &std::fs::read_to_string(path.as_ref())
+                .with_context(|| format!("reading config {:?}", path.as_ref()))?,
+        )
+    }
+
+    /// Apply a `section.key=value` override.
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (key, value) = spec
+            .split_once('=')
+            .with_context(|| format!("override must be key=value: {spec}"))?;
+        // Round-trip through the TOML tree to reuse the typed parser.
+        let mut root =
+            minitoml::parse(&self.to_toml()).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        if root.get_path(key).is_none() {
+            bail!("unknown config key: {key}");
+        }
+        let parsed = value
+            .parse::<i64>()
+            .map(Value::Integer)
+            .or_else(|_| value.parse::<f64>().map(Value::Float))
+            .or_else(|_| value.parse::<bool>().map(Value::Boolean))
+            .unwrap_or_else(|_| Value::String(value.to_string()));
+        root.set_path(key, parsed)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        *self = Self::from_value(&root)?;
+        Ok(())
+    }
+
+    /// Effective Gaussian count (0 = class default).
+    pub fn gaussian_count(&self) -> usize {
+        if self.scene.count == 0 {
+            self.scene.class.default_count()
+        } else {
+            self.scene.count
+        }
+    }
+
+    /// Camera intrinsics implied by the config.
+    pub fn intrinsics(&self) -> crate::camera::Intrinsics {
+        crate::camera::Intrinsics::with_fov(
+            self.camera.width,
+            self.camera.height,
+            self.camera.fov_deg.to_radians(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_test_valid() {
+        let c = LuminaConfig::quick_test();
+        assert_eq!(c.s2.sharing_window, 6);
+        assert_eq!(c.rc.alpha_record, 5);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = LuminaConfig::quick_test();
+        let s = c.to_toml();
+        let back = LuminaConfig::from_toml(&s).unwrap();
+        assert_eq!(back.scene.count, c.scene.count);
+        assert_eq!(back.variant, c.variant);
+        assert_eq!(back.camera.trajectory, c.camera.trajectory);
+    }
+
+    #[test]
+    fn minimal_toml_uses_defaults() {
+        let c = LuminaConfig::from_toml(
+            r#"
+            variant = "gpu"
+            [scene]
+            class = "synthetic-small"
+            [camera]
+            trajectory = "vr-head-motion"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.variant, HardwareVariant::Gpu);
+        assert_eq!(c.s2.sharing_window, 6);
+        assert_eq!(c.camera.width, 256);
+        assert_eq!(c.gaussian_count(), 300_000);
+    }
+
+    #[test]
+    fn override_applies() {
+        let mut c = LuminaConfig::quick_test();
+        c.apply_override("s2.sharing_window=12").unwrap();
+        assert_eq!(c.s2.sharing_window, 12);
+        c.apply_override("rc.alpha_record=3").unwrap();
+        assert_eq!(c.rc.alpha_record, 3);
+        c.apply_override("scene.count=999").unwrap();
+        assert_eq!(c.scene.count, 999);
+        c.apply_override("variant=rc-acc").unwrap();
+        assert_eq!(c.variant, HardwareVariant::RcAcc);
+    }
+
+    #[test]
+    fn override_rejects_garbage() {
+        let mut c = LuminaConfig::quick_test();
+        assert!(c.apply_override("nonsense").is_err());
+        assert!(c.apply_override("does.not.exist=1").is_err());
+        assert!(c.apply_override("rc.alpha_record=99").is_err());
+    }
+
+    #[test]
+    fn variant_flags() {
+        assert!(HardwareVariant::Lumina.uses_s2());
+        assert!(HardwareVariant::Lumina.uses_rc());
+        assert!(HardwareVariant::Lumina.uses_nru());
+        assert!(!HardwareVariant::Gpu.uses_s2());
+        assert!(HardwareVariant::RcGpu.uses_rc());
+        assert!(!HardwareVariant::RcGpu.uses_nru());
+        assert!(HardwareVariant::S2Acc.uses_nru());
+    }
+
+    #[test]
+    fn variant_name_roundtrip() {
+        for v in HardwareVariant::evaluation_set() {
+            assert_eq!(HardwareVariant::parse(v.name()).unwrap(), v);
+        }
+    }
+}

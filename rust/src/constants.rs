@@ -1,0 +1,102 @@
+//! Compositing and hardware constants, mirrored from `python/compile/common.py`.
+//!
+//! The Rust rasterizer, the Pallas kernels, and the AOT HLO artifacts must
+//! agree bit-for-bit on these — `tests/runtime_parity.rs` enforces it.
+
+/// Image tile edge in pixels (paper: 16x16 tiles).
+pub const TILE: usize = 16;
+
+/// "Significant Gaussian" opacity threshold (paper Sec. 2.1: alpha > 1/255).
+pub const ALPHA_MIN: f32 = 1.0 / 255.0;
+
+/// Opacity clamp of the reference CUDA rasterizer.
+pub const ALPHA_MAX: f32 = 0.99;
+
+/// Early-termination threshold theta on accumulated transmittance.
+pub const T_EPS: f32 = 1e-4;
+
+/// Gaussians per rasterization chunk (AOT artifact shape).
+pub const G_CHUNK: usize = 256;
+
+/// Tiles per batched-raster artifact.
+pub const TILE_BATCH: usize = 32;
+
+/// Gaussians per SH-eval artifact call.
+pub const SH_CHUNK: usize = 4096;
+
+/// Number of degree-3 SH coefficients per color channel.
+pub const SH_COEFFS: usize = 16;
+
+// --- Default algorithm parameters (paper Sec. 6) --------------------------
+
+/// Default S^2 sharing window: frames sharing one sorting result.
+pub const DEFAULT_SHARING_WINDOW: usize = 6;
+
+/// Default expanded viewport margin, in pixels per dimension.
+pub const DEFAULT_EXPANDED_MARGIN: usize = 4;
+
+/// Default alpha-record length k: significant-Gaussian IDs per cache tag.
+pub const DEFAULT_ALPHA_RECORD: usize = 5;
+
+// --- LuminCache geometry (paper Sec. 5) ------------------------------------
+
+/// Cache associativity.
+pub const CACHE_WAYS: usize = 4;
+
+/// Number of cache sets (4 x 1024 entries total).
+pub const CACHE_SETS: usize = 1024;
+
+/// Lowest Gaussian-ID bit used for the tag/index split (bits 3..18 used).
+pub const CACHE_ID_LO_BIT: u32 = 3;
+
+/// Number of Gaussian-ID bits used per ID (3rd..18th LSB).
+pub const CACHE_ID_BITS: u32 = 16;
+
+/// LuminCache covers 64x64 pixels = a 4x4 group of 16x16 tiles.
+pub const CACHE_TILE_GROUP: usize = 4;
+
+// --- LuminCore geometry (paper Sec. 5) -------------------------------------
+
+/// NRU array edge (8x8 NRUs).
+pub const NRU_ARRAY: usize = 8;
+
+/// Processing elements per NRU (three-stage pipelined frontend PEs).
+pub const PES_PER_NRU: usize = 4;
+
+/// NRU clock in Hz (1 GHz).
+pub const NRU_CLOCK_HZ: f64 = 1.0e9;
+
+/// Double-buffered feature buffer capacity in bytes (total 176 KB).
+pub const FEATURE_BUF_BYTES: usize = 176 * 1024;
+
+/// Double-buffered output buffer capacity in bytes (6 KB).
+pub const OUTPUT_BUF_BYTES: usize = 6 * 1024;
+
+/// Bytes of Gaussian features streamed per Gaussian into the NRU:
+/// mean2d (8) + conic (12) + opacity (4) + rgb (12) + id (4) = 40 B.
+pub const GAUSSIAN_FEATURE_BYTES: usize = 40;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_capacity_matches_paper() {
+        // 4-way x 1024 sets; tag 10 B + RGB value 3 B -> ~52 KB total.
+        let entries = CACHE_WAYS * CACHE_SETS;
+        assert_eq!(entries, 4096);
+        let bytes = entries * (10 + 3);
+        assert!(bytes <= 53 * 1024, "cache {} B exceeds ~52 KB budget", bytes);
+    }
+
+    #[test]
+    fn tag_bits_cover_five_ids() {
+        // 5 IDs x 16 bits = 80 bits = 10 bytes of tag+index material.
+        assert_eq!(5 * CACHE_ID_BITS as usize, 80);
+    }
+
+    #[test]
+    fn cache_group_covers_64px() {
+        assert_eq!(CACHE_TILE_GROUP * TILE, 64);
+    }
+}

@@ -1,0 +1,145 @@
+//! Run/frame reporting structures and text rendering.
+
+use crate::lumina::rc::CacheStats;
+use crate::sim::energy::EnergyBreakdown;
+
+/// One frame's metrics.
+#[derive(Debug, Clone)]
+pub struct FrameReport {
+    pub frame: usize,
+    /// Total modeled frame time (s).
+    pub time_s: f64,
+    /// Projection + sorting (+ S^2 refresh) time (s).
+    pub frontend_s: f64,
+    /// Rasterization time (s).
+    pub raster_s: f64,
+    /// Total energy (J).
+    pub energy_j: f64,
+    pub energy: EnergyBreakdown,
+    /// Whether speculative sorting executed this frame.
+    pub sorted_this_frame: bool,
+    /// Radiance-cache statistics for this frame.
+    pub cache: CacheStats,
+    /// NRU PE utilization (1.0 for non-NRU variants).
+    pub pe_utilization: f64,
+    /// Mean Gaussians iterated per pixel.
+    pub mean_iterated: f64,
+    /// Quality vs the exact pipeline (when measured).
+    pub psnr_vs_ref: Option<f64>,
+}
+
+/// A whole run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub label: String,
+    pub frames: Vec<FrameReport>,
+}
+
+impl RunReport {
+    pub fn new(label: &str) -> Self {
+        RunReport { label: label.to_string(), frames: Vec::new() }
+    }
+
+    pub fn push(&mut self, f: FrameReport) {
+        self.frames.push(f);
+    }
+
+    pub fn mean_time_s(&self) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.time_s).sum::<f64>() / self.frames.len() as f64
+    }
+
+    pub fn fps(&self) -> f64 {
+        let t = self.mean_time_s();
+        if t > 0.0 {
+            1.0 / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_energy_j(&self) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.energy_j).sum::<f64>() / self.frames.len() as f64
+    }
+
+    /// Aggregate cache hit rate over the run.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let mut s = CacheStats::default();
+        for f in &self.frames {
+            s.merge(&f.cache);
+        }
+        s.hit_rate()
+    }
+
+    /// Mean PSNR over frames that measured quality.
+    pub fn mean_psnr(&self) -> Option<f64> {
+        let vals: Vec<f64> = self.frames.iter().filter_map(|f| f.psnr_vs_ref).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    /// One-line summary for harness output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<16} fps={:>8.1}  frame={:>8.3} ms  energy={:>8.3} mJ  hit={:>5.1}%  psnr={}",
+            self.label,
+            self.fps(),
+            self.mean_time_s() * 1e3,
+            self.mean_energy_j() * 1e3,
+            self.cache_hit_rate() * 100.0,
+            match self.mean_psnr() {
+                Some(p) => format!("{p:.2} dB"),
+                None => "-".to_string(),
+            }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(t: f64, e: f64) -> FrameReport {
+        FrameReport {
+            frame: 0,
+            time_s: t,
+            frontend_s: t * 0.3,
+            raster_s: t * 0.7,
+            energy_j: e,
+            energy: EnergyBreakdown::default(),
+            sorted_this_frame: true,
+            cache: CacheStats::default(),
+            pe_utilization: 1.0,
+            mean_iterated: 100.0,
+            psnr_vs_ref: Some(30.0),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut r = RunReport::new("test");
+        r.push(frame(0.01, 0.1));
+        r.push(frame(0.03, 0.3));
+        assert!((r.mean_time_s() - 0.02).abs() < 1e-12);
+        assert!((r.fps() - 50.0).abs() < 1e-9);
+        assert!((r.mean_energy_j() - 0.2).abs() < 1e-12);
+        assert_eq!(r.mean_psnr(), Some(30.0));
+        assert!(r.summary().contains("fps"));
+    }
+
+    #[test]
+    fn empty_run_is_safe() {
+        let r = RunReport::new("empty");
+        assert_eq!(r.mean_time_s(), 0.0);
+        assert_eq!(r.fps(), 0.0);
+        assert_eq!(r.mean_psnr(), None);
+    }
+}

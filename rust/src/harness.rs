@@ -1,0 +1,103 @@
+//! Shared support for the per-figure experiment harnesses
+//! (`rust/src/bin/figNN_*.rs`): standard workloads, variant execution,
+//! and table formatting. See DESIGN.md §4 for the experiment index.
+
+use anyhow::Result;
+
+use crate::camera::trajectory::{generate, Trajectory, TrajectoryKind};
+use crate::camera::Intrinsics;
+use crate::config::{HardwareVariant, LuminaConfig};
+use crate::coordinator::{Coordinator, RunReport};
+use crate::scene::synth::SceneClass;
+
+/// Workload scale: the figure harnesses run each paper dataset class at
+/// 1/10th of its paper Gaussian count and 256x256 resolution so a full
+/// figure regenerates in minutes on a laptop CPU. The cost models are
+/// workload-driven, so *ratios* between variants (the paper's claims)
+/// are preserved; EXPERIMENTS.md reports the scale factor next to every
+/// measured number.
+pub const SCENE_SCALE_DIV: usize = 10;
+
+/// Resolution used by the figure harnesses.
+pub const HARNESS_RES: usize = 256;
+
+/// Frames per harness run (enough for cache warmup + steady state).
+pub const HARNESS_FRAMES: usize = 24;
+
+/// The two evaluation settings of the paper (Sec. 5 Datasets).
+pub fn eval_settings() -> Vec<(&'static str, SceneClass, TrajectoryKind)> {
+    vec![
+        ("synthetic@90fps", SceneClass::SyntheticSmall, TrajectoryKind::VrHeadMotion),
+        ("real@30fps", SceneClass::RealMedium, TrajectoryKind::Walkthrough),
+    ]
+}
+
+/// All four dataset classes (characterization figures).
+pub fn all_classes() -> Vec<(&'static str, SceneClass)> {
+    SceneClass::all()
+        .into_iter()
+        .map(|c| (c.paper_label(), c))
+        .collect()
+}
+
+/// Standard harness config for a class/trajectory/variant.
+pub fn harness_config(
+    class: SceneClass,
+    traj: TrajectoryKind,
+    variant: HardwareVariant,
+) -> LuminaConfig {
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.class = class;
+    cfg.scene.count = (class.default_count() / SCENE_SCALE_DIV).max(10_000);
+    cfg.scene.seed = 42;
+    cfg.camera.width = HARNESS_RES;
+    cfg.camera.height = HARNESS_RES;
+    cfg.camera.trajectory = traj;
+    cfg.camera.frames = HARNESS_FRAMES;
+    cfg.variant = variant;
+    // The paper's margin-4 default is relative to 800x800 frames; at the
+    // harness's 256x256 the proportional margin is ~2 px (Fig. 23's
+    // trade-off is resolution-relative).
+    cfg.s2.expanded_margin = 2;
+    cfg
+}
+
+/// Run a config to completion.
+pub fn run_variant(cfg: LuminaConfig) -> Result<RunReport> {
+    Coordinator::new(cfg)?.run()
+}
+
+/// Run with per-frame quality measurement (slower: renders the exact
+/// pipeline alongside).
+pub fn run_variant_with_quality(cfg: LuminaConfig) -> Result<RunReport> {
+    let mut coord = Coordinator::new(cfg)?;
+    let mut report = RunReport::new(coord.cfg.variant.label());
+    while coord.remaining() > 0 {
+        report.push(coord.step_with_quality()?.report);
+    }
+    Ok(report)
+}
+
+/// Trajectory for a config (for harnesses that drive the pipeline
+/// manually instead of through the coordinator).
+pub fn trajectory_for(cfg: &LuminaConfig) -> Trajectory {
+    generate(
+        cfg.camera.trajectory,
+        cfg.camera.seed,
+        cfg.camera.frames,
+        cfg.scene.class.extent(),
+    )
+}
+
+/// Intrinsics for a config.
+pub fn intrinsics_for(cfg: &LuminaConfig) -> Intrinsics {
+    cfg.intrinsics()
+}
+
+/// Print a standard table header for figure harnesses.
+pub fn banner(fig: &str, what: &str, paper_claim: &str) {
+    println!("=== {fig}: {what} ===");
+    println!("paper: {paper_claim}");
+    println!("workload: classes at 1/{SCENE_SCALE_DIV} paper Gaussian count, {HARNESS_RES}x{HARNESS_RES}, {HARNESS_FRAMES} frames");
+    println!();
+}

@@ -1,0 +1,35 @@
+//! # Lumina — real-time mobile neural rendering by exploiting computational redundancy
+//!
+//! A reproduction of the Lumina paper's full system as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the 3DGS pipeline substrate
+//!   (projection, sorting, rasterization), the paper's two algorithms
+//!   ([`lumina::s2`] Sorting-Sharing and [`lumina::rc`] Radiance Caching),
+//!   the cycle-accurate [`sim`] of the LuminCore accelerator plus GPU /
+//!   GSCore cost models, quality [`metrics`], and the frame-loop
+//!   [`coordinator`].
+//! * **Layer 2** — `python/compile/model.py`: the JAX compute graph,
+//!   AOT-lowered to HLO-text artifacts at build time.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the
+//!   rasterization hot-spot, validated against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API (the
+//! `xla` crate) so the per-frame path never touches Python.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod camera;
+pub mod config;
+pub mod constants;
+pub mod coordinator;
+pub mod harness;
+pub mod lumina;
+pub mod math;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod scene;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,12 @@
+//! The paper's two algorithmic contributions plus the DS-2 baseline.
+//!
+//! * [`s2`]  — Sorting-Sharing: speculative sorting at a predicted pose,
+//!   shared across a window of frames (Sec. 3.1).
+//! * [`rc`]  — Radiance Caching: tag pixels by their first-k significant
+//!   Gaussian IDs and skip redundant color integration (Sec. 3.2), with
+//!   the LuminCache-faithful cache organization (Sec. 4/5).
+//! * [`ds2`] — the downsample-2x quality baseline (Fig. 20).
+
+pub mod ds2;
+pub mod rc;
+pub mod s2;

@@ -1,0 +1,684 @@
+//! RC — Radiance Caching (paper Sec. 3.2) and the LuminCache-faithful
+//! cache organization (paper Sec. 4/5).
+//!
+//! Key insight: two rays that intersect the same sequence of initial
+//! *significant* Gaussians (alpha > 1/255) almost surely produce the same
+//! pixel value. Per pixel, rasterization runs only until the first k
+//! significant Gaussians are identified; their IDs form a cache tag. On a
+//! hit, the cached RGB replaces the remaining color integration; on a
+//! miss, integration completes and the cache is updated.
+//!
+//! The cache geometry mirrors LuminCache (Sec. 5): 4-way set-associative,
+//! 1024 sets, tag/index built from bits [3..19) of each of the k Gaussian
+//! IDs (paper: "3rd to 18th least significant bits", 16 bits per ID, 10
+//! bytes of tag material for k=5), tree pseudo-LRU replacement, and
+//! contents partitioned per 4x4-tile group (64x64 px) with save/flush/
+//! reload semantics between groups (modeled functionally as per-group
+//! sub-caches; the traffic is charged by the simulator).
+
+use crate::constants::{
+    ALPHA_MAX, ALPHA_MIN, CACHE_ID_BITS, CACHE_ID_LO_BIT, CACHE_SETS, CACHE_TILE_GROUP,
+    CACHE_WAYS, T_EPS,
+};
+use crate::pipeline::image::Image;
+use crate::pipeline::project::ProjectedScene;
+use crate::pipeline::raster::{gather_tile, GatheredSplat, MAX_SIG_K};
+use crate::pipeline::sort::TileBins;
+
+/// One cache entry: packed high-bit tag + cached pixel RGB.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Entry {
+    tag: u128,
+    value: [f32; 3],
+}
+
+/// Running cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Pixels whose ray met fewer than k significant Gaussians
+    /// (uncacheable; rendered fully).
+    pub short_rays: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.lookups += o.lookups;
+        self.hits += o.hits;
+        self.inserts += o.inserts;
+        self.evictions += o.evictions;
+        self.short_rays += o.short_rays;
+    }
+}
+
+/// A single LuminCache bank: N-way set-associative with tree pseudo-LRU.
+#[derive(Debug, Clone)]
+pub struct RadianceCache {
+    ways: usize,
+    sets: usize,
+    k: usize,
+    entries: Vec<Option<Entry>>,
+    /// Per-set pseudo-LRU tree bits (3 bits for 4 ways, packed in u8).
+    plru: Vec<u8>,
+    pub stats: CacheStats,
+}
+
+impl RadianceCache {
+    /// Paper-default geometry: 4 ways x 1024 sets, tag from k IDs.
+    pub fn paper_default(k: usize) -> Self {
+        Self::new(CACHE_WAYS, CACHE_SETS, k)
+    }
+
+    pub fn new(ways: usize, sets: usize, k: usize) -> Self {
+        assert!(ways == 2 || ways == 4 || ways == 8, "plru tree supports 2/4/8 ways");
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        assert!((1..=MAX_SIG_K).contains(&k));
+        RadianceCache {
+            ways,
+            sets,
+            k,
+            entries: vec![None; ways * sets],
+            plru: vec![0; sets],
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Build (set index, tag) from the first k significant Gaussian IDs.
+    ///
+    /// Per the paper (Fig. 16): the *lower* bits of each ID concatenate
+    /// into the set index; the *higher* bits concatenate into the tag.
+    /// IDs contribute bits [CACHE_ID_LO_BIT .. CACHE_ID_LO_BIT+16).
+    fn index_tag(&self, ids: &[u32]) -> (usize, u128) {
+        debug_assert_eq!(ids.len(), self.k);
+        let index_bits = self.sets.trailing_zeros();
+        let per_id = (index_bits as usize).div_ceil(self.k).max(1) as u32;
+        let mut index: u64 = 0;
+        let mut tag: u128 = 0;
+        for &id in ids {
+            let field = ((id >> CACHE_ID_LO_BIT) & ((1u32 << CACHE_ID_BITS) - 1)) as u64;
+            let low = field & ((1u64 << per_id) - 1);
+            let high = field >> per_id;
+            index = (index << per_id) | low;
+            tag = (tag << (CACHE_ID_BITS - per_id)) | high as u128;
+        }
+        ((index as usize) & (self.sets - 1), tag)
+    }
+
+    /// Look up a tag; on hit returns the cached RGB and touches pLRU.
+    pub fn lookup(&mut self, ids: &[u32]) -> Option<[f32; 3]> {
+        self.stats.lookups += 1;
+        let (set, tag) = self.index_tag(ids);
+        for w in 0..self.ways {
+            let slot = set * self.ways + w;
+            if let Some(e) = self.entries[slot] {
+                if e.tag == tag {
+                    self.stats.hits += 1;
+                    self.touch(set, w);
+                    return Some(e.value);
+                }
+            }
+        }
+        None
+    }
+
+    /// Insert (or update) a tag with a pixel value, evicting pseudo-LRU.
+    pub fn insert(&mut self, ids: &[u32], value: [f32; 3]) {
+        let (set, tag) = self.index_tag(ids);
+        // Update in place on tag match.
+        for w in 0..self.ways {
+            let slot = set * self.ways + w;
+            if let Some(e) = &mut self.entries[slot] {
+                if e.tag == tag {
+                    e.value = value;
+                    self.touch(set, w);
+                    return;
+                }
+            }
+        }
+        // Free way?
+        for w in 0..self.ways {
+            let slot = set * self.ways + w;
+            if self.entries[slot].is_none() {
+                self.entries[slot] = Some(Entry { tag, value });
+                self.stats.inserts += 1;
+                self.touch(set, w);
+                return;
+            }
+        }
+        // Evict the pseudo-LRU victim.
+        let w = self.victim(set);
+        self.entries[set * self.ways + w] = Some(Entry { tag, value });
+        self.stats.inserts += 1;
+        self.stats.evictions += 1;
+        self.touch(set, w);
+    }
+
+    /// Tree-pLRU touch: flip node bits toward the accessed way.
+    fn touch(&mut self, set: usize, way: usize) {
+        // For 4 ways: bit0 = root (0: left pair younger), bit1 = left
+        // pair, bit2 = right pair. Generalized for 2/8 analogously.
+        match self.ways {
+            2 => {
+                self.plru[set] = way as u8 ^ 1;
+            }
+            4 => {
+                let mut b = self.plru[set];
+                if way < 2 {
+                    b |= 1; // root points right next
+                    if way == 0 {
+                        b |= 2;
+                    } else {
+                        b &= !2;
+                    }
+                } else {
+                    b &= !1; // root points left next
+                    if way == 2 {
+                        b |= 4;
+                    } else {
+                        b &= !4;
+                    }
+                }
+                self.plru[set] = b;
+            }
+            8 => {
+                // 7-bit tree; index math kept simple.
+                let mut b = self.plru[set];
+                let top = way / 4;
+                let mid = (way / 2) % 2;
+                let leaf = way % 2;
+                set_bit(&mut b, 0, top == 0);
+                set_bit(&mut b, 1 + top as u8, mid == 0);
+                set_bit(&mut b, 3 + (way / 2) as u8, leaf == 0);
+                self.plru[set] = b;
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Tree-pLRU victim selection.
+    fn victim(&self, set: usize) -> usize {
+        let b = self.plru[set];
+        match self.ways {
+            2 => (b & 1) as usize,
+            4 => {
+                if b & 1 == 0 {
+                    // go left pair
+                    if b & 2 == 0 {
+                        0
+                    } else {
+                        1
+                    }
+                } else if b & 4 == 0 {
+                    2
+                } else {
+                    3
+                }
+            }
+            8 => {
+                let top = usize::from(b & 1 == 0);
+                let mid = usize::from(b & (1 << (1 + top)) == 0);
+                let half = top * 4 + mid * 2;
+                let leaf = usize::from(b & (1 << (3 + half / 2)) == 0);
+                half + leaf
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Flush all contents (the per-tile-group flush of Sec. 4).
+    pub fn flush(&mut self) {
+        self.entries.iter_mut().for_each(|e| *e = None);
+        self.plru.iter_mut().for_each(|b| *b = 0);
+    }
+
+    /// Number of live entries.
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+}
+
+fn set_bit(b: &mut u8, bit: u8, value: bool) {
+    if value {
+        *b |= 1 << bit;
+    } else {
+        *b &= !(1 << bit);
+    }
+}
+
+/// The full LuminCache: one [`RadianceCache`] bank per 4x4-tile group,
+/// persisted across frames (the hardware saves/reloads group contents to
+/// DRAM between tile batches; double-buffering hides the latency, the
+/// simulator charges the traffic).
+pub struct GroupedRadianceCache {
+    pub groups_x: usize,
+    pub groups_y: usize,
+    banks: Vec<RadianceCache>,
+    k: usize,
+}
+
+impl GroupedRadianceCache {
+    pub fn new(tiles_x: usize, tiles_y: usize, k: usize) -> Self {
+        let groups_x = tiles_x.div_ceil(CACHE_TILE_GROUP);
+        let groups_y = tiles_y.div_ceil(CACHE_TILE_GROUP);
+        GroupedRadianceCache {
+            groups_x,
+            groups_y,
+            banks: (0..groups_x * groups_y)
+                .map(|_| RadianceCache::paper_default(k))
+                .collect(),
+            k,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bank serving a tile coordinate.
+    pub fn bank_for_tile(&mut self, tx: usize, ty: usize) -> &mut RadianceCache {
+        let gx = tx / CACHE_TILE_GROUP;
+        let gy = ty / CACHE_TILE_GROUP;
+        &mut self.banks[gy * self.groups_x + gx]
+    }
+
+    /// Aggregate statistics over all banks.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for b in &self.banks {
+            s.merge(&b.stats);
+        }
+        s
+    }
+
+    /// Bytes moved per frame for group save+reload (entries * entry size *
+    /// 2 directions) — the DRAM traffic the simulator charges.
+    pub fn swap_traffic_bytes(&self) -> usize {
+        // Entry: 10 B tag material + 3 B RGB (paper Sec. 5).
+        let entry_bytes = 13;
+        self.banks.iter().map(|b| b.occupancy() * entry_bytes * 2).sum()
+    }
+
+    pub fn num_banks(&self) -> usize {
+        self.banks.len()
+    }
+}
+
+/// Per-pixel outcome of cached rasterization.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PixelOutcome {
+    /// Gaussians iterated by this pixel (stops early on cache hit).
+    pub iterated: u32,
+    /// Significant Gaussians encountered while iterating.
+    pub significant: u32,
+    /// True when the pixel's value came from the cache.
+    pub hit: bool,
+}
+
+/// Output of radiance-cached rasterization.
+pub struct CachedRasterOutput {
+    pub image: Image,
+    pub outcomes: Vec<PixelOutcome>,
+    pub stats: CacheStats,
+}
+
+/// Rasterize with radiance caching (paper Fig. 10).
+///
+/// Per pixel: composite until the first k significant Gaussians are seen
+/// (the alpha-record), query the cache with their IDs; on hit, emit the
+/// cached value and stop; on miss, finish compositing and insert.
+/// Serial over tiles because the cache is shared mutable state — exactly
+/// the lock-contention hazard the paper ascribes to RC-on-GPU; the
+/// accelerator sims recover parallelism by charging per-bank timing.
+pub fn rasterize_cached(
+    projected: &ProjectedScene,
+    bins: &TileBins,
+    width: usize,
+    height: usize,
+    cache: &mut GroupedRadianceCache,
+) -> CachedRasterOutput {
+    let ts = bins.tile_size;
+    let k = cache.k();
+    let mut image = Image::new(width, height);
+    let mut outcomes = vec![PixelOutcome::default(); width * height];
+    let stats_before = cache.stats();
+
+    for ty in 0..bins.tiles_y {
+        for tx in 0..bins.tiles_x {
+            let tile = ty * bins.tiles_x + tx;
+            let splats = gather_tile(projected, &bins.lists[tile]);
+            let bank = cache.bank_for_tile(tx, ty);
+            for ly in 0..ts {
+                let y = ty * ts + ly;
+                if y >= height {
+                    break;
+                }
+                for lx in 0..ts {
+                    let x = tx * ts + lx;
+                    if x >= width {
+                        break;
+                    }
+                    let (value, outcome) = composite_pixel_cached(
+                        &splats,
+                        x as f32 + 0.5,
+                        y as f32 + 0.5,
+                        k,
+                        bank,
+                    );
+                    image.set(x, y, value);
+                    outcomes[y * width + x] = outcome;
+                }
+            }
+        }
+    }
+
+    let mut stats = cache.stats();
+    // Report only this call's deltas.
+    stats.lookups -= stats_before.lookups;
+    stats.hits -= stats_before.hits;
+    stats.inserts -= stats_before.inserts;
+    stats.evictions -= stats_before.evictions;
+    stats.short_rays -= stats_before.short_rays;
+    CachedRasterOutput { image, outcomes, stats }
+}
+
+/// One pixel with cache interaction. Mirrors `raster::composite_pixel`
+/// semantics exactly for the compositing math (including the gathered
+/// significance-radius fast reject).
+pub fn composite_pixel_cached(
+    splats: &[GatheredSplat],
+    px: f32,
+    py: f32,
+    k: usize,
+    bank: &mut RadianceCache,
+) -> ([f32; 3], PixelOutcome) {
+    let mut c = [0.0f32; 3];
+    let mut t = 1.0f32;
+    let mut iterated = 0u32;
+    let mut significant = 0u32;
+    let mut sig_ids = [0u32; MAX_SIG_K];
+    let mut sig_n = 0usize;
+    let mut queried = false;
+
+    for s in splats {
+        iterated += 1;
+        let dx = px - s.mean[0];
+        let dy = py - s.mean[1];
+        if dx * dx + dy * dy > s.r2_sig {
+            continue;
+        }
+        let power = -0.5 * (s.conic_a * dx * dx + s.conic_c * dy * dy) - s.conic_b * dx * dy;
+        if power > 0.0 {
+            continue;
+        }
+        let alpha = (s.opacity * power.exp()).min(ALPHA_MAX);
+        if alpha < ALPHA_MIN {
+            continue;
+        }
+        if sig_n < k {
+            sig_ids[sig_n] = s.id;
+            sig_n += 1;
+        }
+        significant += 1;
+        let test_t = t * (1.0 - alpha);
+        if test_t < T_EPS {
+            // Terminated before the cache query resolved: value is final.
+            return (c, PixelOutcome { iterated, significant, hit: false });
+        }
+        let w = alpha * t;
+        c[0] += w * s.color[0];
+        c[1] += w * s.color[1];
+        c[2] += w * s.color[2];
+        t = test_t;
+
+        // Once the alpha-record fills, query the cache (paper step 4).
+        if sig_n == k && !queried {
+            queried = true;
+            if let Some(value) = bank.lookup(&sig_ids[..k]) {
+                return (value, PixelOutcome { iterated, significant, hit: true });
+            }
+        }
+    }
+
+    // Miss (or short ray): full value computed; update the cache.
+    if queried {
+        bank.insert(&sig_ids[..k], c);
+    } else {
+        bank.stats.short_rays += 1;
+    }
+    (c, PixelOutcome { iterated, significant, hit: false })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Intrinsics, Pose};
+    use crate::math::Vec3;
+    use crate::pipeline::project::project;
+    use crate::pipeline::raster::{rasterize, RasterConfig};
+    use crate::pipeline::sort::bin_and_sort;
+    use crate::scene::synth::test_scene;
+
+    #[test]
+    fn index_tag_deterministic_and_sensitive() {
+        let cache = RadianceCache::paper_default(5);
+        let ids = [100, 200, 300, 400, 500];
+        let (s1, t1) = cache.index_tag(&ids);
+        let (s2, t2) = cache.index_tag(&ids);
+        assert_eq!((s1, t1), (s2, t2));
+        let ids2 = [100, 200, 300, 400, 1000]; // differs above bit 3
+        // Changing one ID changes index and/or tag.
+        assert_ne!(cache.index_tag(&ids2), (s1, t1));
+        assert!(s1 < CACHE_SETS);
+    }
+
+    #[test]
+    fn id_bits_outside_window_ignored() {
+        // Bits below CACHE_ID_LO_BIT (=3) are not part of index/tag:
+        // matches the paper's 3rd..18th-LSB field.
+        let cache = RadianceCache::paper_default(2);
+        let a = cache.index_tag(&[0b1000, 0b10000]);
+        let b = cache.index_tag(&[0b1001, 0b10111]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lookup_insert_roundtrip() {
+        let mut cache = RadianceCache::paper_default(5);
+        let ids = [1 << 3, 2 << 3, 3 << 3, 4 << 3, 5 << 3];
+        assert!(cache.lookup(&ids).is_none());
+        cache.insert(&ids, [0.1, 0.2, 0.3]);
+        assert_eq!(cache.lookup(&ids), Some([0.1, 0.2, 0.3]));
+        assert_eq!(cache.stats.hits, 1);
+        assert_eq!(cache.stats.lookups, 2);
+    }
+
+    #[test]
+    fn plru_evicts_cold_way() {
+        let mut cache = RadianceCache::new(4, 2, 1);
+        // 5 tags mapping to the same set (set bits = lowest index bit of
+        // the 16-bit field; craft IDs that share it).
+        let mk = |i: u32| [((i << 1) | 0) << CACHE_ID_LO_BIT];
+        for i in 0..4 {
+            cache.insert(&mk(i), [i as f32; 3]);
+        }
+        assert_eq!(cache.occupancy(), 4);
+        // Touch tags 1..3 so tag 0 becomes the pLRU victim.
+        for i in 1..4 {
+            assert!(cache.lookup(&mk(i)).is_some());
+        }
+        cache.insert(&mk(9), [9.0; 3]);
+        assert_eq!(cache.stats.evictions, 1);
+        assert!(cache.lookup(&mk(0)).is_none(), "cold way should be evicted");
+        assert!(cache.lookup(&mk(9)).is_some());
+    }
+
+    #[test]
+    fn flush_empties() {
+        let mut cache = RadianceCache::paper_default(3);
+        cache.insert(&[8, 16, 24], [0.5; 3]);
+        assert_eq!(cache.occupancy(), 1);
+        cache.flush();
+        assert_eq!(cache.occupancy(), 0);
+        assert!(cache.lookup(&[8, 16, 24]).is_none());
+    }
+
+    /// Test scene with the oversized-Gaussian tail clamped — the regime
+    /// cache-aware fine-tuning produces (Sec. 3.3); the unclamped tail is
+    /// exercised by the fig13/fig21 harnesses instead.
+    fn clamped_scene(seed: u64, n: usize) -> crate::scene::GaussianScene {
+        let mut scene = test_scene(seed, n);
+        let cap = 0.06; // ~5x the median scale for SyntheticSmall
+        for s in scene.scale.iter_mut() {
+            s.x = s.x.min(cap);
+            s.y = s.y.min(cap);
+            s.z = s.z.min(cap);
+        }
+        scene
+    }
+
+    fn render_setup() -> (crate::pipeline::project::ProjectedScene, crate::pipeline::sort::TileBins, Intrinsics)
+    {
+        let scene = clamped_scene(77, 4000);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        (p, bins, intr)
+    }
+
+    #[test]
+    fn cold_cache_first_frame_stays_faithful() {
+        // Frame 0: the cache starts empty but fills as pixels complete,
+        // so *intra-frame* hits occur between pixels sharing the same
+        // initial significant Gaussians (the paper's ray-similarity
+        // insight applied within a frame). Quality must stay near-exact.
+        let (p, bins, intr) = render_setup();
+        let plain = rasterize(&p, &bins, intr.width, intr.height, &RasterConfig::default());
+        let mut cache = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+        let cached = rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache);
+        let q = crate::metrics::psnr(&plain.image, &cached.image);
+        assert!(q > 28.0, "first-frame RC quality {q} dB");
+        // Miss pixels must be bit-exact: check a hit-free pixel.
+        let miss_idx = cached
+            .outcomes
+            .iter()
+            .position(|o| !o.hit)
+            .expect("some pixel missed");
+        let (x, y) = (miss_idx % intr.width, miss_idx / intr.width);
+        assert_eq!(plain.image.at(x, y), cached.image.at(x, y));
+    }
+
+    #[test]
+    fn second_frame_hits_and_saves_work() {
+        let (p, bins, intr) = render_setup();
+        let mut cache = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+        let first = rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache);
+        let second = rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache);
+        assert!(second.stats.hit_rate() > 0.5, "hit rate {}", second.stats.hit_rate());
+        // Identical pose -> replay reproduces the first frame closely
+        // (hit pixels return cached values; those were themselves RC
+        // outputs, so the images converge rather than match bitwise).
+        let q = crate::metrics::psnr(&first.image, &second.image);
+        assert!(q > 38.0, "same-pose replay diverged: {q} dB");
+        // Work saved: hits iterate less than the first pass.
+        let w1: u64 = first.outcomes.iter().map(|o| o.iterated as u64).sum();
+        let w2: u64 = second.outcomes.iter().map(|o| o.iterated as u64).sum();
+        assert!(w2 < w1, "cached pass did not save work: {w1} -> {w2}");
+    }
+
+    #[test]
+    fn nearby_pose_still_hits_often() {
+        let scene = clamped_scene(77, 4000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let pose1 = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let pose2 = Pose::look_at(Vec3::new(0.01, 0.002, -4.0), Vec3::ZERO);
+        let p1 = project(&scene, &pose1, &intr, 0.2, 100.0, 0.0);
+        let b1 = bin_and_sort(&p1, &intr, 16, 0.0);
+        let p2 = project(&scene, &pose2, &intr, 0.2, 100.0, 0.0);
+        let b2 = bin_and_sort(&p2, &intr, 16, 0.0);
+        let mut cache = GroupedRadianceCache::new(b1.tiles_x, b1.tiles_y, 5);
+        rasterize_cached(&p1, &b1, intr.width, intr.height, &mut cache);
+        let out = rasterize_cached(&p2, &b2, intr.width, intr.height, &mut cache);
+        assert!(
+            out.stats.hit_rate() > 0.3,
+            "nearby pose hit rate {}",
+            out.stats.hit_rate()
+        );
+        // Quality: overall PSNR stays high, and the *median* hit-pixel
+        // color error reproduces the paper's Fig. 12 claim (average color
+        // difference ~0.5-1.0 out of 255 for k=5). The tail is heavier
+        // than in trained scenes (DESIGN.md §5: synthetic statistics),
+        // which is what cache-aware fine-tuning addresses.
+        let exact = rasterize(&p2, &b2, intr.width, intr.height, &RasterConfig::default());
+        let psnr = crate::metrics::psnr(&exact.image, &out.image);
+        assert!(psnr > 27.0, "cached quality {psnr} dB");
+        let mut diffs: Vec<f32> = out
+            .outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.hit)
+            .map(|(i, _)| {
+                let (x, y) = (i % intr.width, i / intr.width);
+                let a = out.image.at(x, y);
+                let b = exact.image.at(x, y);
+                ((a[0] - b[0]).abs() + (a[1] - b[1]).abs() + (a[2] - b[2]).abs()) / 3.0
+                    * 255.0
+            })
+            .collect();
+        diffs.sort_by(f32::total_cmp);
+        let median = diffs[diffs.len() / 2];
+        assert!(median < 3.0, "median hit color diff {median}/255 (paper: <1.0)");
+    }
+
+    #[test]
+    fn smaller_k_hits_more(){
+        let (p, bins, intr) = render_setup();
+        let mut rates = Vec::new();
+        for k in [2usize, 5, 8] {
+            let mut cache = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, k);
+            rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache);
+            let out = rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache);
+            rates.push(out.stats.hit_rate());
+        }
+        // Fig. 24: hit rate falls as the alpha-record grows. Same-pose
+        // replay saturates near 100%, so only the endpoints separate
+        // cleanly here; the full monotone sweep is fig24's harness (which
+        // uses a moving trajectory).
+        assert!(rates[0] > rates[2], "rates {rates:?}");
+        assert!(rates[0] > 0.9, "k=2 same-pose replay should saturate: {rates:?}");
+    }
+
+    #[test]
+    fn groups_are_independent_banks() {
+        let mut cache = GroupedRadianceCache::new(8, 8, 5);
+        assert_eq!(cache.num_banks(), 4);
+        let ids = [8, 16, 24, 32, 40];
+        cache.bank_for_tile(0, 0).insert(&ids, [1.0; 3]);
+        assert!(cache.bank_for_tile(0, 0).lookup(&ids).is_some());
+        assert!(cache.bank_for_tile(7, 7).lookup(&ids).is_none());
+    }
+
+    #[test]
+    fn swap_traffic_grows_with_occupancy() {
+        let mut cache = GroupedRadianceCache::new(4, 4, 5);
+        assert_eq!(cache.swap_traffic_bytes(), 0);
+        cache.bank_for_tile(0, 0).insert(&[8, 16, 24, 32, 40], [0.5; 3]);
+        assert_eq!(cache.swap_traffic_bytes(), 26); // 13 B x 2 directions
+    }
+}
+

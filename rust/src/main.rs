@@ -1,0 +1,180 @@
+//! `lumina` — the launcher CLI for the LuminSys reproduction.
+//!
+//! Subcommands:
+//!   render    render a trajectory under one hardware variant
+//!   compare   run every paper variant on one config (Fig. 22 style)
+//!   quality   per-frame quality vs the exact pipeline (Fig. 20 style)
+//!   runtime   load the AOT artifacts and smoke-execute them via PJRT
+//!   info      print the resolved config
+//!
+//! Common flags: --config <toml>, --set key=value (repeatable),
+//! --frames N, --out <ppm path> (render only).
+
+use anyhow::{Context, Result};
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::Coordinator;
+use lumina::runtime::ArtifactRuntime;
+use lumina::util::cli;
+
+const VALUE_KEYS: &[&str] = &["config", "set", "frames", "out", "variant", "artifacts"];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv, VALUE_KEYS);
+    match args.subcommand.as_deref() {
+        Some("render") => cmd_render(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("quality") => cmd_quality(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}\n");
+            }
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "lumina — real-time mobile neural rendering (paper reproduction)\n\
+         \n\
+         USAGE: lumina <render|compare|quality|runtime|info> [flags]\n\
+         \n\
+         FLAGS:\n\
+           --config <file.toml>   load a run configuration\n\
+           --set key=value        override a config field (repeatable)\n\
+           --variant <name>       hardware variant (gpu, s2-gpu, rc-gpu,\n\
+                                  nru-gpu, s2-acc, rc-acc, lumina, gscore)\n\
+           --frames <n>           trajectory length\n\
+           --out <prefix>         write rendered frames as PPM\n\
+           --artifacts <dir>      AOT artifact directory (runtime cmd)"
+    );
+}
+
+fn load_config(args: &cli::Args) -> Result<LuminaConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => LuminaConfig::load(path)?,
+        None => LuminaConfig::quick_test(),
+    };
+    if let Some(v) = args.get("variant") {
+        cfg.variant = HardwareVariant::parse(v)?;
+    }
+    if let Some(f) = args.get("frames") {
+        cfg.camera.frames = f.parse().context("--frames must be an integer")?;
+    }
+    for spec in args.get_all("set") {
+        cfg.apply_override(spec)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_render(args: &cli::Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out_prefix = args.get("out").map(str::to_string);
+    println!(
+        "rendering {} frames | variant={} | scene={} Gaussians | {}x{}",
+        cfg.camera.frames,
+        cfg.variant.label(),
+        cfg.gaussian_count(),
+        cfg.camera.width,
+        cfg.camera.height
+    );
+    let mut coord = Coordinator::new(cfg)?;
+    let mut report = lumina::coordinator::RunReport::new(coord.cfg.variant.label());
+    let mut frame_idx = 0usize;
+    while coord.remaining() > 0 {
+        let f = coord.step()?;
+        if let Some(prefix) = &out_prefix {
+            let path = format!("{prefix}_{frame_idx:04}.ppm");
+            f.image.write_ppm(&path)?;
+        }
+        report.push(f.report);
+        frame_idx += 1;
+    }
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_compare(args: &cli::Args) -> Result<()> {
+    let base = load_config(args)?;
+    println!(
+        "comparing variants | scene={} Gaussians | {} frames @ {}x{}",
+        base.gaussian_count(),
+        base.camera.frames,
+        base.camera.width,
+        base.camera.height
+    );
+    let mut baseline_time = None;
+    let mut baseline_energy = None;
+    for variant in HardwareVariant::evaluation_set() {
+        let mut cfg = base.clone();
+        cfg.variant = variant;
+        let mut coord = Coordinator::new(cfg)?;
+        let report = coord.run()?;
+        let t = report.mean_time_s();
+        let e = report.mean_energy_j();
+        if variant == HardwareVariant::Gpu {
+            baseline_time = Some(t);
+            baseline_energy = Some(e);
+        }
+        let speedup = baseline_time.map(|b| b / t).unwrap_or(1.0);
+        let energy = baseline_energy.map(|b| e / b).unwrap_or(1.0);
+        println!(
+            "{}  speedup={:>5.2}x  norm-energy={:>5.2}",
+            report.summary(),
+            speedup,
+            energy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quality(args: &cli::Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!(
+        "quality run | variant={} | {} frames",
+        cfg.variant.label(),
+        cfg.camera.frames
+    );
+    let mut coord = Coordinator::new(cfg)?;
+    let mut report = lumina::coordinator::RunReport::new(coord.cfg.variant.label());
+    while coord.remaining() > 0 {
+        let f = coord.step_with_quality()?;
+        println!(
+            "frame {:>3}: psnr={:>6.2} dB  time={:>7.3} ms  hit={:>5.1}%",
+            f.report.frame,
+            f.report.psnr_vs_ref.unwrap_or(f64::NAN),
+            f.report.time_s * 1e3,
+            f.report.cache.hit_rate() * 100.0
+        );
+        report.push(f.report);
+    }
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_runtime(args: &cli::Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    println!("loading AOT artifacts from {dir}/ ...");
+    let rt = ArtifactRuntime::load(dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.artifact_names());
+    // Smoke-execute the SH kernel with a trivial input.
+    let dirs = vec![[0.0f32, 0.0, 1.0]];
+    let mut coeffs = [[0.0f32; 3]; lumina::constants::SH_COEFFS];
+    coeffs[0] = [1.0, 1.0, 1.0];
+    let rgb = rt.sh_eval_chunk(&dirs, &[coeffs])?;
+    println!("sh_eval smoke: {:?} (expect ~[0.782, 0.782, 0.782])", rgb[0]);
+    println!("runtime OK");
+    Ok(())
+}
+
+fn cmd_info(args: &cli::Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    print!("{}", cfg.to_toml());
+    Ok(())
+}

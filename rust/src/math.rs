@@ -1,0 +1,386 @@
+//! Minimal linear-algebra substrate: 3-vectors, 3x3/4x4 matrices, quaternions.
+//!
+//! Deliberately small and dependency-free; only what projection, camera
+//! motion, and covariance math need. Row-major storage throughout.
+
+/// A 3-component f32 vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline]
+    pub fn new(x: f32, y: f32, z: f32) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    #[inline]
+    pub fn dot(self, o: Vec3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    #[inline]
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    #[inline]
+    pub fn norm(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    #[inline]
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        if n > 1e-12 {
+            self * (1.0 / n)
+        } else {
+            Vec3::ZERO
+        }
+    }
+
+    #[inline]
+    pub fn lerp(self, o: Vec3, t: f32) -> Vec3 {
+        self + (o - self) * t
+    }
+
+    #[inline]
+    pub fn to_array(self) -> [f32; 3] {
+        [self.x, self.y, self.z]
+    }
+
+    #[inline]
+    pub fn from_array(a: [f32; 3]) -> Self {
+        Vec3::new(a[0], a[1], a[2])
+    }
+}
+
+impl std::ops::Add for Vec3 {
+    type Output = Vec3;
+    #[inline]
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl std::ops::Sub for Vec3 {
+    type Output = Vec3;
+    #[inline]
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl std::ops::Mul<f32> for Vec3 {
+    type Output = Vec3;
+    #[inline]
+    fn mul(self, s: f32) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl std::ops::Neg for Vec3 {
+    type Output = Vec3;
+    #[inline]
+    fn neg(self) -> Vec3 {
+        Vec3::new(-self.x, -self.y, -self.z)
+    }
+}
+
+/// Row-major 3x3 matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f32; 3]; 3],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 {
+        m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
+    };
+
+    #[inline]
+    pub fn from_rows(r0: [f32; 3], r1: [f32; 3], r2: [f32; 3]) -> Self {
+        Mat3 { m: [r0, r1, r2] }
+    }
+
+    #[inline]
+    pub fn mul_vec(&self, v: Vec3) -> Vec3 {
+        Vec3::new(
+            self.m[0][0] * v.x + self.m[0][1] * v.y + self.m[0][2] * v.z,
+            self.m[1][0] * v.x + self.m[1][1] * v.y + self.m[1][2] * v.z,
+            self.m[2][0] * v.x + self.m[2][1] * v.y + self.m[2][2] * v.z,
+        )
+    }
+
+    pub fn mul(&self, o: &Mat3) -> Mat3 {
+        let mut r = [[0.0f32; 3]; 3];
+        for (i, row) in r.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = (0..3).map(|k| self.m[i][k] * o.m[k][j]).sum();
+            }
+        }
+        Mat3 { m: r }
+    }
+
+    #[inline]
+    pub fn transpose(&self) -> Mat3 {
+        let m = &self.m;
+        Mat3::from_rows(
+            [m[0][0], m[1][0], m[2][0]],
+            [m[0][1], m[1][1], m[2][1]],
+            [m[0][2], m[1][2], m[2][2]],
+        )
+    }
+
+    /// Scale columns by s (i.e. self * diag(s)).
+    #[inline]
+    pub fn scale_cols(&self, s: Vec3) -> Mat3 {
+        let m = &self.m;
+        Mat3::from_rows(
+            [m[0][0] * s.x, m[0][1] * s.y, m[0][2] * s.z],
+            [m[1][0] * s.x, m[1][1] * s.y, m[1][2] * s.z],
+            [m[2][0] * s.x, m[2][1] * s.y, m[2][2] * s.z],
+        )
+    }
+}
+
+/// Unit quaternion (w, x, y, z) for rotations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline]
+    pub fn new(w: f32, x: f32, y: f32, z: f32) -> Self {
+        Quat { w, x, y, z }
+    }
+
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Self {
+        let a = axis.normalized();
+        let (s, c) = (angle * 0.5).sin_cos();
+        Quat::new(c, a.x * s, a.y * s, a.z * s)
+    }
+
+    #[inline]
+    pub fn normalized(self) -> Quat {
+        let n = (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt();
+        if n > 1e-12 {
+            Quat::new(self.w / n, self.x / n, self.y / n, self.z / n)
+        } else {
+            Quat::IDENTITY
+        }
+    }
+
+    pub fn mul(self, o: Quat) -> Quat {
+        Quat::new(
+            self.w * o.w - self.x * o.x - self.y * o.y - self.z * o.z,
+            self.w * o.x + self.x * o.w + self.y * o.z - self.z * o.y,
+            self.w * o.y - self.x * o.z + self.y * o.w + self.z * o.x,
+            self.w * o.z + self.x * o.y - self.y * o.x + self.z * o.w,
+        )
+    }
+
+    /// Rotation matrix of the normalized quaternion.
+    pub fn to_mat3(self) -> Mat3 {
+        let q = self.normalized();
+        let (w, x, y, z) = (q.w, q.x, q.y, q.z);
+        Mat3::from_rows(
+            [
+                1.0 - 2.0 * (y * y + z * z),
+                2.0 * (x * y - w * z),
+                2.0 * (x * z + w * y),
+            ],
+            [
+                2.0 * (x * y + w * z),
+                1.0 - 2.0 * (x * x + z * z),
+                2.0 * (y * z - w * x),
+            ],
+            [
+                2.0 * (x * z - w * y),
+                2.0 * (y * z + w * x),
+                1.0 - 2.0 * (x * x + y * y),
+            ],
+        )
+    }
+
+    /// Spherical linear interpolation (shortest arc).
+    pub fn slerp(self, other: Quat, t: f32) -> Quat {
+        let a = self.normalized();
+        let mut b = other.normalized();
+        let mut dot = a.w * b.w + a.x * b.x + a.y * b.y + a.z * b.z;
+        if dot < 0.0 {
+            b = Quat::new(-b.w, -b.x, -b.y, -b.z);
+            dot = -dot;
+        }
+        if dot > 0.9995 {
+            // Nearly parallel: nlerp.
+            return Quat::new(
+                a.w + (b.w - a.w) * t,
+                a.x + (b.x - a.x) * t,
+                a.y + (b.y - a.y) * t,
+                a.z + (b.z - a.z) * t,
+            )
+            .normalized();
+        }
+        let theta = dot.clamp(-1.0, 1.0).acos();
+        let (s0, s1) = (((1.0 - t) * theta).sin(), (t * theta).sin());
+        let inv = 1.0 / theta.sin();
+        Quat::new(
+            (a.w * s0 + b.w * s1) * inv,
+            (a.x * s0 + b.x * s1) * inv,
+            (a.y * s0 + b.y * s1) * inv,
+            (a.z * s0 + b.z * s1) * inv,
+        )
+    }
+
+    #[inline]
+    pub fn rotate(self, v: Vec3) -> Vec3 {
+        self.to_mat3().mul_vec(v)
+    }
+}
+
+/// Symmetric 2x2 matrix packed as (a, b, c) = [[a, b], [b, c]].
+/// Used for projected covariances and their inverses (conics).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Sym2 {
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+}
+
+impl Sym2 {
+    #[inline]
+    pub fn det(self) -> f32 {
+        self.a * self.c - self.b * self.b
+    }
+
+    /// Inverse (the conic), or None when degenerate.
+    #[inline]
+    pub fn inverse(self) -> Option<Sym2> {
+        let d = self.det();
+        if d.abs() < 1e-12 {
+            return None;
+        }
+        Some(Sym2 { a: self.c / d, b: -self.b / d, c: self.a / d })
+    }
+
+    /// Largest eigenvalue (for the 3-sigma screen-space radius).
+    #[inline]
+    pub fn max_eigenvalue(self) -> f32 {
+        let mid = 0.5 * (self.a + self.c);
+        mid + (mid * mid - self.det()).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} != {b} (tol {tol})");
+    }
+
+    #[test]
+    fn vec3_ops() {
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        let w = Vec3::new(4.0, -5.0, 6.0);
+        assert_close(v.dot(w), 12.0, 1e-6);
+        let c = v.cross(w);
+        // orthogonal to both
+        assert_close(c.dot(v), 0.0, 1e-4);
+        assert_close(c.dot(w), 0.0, 1e-4);
+        assert_close(v.normalized().norm(), 1.0, 1e-6);
+    }
+
+    #[test]
+    fn quat_identity_rotation() {
+        let v = Vec3::new(0.3, -0.7, 0.2);
+        let r = Quat::IDENTITY.rotate(v);
+        assert_close((r - v).norm(), 0.0, 1e-6);
+    }
+
+    #[test]
+    fn quat_axis_angle_90deg() {
+        let q = Quat::from_axis_angle(Vec3::new(0.0, 0.0, 1.0), std::f32::consts::FRAC_PI_2);
+        let r = q.rotate(Vec3::new(1.0, 0.0, 0.0));
+        assert_close(r.x, 0.0, 1e-6);
+        assert_close(r.y, 1.0, 1e-6);
+    }
+
+    #[test]
+    fn quat_mat_orthonormal() {
+        let q = Quat::new(0.3, -0.2, 0.9, 0.1);
+        let m = q.to_mat3();
+        let mt = m.transpose();
+        let id = m.mul(&mt);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_close(id.m[i][j], if i == j { 1.0 } else { 0.0 }, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn quat_composition_matches_matrix_product() {
+        let q1 = Quat::from_axis_angle(Vec3::new(1.0, 0.5, 0.0), 0.7);
+        let q2 = Quat::from_axis_angle(Vec3::new(0.0, 1.0, 1.0), -0.3);
+        let v = Vec3::new(0.2, 0.4, -0.8);
+        let via_quat = q1.mul(q2).rotate(v);
+        let via_mat = q1.to_mat3().mul(&q2.to_mat3()).mul_vec(v);
+        assert_close((via_quat - via_mat).norm(), 0.0, 1e-5);
+    }
+
+    #[test]
+    fn slerp_endpoints_and_midpoint() {
+        let a = Quat::IDENTITY;
+        let b = Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), 1.0);
+        let s0 = a.slerp(b, 0.0);
+        let s1 = a.slerp(b, 1.0);
+        let sm = a.slerp(b, 0.5);
+        let expect_mid = Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), 0.5);
+        for (got, want) in [(s0, a), (s1, b), (sm, expect_mid)] {
+            let d = got.w * want.w + got.x * want.x + got.y * want.y + got.z * want.z;
+            assert!(d.abs() > 1.0 - 1e-5, "slerp mismatch: {got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn sym2_inverse_roundtrip() {
+        let s = Sym2 { a: 2.0, b: 0.5, c: 1.5 };
+        let inv = s.inverse().unwrap();
+        // s * inv == identity (symmetric product)
+        assert_close(s.a * inv.a + s.b * inv.b, 1.0, 1e-5);
+        assert_close(s.a * inv.b + s.b * inv.c, 0.0, 1e-5);
+        assert_close(s.b * inv.b + s.c * inv.c, 1.0, 1e-5);
+    }
+
+    #[test]
+    fn sym2_eigenvalue_bounds_trace() {
+        let s = Sym2 { a: 3.0, b: 1.0, c: 2.0 };
+        let e = s.max_eigenvalue();
+        assert!(e >= 3.0 && e <= 5.0);
+    }
+
+    #[test]
+    fn mat3_scale_cols() {
+        let m = Mat3::IDENTITY.scale_cols(Vec3::new(2.0, 3.0, 4.0));
+        assert_close(m.m[0][0], 2.0, 1e-6);
+        assert_close(m.m[1][1], 3.0, 1e-6);
+        assert_close(m.m[2][2], 4.0, 1e-6);
+    }
+}

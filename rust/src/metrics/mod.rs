@@ -1,0 +1,238 @@
+//! Image-quality metrics: PSNR, SSIM, and an LPIPS proxy.
+//!
+//! LPIPS in the paper uses a pretrained VGG; no pretrained network is
+//! available at build time, so `lpips_proxy` is a multi-scale
+//! gradient-magnitude perceptual distance (DESIGN.md §5): it responds to
+//! the same artifact classes the paper's LPIPS flags (tile-edge seams,
+//! large-Gaussian smears) and is monotone in perceptual severity, but its
+//! absolute values are not comparable to VGG-LPIPS.
+
+use crate::pipeline::Image;
+
+/// Peak signal-to-noise ratio in dB over RGB in [0, 1].
+pub fn psnr(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.data.len(), b.data.len(), "image size mismatch");
+    let mut se = 0.0f64;
+    for (pa, pb) in a.data.iter().zip(&b.data) {
+        for c in 0..3 {
+            let d = (pa[c].clamp(0.0, 1.0) - pb[c].clamp(0.0, 1.0)) as f64;
+            se += d * d;
+        }
+    }
+    let mse = se / (a.data.len() * 3) as f64;
+    if mse <= 1e-12 {
+        return 100.0; // identical images: cap like common tooling
+    }
+    10.0 * (1.0 / mse).log10()
+}
+
+/// Mean SSIM with an 8x8 box window over the luma-like mean of RGB.
+/// (The paper uses the standard 11x11 Gaussian SSIM; a box window changes
+/// absolute values slightly but preserves ordering between methods.)
+pub fn ssim(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    let w = 8usize;
+    let (c1, c2) = (0.01f64 * 0.01, 0.03f64 * 0.03);
+    let gray = |img: &Image| -> Vec<f64> {
+        img.data
+            .iter()
+            .map(|p| ((p[0] + p[1] + p[2]) / 3.0).clamp(0.0, 1.0) as f64)
+            .collect()
+    };
+    let ga = gray(a);
+    let gb = gray(b);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let (width, height) = (a.width, a.height);
+    for by in (0..height).step_by(w) {
+        for bx in (0..width).step_by(w) {
+            let mut ma = 0.0;
+            let mut mb = 0.0;
+            let mut n = 0.0;
+            for y in by..(by + w).min(height) {
+                for x in bx..(bx + w).min(width) {
+                    ma += ga[y * width + x];
+                    mb += gb[y * width + x];
+                    n += 1.0;
+                }
+            }
+            ma /= n;
+            mb /= n;
+            let mut va = 0.0;
+            let mut vb = 0.0;
+            let mut cov = 0.0;
+            for y in by..(by + w).min(height) {
+                for x in bx..(bx + w).min(width) {
+                    let da = ga[y * width + x] - ma;
+                    let db = gb[y * width + x] - mb;
+                    va += da * da;
+                    vb += db * db;
+                    cov += da * db;
+                }
+            }
+            va /= n;
+            vb /= n;
+            cov /= n;
+            let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+            total += s;
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+/// Multi-scale gradient-magnitude perceptual distance (LPIPS proxy).
+/// 0 = identical; larger = perceptually worse. See module docs.
+pub fn lpips_proxy(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    let mut total = 0.0;
+    let mut scale_a = a.clone();
+    let mut scale_b = b.clone();
+    let mut weight = 1.0;
+    let mut wsum = 0.0;
+    for _ in 0..3 {
+        total += weight * grad_dist(&scale_a, &scale_b);
+        wsum += weight;
+        weight *= 0.5;
+        if scale_a.width < 16 || scale_a.height < 16
+            || scale_a.width % 2 != 0 || scale_a.height % 2 != 0
+        {
+            break;
+        }
+        scale_a = scale_a.downsample2();
+        scale_b = scale_b.downsample2();
+    }
+    total / wsum
+}
+
+fn grad_dist(a: &Image, b: &Image) -> f64 {
+    let (w, h) = (a.width, a.height);
+    let lum = |img: &Image, x: usize, y: usize| -> f32 {
+        let p = img.at(x, y);
+        (p[0] + p[1] + p[2]) / 3.0
+    };
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for y in 0..h.saturating_sub(1) {
+        for x in 0..w.saturating_sub(1) {
+            let gax = lum(a, x + 1, y) - lum(a, x, y);
+            let gay = lum(a, x, y + 1) - lum(a, x, y);
+            let gbx = lum(b, x + 1, y) - lum(b, x, y);
+            let gby = lum(b, x, y + 1) - lum(b, x, y);
+            let ma = (gax * gax + gay * gay).sqrt();
+            let mb = (gbx * gbx + gby * gby).sqrt();
+            // Contrast-normalized gradient difference.
+            let d = ((gax - gbx).powi(2) + (gay - gby).powi(2)).sqrt();
+            acc += (d / (ma + mb + 0.05)) as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy(img: &Image, amp: f32, seed: u32) -> Image {
+        let mut out = img.clone();
+        let mut state = seed;
+        for p in out.data.iter_mut() {
+            for c in p.iter_mut() {
+                state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+                let r = (state >> 8) as f32 / (1u32 << 24) as f32 - 0.5;
+                *c = (*c + amp * r).clamp(0.0, 1.0);
+            }
+        }
+        out
+    }
+
+    fn gradient_image(w: usize, h: usize) -> Image {
+        let mut img = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                img.set(x, y, [x as f32 / w as f32, y as f32 / h as f32, 0.5]);
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn psnr_identical_is_high() {
+        let img = gradient_image(32, 32);
+        assert_eq!(psnr(&img, &img), 100.0);
+    }
+
+    #[test]
+    fn psnr_monotone_in_noise() {
+        let img = gradient_image(64, 64);
+        let small = psnr(&img, &noisy(&img, 0.01, 1));
+        let large = psnr(&img, &noisy(&img, 0.1, 2));
+        assert!(small > large);
+        assert!(small > 35.0 && large > 15.0);
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // Constant offset of 0.1 -> MSE 0.01 -> PSNR 20 dB.
+        let a = Image::new(16, 16);
+        let mut b = Image::new(16, 16);
+        for p in b.data.iter_mut() {
+            *p = [0.1, 0.1, 0.1];
+        }
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ssim_bounds_and_identity() {
+        let img = gradient_image(64, 64);
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+        let s = ssim(&img, &noisy(&img, 0.2, 3));
+        assert!(s < 1.0 && s > 0.0);
+    }
+
+    #[test]
+    fn ssim_monotone_in_noise() {
+        let img = gradient_image(64, 64);
+        let s1 = ssim(&img, &noisy(&img, 0.02, 4));
+        let s2 = ssim(&img, &noisy(&img, 0.2, 5));
+        assert!(s1 > s2);
+    }
+
+    #[test]
+    fn lpips_proxy_identity_and_monotone() {
+        let img = gradient_image(64, 64);
+        assert_eq!(lpips_proxy(&img, &img), 0.0);
+        let d1 = lpips_proxy(&img, &noisy(&img, 0.02, 6));
+        let d2 = lpips_proxy(&img, &noisy(&img, 0.2, 7));
+        assert!(d1 > 0.0);
+        assert!(d2 > d1);
+    }
+
+    #[test]
+    fn lpips_proxy_flags_structural_artifacts() {
+        // A tile-seam artifact (the Fig. 8 failure) should register more
+        // than an equal-energy global brightness shift.
+        let img = gradient_image(64, 64);
+        let mut seam = img.clone();
+        for y in 0..64 {
+            for x in 30..34 {
+                let mut p = seam.at(x, y);
+                p[0] = (p[0] + 0.3).min(1.0);
+                seam.set(x, y, p);
+            }
+        }
+        let mut shift = img.clone();
+        // Equal total |delta| spread uniformly.
+        let delta = 0.3 * (4.0 * 64.0) / (64.0 * 64.0);
+        for p in shift.data.iter_mut() {
+            p[0] = (p[0] + delta).min(1.0);
+        }
+        assert!(lpips_proxy(&img, &seam) > lpips_proxy(&img, &shift));
+    }
+}

@@ -1,0 +1,150 @@
+//! RGB framebuffer with f32 channels.
+
+/// A height x width x 3 image, row-major, f32 channels in [0, 1]-ish range
+/// (compositing can momentarily exceed 1 before background blending).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<[f32; 3]>,
+}
+
+impl Image {
+    /// A black image.
+    pub fn new(width: usize, height: usize) -> Self {
+        Image { width, height, data: vec![[0.0; 3]; width * height] }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> [f32; 3] {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: [f32; 3]) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Mean absolute difference against another image of the same size.
+    pub fn mean_abs_diff(&self, other: &Image) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let total: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                ((a[0] - b[0]).abs() + (a[1] - b[1]).abs() + (a[2] - b[2]).abs()) as f64
+            })
+            .sum();
+        total / (self.data.len() * 3) as f64
+    }
+
+    /// Downsample by 2x (box filter). Panics on odd dimensions.
+    pub fn downsample2(&self) -> Image {
+        assert!(self.width % 2 == 0 && self.height % 2 == 0);
+        let (w, h) = (self.width / 2, self.height / 2);
+        let mut out = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = [0.0f32; 3];
+                for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let p = self.at(2 * x + dx, 2 * y + dy);
+                    for c in 0..3 {
+                        acc[c] += p[c];
+                    }
+                }
+                out.set(x, y, [acc[0] / 4.0, acc[1] / 4.0, acc[2] / 4.0]);
+            }
+        }
+        out
+    }
+
+    /// Upsample by 2x with bilinear interpolation (the DS-2 baseline's
+    /// second half).
+    pub fn upsample2(&self) -> Image {
+        let (w, h) = (self.width * 2, self.height * 2);
+        let mut out = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                // Map output pixel center to input coordinates.
+                let sx = (x as f32 + 0.5) / 2.0 - 0.5;
+                let sy = (y as f32 + 0.5) / 2.0 - 0.5;
+                let x0 = sx.floor().clamp(0.0, (self.width - 1) as f32) as usize;
+                let y0 = sy.floor().clamp(0.0, (self.height - 1) as f32) as usize;
+                let x1 = (x0 + 1).min(self.width - 1);
+                let y1 = (y0 + 1).min(self.height - 1);
+                let fx = (sx - x0 as f32).clamp(0.0, 1.0);
+                let fy = (sy - y0 as f32).clamp(0.0, 1.0);
+                let mut v = [0.0f32; 3];
+                for c in 0..3 {
+                    let top = self.at(x0, y0)[c] * (1.0 - fx) + self.at(x1, y0)[c] * fx;
+                    let bot = self.at(x0, y1)[c] * (1.0 - fx) + self.at(x1, y1)[c] * fx;
+                    v[c] = top * (1.0 - fy) + bot * fy;
+                }
+                out.set(x, y, v);
+            }
+        }
+        out
+    }
+
+    /// Write a binary PPM (P6) with 8-bit channels for eyeballing results.
+    pub fn write_ppm(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use std::io::Write;
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "P6\n{} {}\n255", self.width, self.height)?;
+        for px in &self.data {
+            let bytes = [
+                (px[0].clamp(0.0, 1.0) * 255.0).round() as u8,
+                (px[1].clamp(0.0, 1.0) * 255.0).round() as u8,
+                (px[2].clamp(0.0, 1.0) * 255.0).round() as u8,
+            ];
+            w.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get() {
+        let mut img = Image::new(4, 3);
+        img.set(2, 1, [0.5, 0.25, 1.0]);
+        assert_eq!(img.at(2, 1), [0.5, 0.25, 1.0]);
+        assert_eq!(img.at(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn down_up_roundtrip_constant() {
+        let mut img = Image::new(8, 8);
+        for p in img.data.iter_mut() {
+            *p = [0.3, 0.6, 0.9];
+        }
+        let round = img.downsample2().upsample2();
+        for p in &round.data {
+            for c in 0..3 {
+                assert!((p[c] - [0.3, 0.6, 0.9][c]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn downsample_averages() {
+        let mut img = Image::new(2, 2);
+        img.set(0, 0, [1.0, 0.0, 0.0]);
+        img.set(1, 0, [0.0, 1.0, 0.0]);
+        img.set(0, 1, [0.0, 0.0, 1.0]);
+        img.set(1, 1, [1.0, 1.0, 1.0]);
+        let d = img.downsample2();
+        assert_eq!(d.at(0, 0), [0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn mean_abs_diff_zero_for_same() {
+        let img = Image::new(4, 4);
+        assert_eq!(img.mean_abs_diff(&img), 0.0);
+    }
+}

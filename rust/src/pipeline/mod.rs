@@ -1,0 +1,16 @@
+//! The 3DGS rendering pipeline substrate: Projection -> Sorting ->
+//! Rasterization (paper Fig. 1), plus the framebuffer type.
+//!
+//! Every stage exposes the statistics hooks the paper's characterization
+//! figures need (per-pixel iterated/significant Gaussian counts, tile
+//! occupancy, order-change rates).
+
+pub mod image;
+pub mod project;
+pub mod raster;
+pub mod sort;
+
+pub use image::Image;
+pub use project::{project, ProjectedScene};
+pub use raster::{rasterize, RasterConfig, RasterOutput, RasterStats};
+pub use sort::{bin_and_sort, TileBins};

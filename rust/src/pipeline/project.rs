@@ -1,0 +1,358 @@
+//! Projection stage: frustum culling + EWA splatting of 3D Gaussians to
+//! screen space (paper Fig. 1, step 1).
+//!
+//! For each visible Gaussian: camera transform, perspective projection of
+//! the mean, first-order (Jacobian) projection of the 3D covariance to a
+//! 2x2 screen covariance, +0.3 px low-pass dilation, conic inversion, and
+//! the 3-sigma cutoff radius used for tile intersection.
+
+use crate::camera::{Intrinsics, Pose};
+use crate::math::Sym2;
+use crate::scene::sh::eval_color;
+use crate::scene::GaussianScene;
+use crate::util::par;
+
+/// Screen-space (projected) Gaussians, compacted to the visible set.
+///
+/// `ids[i]` is the index into the source [`GaussianScene`] — the *global
+/// Gaussian ID* the radiance cache tags are built from.
+#[derive(Debug, Clone, Default)]
+pub struct ProjectedScene {
+    pub ids: Vec<u32>,
+    /// 2D means in pixel coordinates.
+    pub means: Vec<[f32; 2]>,
+    /// Inverse 2D covariance (conic), packed (a, b, c).
+    pub conics: Vec<Sym2>,
+    /// Camera-space depth (distance along the optical axis).
+    pub depths: Vec<f32>,
+    /// 3-sigma screen radius in pixels.
+    pub radii: Vec<f32>,
+    /// Opacity copied from the scene.
+    pub opacity: Vec<f32>,
+    /// View-dependent RGB (SH evaluated at this pose).
+    pub colors: Vec<[f32; 3]>,
+}
+
+impl ProjectedScene {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// Result of projecting a single Gaussian (pre-compaction).
+struct Splat {
+    id: u32,
+    mean: [f32; 2],
+    conic: Sym2,
+    depth: f32,
+    radius: f32,
+    opacity: f32,
+    color: [f32; 3],
+}
+
+/// Project `scene` under `pose`/`intr`. Gaussians outside the near/far
+/// range, with degenerate covariance, or whose 3-sigma footprint misses an
+/// (optionally margin-expanded) viewport are culled.
+///
+/// `margin_px` expands the cull viewport on every side — the S^2 expanded
+/// viewport (paper Sec. 3.1) projects at a *predicted* pose with a margin
+/// so nearby rendered poses still find their Gaussians.
+pub fn project(
+    scene: &GaussianScene,
+    pose: &Pose,
+    intr: &Intrinsics,
+    near: f32,
+    far: f32,
+    margin_px: f32,
+) -> ProjectedScene {
+    let w2c = pose.world_to_cam();
+    let cam_center = pose.position;
+    let (fx, fy, cx, cy) = (intr.fx, intr.fy, intr.cx, intr.cy);
+    let (width, height) = (intr.width as f32, intr.height as f32);
+
+    let splats: Vec<Option<Splat>> = par::par_map(scene.len(), |i| {
+            let cam = w2c.mul_vec(scene.pos[i] - cam_center);
+            let z = cam.z;
+            if z < near || z > far {
+                return None;
+            }
+            let inv_z = 1.0 / z;
+            let mx = fx * cam.x * inv_z + cx;
+            let my = fy * cam.y * inv_z + cy;
+
+            // 3D covariance in camera frame: W Sigma W^T where
+            // Sigma = R S S^T R^T.
+            let r = scene.quat[i].to_mat3();
+            let m = r.scale_cols(scene.scale[i]); // R * diag(s)
+            let sigma = m.mul(&m.transpose());
+            let cov_cam = w2c.mul(&sigma).mul(&w2c.transpose());
+
+            // Jacobian of perspective projection at the center.
+            let j00 = fx * inv_z;
+            let j02 = -fx * cam.x * inv_z * inv_z;
+            let j11 = fy * inv_z;
+            let j12 = -fy * cam.y * inv_z * inv_z;
+
+            // cov2d = J cov_cam J^T for the 2x3 Jacobian above.
+            let c = &cov_cam.m;
+            let a = j00 * (j00 * c[0][0] + j02 * c[2][0])
+                + j02 * (j00 * c[0][2] + j02 * c[2][2]);
+            let b = j00 * (j11 * c[0][1] + j12 * c[0][2])
+                + j02 * (j11 * c[2][1] + j12 * c[2][2]);
+            let d = j11 * (j11 * c[1][1] + j12 * c[2][1])
+                + j12 * (j11 * c[1][2] + j12 * c[2][2]);
+
+            // Low-pass dilation (official +0.3 px) guarantees a minimum
+            // footprint; also guarantees invertibility.
+            let cov2d = Sym2 { a: a + 0.3, b, c: d + 0.3 };
+            let conic = cov2d.inverse()?;
+            let radius = 3.0 * cov2d.max_eigenvalue().sqrt();
+
+            // Viewport cull with margin.
+            if mx + radius < -margin_px
+                || mx - radius > width + margin_px
+                || my + radius < -margin_px
+                || my - radius > height + margin_px
+            {
+                return None;
+            }
+
+            Some(Splat {
+                id: i as u32,
+                mean: [mx, my],
+                conic,
+                depth: z,
+                radius,
+                opacity: scene.opacity[i],
+                color: eval_color(scene.pos[i], cam_center, &scene.sh[i]),
+            })
+        });
+
+    let mut out = ProjectedScene::default();
+    let visible = splats.iter().flatten().count();
+    out.ids.reserve(visible);
+    out.means.reserve(visible);
+    out.conics.reserve(visible);
+    out.depths.reserve(visible);
+    out.radii.reserve(visible);
+    out.opacity.reserve(visible);
+    out.colors.reserve(visible);
+    for s in splats.into_iter().flatten() {
+        out.ids.push(s.id);
+        out.means.push(s.mean);
+        out.conics.push(s.conic);
+        out.depths.push(s.depth);
+        out.radii.push(s.radius);
+        out.opacity.push(s.opacity);
+        out.colors.push(s.color);
+    }
+    out
+}
+
+/// Refresh only the view-dependent colors of an already-projected scene
+/// at a new pose — what S^2 sorting-shared rendering does per frame
+/// (paper Sec. 3.1: "each Gaussian color needs to be recalculated using
+/// pretrained Spherical Harmonic coefficients").
+pub fn refresh_colors(
+    projected: &mut ProjectedScene,
+    scene: &GaussianScene,
+    pose: &Pose,
+) {
+    let cam_center = pose.position;
+    let ids = &projected.ids;
+    let colors = &mut projected.colors;
+    // Chunked parallel update; chunk index recovers the id offset.
+    const CHUNK: usize = 4096;
+    par::par_chunks_mut(colors, CHUNK, |ci, chunk| {
+        let base = ci * CHUNK;
+        for (j, color) in chunk.iter_mut().enumerate() {
+            let id = ids[base + j] as usize;
+            *color = eval_color(scene.pos[id], cam_center, &scene.sh[id]);
+        }
+    });
+}
+
+/// Re-project the geometry (means/conics/depths) of the retained Gaussian
+/// set at a new pose, keeping the set membership fixed. Used by
+/// sorting-shared rendering: tile lists and depth *order* come from the
+/// speculative sort; per-Gaussian geometry is evaluated fresh (a cheap,
+/// embarrassingly parallel pass with no binning or sorting).
+pub fn reproject_geometry(
+    projected: &mut ProjectedScene,
+    scene: &GaussianScene,
+    pose: &Pose,
+    intr: &Intrinsics,
+) {
+    let w2c = pose.world_to_cam();
+    let cam_center = pose.position;
+    let (fx, fy, cx, cy) = (intr.fx, intr.fy, intr.cx, intr.cy);
+    let n = projected.len();
+    let ids = std::mem::take(&mut projected.ids);
+    let means = &mut projected.means;
+    let conics = &mut projected.conics;
+    let depths = &mut projected.depths;
+    // Parallel over disjoint index blocks; each block owns its slice of
+    // the three arrays via raw split — simpler: compute into fresh vecs.
+    let results: Vec<([f32; 2], crate::math::Sym2, f32)> = par::par_map(n, |k| {
+            let i = ids[k] as usize;
+            let cam = w2c.mul_vec(scene.pos[i] - cam_center);
+            let z = cam.z.max(1e-6);
+            let inv_z = 1.0 / z;
+            let mean = [fx * cam.x * inv_z + cx, fy * cam.y * inv_z + cy];
+            let depth = cam.z;
+
+            let r = scene.quat[i].to_mat3();
+            let m = r.scale_cols(scene.scale[i]);
+            let sigma = m.mul(&m.transpose());
+            let cov_cam = w2c.mul(&sigma).mul(&w2c.transpose());
+            let j00 = fx * inv_z;
+            let j02 = -fx * cam.x * inv_z * inv_z;
+            let j11 = fy * inv_z;
+            let j12 = -fy * cam.y * inv_z * inv_z;
+            let c = &cov_cam.m;
+            let a = j00 * (j00 * c[0][0] + j02 * c[2][0])
+                + j02 * (j00 * c[0][2] + j02 * c[2][2]);
+            let b = j00 * (j11 * c[0][1] + j12 * c[0][2])
+                + j02 * (j11 * c[2][1] + j12 * c[2][2]);
+            let d = j11 * (j11 * c[1][1] + j12 * c[2][1])
+                + j12 * (j11 * c[1][2] + j12 * c[2][2]);
+            let cov2d = Sym2 { a: a + 0.3, b, c: d + 0.3 };
+            let conic = cov2d.inverse().unwrap_or(Sym2 { a: 1.0, b: 0.0, c: 1.0 });
+            (mean, conic, depth)
+        });
+    for (k, (m, cn, d)) in results.into_iter().enumerate() {
+        means[k] = m;
+        conics[k] = cn;
+        depths[k] = d;
+    }
+    projected.ids = ids;
+    debug_assert_eq!(projected.len(), n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+    use crate::constants::SH_COEFFS;
+    use crate::math::Quat;
+    use crate::scene::synth::test_scene;
+
+    fn simple_scene_at(positions: &[Vec3]) -> GaussianScene {
+        let mut s = GaussianScene::default();
+        for &p in positions {
+            s.push(
+                p,
+                Vec3::new(0.05, 0.05, 0.05),
+                Quat::IDENTITY,
+                0.8,
+                [[0.1; 3]; SH_COEFFS],
+            );
+        }
+        s
+    }
+
+    fn cam() -> (Pose, Intrinsics) {
+        (
+            Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO),
+            Intrinsics::with_fov(128, 128, 0.8),
+        )
+    }
+
+    #[test]
+    fn center_projects_to_principal_point() {
+        let scene = simple_scene_at(&[Vec3::ZERO]);
+        let (pose, intr) = cam();
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        assert_eq!(p.len(), 1);
+        assert!((p.means[0][0] - intr.cx).abs() < 1e-3);
+        assert!((p.means[0][1] - intr.cy).abs() < 1e-3);
+        assert!((p.depths[0] - 4.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn culls_behind_camera() {
+        let scene = simple_scene_at(&[Vec3::new(0.0, 0.0, -10.0)]);
+        let (pose, intr) = cam();
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn culls_outside_viewport_unless_margin() {
+        // A point far off to the side.
+        let scene = simple_scene_at(&[Vec3::new(10.0, 0.0, 0.0)]);
+        let (pose, intr) = cam();
+        let strict = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        assert!(strict.is_empty());
+        // An enormous margin readmits it.
+        let loose = project(&scene, &pose, &intr, 0.2, 100.0, 10_000.0);
+        assert_eq!(loose.len(), 1);
+    }
+
+    #[test]
+    fn conic_positive_definite() {
+        let scene = test_scene(3, 500);
+        let (pose, intr) = cam();
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        assert!(!p.is_empty());
+        for conic in &p.conics {
+            assert!(conic.a > 0.0 && conic.c > 0.0 && conic.det() > 0.0);
+        }
+    }
+
+    #[test]
+    fn closer_gaussian_has_larger_radius() {
+        let scene = simple_scene_at(&[Vec3::new(0.0, 0.0, -1.0), Vec3::new(0.0, 0.0, 2.0)]);
+        let (pose, intr) = cam();
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        assert_eq!(p.len(), 2);
+        // ids preserve scene order; id 0 is nearer to the camera.
+        let r_near = p.radii[p.ids.iter().position(|&i| i == 0).unwrap()];
+        let r_far = p.radii[p.ids.iter().position(|&i| i == 1).unwrap()];
+        assert!(r_near > r_far);
+    }
+
+    #[test]
+    fn reproject_matches_full_projection() {
+        let scene = test_scene(5, 300);
+        let (pose, intr) = cam();
+        let mut p = project(&scene, &pose, &intr, 0.2, 100.0, 64.0);
+        // Move the camera slightly and reproject the same set.
+        let pose2 = Pose::look_at(Vec3::new(0.05, 0.01, -4.0), Vec3::ZERO);
+        reproject_geometry(&mut p, &scene, &pose2, &intr);
+        let full = project(&scene, &pose2, &intr, 0.2, 100.0, 64.0);
+        // Every Gaussian retained by both must agree exactly.
+        for (i, id) in p.ids.iter().enumerate() {
+            if let Some(j) = full.ids.iter().position(|x| x == id) {
+                assert!((p.means[i][0] - full.means[j][0]).abs() < 1e-3);
+                assert!((p.means[i][1] - full.means[j][1]).abs() < 1e-3);
+                assert!((p.depths[i] - full.depths[j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_colors_changes_view_dependent() {
+        let mut scene = test_scene(6, 100);
+        // Give everything strong view dependence.
+        for sh in scene.sh.iter_mut() {
+            sh[1] = [2.0, 0.0, 0.0];
+        }
+        let (pose, intr) = cam();
+        let mut p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let before = p.colors.clone();
+        let pose2 = Pose::look_at(Vec3::new(0.0, 3.0, -3.0), Vec3::ZERO);
+        refresh_colors(&mut p, &scene, &pose2);
+        let changed = p
+            .colors
+            .iter()
+            .zip(&before)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(changed > p.len() / 2);
+    }
+}

@@ -1,0 +1,528 @@
+//! Rasterization stage: per-tile front-to-back alpha compositing
+//! (paper Fig. 1 step 3, Eqn. 1), with the statistics hooks behind the
+//! paper's characterization figures.
+//!
+//! Semantics match the official 3DGS CUDA rasterizer and the L1 Pallas
+//! kernel exactly (see `python/compile/kernels/ref.py`): positive exponent
+//! -> skip; alpha = min(0.99, opacity * exp(power)); alpha < 1/255 -> skip
+//! (insignificant); test_T = T*(1-alpha) < 1e-4 -> terminate *without*
+//! accumulating; otherwise C += alpha*T*color, T = test_T.
+
+use super::image::Image;
+use super::project::ProjectedScene;
+use super::sort::TileBins;
+use crate::constants::{ALPHA_MAX, ALPHA_MIN, T_EPS};
+use crate::util::par;
+
+/// Maximum alpha-record length supported by [`SigRecord`] (fig24 sweeps
+/// k in 1..=10).
+pub const MAX_SIG_K: usize = 10;
+
+/// The first up-to-k significant Gaussian IDs a pixel encountered, in
+/// depth order — the radiance-cache tag material (paper Sec. 3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SigRecord {
+    pub ids: [u32; MAX_SIG_K],
+    pub len: u8,
+}
+
+impl Default for SigRecord {
+    fn default() -> Self {
+        SigRecord { ids: [u32::MAX; MAX_SIG_K], len: 0 }
+    }
+}
+
+impl SigRecord {
+    #[inline]
+    pub fn push(&mut self, id: u32) -> bool {
+        if (self.len as usize) < MAX_SIG_K {
+            self.ids[self.len as usize] = id;
+            self.len += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The first `k` IDs, or None if fewer than `k` were recorded.
+    pub fn first_k(&self, k: usize) -> Option<&[u32]> {
+        if (self.len as usize) >= k {
+            Some(&self.ids[..k])
+        } else {
+            None
+        }
+    }
+}
+
+/// Rasterization options.
+#[derive(Debug, Clone, Copy)]
+pub struct RasterConfig {
+    /// Collect per-pixel iterated/significant counts (Figs. 3-5, 11).
+    pub collect_stats: bool,
+    /// Record the first-k significant Gaussian IDs per pixel (k = the
+    /// alpha-record length; 0 disables recording).
+    pub sig_record_k: usize,
+}
+
+impl Default for RasterConfig {
+    fn default() -> Self {
+        RasterConfig { collect_stats: false, sig_record_k: 0 }
+    }
+}
+
+/// Per-pixel rasterization statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RasterStats {
+    /// Gaussians iterated (encountered in the tile list before
+    /// termination) per pixel.
+    pub iterated: Vec<u32>,
+    /// Significant Gaussians (alpha >= 1/255, actually composited or
+    /// terminal) per pixel.
+    pub significant: Vec<u32>,
+}
+
+impl RasterStats {
+    /// Mean Gaussians iterated per pixel.
+    pub fn mean_iterated(&self) -> f64 {
+        mean_u32(&self.iterated)
+    }
+
+    /// Mean significant Gaussians per pixel.
+    pub fn mean_significant(&self) -> f64 {
+        mean_u32(&self.significant)
+    }
+
+    /// Percentage of iterated Gaussians that were significant (Fig. 4).
+    pub fn significant_fraction(&self) -> f64 {
+        let it: u64 = self.iterated.iter().map(|&v| v as u64).sum();
+        let sig: u64 = self.significant.iter().map(|&v| v as u64).sum();
+        if it == 0 {
+            0.0
+        } else {
+            sig as f64 / it as f64
+        }
+    }
+}
+
+fn mean_u32(v: &[u32]) -> f64 {
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().map(|&x| x as u64).sum::<u64>() as f64 / v.len() as f64
+    }
+}
+
+/// Full rasterization output.
+#[derive(Debug, Clone)]
+pub struct RasterOutput {
+    pub image: Image,
+    pub stats: Option<RasterStats>,
+    /// Per-pixel significant-ID records (row-major), present when
+    /// `sig_record_k > 0`.
+    pub sig_records: Option<Vec<SigRecord>>,
+}
+
+/// A tile-local copy of one projected Gaussian's raster state, gathered
+/// contiguously so the per-pixel loop streams sequentially instead of
+/// chasing `list` indices into the projected SoA (the #1 hot-path win of
+/// the perf pass; see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy)]
+pub struct GatheredSplat {
+    pub mean: [f32; 2],
+    pub conic_a: f32,
+    pub conic_b: f32,
+    pub conic_c: f32,
+    pub opacity: f32,
+    pub color: [f32; 3],
+    pub id: u32,
+    /// Squared significance radius: alpha >= 1/255 requires
+    /// |d|^2 <= r2_sig (conservative, from the conic's smallest
+    /// eigenvalue). Negative when the splat can never be significant.
+    /// Lets the hot loop reject most pixels without the exp().
+    pub r2_sig: f32,
+}
+
+/// Gather a tile's Gaussian list into contiguous splat records.
+pub fn gather_tile(projected: &ProjectedScene, list: &[u32]) -> Vec<GatheredSplat> {
+    list.iter()
+        .map(|&idx| {
+            let i = idx as usize;
+            let conic = projected.conics[i];
+            let opacity = projected.opacity[i];
+            // alpha >= ALPHA_MIN  <=>  q(d) <= 2 ln(opacity/ALPHA_MIN)
+            // where q(d) = a dx^2 + 2b dx dy + c dy^2 >= lambda_min |d|^2.
+            let qmax = 2.0 * (opacity / ALPHA_MIN).ln();
+            let mid = 0.5 * (conic.a + conic.c);
+            let det = conic.a * conic.c - conic.b * conic.b;
+            let lambda_min = (mid - (mid * mid - det).max(0.0).sqrt()).max(1e-12);
+            let r2_sig = if qmax <= 0.0 { -1.0 } else { qmax / lambda_min };
+            GatheredSplat {
+                mean: projected.means[i],
+                conic_a: conic.a,
+                conic_b: conic.b,
+                conic_c: conic.c,
+                opacity,
+                color: projected.colors[i],
+                id: projected.ids[i],
+                r2_sig,
+            }
+        })
+        .collect()
+}
+
+/// Composite one pixel against gathered (contiguous) splats.
+#[inline]
+pub fn composite_pixel_gathered(
+    splats: &[GatheredSplat],
+    px: f32,
+    py: f32,
+    record_k: usize,
+) -> ([f32; 3], f32, u32, u32, SigRecord) {
+    let mut c = [0.0f32; 3];
+    let mut t = 1.0f32;
+    let mut iterated = 0u32;
+    let mut significant = 0u32;
+    let mut rec = SigRecord::default();
+    for s in splats {
+        iterated += 1;
+        let dx = px - s.mean[0];
+        let dy = py - s.mean[1];
+        // Cheap conservative reject: outside the significance radius the
+        // Gaussian cannot pass the 1/255 test (no exp needed).
+        if dx * dx + dy * dy > s.r2_sig {
+            continue;
+        }
+        let power = -0.5 * (s.conic_a * dx * dx + s.conic_c * dy * dy) - s.conic_b * dx * dy;
+        if power > 0.0 {
+            continue;
+        }
+        let alpha = (s.opacity * power.exp()).min(ALPHA_MAX);
+        if alpha < ALPHA_MIN {
+            continue;
+        }
+        significant += 1;
+        if (rec.len as usize) < record_k {
+            rec.push(s.id);
+        }
+        let test_t = t * (1.0 - alpha);
+        if test_t < T_EPS {
+            break;
+        }
+        let w = alpha * t;
+        c[0] += w * s.color[0];
+        c[1] += w * s.color[1];
+        c[2] += w * s.color[2];
+        t = test_t;
+    }
+    (c, t, iterated, significant, rec)
+}
+
+/// Composite one pixel against a depth-sorted tile list.
+///
+/// Returns (rgb, transmittance, iterated, significant, record).
+#[inline]
+pub fn composite_pixel(
+    projected: &ProjectedScene,
+    list: &[u32],
+    px: f32,
+    py: f32,
+    record_k: usize,
+) -> ([f32; 3], f32, u32, u32, SigRecord) {
+    let mut c = [0.0f32; 3];
+    let mut t = 1.0f32;
+    let mut iterated = 0u32;
+    let mut significant = 0u32;
+    let mut rec = SigRecord::default();
+    for &idx in list {
+        let i = idx as usize;
+        iterated += 1;
+        let [mx, my] = projected.means[i];
+        let dx = px - mx;
+        let dy = py - my;
+        let conic = projected.conics[i];
+        let power = -0.5 * (conic.a * dx * dx + conic.c * dy * dy) - conic.b * dx * dy;
+        if power > 0.0 {
+            continue;
+        }
+        let alpha = (projected.opacity[i] * power.exp()).min(ALPHA_MAX);
+        if alpha < ALPHA_MIN {
+            continue;
+        }
+        significant += 1;
+        if (rec.len as usize) < record_k {
+            rec.push(projected.ids[i]);
+        }
+        let test_t = t * (1.0 - alpha);
+        if test_t < T_EPS {
+            break;
+        }
+        let w = alpha * t;
+        let color = projected.colors[i];
+        c[0] += w * color[0];
+        c[1] += w * color[1];
+        c[2] += w * color[2];
+        t = test_t;
+    }
+    (c, t, iterated, significant, rec)
+}
+
+/// Rasterize all tiles of `bins` into an image (parallel over tiles,
+/// with per-tile contiguous gathering — see `GatheredSplat`).
+pub fn rasterize(
+    projected: &ProjectedScene,
+    bins: &TileBins,
+    width: usize,
+    height: usize,
+    cfg: &RasterConfig,
+) -> RasterOutput {
+    let ts = bins.tile_size;
+    let n_px = width * height;
+    let n_tiles = bins.tile_count();
+
+    /// One tile's rendered block (tile-local, row-major ts x ts).
+    struct TileOut {
+        color: Vec<[f32; 3]>,
+        iterated: Vec<u32>,
+        significant: Vec<u32>,
+        recs: Vec<SigRecord>,
+    }
+
+    let record_k = cfg.sig_record_k;
+    let want_stats = cfg.collect_stats;
+    let tile_results: Vec<TileOut> = par::par_map(n_tiles, |tile| {
+        let splats = gather_tile(projected, &bins.lists[tile]);
+        let (ox, oy) = bins.tile_origin(tile);
+        let mut out = TileOut {
+            color: vec![[0.0; 3]; ts * ts],
+            iterated: if want_stats { vec![0; ts * ts] } else { Vec::new() },
+            significant: if want_stats { vec![0; ts * ts] } else { Vec::new() },
+            recs: if record_k > 0 { vec![SigRecord::default(); ts * ts] } else { Vec::new() },
+        };
+        for ly in 0..ts {
+            let py = oy + ly as f32 + 0.5;
+            if oy as usize + ly >= height {
+                break;
+            }
+            for lx in 0..ts {
+                if ox as usize + lx >= width {
+                    break;
+                }
+                let px = ox + lx as f32 + 0.5;
+                let (c, _t, it, sg, rec) =
+                    composite_pixel_gathered(&splats, px, py, record_k);
+                let off = ly * ts + lx;
+                out.color[off] = c;
+                if want_stats {
+                    out.iterated[off] = it;
+                    out.significant[off] = sg;
+                }
+                if record_k > 0 {
+                    out.recs[off] = rec;
+                }
+            }
+        }
+        out
+    });
+
+    // Assemble the framebuffer (sequential; ~1% of the render cost).
+    let mut image = Image::new(width, height);
+    let mut stats = want_stats.then(|| RasterStats {
+        iterated: vec![0; n_px],
+        significant: vec![0; n_px],
+    });
+    let mut sig_records = (record_k > 0).then(|| vec![SigRecord::default(); n_px]);
+    for (tile, tout) in tile_results.iter().enumerate() {
+        let tx = tile % bins.tiles_x;
+        let ty = tile / bins.tiles_x;
+        for ly in 0..ts {
+            let y = ty * ts + ly;
+            if y >= height {
+                break;
+            }
+            let row = y * width;
+            for lx in 0..ts {
+                let x = tx * ts + lx;
+                if x >= width {
+                    break;
+                }
+                let off = ly * ts + lx;
+                image.data[row + x] = tout.color[off];
+                if let Some(st) = stats.as_mut() {
+                    st.iterated[row + x] = tout.iterated[off];
+                    st.significant[row + x] = tout.significant[off];
+                }
+                if let Some(recs) = sig_records.as_mut() {
+                    recs[row + x] = tout.recs[off];
+                }
+            }
+        }
+    }
+
+    RasterOutput { image, stats, sig_records }
+}
+
+/// Per-pixel contribution profile for the paper's Fig. 11: the sorted
+/// (descending) normalized contribution weights of every composited
+/// Gaussian for a sample of pixels. Returns a vector per sampled pixel of
+/// `alpha_i * Gamma_i` weights normalized to sum 1.
+pub fn contribution_profile(
+    projected: &ProjectedScene,
+    bins: &TileBins,
+    width: usize,
+    height: usize,
+    stride: usize,
+) -> Vec<Vec<f32>> {
+    let ts = bins.tile_size;
+    let mut profiles = Vec::new();
+    for y in (0..height).step_by(stride) {
+        for x in (0..width).step_by(stride) {
+            let tile = (y / ts) * bins.tiles_x + x / ts;
+            let list = &bins.lists[tile];
+            let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
+            let mut weights = Vec::new();
+            let mut t = 1.0f32;
+            for &idx in list {
+                let i = idx as usize;
+                let [mx, my] = projected.means[i];
+                let dx = px - mx;
+                let dy = py - my;
+                let conic = projected.conics[i];
+                let power =
+                    -0.5 * (conic.a * dx * dx + conic.c * dy * dy) - conic.b * dx * dy;
+                if power > 0.0 {
+                    continue;
+                }
+                let alpha = (projected.opacity[i] * power.exp()).min(ALPHA_MAX);
+                if alpha < ALPHA_MIN {
+                    continue;
+                }
+                let test_t = t * (1.0 - alpha);
+                if test_t < T_EPS {
+                    break;
+                }
+                weights.push(alpha * t);
+                t = test_t;
+            }
+            let sum: f32 = weights.iter().sum();
+            if sum > 0.0 {
+                for w in weights.iter_mut() {
+                    *w /= sum;
+                }
+                weights.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                profiles.push(weights);
+            }
+        }
+    }
+    profiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Intrinsics, Pose};
+    use crate::math::Vec3;
+    use crate::pipeline::project::project;
+    use crate::pipeline::sort::bin_and_sort;
+    use crate::scene::synth::test_scene;
+
+    fn render_setup(n: usize) -> (ProjectedScene, TileBins, Intrinsics) {
+        let scene = test_scene(21, n);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        (p, bins, intr)
+    }
+
+    #[test]
+    fn renders_nonempty_image() {
+        let (p, bins, intr) = render_setup(3000);
+        let out = rasterize(&p, &bins, intr.width, intr.height, &RasterConfig::default());
+        let lit = out.image.data.iter().filter(|p| p[0] + p[1] + p[2] > 0.01).count();
+        assert!(lit > 1000, "only {lit} lit pixels");
+    }
+
+    #[test]
+    fn stats_collected_and_sane() {
+        let (p, bins, intr) = render_setup(3000);
+        let cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
+        let out = rasterize(&p, &bins, intr.width, intr.height, &cfg);
+        let stats = out.stats.unwrap();
+        assert_eq!(stats.iterated.len(), 128 * 128);
+        assert!(stats.mean_iterated() > 1.0);
+        // Significance sparsity: far fewer significant than iterated.
+        let frac = stats.significant_fraction();
+        assert!(frac > 0.0 && frac < 0.6, "significant fraction {frac}");
+        // significant <= iterated pointwise.
+        for (s, i) in stats.significant.iter().zip(&stats.iterated) {
+            assert!(s <= i);
+        }
+    }
+
+    #[test]
+    fn sig_records_match_stats() {
+        let (p, bins, intr) = render_setup(2000);
+        let cfg = RasterConfig { collect_stats: true, sig_record_k: 5 };
+        let out = rasterize(&p, &bins, intr.width, intr.height, &cfg);
+        let stats = out.stats.unwrap();
+        let recs = out.sig_records.unwrap();
+        for (rec, &sig) in recs.iter().zip(&stats.significant) {
+            assert_eq!(rec.len as u32, sig.min(5), "record len vs significant count");
+            // Recorded IDs are real scene IDs.
+            for &id in &rec.ids[..rec.len as usize] {
+                assert!(p.ids.contains(&id));
+            }
+        }
+    }
+
+    #[test]
+    fn pixel_compositor_matches_rasterize() {
+        let (p, bins, intr) = render_setup(1500);
+        let out = rasterize(&p, &bins, intr.width, intr.height, &RasterConfig::default());
+        for (x, y) in [(3usize, 5usize), (64, 64), (127, 100)] {
+            let tile = (y / 16) * bins.tiles_x + x / 16;
+            let (c, _, _, _, _) = composite_pixel(
+                &p,
+                &bins.lists[tile],
+                x as f32 + 0.5,
+                y as f32 + 0.5,
+                0,
+            );
+            assert_eq!(out.image.at(x, y), c);
+        }
+    }
+
+    #[test]
+    fn empty_projection_renders_black() {
+        let p = ProjectedScene::default();
+        let intr = Intrinsics::with_fov(64, 64, 0.9);
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        let out = rasterize(&p, &bins, 64, 64, &RasterConfig::default());
+        assert!(out.image.data.iter().all(|p| *p == [0.0, 0.0, 0.0]));
+    }
+
+    #[test]
+    fn contribution_profile_normalized_descending() {
+        let (p, bins, intr) = render_setup(3000);
+        let profiles = contribution_profile(&p, &bins, intr.width, intr.height, 16);
+        assert!(!profiles.is_empty());
+        for prof in &profiles {
+            let sum: f32 = prof.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+            for w in prof.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn non_square_image() {
+        let scene = test_scene(22, 1000);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(96, 48, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        let out = rasterize(&p, &bins, intr.width, intr.height, &RasterConfig::default());
+        assert_eq!(out.image.data.len(), 96 * 48);
+    }
+}

@@ -1,0 +1,245 @@
+//! Tile binning + per-tile depth sorting (paper Fig. 1, step 2).
+//!
+//! Every projected Gaussian is inserted into the lists of all tiles its
+//! 3-sigma footprint (optionally expanded by the S^2 tile margin) touches;
+//! each tile's list is then sorted front-to-back by depth. The per-tile
+//! order is exactly what the Sorted Splatting Table of Fig. 1 holds, and
+//! what S^2 shares across frames.
+
+use super::project::ProjectedScene;
+use crate::camera::Intrinsics;
+use crate::util::par;
+
+/// Per-tile sorted Gaussian lists.
+///
+/// `lists[tile]` holds indices into the [`ProjectedScene`] arrays (NOT
+/// global Gaussian IDs — those are `projected.ids[index]`), sorted by
+/// ascending depth.
+#[derive(Debug, Clone, Default)]
+pub struct TileBins {
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+    pub tile_size: usize,
+    pub lists: Vec<Vec<u32>>,
+}
+
+impl TileBins {
+    pub fn tile_count(&self) -> usize {
+        self.tiles_x * self.tiles_y
+    }
+
+    /// Total tile-Gaussian intersections (the Sorting workload size).
+    pub fn total_entries(&self) -> usize {
+        self.lists.iter().map(|l| l.len()).sum()
+    }
+
+    /// Tile origin in pixels.
+    pub fn tile_origin(&self, tile: usize) -> (f32, f32) {
+        let tx = tile % self.tiles_x;
+        let ty = tile / self.tiles_x;
+        ((tx * self.tile_size) as f32, (ty * self.tile_size) as f32)
+    }
+}
+
+/// Bin projected Gaussians into tiles and depth-sort each list.
+///
+/// `margin_px` expands each Gaussian's footprint during binning — the
+/// tile-granularity realization of the S^2 expanded viewport: a sort
+/// computed at the predicted pose must still cover Gaussians that drift
+/// across tile borders within the sharing window (paper Fig. 8).
+pub fn bin_and_sort(
+    projected: &ProjectedScene,
+    intr: &Intrinsics,
+    tile_size: usize,
+    margin_px: f32,
+) -> TileBins {
+    let (tiles_x, tiles_y) = intr.tiles(tile_size);
+    let n_tiles = tiles_x * tiles_y;
+
+    // Pass 1 (parallel): per-Gaussian tile ranges.
+    let ranges: Vec<(u32, u32, u32, u32)> = par::par_map(projected.len(), |i| {
+            let [mx, my] = projected.means[i];
+            let r = projected.radii[i] + margin_px;
+            let x0 = ((mx - r) / tile_size as f32).floor().max(0.0) as u32;
+            let y0 = ((my - r) / tile_size as f32).floor().max(0.0) as u32;
+            let x1 = (((mx + r) / tile_size as f32).floor() as i64)
+                .clamp(-1, tiles_x as i64 - 1) as i64;
+            let y1 = (((my + r) / tile_size as f32).floor() as i64)
+                .clamp(-1, tiles_y as i64 - 1) as i64;
+            if x1 < x0 as i64 || y1 < y0 as i64 {
+                (1, 0, 1, 0) // empty range
+            } else {
+                (x0, x1 as u32, y0, y1 as u32)
+            }
+        });
+
+    // Pass 2: scatter into per-tile lists (counting first to avoid
+    // reallocation).
+    let mut counts = vec![0usize; n_tiles];
+    for &(x0, x1, y0, y1) in &ranges {
+        if x1 < x0 || y1 < y0 {
+            continue;
+        }
+        for ty in y0..=y1 {
+            for tx in x0..=x1 {
+                counts[ty as usize * tiles_x + tx as usize] += 1;
+            }
+        }
+    }
+    let mut lists: Vec<Vec<u32>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (i, &(x0, x1, y0, y1)) in ranges.iter().enumerate() {
+        if x1 < x0 || y1 < y0 {
+            continue;
+        }
+        for ty in y0..=y1 {
+            for tx in x0..=x1 {
+                lists[ty as usize * tiles_x + tx as usize].push(i as u32);
+            }
+        }
+    }
+
+    // Pass 3 (parallel): per-tile depth sort, stable on f32 key bits so
+    // equal depths keep insertion (scene) order like the CUDA radix sort.
+    par::par_chunks_mut(&mut lists, 8, |_ci, chunk| {
+        for list in chunk {
+            list.sort_by_key(|&i| f32_sort_key(projected.depths[i as usize]));
+        }
+    });
+
+    TileBins { tiles_x, tiles_y, tile_size, lists }
+}
+
+/// Order-preserving mapping from (positive) f32 depth to u32 radix key.
+#[inline]
+pub fn f32_sort_key(depth: f32) -> u32 {
+    let bits = depth.to_bits();
+    // Positive floats compare like their bit patterns; flip negatives.
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000
+    }
+}
+
+/// Fraction of adjacent ordered pairs whose relative order differs
+/// between two sorted lists over the same ID universe — the paper's
+/// "0.2% of Gaussian orders changed" metric (Sec. 3.1), used by the
+/// fig12/fig23 harnesses and S^2 quality analysis.
+pub fn order_change_fraction(a: &[u32], b: &[u32]) -> f64 {
+    use std::collections::HashMap;
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let pos_b: HashMap<u32, usize> = b.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+    let mut checked = 0usize;
+    let mut changed = 0usize;
+    for w in a.windows(2) {
+        if let (Some(&pa), Some(&pb)) = (pos_b.get(&w[0]), pos_b.get(&w[1])) {
+            checked += 1;
+            if pa > pb {
+                changed += 1;
+            }
+        }
+    }
+    if checked == 0 {
+        0.0
+    } else {
+        changed as f64 / checked as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::Pose;
+    use crate::math::Vec3;
+    use crate::pipeline::project::project;
+    use crate::scene::synth::test_scene;
+
+    fn setup() -> (ProjectedScene, Intrinsics) {
+        let scene = test_scene(9, 2000);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        (project(&scene, &pose, &intr, 0.2, 100.0, 0.0), intr)
+    }
+
+    #[test]
+    fn lists_are_depth_sorted() {
+        let (p, intr) = setup();
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        assert_eq!(bins.tile_count(), 64);
+        for list in &bins.lists {
+            for w in list.windows(2) {
+                assert!(p.depths[w[0] as usize] <= p.depths[w[1] as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn every_gaussian_lands_in_a_covering_tile() {
+        let (p, intr) = setup();
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        for (i, m) in p.means.iter().enumerate() {
+            // A Gaussian whose center is inside the image must appear in
+            // the tile containing its center.
+            if m[0] >= 0.0 && m[0] < 128.0 && m[1] >= 0.0 && m[1] < 128.0 {
+                let tx = (m[0] / 16.0) as usize;
+                let ty = (m[1] / 16.0) as usize;
+                let list = &bins.lists[ty * bins.tiles_x + tx];
+                assert!(
+                    list.contains(&(i as u32)),
+                    "gaussian {i} center {m:?} missing from tile ({tx},{ty})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn margin_grows_lists() {
+        let (p, intr) = setup();
+        let tight = bin_and_sort(&p, &intr, 16, 0.0);
+        let loose = bin_and_sort(&p, &intr, 16, 8.0);
+        assert!(loose.total_entries() > tight.total_entries());
+    }
+
+    #[test]
+    fn sort_key_monotone() {
+        let depths = [0.1f32, 0.5, 1.0, 2.0, 100.0, 1e-3];
+        let mut sorted = depths;
+        sorted.sort_by(f32::total_cmp);
+        let mut by_key = depths;
+        by_key.sort_by_key(|d| f32_sort_key(*d));
+        assert_eq!(sorted, by_key);
+    }
+
+    #[test]
+    fn sort_key_handles_negatives() {
+        let mut vals = [-2.0f32, 3.0, -0.5, 0.0, 1.5];
+        let mut by_key = vals;
+        vals.sort_by(f32::total_cmp);
+        by_key.sort_by_key(|d| f32_sort_key(*d));
+        assert_eq!(vals, by_key);
+    }
+
+    #[test]
+    fn order_change_zero_for_identical() {
+        let a = vec![1, 2, 3, 4, 5];
+        assert_eq!(order_change_fraction(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn order_change_detects_swap() {
+        let a = vec![1, 2, 3, 4];
+        let b = vec![2, 1, 3, 4];
+        let f = order_change_fraction(&a, &b);
+        assert!(f > 0.0 && f < 1.0);
+    }
+
+    #[test]
+    fn tile_origin_math() {
+        let bins = TileBins { tiles_x: 4, tiles_y: 3, tile_size: 16, lists: vec![] };
+        assert_eq!(bins.tile_origin(0), (0.0, 0.0));
+        assert_eq!(bins.tile_origin(5), (16.0, 16.0));
+        assert_eq!(bins.tile_origin(11), (48.0, 32.0));
+    }
+}

@@ -1,0 +1,151 @@
+//! LGSC binary scene IO — the format shared with `python/compile/common.py`.
+//!
+//! Layout (little-endian):
+//! `magic "LGSC" | version u32 | count u32 | sh_degree u32 |`
+//! `pos f32[N,3] | scale f32[N,3] | quat f32[N,4] (w,x,y,z) |`
+//! `opacity f32[N] | sh f32[N,16,3]`.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::GaussianScene;
+use crate::constants::SH_COEFFS;
+use crate::math::{Quat, Vec3};
+
+const MAGIC: &[u8; 4] = b"LGSC";
+const VERSION: u32 = 1;
+
+/// Write a scene to an LGSC file.
+pub fn write_scene(path: impl AsRef<Path>, scene: &GaussianScene) -> Result<()> {
+    scene.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(scene.len() as u32).to_le_bytes())?;
+    w.write_all(&3u32.to_le_bytes())?;
+    for p in &scene.pos {
+        write_f32s(&mut w, &[p.x, p.y, p.z])?;
+    }
+    for s in &scene.scale {
+        write_f32s(&mut w, &[s.x, s.y, s.z])?;
+    }
+    for q in &scene.quat {
+        write_f32s(&mut w, &[q.w, q.x, q.y, q.z])?;
+    }
+    for o in &scene.opacity {
+        write_f32s(&mut w, &[*o])?;
+    }
+    for sh in &scene.sh {
+        for coeff in sh {
+            write_f32s(&mut w, coeff)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a scene from an LGSC file.
+pub fn read_scene(path: impl AsRef<Path>) -> Result<GaussianScene> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad scene magic {:?}", magic);
+    }
+    let version = read_u32(&mut r)?;
+    ensure!(version == VERSION, "unsupported scene version {version}");
+    let n = read_u32(&mut r)? as usize;
+    let sh_deg = read_u32(&mut r)?;
+    ensure!(sh_deg == 3, "unsupported sh degree {sh_deg}");
+
+    let mut scene = GaussianScene::with_capacity(n);
+    let mut buf = vec![0f32; n * 3];
+    read_f32s(&mut r, &mut buf)?;
+    for c in buf.chunks_exact(3) {
+        scene.pos.push(Vec3::new(c[0], c[1], c[2]));
+    }
+    read_f32s(&mut r, &mut buf)?;
+    for c in buf.chunks_exact(3) {
+        scene.scale.push(Vec3::new(c[0], c[1], c[2]));
+    }
+    let mut qbuf = vec![0f32; n * 4];
+    read_f32s(&mut r, &mut qbuf)?;
+    for c in qbuf.chunks_exact(4) {
+        scene.quat.push(Quat::new(c[0], c[1], c[2], c[3]));
+    }
+    let mut obuf = vec![0f32; n];
+    read_f32s(&mut r, &mut obuf)?;
+    scene.opacity = obuf;
+    let mut shbuf = vec![0f32; n * SH_COEFFS * 3];
+    read_f32s(&mut r, &mut shbuf)?;
+    for g in shbuf.chunks_exact(SH_COEFFS * 3) {
+        let mut sh = [[0f32; 3]; SH_COEFFS];
+        for (k, coeff) in g.chunks_exact(3).enumerate() {
+            sh[k] = [coeff[0], coeff[1], coeff[2]];
+        }
+        scene.sh.push(sh);
+    }
+    scene.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(scene)
+}
+
+fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> Result<()> {
+    for v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    let mut bytes = vec![0u8; out.len() * 4];
+    r.read_exact(&mut bytes)?;
+    for (v, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::synth::{synth_scene, SceneClass};
+
+    use crate::util::testing::TempPath;
+
+    #[test]
+    fn roundtrip() {
+        let scene = synth_scene(SceneClass::SyntheticSmall, 123, 500);
+        let dir = TempPath::dir();
+        let path = dir.path.join("s.lgsc");
+        write_scene(&path, &scene).unwrap();
+        let got = read_scene(&path).unwrap();
+        assert_eq!(got.len(), scene.len());
+        for i in 0..scene.len() {
+            assert_eq!(got.pos[i], scene.pos[i]);
+            assert_eq!(got.scale[i], scene.scale[i]);
+            assert_eq!(got.quat[i], scene.quat[i]);
+            assert_eq!(got.opacity[i], scene.opacity[i]);
+            assert_eq!(got.sh[i], scene.sh[i]);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = TempPath::dir();
+        let path = dir.path.join("bad.lgsc");
+        std::fs::write(&path, b"XXXXnotascene").unwrap();
+        assert!(read_scene(&path).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Gaussian scene representation: the substrate every pipeline stage reads.
+//!
+//! Structure-of-arrays layout for cache-friendly streaming, matching the
+//! LGSC binary format shared with the Python build path (`scene/io.rs`).
+
+pub mod io;
+pub mod sh;
+pub mod synth;
+
+use crate::constants::SH_COEFFS;
+use crate::math::{Quat, Vec3};
+
+/// A 3D Gaussian scene in SoA layout.
+///
+/// Invariants: all vectors have identical length `len()`; `opacity` is
+/// post-sigmoid in `[0, 1]`; `scale` is linear (not log); quaternions need
+/// not be normalized (consumers normalize).
+#[derive(Debug, Clone, Default)]
+pub struct GaussianScene {
+    /// World-space centers.
+    pub pos: Vec<Vec3>,
+    /// Per-axis standard deviations of the 3D Gaussian.
+    pub scale: Vec<Vec3>,
+    /// Orientation quaternions (w, x, y, z).
+    pub quat: Vec<Quat>,
+    /// Opacity in [0, 1] (already sigmoid-activated).
+    pub opacity: Vec<f32>,
+    /// Degree-3 SH coefficients, RGB-interleaved: [coeff][channel].
+    pub sh: Vec<[[f32; 3]; SH_COEFFS]>,
+}
+
+impl GaussianScene {
+    /// Number of Gaussians.
+    pub fn len(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// True when the scene holds no Gaussians.
+    pub fn is_empty(&self) -> bool {
+        self.pos.is_empty()
+    }
+
+    /// Allocate an empty scene with capacity for `n` Gaussians.
+    pub fn with_capacity(n: usize) -> Self {
+        GaussianScene {
+            pos: Vec::with_capacity(n),
+            scale: Vec::with_capacity(n),
+            quat: Vec::with_capacity(n),
+            opacity: Vec::with_capacity(n),
+            sh: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append one Gaussian.
+    pub fn push(
+        &mut self,
+        pos: Vec3,
+        scale: Vec3,
+        quat: Quat,
+        opacity: f32,
+        sh: [[f32; 3]; SH_COEFFS],
+    ) {
+        self.pos.push(pos);
+        self.scale.push(scale);
+        self.quat.push(quat);
+        self.opacity.push(opacity);
+        self.sh.push(sh);
+    }
+
+    /// Check the SoA invariant (equal lengths); used by IO and tests.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.pos.len();
+        let ok = self.scale.len() == n
+            && self.quat.len() == n
+            && self.opacity.len() == n
+            && self.sh.len() == n;
+        if !ok {
+            return Err(format!(
+                "SoA length mismatch: pos={} scale={} quat={} opacity={} sh={}",
+                n,
+                self.scale.len(),
+                self.quat.len(),
+                self.opacity.len(),
+                self.sh.len()
+            ));
+        }
+        for (i, o) in self.opacity.iter().enumerate() {
+            if !(0.0..=1.0).contains(o) || !o.is_finite() {
+                return Err(format!("opacity[{i}] = {o} outside [0,1]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Geometric mean of the three scale parameters of Gaussian `i`
+    /// (the `S` in the paper's scale-constrained loss, Eqn. 4).
+    pub fn geo_mean_scale(&self, i: usize) -> f32 {
+        let s = self.scale[i];
+        (s.x * s.y * s.z).abs().powf(1.0 / 3.0)
+    }
+
+    /// Axis-aligned bounding box of all centers.
+    pub fn bounds(&self) -> (Vec3, Vec3) {
+        let mut lo = Vec3::new(f32::INFINITY, f32::INFINITY, f32::INFINITY);
+        let mut hi = Vec3::new(f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for p in &self.pos {
+            lo = Vec3::new(lo.x.min(p.x), lo.y.min(p.y), lo.z.min(p.z));
+            hi = Vec3::new(hi.x.max(p.x), hi.y.max(p.y), hi.z.max(p.z));
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_validate() {
+        let mut s = GaussianScene::with_capacity(2);
+        s.push(
+            Vec3::new(0.0, 1.0, 2.0),
+            Vec3::new(0.1, 0.1, 0.1),
+            Quat::IDENTITY,
+            0.5,
+            [[0.0; 3]; SH_COEFFS],
+        );
+        assert_eq!(s.len(), 1);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_opacity() {
+        let mut s = GaussianScene::default();
+        s.push(Vec3::ZERO, Vec3::ZERO, Quat::IDENTITY, 1.5, [[0.0; 3]; SH_COEFFS]);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn geo_mean_scale() {
+        let mut s = GaussianScene::default();
+        s.push(
+            Vec3::ZERO,
+            Vec3::new(1.0, 8.0, 1.0),
+            Quat::IDENTITY,
+            0.5,
+            [[0.0; 3]; SH_COEFFS],
+        );
+        assert!((s.geo_mean_scale(0) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bounds() {
+        let mut s = GaussianScene::default();
+        s.push(Vec3::new(-1.0, 0.0, 2.0), Vec3::ZERO, Quat::IDENTITY, 0.1, [[0.0; 3]; SH_COEFFS]);
+        s.push(Vec3::new(3.0, -2.0, 1.0), Vec3::ZERO, Quat::IDENTITY, 0.1, [[0.0; 3]; SH_COEFFS]);
+        let (lo, hi) = s.bounds();
+        assert_eq!(lo, Vec3::new(-1.0, -2.0, 1.0));
+        assert_eq!(hi, Vec3::new(3.0, 0.0, 2.0));
+    }
+}

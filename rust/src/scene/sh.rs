@@ -1,0 +1,110 @@
+//! Degree-3 real spherical-harmonic color evaluation.
+//!
+//! Mirrors `python/compile/kernels/sh_eval.py` / `ref.py` exactly (same
+//! basis constants as the reference 3DGS implementation): RGB = clamp(
+//! basis(dir) . coeffs + 0.5, 0, inf). S^2 sorting-shared rendering
+//! re-evaluates this every frame at the *current* pose (paper Sec. 3.1).
+
+use crate::constants::SH_COEFFS;
+use crate::math::Vec3;
+
+pub const SH_C0: f32 = 0.282_094_8;
+pub const SH_C1: f32 = 0.488_602_5;
+pub const SH_C2: [f32; 5] = [1.092_548_4, -1.092_548_4, 0.315_391_57, -1.092_548_4, 0.546_274_2];
+pub const SH_C3: [f32; 7] = [
+    -0.590_043_6,
+    2.890_611_4,
+    -0.457_045_8,
+    0.373_176_33,
+    -0.457_045_8,
+    1.445_305_7,
+    -0.590_043_6,
+];
+
+/// Evaluate the 16-element degree-3 SH basis at a unit direction.
+#[inline]
+pub fn sh_basis(d: Vec3) -> [f32; SH_COEFFS] {
+    let (x, y, z) = (d.x, d.y, d.z);
+    let (xx, yy, zz) = (x * x, y * y, z * z);
+    let (xy, yz, xz) = (x * y, y * z, x * z);
+    [
+        SH_C0,
+        -SH_C1 * y,
+        SH_C1 * z,
+        -SH_C1 * x,
+        SH_C2[0] * xy,
+        SH_C2[1] * yz,
+        SH_C2[2] * (2.0 * zz - xx - yy),
+        SH_C2[3] * xz,
+        SH_C2[4] * (xx - yy),
+        SH_C3[0] * y * (3.0 * xx - yy),
+        SH_C3[1] * xy * z,
+        SH_C3[2] * y * (4.0 * zz - xx - yy),
+        SH_C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+        SH_C3[4] * x * (4.0 * zz - xx - yy),
+        SH_C3[5] * z * (xx - yy),
+        SH_C3[6] * x * (xx - 3.0 * yy),
+    ]
+}
+
+/// View-dependent RGB of one Gaussian: direction from camera center to the
+/// Gaussian center, contracted with its SH coefficients.
+#[inline]
+pub fn eval_color(pos: Vec3, cam_center: Vec3, sh: &[[f32; 3]; SH_COEFFS]) -> [f32; 3] {
+    let dir = (pos - cam_center).normalized();
+    let basis = sh_basis(dir);
+    let mut rgb = [0.5f32; 3];
+    for k in 0..SH_COEFFS {
+        for c in 0..3 {
+            rgb[c] += basis[k] * sh[k][c];
+        }
+    }
+    [rgb[0].max(0.0), rgb[1].max(0.0), rgb[2].max(0.0)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dc_only_is_view_independent() {
+        let mut sh = [[0.0f32; 3]; SH_COEFFS];
+        sh[0] = [1.0, 2.0, -0.5];
+        let pos = Vec3::new(1.0, 0.5, 2.0);
+        let c1 = eval_color(pos, Vec3::new(0.0, 0.0, -3.0), &sh);
+        let c2 = eval_color(pos, Vec3::new(5.0, 1.0, 0.0), &sh);
+        for ch in 0..3 {
+            assert!((c1[ch] - c2[ch]).abs() < 1e-6);
+        }
+        // DC expectation: SH_C0 * coeff + 0.5, clamped at 0.
+        assert!((c1[0] - (SH_C0 + 0.5)).abs() < 1e-6);
+        assert!((c1[1] - (2.0 * SH_C0 + 0.5)).abs() < 1e-6);
+        assert!((c1[2] - (-0.5 * SH_C0 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamps_negative() {
+        let mut sh = [[0.0f32; 3]; SH_COEFFS];
+        sh[0] = [-10.0, -10.0, -10.0];
+        let c = eval_color(Vec3::new(0.0, 0.0, 1.0), Vec3::ZERO, &sh);
+        assert_eq!(c, [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn basis_degree1_flips_with_direction() {
+        let b1 = sh_basis(Vec3::new(0.0, 1.0, 0.0));
+        let b2 = sh_basis(Vec3::new(0.0, -1.0, 0.0));
+        assert!((b1[1] + b2[1]).abs() < 1e-6);
+        assert!((b1[1] + SH_C1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn view_dependence_with_degree1() {
+        let mut sh = [[0.0f32; 3]; SH_COEFFS];
+        sh[1] = [1.0, 0.0, 0.0]; // y-linear band
+        let pos = Vec3::ZERO;
+        let from_below = eval_color(pos, Vec3::new(0.0, -2.0, 0.0), &sh);
+        let from_above = eval_color(pos, Vec3::new(0.0, 2.0, 0.0), &sh);
+        assert!(from_below[0] != from_above[0]);
+    }
+}

@@ -1,0 +1,294 @@
+//! Procedural scene synthesis — the dataset substitute.
+//!
+//! The paper evaluates on trained 3DGS checkpoints of Synthetic-NeRF,
+//! Tanks&Temples, DeepBlending, and MipNeRF-360. We have no checkpoints,
+//! but every Lumina mechanism keys off *statistics* of those scenes, not
+//! their semantic content (DESIGN.md §5):
+//!
+//! * Gaussian count per scene class (Fig. 2a: <1M synthetic, up to >6M U360),
+//! * a log-normal scale distribution with a heavy tail of large splats,
+//! * opacity skewed high (trained scenes converge to mostly-opaque splats),
+//! * cluster-structured placement so per-pixel iterated lists reach the
+//!   hundreds-to-thousands range while only ~10% of encountered Gaussians
+//!   are significant (Fig. 4).
+//!
+//! The generator targets those statistics with a deterministic ChaCha RNG.
+
+use super::GaussianScene;
+use crate::constants::SH_COEFFS;
+use crate::math::{Quat, Vec3};
+use crate::util::prng::Pcg32;
+
+/// Scene complexity classes mirroring the paper's four datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SceneClass {
+    /// Synthetic-NeRF-like: small object, < 1M Gaussians, tight extent.
+    SyntheticSmall,
+    /// Tanks&Temples-like: real capture, ~1-3M Gaussians.
+    RealMedium,
+    /// DeepBlending-like: indoor scene, ~2-4M Gaussians.
+    RealIndoor,
+    /// MipNeRF-360-like: unbounded outdoor, > 4M Gaussians.
+    RealUnbounded,
+}
+
+impl SceneClass {
+    /// Default Gaussian count for full-fidelity runs (paper Fig. 2a).
+    pub fn default_count(self) -> usize {
+        match self {
+            SceneClass::SyntheticSmall => 300_000,
+            SceneClass::RealMedium => 1_800_000,
+            SceneClass::RealIndoor => 3_000_000,
+            SceneClass::RealUnbounded => 6_000_000,
+        }
+    }
+
+    /// World extent (half-width) of the Gaussian cloud.
+    pub fn extent(self) -> f32 {
+        match self {
+            SceneClass::SyntheticSmall => 1.3,
+            SceneClass::RealMedium => 6.0,
+            SceneClass::RealIndoor => 5.0,
+            SceneClass::RealUnbounded => 14.0,
+        }
+    }
+
+    /// Number of placement clusters (surface patches).
+    fn clusters(self) -> usize {
+        match self {
+            SceneClass::SyntheticSmall => 48,
+            SceneClass::RealMedium => 160,
+            SceneClass::RealIndoor => 120,
+            SceneClass::RealUnbounded => 320,
+        }
+    }
+
+    /// Median Gaussian scale relative to extent; trained scenes use
+    /// smaller splats for detailed geometry.
+    fn scale_median(self) -> f32 {
+        // Tuned so the per-pixel significance fraction at harness
+        // resolution lands near the paper's ~10% (Fig. 4): trained
+        // scenes resolve detail at the pixel scale, so splat footprints
+        // must stay a few pixels wide.
+        match self {
+            SceneClass::SyntheticSmall => 0.008,
+            SceneClass::RealMedium => 0.0055,
+            SceneClass::RealIndoor => 0.0050,
+            SceneClass::RealUnbounded => 0.0045,
+        }
+    }
+
+    /// All four classes, in paper order.
+    pub fn all() -> [SceneClass; 4] {
+        [
+            SceneClass::SyntheticSmall,
+            SceneClass::RealMedium,
+            SceneClass::RealIndoor,
+            SceneClass::RealUnbounded,
+        ]
+    }
+
+    /// Paper dataset label the class substitutes for.
+    pub fn paper_label(self) -> &'static str {
+        match self {
+            SceneClass::SyntheticSmall => "S-NeRF",
+            SceneClass::RealMedium => "T&T",
+            SceneClass::RealIndoor => "DB",
+            SceneClass::RealUnbounded => "U360",
+        }
+    }
+}
+
+/// Generate a procedural scene of `count` Gaussians in class `class_`.
+///
+/// Deterministic in `(class_, seed, count)`.
+pub fn synth_scene(class_: SceneClass, seed: u64, count: usize) -> GaussianScene {
+    let mut rng = Pcg32::new(seed, class_hash(class_));
+    let extent = class_.extent();
+    let n_clusters = class_.clusters();
+
+    // Cluster centers on a rough sphere/ellipsoid shell, plus some volume
+    // fill: mimics surfaces reconstructed by SfM. Each cluster carries a
+    // base albedo — trained scenes have spatially coherent color, which
+    // is what makes the paper's ray-similarity approximation (Fig. 12)
+    // accurate; random per-Gaussian color would overstate RC error.
+    let mut centers = Vec::with_capacity(n_clusters);
+    let mut normals = Vec::with_capacity(n_clusters);
+    let mut albedos = Vec::with_capacity(n_clusters);
+    for _ in 0..n_clusters {
+        let dir = random_unit(&mut rng);
+        // Volume-filling radial distribution: real captures have geometry
+        // at every depth, so a ray crosses many surface patches — that
+        // depth complexity is what keeps per-pixel iteration counts high
+        // (Fig. 4) and rasterization dominant (Fig. 3).
+        let r = extent * (0.25 + 0.70 * rng.f32());
+        centers.push(dir * r);
+        normals.push(dir);
+        albedos.push([
+            rng.range_f32(-0.5, 1.4),
+            rng.range_f32(-0.5, 1.4),
+            rng.range_f32(-0.5, 1.4),
+        ]);
+    }
+
+    let scale_median = class_.scale_median() * extent;
+    let mut scene = GaussianScene::with_capacity(count);
+    for _ in 0..count {
+        let c = rng.below(n_clusters);
+        // Anisotropic placement: spread along the surface patch, thin along
+        // the normal.
+        let tangent_spread = extent * 0.18;
+        let normal_spread = extent * 0.015;
+        let n = normals[c];
+        let (t1, t2) = tangent_basis(n);
+        let p = centers[c]
+            + t1 * (gauss(&mut rng) * tangent_spread)
+            + t2 * (gauss(&mut rng) * tangent_spread)
+            + n * (gauss(&mut rng) * normal_spread);
+
+        // Log-normal scales, slightly anisotropic (surfel-like), with a
+        // heavy tail: ~2% oversized Gaussians (the Fig. 13 failure mode).
+        let base = scale_median * (gauss(&mut rng) * 0.55).exp();
+        let tail = if rng.chance(0.02) { 4.0 + 6.0 * rng.f32() } else { 1.0 };
+        let s = Vec3::new(
+            base * tail * (0.5 + rng.f32()),
+            base * tail * (0.5 + rng.f32()),
+            base * tail * (0.15 + 0.3 * rng.f32()), // flat along normal
+        );
+
+        let quat = random_quat(&mut rng);
+
+        // Opacity: trained scenes skew opaque; ~35% low-opacity "fuzz"
+        // drives the significance sparsity of Fig. 4.
+        let opacity = if rng.chance(0.35) {
+            rng.range_f32(0.002, 0.05)
+        } else {
+            rng.range_f32(0.35, 0.995)
+        };
+
+        // SH: DC = cluster albedo + small variation (spatially coherent
+        // color); higher bands add mild view dependence.
+        let mut sh = [[0.0f32; 3]; SH_COEFFS];
+        for ch in 0..3 {
+            sh[0][ch] = albedos[c][ch] + gauss(&mut rng) * 0.12;
+        }
+        for coeff in sh.iter_mut().skip(1) {
+            for ch in 0..3 {
+                coeff[ch] = gauss(&mut rng) * 0.05;
+            }
+        }
+
+        scene.push(p, s, quat, opacity, sh);
+    }
+    scene
+}
+
+/// Convenience: a small scene for unit tests (fast, deterministic).
+pub fn test_scene(seed: u64, count: usize) -> GaussianScene {
+    synth_scene(SceneClass::SyntheticSmall, seed, count)
+}
+
+fn class_hash(c: SceneClass) -> u64 {
+    match c {
+        SceneClass::SyntheticSmall => 0x5eed_0001,
+        SceneClass::RealMedium => 0x5eed_0002,
+        SceneClass::RealIndoor => 0x5eed_0003,
+        SceneClass::RealUnbounded => 0x5eed_0004,
+    }
+}
+
+fn gauss(rng: &mut Pcg32) -> f32 {
+    rng.gauss()
+}
+
+fn random_unit(rng: &mut Pcg32) -> Vec3 {
+    loop {
+        let v = Vec3::new(
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+        );
+        let n = v.norm();
+        if n > 1e-4 && n <= 1.0 {
+            return v * (1.0 / n);
+        }
+    }
+}
+
+fn random_quat(rng: &mut Pcg32) -> Quat {
+    Quat::new(
+        gauss(rng),
+        gauss(rng),
+        gauss(rng),
+        gauss(rng),
+    )
+    .normalized()
+}
+
+fn tangent_basis(n: Vec3) -> (Vec3, Vec3) {
+    let helper = if n.x.abs() < 0.9 {
+        Vec3::new(1.0, 0.0, 0.0)
+    } else {
+        Vec3::new(0.0, 1.0, 0.0)
+    };
+    let t1 = n.cross(helper).normalized();
+    let t2 = n.cross(t1).normalized();
+    (t1, t2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = synth_scene(SceneClass::SyntheticSmall, 7, 200);
+        let b = synth_scene(SceneClass::SyntheticSmall, 7, 200);
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.opacity, b.opacity);
+    }
+
+    #[test]
+    fn seed_changes_scene() {
+        let a = synth_scene(SceneClass::SyntheticSmall, 7, 50);
+        let b = synth_scene(SceneClass::SyntheticSmall, 8, 50);
+        assert_ne!(a.pos, b.pos);
+    }
+
+    #[test]
+    fn valid_and_sized() {
+        for class_ in SceneClass::all() {
+            let s = synth_scene(class_, 1, 300);
+            assert_eq!(s.len(), 300);
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn opacity_distribution_is_bimodal() {
+        let s = synth_scene(SceneClass::RealMedium, 3, 5000);
+        let low = s.opacity.iter().filter(|o| **o < 0.05).count() as f32 / 5000.0;
+        let high = s.opacity.iter().filter(|o| **o > 0.35).count() as f32 / 5000.0;
+        assert!(low > 0.25 && low < 0.45, "low-opacity fraction {low}");
+        assert!(high > 0.5, "high-opacity fraction {high}");
+    }
+
+    #[test]
+    fn has_heavy_scale_tail() {
+        let s = synth_scene(SceneClass::SyntheticSmall, 11, 20_000);
+        let mut geo: Vec<f32> = (0..s.len()).map(|i| s.geo_mean_scale(i)).collect();
+        geo.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = geo[geo.len() / 2];
+        let p999 = geo[(geo.len() as f32 * 0.999) as usize];
+        assert!(p999 > 3.0 * median, "p99.9 {p999} vs median {median}");
+    }
+
+    #[test]
+    fn extent_scales_with_class() {
+        let small = synth_scene(SceneClass::SyntheticSmall, 2, 1000);
+        let big = synth_scene(SceneClass::RealUnbounded, 2, 1000);
+        let (lo_s, hi_s) = small.bounds();
+        let (lo_b, hi_b) = big.bounds();
+        assert!((hi_b - lo_b).norm() > 3.0 * (hi_s - lo_s).norm());
+    }
+}

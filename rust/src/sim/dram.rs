@@ -1,0 +1,78 @@
+//! LPDDR3-1600 DRAM model (paper Sec. 5: Micron 16 Gb LPDDR3-1600,
+//! four channels, energy from the Micron system power calculators).
+//!
+//! The simulator charges bandwidth-limited transfer time and per-byte
+//! access energy; random-access energy sits ~25x above SRAM access
+//! energy per byte (paper cites [30, 76]).
+
+/// LPDDR3-1600 x4-channel timing/energy model.
+#[derive(Debug, Clone, Copy)]
+pub struct DramModel {
+    /// Sustained bandwidth in bytes/second.
+    pub bandwidth_bytes_per_s: f64,
+    /// First-word latency in seconds (row activate + CAS).
+    pub latency_s: f64,
+    /// Energy per byte transferred (J/B).
+    pub energy_per_byte: f64,
+}
+
+impl DramModel {
+    /// Paper configuration: LPDDR3-1600, 32-bit channels, 4 channels.
+    /// 1600 MT/s * 4 B/transfer * 4 ch = 25.6 GB/s peak; ~70% sustained.
+    /// Energy ~ 40 pJ/B at LPDDR3 voltages (Micron calculator scale).
+    pub fn lpddr3_1600_x4() -> Self {
+        DramModel {
+            bandwidth_bytes_per_s: 25.6e9 * 0.7,
+            latency_s: 60e-9,
+            energy_per_byte: 40e-12,
+        }
+    }
+
+    /// Time to stream `bytes` (one burst; latency amortized per request).
+    pub fn transfer_time_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Energy to move `bytes`.
+    pub fn transfer_energy_j(&self, bytes: usize) -> f64 {
+        bytes as f64 * self.energy_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_free() {
+        let d = DramModel::lpddr3_1600_x4();
+        assert_eq!(d.transfer_time_s(0), 0.0);
+        assert_eq!(d.transfer_energy_j(0), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let d = DramModel::lpddr3_1600_x4();
+        let t = d.transfer_time_s(1 << 30); // 1 GiB
+        let ideal = (1u64 << 30) as f64 / d.bandwidth_bytes_per_s;
+        assert!((t - ideal) / ideal < 0.01);
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let d = DramModel::lpddr3_1600_x4();
+        let t = d.transfer_time_s(64);
+        assert!(t > 0.9 * d.latency_s && t < 2.0 * d.latency_s);
+    }
+
+    #[test]
+    fn energy_linear() {
+        let d = DramModel::lpddr3_1600_x4();
+        assert!(
+            (d.transfer_energy_j(2000) - 2.0 * d.transfer_energy_j(1000)).abs() < 1e-18
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Hardware cost models and the cycle-accurate LuminCore simulator.
+//!
+//! * [`gpu`]       — mobile-Volta SIMT model (warp divergence, stage
+//!   times), calibrated to the paper's published anchors.
+//! * [`lumincore`] — cycle-accurate NRU array + buffers + LuminCache
+//!   timing, with sparsity-aware remapping.
+//! * [`gscore`]    — the GSCore comparator (CCU/GSU/rasterizer).
+//! * [`dram`]      — LPDDR3-1600 x4 bandwidth/latency/energy.
+//! * [`energy`]    — 12 nm component energy constants (25:1 DRAM:SRAM).
+
+pub mod dram;
+pub mod energy;
+pub mod gpu;
+pub mod gscore;
+pub mod lumincore;

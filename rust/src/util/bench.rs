@@ -1,0 +1,134 @@
+//! Measurement harness for `cargo bench` (the `criterion` substitute).
+//!
+//! Each bench target is a plain `harness = false` binary that builds a
+//! [`Runner`], registers closures, and calls [`Runner::finish`]. The
+//! runner warms up, runs timed batches until a wall budget is spent, and
+//! reports min/median/mean per iteration plus a throughput column.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+/// Bench runner: registers and executes named closures.
+pub struct Runner {
+    pub label: String,
+    budget: Duration,
+    warmup: Duration,
+    results: Vec<Measurement>,
+    filter: Option<String>,
+}
+
+impl Runner {
+    pub fn new(label: &str) -> Self {
+        // `cargo bench -- <filter>` passes the filter as an argument;
+        // `--bench` is also passed by cargo and must be ignored.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        let quick = std::env::var("LUMINA_BENCH_QUICK").is_ok();
+        Runner {
+            label: label.to_string(),
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one logical iteration and
+    /// return a value (kept opaque to the optimizer via `black_box`).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Choose batch size so one batch is ~10ms.
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch = ((0.01 / per_iter.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let timed = Instant::now();
+        let mut total_iters = 0u64;
+        while timed.elapsed() < self.budget || samples.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed();
+            samples.push(dt / batch as u32);
+            total_iters += batch;
+            if samples.len() >= 200 {
+                break;
+            }
+        }
+        samples.sort();
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let m = Measurement { name: name.to_string(), iters: total_iters, min, median, mean };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}  ({} iters)",
+            m.name,
+            fmt_dur(m.min),
+            fmt_dur(m.median),
+            fmt_dur(m.mean),
+            m.iters
+        );
+        self.results.push(m);
+    }
+
+    /// Print the header row (call before the first bench).
+    pub fn header(&self) {
+        println!("== bench: {} ==", self.label);
+        println!("{:<48} {:>12} {:>12} {:>12}", "name", "min", "median", "mean");
+    }
+
+    /// Finish: returns results for programmatic use.
+    pub fn finish(self) -> Vec<Measurement> {
+        println!("== {} done: {} benchmarks ==", self.label, self.results.len());
+        self.results
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(3)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (the `clap` substitute).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, `--key value` options (repeatable keys
+/// collect), boolean `--flags`, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+/// Keys that take a value (everything else after `--` is a flag).
+pub fn parse(argv: &[String], value_keys: &[&str]) -> Args {
+    let mut args = Args::default();
+    let mut iter = argv.iter().peekable();
+    while let Some(a) = iter.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            // --key=value form.
+            if let Some((k, v)) = key.split_once('=') {
+                args.options.entry(k.to_string()).or_default().push(v.to_string());
+                continue;
+            }
+            if value_keys.contains(&key) {
+                if let Some(v) = iter.next() {
+                    args.options.entry(key.to_string()).or_default().push(v.clone());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.flags.push(key.to_string());
+            }
+        } else if args.subcommand.is_none() && args.positionals.is_empty() {
+            args.subcommand = Some(a.clone());
+        } else {
+            args.positionals.push(a.clone());
+        }
+    }
+    args
+}
+
+impl Args {
+    /// Last value of `--key`, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable `--key`.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Presence of a boolean `--flag`.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Parse `--key` as `T`, with a default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(
+            &argv(&["render", "--config", "x.toml", "--verbose", "pos1"]),
+            &["config"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("render"));
+        assert_eq!(a.get("config"), Some("x.toml"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = parse(&argv(&["run", "--set=a=1", "--set", "b=2"]), &["set"]);
+        assert_eq!(a.get_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn parsed_with_default() {
+        let a = parse(&argv(&["x", "--n", "12"]), &["n"]);
+        assert_eq!(a.get_parsed("n", 5usize), 12);
+        assert_eq!(a.get_parsed("missing", 5usize), 5);
+    }
+}

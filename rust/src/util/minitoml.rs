@@ -1,0 +1,395 @@
+//! Minimal TOML-subset parser/serializer (the `serde`+`toml` substitute).
+//!
+//! Supports the subset the config system needs: top-level key/values,
+//! `[section]` and `[section.sub]` tables, strings, integers, floats,
+//! booleans, and flat arrays. No inline tables, no dates, no multi-line
+//! strings.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Boolean(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Boolean(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_table_mut(&mut self) -> Option<&mut BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Walk a dotted path.
+    pub fn get_path(&self, path: &str) -> Option<&Value> {
+        let mut node = self;
+        for part in path.split('.') {
+            node = node.as_table()?.get(part)?;
+        }
+        Some(node)
+    }
+
+    /// Insert at a dotted path, creating intermediate tables.
+    pub fn set_path(&mut self, path: &str, value: Value) -> Result<(), ParseError> {
+        let parts: Vec<&str> = path.split('.').collect();
+        let mut node = self;
+        for part in &parts[..parts.len() - 1] {
+            let table = node
+                .as_table_mut()
+                .ok_or_else(|| ParseError::new(0, format!("{part} is not a table")))?;
+            node = table
+                .entry(part.to_string())
+                .or_insert_with(|| Value::Table(BTreeMap::new()));
+        }
+        let table = node
+            .as_table_mut()
+            .ok_or_else(|| ParseError::new(0, "leaf parent is not a table".into()))?;
+        table.insert(parts.last().unwrap().to_string(), value);
+        Ok(())
+    }
+}
+
+/// Parse error with a 1-based line number.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl ParseError {
+    fn new(line: usize, message: String) -> Self {
+        ParseError { line, message }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TOML parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a TOML-subset document into a root table value.
+pub fn parse(input: &str) -> Result<Value, ParseError> {
+    let mut root = Value::Table(BTreeMap::new());
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ln = lineno + 1;
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| ParseError::new(ln, "unterminated section header".into()))?
+                .trim();
+            if name.is_empty() || name.starts_with('[') {
+                return Err(ParseError::new(ln, format!("bad section header: {line}")));
+            }
+            section = name.to_string();
+            // Materialize the table even if empty.
+            root.set_path(&section, Value::Table(BTreeMap::new()))
+                .map_err(|e| ParseError::new(ln, e.message))?;
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| ParseError::new(ln, format!("expected key = value: {line}")))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(ParseError::new(ln, "empty key".into()));
+        }
+        let value = parse_value(val.trim(), ln)?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        root.set_path(&path, value)
+            .map_err(|e| ParseError::new(ln, e.message))?;
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(ParseError::new(line, "empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| ParseError::new(line, "unterminated string".into()))?;
+        return Ok(Value::String(unescape(inner)));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| ParseError::new(line, "unterminated array".into()))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for item in split_array_items(inner) {
+            items.push(parse_value(item.trim(), line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Boolean(true)),
+        "false" => return Ok(Value::Boolean(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Integer(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError::new(line, format!("cannot parse value: {s}")))
+}
+
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Serialize a root table to TOML text (sections for nested tables).
+pub fn serialize(root: &Value) -> String {
+    let mut out = String::new();
+    if let Value::Table(t) = root {
+        // Scalars first.
+        for (k, v) in t {
+            if !matches!(v, Value::Table(_)) {
+                out.push_str(&format!("{k} = {}\n", fmt_scalar(v)));
+            }
+        }
+        for (k, v) in t {
+            if let Value::Table(sub) = v {
+                serialize_section(k, sub, &mut out);
+            }
+        }
+    }
+    out
+}
+
+fn serialize_section(path: &str, table: &BTreeMap<String, Value>, out: &mut String) {
+    out.push_str(&format!("\n[{path}]\n"));
+    for (k, v) in table {
+        if !matches!(v, Value::Table(_)) {
+            out.push_str(&format!("{k} = {}\n", fmt_scalar(v)));
+        }
+    }
+    for (k, v) in table {
+        if let Value::Table(sub) = v {
+            serialize_section(&format!("{path}.{k}"), sub, out);
+        }
+    }
+}
+
+fn fmt_scalar(v: &Value) -> String {
+    match v {
+        Value::String(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Value::Integer(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Boolean(b) => b.to_string(),
+        Value::Array(items) => {
+            let inner: Vec<String> = items.iter().map(fmt_scalar).collect();
+            format!("[{}]", inner.join(", "))
+        }
+        Value::Table(_) => unreachable!("tables serialized as sections"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basics() {
+        let v = parse(
+            r#"
+            # comment
+            name = "lumina"   # trailing comment
+            count = 42
+            ratio = 2.5
+            on = true
+            tags = [1, 2, 3]
+
+            [scene]
+            class = "synthetic-small"
+            seed = 7
+
+            [scene.nested]
+            depth = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get_path("name").unwrap().as_str(), Some("lumina"));
+        assert_eq!(v.get_path("count").unwrap().as_int(), Some(42));
+        assert_eq!(v.get_path("ratio").unwrap().as_float(), Some(2.5));
+        assert_eq!(v.get_path("on").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get_path("scene.class").unwrap().as_str(), Some("synthetic-small"));
+        assert_eq!(v.get_path("scene.nested.depth").unwrap().as_int(), Some(2));
+        match v.get_path("tags").unwrap() {
+            Value::Array(items) => assert_eq!(items.len(), 3),
+            _ => panic!("tags not an array"),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"
+            top = 1
+            [a]
+            x = "hi"
+            y = 2.5
+            [a.b]
+            z = false
+        "#;
+        let v = parse(src).unwrap();
+        let text = serialize(&v);
+        let back = parse(&text).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("x = \"unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse("s = \"a#b\"").unwrap();
+        assert_eq!(v.get_path("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn set_path_creates_tables() {
+        let mut v = Value::Table(BTreeMap::new());
+        v.set_path("a.b.c", Value::Integer(5)).unwrap();
+        assert_eq!(v.get_path("a.b.c").unwrap().as_int(), Some(5));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let v = parse("i = 3\nf = 3.0").unwrap();
+        assert!(matches!(v.get_path("i").unwrap(), Value::Integer(3)));
+        assert!(matches!(v.get_path("f").unwrap(), Value::Float(_)));
+        // as_float coerces ints.
+        assert_eq!(v.get_path("i").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let v = parse("a = -4\nb = -0.5").unwrap();
+        assert_eq!(v.get_path("a").unwrap().as_int(), Some(-4));
+        assert_eq!(v.get_path("b").unwrap().as_float(), Some(-0.5));
+    }
+}

@@ -1,0 +1,20 @@
+//! In-crate substrates replacing external dependencies.
+//!
+//! The build image is fully offline; its vendored crate set covers only
+//! the `xla` closure + `anyhow`. Everything else a framework of this
+//! shape normally pulls in is implemented here (DESIGN.md §5):
+//!
+//! * [`prng`]    — deterministic PCG32 PRNG (replaces `rand`/`rand_chacha`)
+//! * [`par`]     — scoped-thread data parallelism (replaces `rayon`)
+//! * [`minitoml`]— TOML-subset parser/serializer (replaces `serde`+`toml`)
+//! * [`cli`]     — argument parsing (replaces `clap`)
+//! * [`bench`]   — measurement harness for `cargo bench` (replaces `criterion`)
+//! * [`testing`] — temp files + property-testing helpers (replaces
+//!   `tempfile`/`proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod minitoml;
+pub mod par;
+pub mod prng;
+pub mod testing;

@@ -1,0 +1,230 @@
+//! Scoped-thread data parallelism (the `rayon` substitute).
+//!
+//! Two primitives cover every hot path in the crate: parallel map over an
+//! index range, and parallel iteration over mutable chunks. Work is split
+//! into `num_threads()` contiguous blocks — rasterization and projection
+//! workloads are statically balanced enough that work stealing isn't
+//! worth the complexity.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (overridable with `LUMINA_THREADS`).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("LUMINA_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Parallel map over `0..n`: returns `Vec<T>` with `f(i)` at index `i`.
+///
+/// Cheap per-item closures (projection-style, n in the tens of
+/// thousands) get a static contiguous split; small-n maps (n < 4096)
+/// use dynamic work claiming so imbalanced per-item costs (per-tile
+/// rasterization!) still load-balance.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 64 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    if n < 4096 {
+        // Dynamic claiming: one item at a time (items are expensive and
+        // imbalanced, e.g. image tiles).
+        let next = AtomicUsize::new(0);
+        let ptr = SendPtr(out.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let next = &next;
+                let f = &f;
+                let ptr = ptr;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: each index claimed exactly once; disjoint
+                    // writes; scope outlives workers.
+                    unsafe { *ptr.get().add(i) = Some(f(i)) };
+                });
+            }
+        });
+    } else {
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (t, slot) in out.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    let base = t * chunk;
+                    for (j, s) in slot.iter_mut().enumerate() {
+                        *s = Some(f(base + j));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Parallel for-each over mutable chunks of `data` of size `chunk_size`;
+/// `f(chunk_index, chunk)` runs on worker threads.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_size > 0);
+    let n_chunks = data.len().div_ceil(chunk_size.max(1));
+    if num_threads() <= 1 || n_chunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // Collect raw chunk bounds first so workers can claim them atomically.
+    let chunks: Vec<(usize, usize)> = (0..n_chunks)
+        .map(|i| (i * chunk_size, ((i + 1) * chunk_size).min(data.len())))
+        .collect();
+    let ptr = SendPtr(data.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..num_threads().min(n_chunks) {
+            let next = &next;
+            let chunks = &chunks;
+            let f = &f;
+            let ptr = ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= chunks.len() {
+                    break;
+                }
+                let (lo, hi) = chunks[i];
+                // SAFETY: chunks are disjoint ranges of the slice; each is
+                // claimed by exactly one worker via the atomic counter, and
+                // the scope outlives all workers.
+                let slice =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
+                f(i, slice);
+            });
+        }
+    });
+}
+
+/// Parallel for-each over disjoint index blocks `0..n` in `blocks` pieces;
+/// `f(block_index, range)`.
+pub fn par_blocks<F>(n: usize, blocks: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let blocks = blocks.max(1);
+    let next = AtomicUsize::new(0);
+    let chunk = n.div_ceil(blocks);
+    std::thread::scope(|scope| {
+        for _ in 0..num_threads().min(blocks) {
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let b = next.fetch_add(1, Ordering::Relaxed);
+                if b >= blocks {
+                    break;
+                }
+                let lo = b * chunk;
+                let hi = ((b + 1) * chunk).min(n);
+                if lo < hi {
+                    f(b, lo..hi);
+                }
+            });
+        }
+    });
+}
+
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor (method receiver forces whole-struct closure capture, so
+    /// the `Send` impl on the wrapper applies rather than the raw field).
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+// SAFETY: the pointer is only dereferenced on disjoint ranges (see
+// par_chunks_mut) within a thread::scope that outlives all uses.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(10_000, |i| i * i);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_small_input() {
+        assert_eq!(par_map(3, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_all() {
+        let mut data = vec![0u32; 100_000];
+        par_chunks_mut(&mut data, 1024, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 1024 + j) as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_uneven_tail() {
+        let mut data = vec![0u8; 1000];
+        par_chunks_mut(&mut data, 333, |_ci, chunk| {
+            for v in chunk.iter_mut() {
+                *v = 7;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn par_blocks_covers_range() {
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..5000).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        par_blocks(5000, 16, |_b, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,105 @@
+//! Test support: temp paths and property-testing helpers (the
+//! `tempfile`/`proptest` substitute).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::prng::Pcg32;
+
+/// A unique temp path that removes itself (and its file/dir) on drop.
+pub struct TempPath {
+    pub path: PathBuf,
+}
+
+impl TempPath {
+    /// Unique file path under the system temp dir (not created).
+    pub fn file(ext: &str) -> Self {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let path = std::env::temp_dir().join(format!("lumina-test-{pid}-{n}.{ext}"));
+        TempPath { path }
+    }
+
+    /// Unique directory (created).
+    pub fn dir() -> Self {
+        let t = Self::file("d");
+        std::fs::create_dir_all(&t.path).expect("create temp dir");
+        t
+    }
+}
+
+impl Drop for TempPath {
+    fn drop(&mut self) {
+        if self.path.is_dir() {
+            let _ = std::fs::remove_dir_all(&self.path);
+        } else {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Run a randomized property `cases` times with a seeded PRNG, printing
+/// the failing seed on panic so failures replay deterministically.
+///
+/// ```ignore
+/// property(64, |rng| {
+///     let n = rng.below(100) + 1;
+///     assert!(n > 0);
+/// });
+/// ```
+pub fn property(cases: u64, prop: impl Fn(&mut Pcg32)) {
+    let base = std::env::var("LUMINA_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xfeed_beefu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {case} (replay with LUMINA_PROP_SEED={seed} and cases=1)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temp_paths_unique() {
+        let a = TempPath::file("bin");
+        let b = TempPath::file("bin");
+        assert_ne!(a.path, b.path);
+    }
+
+    #[test]
+    fn temp_dir_created_and_cleaned() {
+        let p;
+        {
+            let d = TempPath::dir();
+            p = d.path.clone();
+            assert!(p.is_dir());
+            std::fs::write(p.join("x"), b"hi").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static RUNS: AtomicU64 = AtomicU64::new(0);
+        property(16, |rng| {
+            RUNS.fetch_add(1, Ordering::Relaxed);
+            let v = rng.f32();
+            assert!((0.0..1.0).contains(&v));
+        });
+        assert_eq!(RUNS.load(Ordering::Relaxed), 16);
+    }
+}

@@ -1,0 +1,99 @@
+//! End-to-end integration: full coordinator runs across variants,
+//! checking the paper's headline orderings hold on a small workload.
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::Coordinator;
+
+fn cfg(variant: HardwareVariant) -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 8000;
+    c.camera.width = 128;
+    c.camera.height = 128;
+    c.camera.frames = 12;
+    c.s2.expanded_margin = 2; // keep raster inflation low at this scale
+    c.variant = variant;
+    c
+}
+
+#[test]
+fn variant_ordering_matches_paper() {
+    // Fig. 22 shape: Lumina > S2-Acc > NRU+GPU > S2-GPU > GPU > RC-GPU,
+    // checked as a set of pairwise orderings on mean frame time.
+    let mut times = std::collections::HashMap::new();
+    for v in HardwareVariant::evaluation_set() {
+        let mut coord = Coordinator::new(cfg(v)).unwrap();
+        let r = coord.run().unwrap();
+        times.insert(v, r.mean_time_s());
+    }
+    let t = |v: HardwareVariant| times[&v];
+    assert!(t(HardwareVariant::Lumina) < t(HardwareVariant::Gpu));
+    assert!(t(HardwareVariant::S2Acc) < t(HardwareVariant::NruGpu));
+    assert!(t(HardwareVariant::NruGpu) < t(HardwareVariant::Gpu));
+    // S^2-GPU's 1.2x (Fig. 22) depends on paper workload proportions
+    // (sorting ~23% of the frame); at this unit-test scale the expanded
+    // viewport's extra raster work can cancel the savings (exactly the
+    // Fig. 23b trade-off), so require "not meaningfully worse".
+    assert!(t(HardwareVariant::S2Gpu) < t(HardwareVariant::Gpu) * 1.15);
+    assert!(t(HardwareVariant::RcGpu) > t(HardwareVariant::Gpu), "RC-GPU must slow down");
+    assert!(t(HardwareVariant::Lumina) <= t(HardwareVariant::S2Acc) * 1.05);
+}
+
+#[test]
+fn energy_ordering_matches_paper() {
+    let mut energies = std::collections::HashMap::new();
+    for v in [
+        HardwareVariant::Gpu,
+        HardwareVariant::RcGpu,
+        HardwareVariant::NruGpu,
+        HardwareVariant::Lumina,
+    ] {
+        let mut coord = Coordinator::new(cfg(v)).unwrap();
+        let r = coord.run().unwrap();
+        energies.insert(v, r.mean_energy_j());
+    }
+    assert!(energies[&HardwareVariant::Lumina] < energies[&HardwareVariant::NruGpu]);
+    assert!(energies[&HardwareVariant::NruGpu] < energies[&HardwareVariant::Gpu]);
+    assert!(energies[&HardwareVariant::RcGpu] > energies[&HardwareVariant::Gpu]);
+}
+
+#[test]
+fn quality_stays_high_for_lumina() {
+    let mut coord = Coordinator::new(cfg(HardwareVariant::Lumina)).unwrap();
+    let mut psnrs = Vec::new();
+    for _ in 0..6 {
+        let f = coord.step_with_quality().unwrap();
+        psnrs.push(f.report.psnr_vs_ref.unwrap());
+    }
+    let mean = psnrs.iter().sum::<f64>() / psnrs.len() as f64;
+    // The raw synthetic scene keeps its oversized-Gaussian tail (the
+    // Fig. 13 failure mode RC fine-tuning exists to fix), so the bound
+    // here is looser than the fine-tuned fig20/fig21 harness runs.
+    assert!(mean > 22.0, "Lumina mean PSNR {mean} dB vs exact pipeline");
+}
+
+#[test]
+fn cache_warms_across_frames() {
+    let mut coord = Coordinator::new(cfg(HardwareVariant::Lumina)).unwrap();
+    let first = coord.step().unwrap();
+    let mut later_hit = 0.0;
+    for _ in 0..4 {
+        later_hit = coord.step().unwrap().report.cache.hit_rate();
+    }
+    assert!(
+        later_hit >= first.report.cache.hit_rate() * 0.8,
+        "cache should stay warm: first {} later {}",
+        first.report.cache.hit_rate(),
+        later_hit
+    );
+    assert!(later_hit > 0.3, "steady-state hit rate {later_hit}");
+}
+
+#[test]
+fn rapid_rotation_trajectory_survives() {
+    let mut c = cfg(HardwareVariant::Lumina);
+    c.camera.trajectory = lumina::camera::trajectory::TrajectoryKind::RapidRotation;
+    let mut coord = Coordinator::new(c).unwrap();
+    let r = coord.run().unwrap();
+    assert_eq!(r.frames.len(), 12);
+    assert!(r.fps() > 0.0);
+}

@@ -1,0 +1,169 @@
+//! Property-based invariants over the pipeline, cache, and scheduler
+//! (seeded random cases via `util::testing::property`).
+
+use lumina::camera::{Intrinsics, Pose};
+use lumina::constants::TILE;
+use lumina::lumina::rc::RadianceCache;
+use lumina::math::Vec3;
+use lumina::pipeline::project::project;
+use lumina::pipeline::raster::{composite_pixel, rasterize, RasterConfig};
+use lumina::pipeline::sort::{bin_and_sort, f32_sort_key, order_change_fraction};
+use lumina::scene::synth::{synth_scene, SceneClass};
+use lumina::util::prng::Pcg32;
+use lumina::util::testing::property;
+
+#[test]
+fn prop_sort_key_order_preserving() {
+    property(256, |rng| {
+        let a = f32::from_bits(rng.next_u32() & 0x7fff_ffff); // positive
+        let b = f32::from_bits(rng.next_u32() & 0x7fff_ffff);
+        if a.is_nan() || b.is_nan() {
+            return;
+        }
+        assert_eq!(a < b, f32_sort_key(a) < f32_sort_key(b), "{a} vs {b}");
+    });
+}
+
+#[test]
+fn prop_transmittance_in_unit_interval() {
+    property(24, |rng| {
+        let scene = synth_scene(SceneClass::SyntheticSmall, rng.next_u64(), 800);
+        let eye = Vec3::new(
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-0.5, 0.5),
+            rng.range_f32(-5.0, -3.0),
+        );
+        let pose = Pose::look_at(eye, Vec3::ZERO);
+        let intr = Intrinsics::with_fov(64, 64, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let bins = bin_and_sort(&p, &intr, TILE, 0.0);
+        for _ in 0..8 {
+            let x = rng.below(64);
+            let y = rng.below(64);
+            let tile = (y / TILE) * bins.tiles_x + x / TILE;
+            let (c, t, it, sig, _) = composite_pixel(
+                &p,
+                &bins.lists[tile],
+                x as f32 + 0.5,
+                y as f32 + 0.5,
+                0,
+            );
+            assert!((0.0..=1.0).contains(&t), "transmittance {t}");
+            assert!(sig <= it);
+            for ch in c {
+                assert!(ch.is_finite() && ch >= 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_compositing_weights_bounded() {
+    // Sum of blend weights = 1 - final transmittance <= 1; so any color
+    // channel is bounded by the max per-Gaussian color.
+    property(12, |rng| {
+        let scene = synth_scene(SceneClass::SyntheticSmall, rng.next_u64(), 600);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(48, 48, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let max_color = p
+            .colors
+            .iter()
+            .flat_map(|c| c.iter().copied())
+            .fold(0.0f32, f32::max);
+        let bins = bin_and_sort(&p, &intr, TILE, 0.0);
+        let out = rasterize(&p, &bins, 48, 48, &RasterConfig::default());
+        for px in &out.image.data {
+            for ch in px {
+                assert!(*ch <= max_color + 1e-4, "channel {ch} > max color {max_color}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cache_lookup_after_insert_hits() {
+    property(128, |rng| {
+        let k = 1 + rng.below(5);
+        let mut cache = RadianceCache::paper_default(k);
+        let ids: Vec<u32> = (0..k).map(|_| rng.next_u32() >> 8).collect();
+        let val = [rng.f32(), rng.f32(), rng.f32()];
+        cache.insert(&ids, val);
+        assert_eq!(cache.lookup(&ids), Some(val));
+    });
+}
+
+#[test]
+fn prop_cache_never_returns_foreign_value() {
+    // Whatever is returned was inserted under the same (index, tag) —
+    // i.e. the same masked ID fields.
+    property(64, |rng| {
+        let mut cache = RadianceCache::paper_default(2);
+        let mut inserted: Vec<(Vec<u32>, [f32; 3])> = Vec::new();
+        for _ in 0..200 {
+            let ids: Vec<u32> = (0..2).map(|_| rng.next_u32() & 0xffff).collect();
+            let val = [rng.f32(), 0.0, 0.0];
+            cache.insert(&ids, val);
+            inserted.push((ids, val));
+        }
+        for (ids, _) in &inserted {
+            if let Some(got) = cache.lookup(ids) {
+                // The value must be one inserted under IDs that agree on
+                // the bits the cache can see (bits 3..19 of each ID).
+                let visible = |v: &[u32]| -> Vec<u32> {
+                    v.iter().map(|x| (x >> 3) & 0xffff).collect()
+                };
+                let mine = visible(ids);
+                assert!(
+                    inserted
+                        .iter()
+                        .any(|(oids, oval)| visible(oids) == mine && *oval == got),
+                    "foreign value {got:?} for ids {ids:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_order_change_fraction_bounds() {
+    property(128, |rng| {
+        let n = 2 + rng.below(50);
+        let mut a: Vec<u32> = (0..n as u32).collect();
+        let mut b = a.clone();
+        rng.shuffle(&mut a);
+        rng.shuffle(&mut b);
+        let f = order_change_fraction(&a, &b);
+        assert!((0.0..=1.0).contains(&f));
+        assert_eq!(order_change_fraction(&a, &a), 0.0);
+    });
+}
+
+#[test]
+fn prop_projection_culls_consistently() {
+    // A Gaussian retained with margin 0 must also be retained with any
+    // larger margin (monotonicity of the expanded viewport).
+    property(16, |rng| {
+        let scene = synth_scene(SceneClass::SyntheticSmall, rng.next_u64(), 500);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(64, 64, 0.9);
+        let tight = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let margin = rng.range_f32(1.0, 64.0);
+        let loose = project(&scene, &pose, &intr, 0.2, 100.0, margin);
+        let loose_ids: std::collections::HashSet<u32> = loose.ids.iter().copied().collect();
+        for id in &tight.ids {
+            assert!(loose_ids.contains(id), "margin {margin} dropped id {id}");
+        }
+    });
+}
+
+#[test]
+fn prop_prng_streams_independent() {
+    property(32, |rng| {
+        let seed = rng.next_u64();
+        let mut a = Pcg32::new(seed, 1);
+        let mut b = Pcg32::new(seed, 2);
+        let matches = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(matches < 4);
+    });
+}

@@ -1,0 +1,168 @@
+//! Integration: the three layers must agree bit-closely.
+//!
+//! The native Rust rasterizer (L3), the AOT-compiled Pallas kernel (L1,
+//! via PJRT), and the SH evaluators are checked against each other on
+//! real projected scenes. Skips with a notice if `artifacts/` has not
+//! been built (run `make artifacts`).
+
+use lumina::camera::{Intrinsics, Pose};
+use lumina::constants::{SH_COEFFS, TILE};
+use lumina::math::Vec3;
+use lumina::pipeline::project::project;
+use lumina::pipeline::raster::composite_pixel;
+use lumina::pipeline::sort::bin_and_sort;
+use lumina::runtime::ArtifactRuntime;
+use lumina::scene::sh::eval_color;
+use lumina::scene::synth::test_scene;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    if !std::path::Path::new("artifacts/manifest.toml").exists() {
+        eprintln!("SKIP: artifacts/ not built; run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactRuntime::load("artifacts").expect("loading artifacts"))
+}
+
+#[test]
+fn raster_tile_matches_native_compositor() {
+    let Some(rt) = runtime() else { return };
+    let scene = test_scene(404, 4000);
+    let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+    let intr = Intrinsics::with_fov(128, 128, 0.9);
+    let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+    let bins = bin_and_sort(&p, &intr, TILE, 0.0);
+
+    // Pick the densest few tiles.
+    let mut order: Vec<usize> = (0..bins.lists.len()).collect();
+    order.sort_by_key(|&t| std::cmp::Reverse(bins.lists[t].len()));
+    for &tile in order.iter().take(4) {
+        let list = &bins.lists[tile];
+        if list.is_empty() {
+            continue;
+        }
+        let (ox, oy) = bins.tile_origin(tile);
+        let means: Vec<[f32; 2]> = list.iter().map(|&i| p.means[i as usize]).collect();
+        let conics: Vec<[f32; 3]> = list
+            .iter()
+            .map(|&i| {
+                let c = p.conics[i as usize];
+                [c.a, c.b, c.c]
+            })
+            .collect();
+        let opacs: Vec<f32> = list.iter().map(|&i| p.opacity[i as usize]).collect();
+        let colors: Vec<[f32; 3]> = list.iter().map(|&i| p.colors[i as usize]).collect();
+
+        let carry = rt
+            .raster_tile_full(&means, &conics, &opacs, &colors, [ox, oy])
+            .expect("raster_tile_full");
+
+        for (ly, lx) in [(0usize, 0usize), (7, 9), (15, 15), (3, 12)] {
+            let px = ox + lx as f32 + 0.5;
+            let py = oy + ly as f32 + 0.5;
+            let (c_native, t_native, _, _, _) = composite_pixel(&p, list, px, py, 0);
+            let off = ly * TILE + lx;
+            let c_hlo = [
+                carry.color[off * 3],
+                carry.color[off * 3 + 1],
+                carry.color[off * 3 + 2],
+            ];
+            let t_hlo = carry.transmittance[off];
+            for ch in 0..3 {
+                assert!(
+                    (c_native[ch] - c_hlo[ch]).abs() < 2e-4,
+                    "tile {tile} px ({lx},{ly}) ch {ch}: native {} vs hlo {}",
+                    c_native[ch],
+                    c_hlo[ch]
+                );
+            }
+            assert!(
+                (t_native - t_hlo).abs() < 2e-4,
+                "tile {tile} px ({lx},{ly}): T native {t_native} vs hlo {t_hlo}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sh_eval_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let scene = test_scene(405, 64);
+    let cam = Vec3::new(0.3, -0.2, -3.0);
+    let dirs: Vec<[f32; 3]> = scene
+        .pos
+        .iter()
+        .map(|&p| (p - cam).normalized().to_array())
+        .collect();
+    let coeffs: Vec<[[f32; 3]; SH_COEFFS]> = scene.sh.clone();
+    let hlo = rt.sh_eval_chunk(&dirs, &coeffs).expect("sh_eval");
+    for i in 0..scene.len() {
+        let native = eval_color(scene.pos[i], cam, &scene.sh[i]);
+        for ch in 0..3 {
+            assert!(
+                (native[ch] - hlo[i][ch]).abs() < 1e-5,
+                "gaussian {i} ch {ch}: native {} vs hlo {}",
+                native[ch],
+                hlo[i][ch]
+            );
+        }
+    }
+}
+
+#[test]
+fn alpha_front_matches_native_alpha() {
+    let Some(rt) = runtime() else { return };
+    let scene = test_scene(406, 2000);
+    let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+    let intr = Intrinsics::with_fov(64, 64, 0.9);
+    let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+    let bins = bin_and_sort(&p, &intr, TILE, 0.0);
+    let tile = (0..bins.lists.len())
+        .max_by_key(|&t| bins.lists[t].len())
+        .unwrap();
+    let list: Vec<u32> = bins.lists[tile].iter().take(100).copied().collect();
+    let (ox, oy) = bins.tile_origin(tile);
+    let means: Vec<[f32; 2]> = list.iter().map(|&i| p.means[i as usize]).collect();
+    let conics: Vec<[f32; 3]> = list
+        .iter()
+        .map(|&i| {
+            let c = p.conics[i as usize];
+            [c.a, c.b, c.c]
+        })
+        .collect();
+    let opacs: Vec<f32> = list.iter().map(|&i| p.opacity[i as usize]).collect();
+    let alphas = rt
+        .alpha_front_chunk(&means, &conics, &opacs, [ox, oy])
+        .expect("alpha_front");
+    // Verify a scattering of (gaussian, pixel) pairs against the scalar
+    // alpha formula.
+    for &(g, ly, lx) in &[(0usize, 0usize, 0usize), (5, 8, 8), (40, 15, 3), (99, 4, 11)] {
+        if g >= list.len() {
+            continue;
+        }
+        let px = ox + lx as f32 + 0.5;
+        let py = oy + ly as f32 + 0.5;
+        let dx = px - means[g][0];
+        let dy = py - means[g][1];
+        let (a, b, c) = (conics[g][0], conics[g][1], conics[g][2]);
+        let power = -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy;
+        let expect = if power > 0.0 {
+            0.0
+        } else {
+            (opacs[g] * power.exp()).min(lumina::constants::ALPHA_MAX)
+        };
+        let got = alphas[g * TILE * TILE + ly * TILE + lx];
+        assert!(
+            (got - expect).abs() < 1e-5,
+            "alpha({g},{ly},{lx}): hlo {got} vs native {expect}"
+        );
+    }
+}
+
+#[test]
+fn manifest_constants_agree_with_crate() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest_constants;
+    assert!((m.alpha_min - lumina::constants::ALPHA_MIN).abs() < 1e-9);
+    assert!((m.alpha_max - lumina::constants::ALPHA_MAX).abs() < 1e-9);
+    assert!((m.t_eps - lumina::constants::T_EPS).abs() < 1e-12);
+}
