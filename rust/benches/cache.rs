@@ -3,7 +3,10 @@
 
 use lumina::camera::{Intrinsics, Pose};
 use lumina::constants::TILE;
-use lumina::lumina::rc::{rasterize_cached, GroupedRadianceCache, RadianceCache};
+use lumina::lumina::rc::{
+    rasterize_cached, rasterize_cached_ex, GroupedRadianceCache, RadianceCache,
+};
+use lumina::pipeline::raster::{rasterize, RasterConfig};
 use lumina::math::Vec3;
 use lumina::pipeline::project::project;
 use lumina::pipeline::sort::bin_and_sort;
@@ -52,6 +55,22 @@ fn main() {
     rasterize_cached(&p, &bins, intr.width, intr.height, &mut warm);
     r.bench("rasterize_cached/warm", || {
         rasterize_cached(&p, &bins, intr.width, intr.height, &mut warm)
+    });
+
+    // Single-pass uncached recording (the RC-GPU cost path) vs the old
+    // two-pass approach (cached + a full plain stats pass).
+    let mut rec = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+    rasterize_cached_ex(&p, &bins, intr.width, intr.height, &mut rec, true);
+    r.bench("rasterize_cached/warm+record_uncached", || {
+        rasterize_cached_ex(&p, &bins, intr.width, intr.height, &mut rec, true)
+    });
+    let mut two = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+    rasterize_cached(&p, &bins, intr.width, intr.height, &mut two);
+    let stats_cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
+    r.bench("rasterize_cached/warm+separate_uncached_pass", || {
+        let cached = rasterize_cached(&p, &bins, intr.width, intr.height, &mut two);
+        let plain = rasterize(&p, &bins, intr.width, intr.height, &stats_cfg);
+        (cached, plain)
     });
 
     r.finish();

@@ -1,0 +1,37 @@
+//! Multi-session serving benchmarks: end-to-end pool throughput at
+//! several session counts over one shared scene — the scaling curve of
+//! the first multi-user serving scenario.
+
+use std::sync::Arc;
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::SessionPool;
+use lumina::scene::synth::synth_scene;
+use lumina::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::new("sessions");
+    r.header();
+
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.count = 20_000;
+    cfg.camera.width = 128;
+    cfg.camera.height = 128;
+    cfg.camera.frames = 4;
+    cfg.variant = HardwareVariant::Lumina;
+
+    // The scene is built once and shared — construction inside the
+    // closure measures session setup + run, not scene synthesis.
+    let scene = Arc::new(synth_scene(cfg.scene.class, cfg.scene.seed, cfg.gaussian_count()));
+
+    for n in [1usize, 4, 8] {
+        let cfg = cfg.clone();
+        let scene = scene.clone();
+        r.bench(&format!("session_pool/{n}x4frames"), move || {
+            let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
+            pool.run().unwrap()
+        });
+    }
+
+    r.finish();
+}

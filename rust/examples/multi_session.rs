@@ -1,0 +1,28 @@
+//! Multi-session serving demo: N concurrent viewers over one shared
+//! scene, each with its own trajectory, S² scheduler, and radiance
+//! cache, stepped in parallel by the `SessionPool`.
+//!
+//! Run with: `cargo run --release --example multi_session`
+//! (equivalent CLI: `lumina serve --sessions 4`)
+
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::SessionPool;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.count = 20_000;
+    cfg.camera.frames = 12;
+    cfg.variant = HardwareVariant::Lumina;
+
+    for n in [1usize, 2, 4, 8] {
+        let mut pool = SessionPool::new(cfg.clone(), n)?;
+        let report = pool.run()?;
+        println!("{}", report.summary());
+        if n == 4 {
+            for (i, r) in report.sessions.iter().enumerate() {
+                println!("  session {i}: {}", r.summary());
+            }
+        }
+    }
+    Ok(())
+}

@@ -28,8 +28,8 @@ fn main() -> Result<()> {
     let mut coord = Coordinator::new(cfg)?;
     // Simulate the fine-tuned regime (Sec. 3.3): clamp the oversized tail
     // exactly as the scale-constrained loss does.
-    for s in coord.scene.scale.iter_mut() {
-        let cap = 0.04;
+    let cap = 0.04;
+    for s in coord.scene_mut().scale.iter_mut() {
         s.x = s.x.min(cap);
         s.y = s.y.min(cap);
         s.z = s.z.min(cap);

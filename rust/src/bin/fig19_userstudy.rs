@@ -51,8 +51,8 @@ fn run_study(variant: HardwareVariant) -> Result<()> {
         let cfg = harness::harness_config(class, traj, variant);
         let mut coord = Coordinator::new(cfg)?;
         // Fine-tuned regime: clamp the oversized tail (Sec. 3.3).
-        for s in coord.scene.scale.iter_mut() {
-            let cap = 0.005 * coord.cfg.scene.class.extent() * 4.0;
+        let cap = 0.005 * coord.cfg.scene.class.extent() * 4.0;
+        for s in coord.scene_mut().scale.iter_mut() {
             s.x = s.x.min(cap);
             s.y = s.y.min(cap);
             s.z = s.z.min(cap);

@@ -11,7 +11,6 @@ use anyhow::Result;
 use lumina::config::HardwareVariant;
 use lumina::coordinator::Coordinator;
 use lumina::harness;
-use lumina::lumina::ds2::render_ds2;
 use lumina::metrics::{lpips_proxy, psnr, ssim};
 
 fn main() -> Result<()> {
@@ -27,20 +26,18 @@ fn main() -> Result<()> {
             "method", "psnr dB", "ssim", "lpips-proxy"
         );
         for (name, variant) in [
-            ("S2-only", Some(HardwareVariant::S2Acc)),
-            ("RC-only", Some(HardwareVariant::RcAcc)),
-            ("Lumina", Some(HardwareVariant::Lumina)),
-            ("DS-2", None),
+            ("S2-only", HardwareVariant::S2Acc),
+            ("RC-only", HardwareVariant::RcAcc),
+            ("Lumina", HardwareVariant::Lumina),
+            // DS-2 rides the ordinary stage graph as a real variant:
+            // half-res frontend + plain raster + 2x upsample finalize.
+            ("DS-2", HardwareVariant::Ds2Gpu),
         ] {
-            let cfg = harness::harness_config(
-                class,
-                traj,
-                variant.unwrap_or(HardwareVariant::Gpu),
-            );
+            let cfg = harness::harness_config(class, traj, variant);
             let mut coord = Coordinator::new(cfg)?;
             // Fine-tuned regime (Sec. 3.3) for the RC variants.
-            for s in coord.scene.scale.iter_mut() {
-                let cap = 0.005 * coord.cfg.scene.class.extent() * 4.0;
+            let cap = 0.005 * coord.cfg.scene.class.extent() * 4.0;
+            for s in coord.scene_mut().scale.iter_mut() {
                 s.x = s.x.min(cap);
                 s.y = s.y.min(cap);
                 s.z = s.z.min(cap);
@@ -50,11 +47,7 @@ fn main() -> Result<()> {
             for i in 0..frames {
                 let pose = coord.trajectory.poses[i];
                 let (reference, _, _, _) = coord.reference_frame(&pose);
-                let img = if variant.is_some() {
-                    coord.step()?.image
-                } else {
-                    render_ds2(&coord.scene, &pose, &coord.intr, 16, 0.2, 1000.0).0
-                };
+                let img = coord.step()?.image;
                 p_sum += psnr(&reference, &img);
                 s_sum += ssim(&reference, &img);
                 l_sum += lpips_proxy(&reference, &img);

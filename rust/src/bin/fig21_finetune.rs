@@ -37,8 +37,7 @@ fn run_rc(scene: GaussianScene, label: &str) -> Result<(f64, f64)> {
         lumina::camera::trajectory::TrajectoryKind::VrHeadMotion,
         HardwareVariant::RcAcc,
     );
-    let mut coord = Coordinator::new(cfg)?;
-    coord.scene = scene;
+    let mut coord = Coordinator::with_scene(cfg, std::sync::Arc::new(scene))?;
     let mut psnr_sum = 0.0;
     let mut n = 0u32;
     let mut hits = 0u64;

@@ -5,8 +5,9 @@
 
 use anyhow::Result;
 use lumina::config::HardwareVariant;
-use lumina::coordinator::{Coordinator, FrontendHw};
+use lumina::coordinator::Coordinator;
 use lumina::harness;
+use lumina::sim::gscore::GsCoreModel;
 
 fn main() -> Result<()> {
     harness::banner(
@@ -31,9 +32,10 @@ fn main() -> Result<()> {
         for (name, variant) in entries {
             let cfg = harness::harness_config(class, traj, variant);
             let mut coord = Coordinator::new(cfg)?;
-            // All accelerator variants use the CCU/GSU frontend here.
+            // All accelerator variants use the CCU/GSU frontend here:
+            // swap the frontend cost-model seam of the stage graph.
             if variant != HardwareVariant::GsCore {
-                coord.frontend = FrontendHw::CcuGsu;
+                coord.set_frontend_cost(Box::new(GsCoreModel::published()));
             }
             let r = coord.run()?;
             println!("{:<18} {:>10.1} {:>9.2}x", name, r.fps(), base_t / r.mean_time_s());

@@ -37,6 +37,9 @@ pub enum HardwareVariant {
     /// Lumina's baseline hardware hosted on GSCore's CCU/GSU frontend
     /// (Sec. 6.4 comparison).
     LuminaOnGscoreFrontend,
+    /// DS-2 quality baseline (Fig. 20): full 3DGS pipeline at half
+    /// resolution on the GPU, bilinearly upsampled 2x.
+    Ds2Gpu,
 }
 
 impl HardwareVariant {
@@ -79,6 +82,7 @@ impl HardwareVariant {
             HardwareVariant::Lumina => "Lumina",
             HardwareVariant::GsCore => "GSCore",
             HardwareVariant::LuminaOnGscoreFrontend => "Lumina(CCU/GSU)",
+            HardwareVariant::Ds2Gpu => "DS-2",
         }
     }
 
@@ -94,6 +98,7 @@ impl HardwareVariant {
             "lumina" => HardwareVariant::Lumina,
             "gscore" => HardwareVariant::GsCore,
             "lumina-gscore-frontend" => HardwareVariant::LuminaOnGscoreFrontend,
+            "ds2-gpu" => HardwareVariant::Ds2Gpu,
             other => bail!("unknown hardware variant: {other}"),
         })
     }
@@ -110,6 +115,7 @@ impl HardwareVariant {
             HardwareVariant::Lumina => "lumina",
             HardwareVariant::GsCore => "gscore",
             HardwareVariant::LuminaOnGscoreFrontend => "lumina-gscore-frontend",
+            HardwareVariant::Ds2Gpu => "ds2-gpu",
         }
     }
 
@@ -482,5 +488,18 @@ mod tests {
         for v in HardwareVariant::evaluation_set() {
             assert_eq!(HardwareVariant::parse(v.name()).unwrap(), v);
         }
+        for v in [
+            HardwareVariant::GsCore,
+            HardwareVariant::LuminaOnGscoreFrontend,
+            HardwareVariant::Ds2Gpu,
+        ] {
+            assert_eq!(HardwareVariant::parse(v.name()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn ds2_is_a_plain_gpu_path() {
+        let v = HardwareVariant::Ds2Gpu;
+        assert!(!v.uses_s2() && !v.uses_rc() && !v.uses_nru());
     }
 }

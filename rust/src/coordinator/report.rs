@@ -4,7 +4,11 @@ use crate::lumina::rc::CacheStats;
 use crate::sim::energy::EnergyBreakdown;
 
 /// One frame's metrics.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is bitwise on the f64 fields — exactly what the
+/// determinism tests want (identical runs must produce identical bits,
+/// not just close values).
+#[derive(Debug, Clone, PartialEq)]
 pub struct FrameReport {
     pub frame: usize,
     /// Total modeled frame time (s).
@@ -29,7 +33,7 @@ pub struct FrameReport {
 }
 
 /// A whole run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     pub label: String,
     pub frames: Vec<FrameReport>,

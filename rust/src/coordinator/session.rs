@@ -1,0 +1,173 @@
+//! Multi-session serving: N independent viewer sessions over one shared
+//! scene, stepped in parallel.
+//!
+//! Each session is a full [`Coordinator`] — its own trajectory (camera
+//! seed offset per viewer), its own S² scheduler state, its own radiance
+//! cache — but all sessions read the same `Arc<GaussianScene>`, so scene
+//! memory is paid once no matter how many viewers are attached. Sessions
+//! run concurrently via [`crate::util::par`]; every session is fully
+//! deterministic given its config, so the pool's output is independent
+//! of `LUMINA_THREADS` (enforced by `tests/sessions.rs`).
+//!
+//! This is the first multi-user serving scenario on the stage-graph
+//! frame loop; ROADMAP "Open items" lists the follow-ons it unlocks
+//! (batched cross-session frontends, async pipelining, LoD tiers).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::LuminaConfig;
+use crate::coordinator::{Coordinator, RunReport};
+use crate::scene::synth::synth_scene;
+use crate::scene::GaussianScene;
+use crate::util::par;
+
+/// A pool of independent viewer sessions over one shared scene.
+pub struct SessionPool {
+    sessions: Vec<Coordinator>,
+}
+
+/// Aggregated result of running every session to completion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolReport {
+    /// Per-session run reports, in session order.
+    pub sessions: Vec<RunReport>,
+    /// Host wall-clock time for the whole parallel run (s).
+    pub wall_s: f64,
+}
+
+impl PoolReport {
+    /// Total frames rendered across sessions.
+    pub fn total_frames(&self) -> usize {
+        self.sessions.iter().map(|r| r.frames.len()).sum()
+    }
+
+    /// Aggregate *simulated* throughput: the summed frame rate the
+    /// modeled hardware sustains serving all sessions at once.
+    pub fn aggregate_fps(&self) -> f64 {
+        self.sessions.iter().map(|r| r.fps()).sum()
+    }
+
+    /// Mean simulated frame rate per session.
+    pub fn mean_session_fps(&self) -> f64 {
+        if self.sessions.is_empty() {
+            0.0
+        } else {
+            self.aggregate_fps() / self.sessions.len() as f64
+        }
+    }
+
+    /// Host rendering throughput: functional frames per wall second.
+    pub fn host_fps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_frames() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line throughput summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "pool: {} sessions x {} frames | aggregate {:.1} sim-fps ({:.1}/session) | \
+             host {:.1} fps | wall {:.3} s",
+            self.sessions.len(),
+            self.sessions.first().map(|r| r.frames.len()).unwrap_or(0),
+            self.aggregate_fps(),
+            self.mean_session_fps(),
+            self.host_fps(),
+            self.wall_s
+        )
+    }
+}
+
+impl SessionPool {
+    /// Build `n` sessions from a base config. The scene is built once
+    /// and shared; each session gets a distinct camera seed (base + i)
+    /// so the viewers follow different trajectories.
+    pub fn new(base: LuminaConfig, n: usize) -> Result<Self> {
+        let scene = match &base.scene.path {
+            Some(p) => crate::scene::io::read_scene(p)
+                .with_context(|| format!("loading scene {p}"))?,
+            None => synth_scene(base.scene.class, base.scene.seed, base.gaussian_count()),
+        };
+        Self::with_scene(base, Arc::new(scene), n)
+    }
+
+    /// Build `n` sessions over an already-built shared scene.
+    pub fn with_scene(
+        base: LuminaConfig,
+        scene: Arc<GaussianScene>,
+        n: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(n > 0, "a pool needs at least one session");
+        let sessions = (0..n)
+            .map(|i| {
+                let mut cfg = base.clone();
+                cfg.camera.seed = base.camera.seed.wrapping_add(i as u64);
+                Coordinator::with_scene(cfg, scene.clone())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SessionPool { sessions })
+    }
+
+    /// Number of sessions.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// The sessions (for per-session inspection).
+    pub fn sessions(&self) -> &[Coordinator] {
+        &self.sessions
+    }
+
+    /// Run every session to the end of its trajectory, sessions in
+    /// parallel (each session's frames stay sequential — S² and RC
+    /// state are inherently frame-ordered).
+    ///
+    /// The machine's thread budget is *split* between the two nesting
+    /// levels — `outer` session workers, each of whose pipeline stages
+    /// parallelizes over `total / outer` workers — instead of letting
+    /// every session independently spawn a full complement (which would
+    /// oversubscribe roughly quadratically). Results are thread-count
+    /// invariant, so the cap affects throughput only.
+    pub fn run(&mut self) -> Result<PoolReport> {
+        let start = Instant::now();
+        let mut work: Vec<(Coordinator, Option<Result<RunReport>>)> =
+            std::mem::take(&mut self.sessions)
+                .into_iter()
+                .map(|c| (c, None))
+                .collect();
+        let total = par::num_threads();
+        let outer = total.min(work.len()).max(1);
+        let inner = (total / outer).max(1);
+        par::set_num_threads(inner);
+        let chunk = work.len().div_ceil(outer);
+        std::thread::scope(|scope| {
+            for slice in work.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for (coord, slot) in slice.iter_mut() {
+                        *slot = Some(coord.run());
+                    }
+                });
+            }
+        });
+        par::set_num_threads(total);
+        let wall_s = start.elapsed().as_secs_f64();
+        // Restore every session before surfacing any error so the pool
+        // stays intact even when one session fails.
+        let mut results = Vec::with_capacity(work.len());
+        for (coord, slot) in work {
+            self.sessions.push(coord);
+            results.push(slot.expect("session executed"));
+        }
+        let sessions = results.into_iter().collect::<Result<Vec<_>>>()?;
+        Ok(PoolReport { sessions, wall_s })
+    }
+}

@@ -4,18 +4,22 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the coordinator: the 3DGS pipeline substrate
-//!   (projection, sorting, rasterization), the paper's two algorithms
+//!   (projection, sorting, rasterization) and its stage graph
+//!   ([`pipeline::stage`]), the paper's two algorithms
 //!   ([`lumina::s2`] Sorting-Sharing and [`lumina::rc`] Radiance Caching),
 //!   the cycle-accurate [`sim`] of the LuminCore accelerator plus GPU /
-//!   GSCore cost models, quality [`metrics`], and the frame-loop
-//!   [`coordinator`].
+//!   GSCore cost models behind the [`sim::cost`] trait seams, quality
+//!   [`metrics`], the frame-loop [`coordinator`], and multi-viewer
+//!   serving via [`coordinator::SessionPool`].
 //! * **Layer 2** — `python/compile/model.py`: the JAX compute graph,
 //!   AOT-lowered to HLO-text artifacts at build time.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the
 //!   rasterization hot-spot, validated against a pure-jnp oracle.
 //!
 //! The [`runtime`] module loads the AOT artifacts via the PJRT C API (the
-//! `xla` crate) so the per-frame path never touches Python.
+//! `xla` crate) so the per-frame path never touches Python; it is gated
+//! behind the off-by-default `xla-runtime` feature so the stock build
+//! carries no external native dependencies.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

@@ -4,9 +4,10 @@
 
 use crate::camera::{Intrinsics, Pose};
 use crate::pipeline::image::Image;
-use crate::pipeline::project::project;
+use crate::pipeline::project::{project, ProjectedScene};
 use crate::pipeline::raster::{rasterize, RasterConfig};
-use crate::pipeline::sort::bin_and_sort;
+use crate::pipeline::sort::{bin_and_sort, TileBins};
+use crate::pipeline::stage::{PlainRaster, RasterBackend, RasterFrame};
 use crate::scene::GaussianScene;
 
 /// Half-resolution intrinsics for the DS-2 render pass.
@@ -44,6 +45,46 @@ pub fn render_ds2(
         .map(|s| s.iterated.iter().map(|&v| v as u64).sum())
         .unwrap_or(0);
     (out.image.upsample2(), work)
+}
+
+/// The DS-2 [`RasterBackend`]: plain rasterization of the half-res
+/// projection, upsampled 2x at finalize. The coordinator feeds it
+/// half-resolution intrinsics (see [`half_intrinsics`]) so the whole
+/// variant rides the ordinary stage graph.
+pub struct Ds2Raster {
+    inner: PlainRaster,
+}
+
+impl Ds2Raster {
+    pub fn new() -> Self {
+        Ds2Raster { inner: PlainRaster }
+    }
+}
+
+impl Default for Ds2Raster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RasterBackend for Ds2Raster {
+    fn label(&self) -> &'static str {
+        "ds2"
+    }
+
+    fn render(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+    ) -> RasterFrame {
+        self.inner.render(projected, bins, width, height)
+    }
+
+    fn finalize(&self, image: Image) -> Image {
+        image.upsample2()
+    }
 }
 
 #[cfg(test)]

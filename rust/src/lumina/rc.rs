@@ -17,13 +17,13 @@
 //! sub-caches; the traffic is charged by the simulator).
 
 use crate::constants::{
-    ALPHA_MAX, ALPHA_MIN, CACHE_ID_BITS, CACHE_ID_LO_BIT, CACHE_SETS, CACHE_TILE_GROUP,
-    CACHE_WAYS, T_EPS,
+    CACHE_ID_BITS, CACHE_ID_LO_BIT, CACHE_SETS, CACHE_TILE_GROUP, CACHE_WAYS, T_EPS,
 };
 use crate::pipeline::image::Image;
 use crate::pipeline::project::ProjectedScene;
-use crate::pipeline::raster::{gather_tile, GatheredSplat, MAX_SIG_K};
+use crate::pipeline::raster::{gather_tile, splat_alpha, GatheredSplat, RasterStats, MAX_SIG_K};
 use crate::pipeline::sort::TileBins;
+use crate::pipeline::stage::{RasterBackend, RasterFrame, RasterWork};
 
 /// One cache entry: packed high-bit tag + cached pixel RGB.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -327,6 +327,13 @@ pub struct PixelOutcome {
     pub significant: u32,
     /// True when the pixel's value came from the cache.
     pub hit: bool,
+    /// Gaussians the *uncached* pipeline would have iterated. Equal to
+    /// `iterated` except on hit pixels rendered with
+    /// `record_uncached = true`, where the scan continues (without
+    /// compositing) to recover the exact plain-rasterizer count.
+    pub uncached_iterated: u32,
+    /// Significant Gaussians the uncached pipeline would have seen.
+    pub uncached_significant: u32,
 }
 
 /// Output of radiance-cached rasterization.
@@ -334,6 +341,13 @@ pub struct CachedRasterOutput {
     pub image: Image,
     pub outcomes: Vec<PixelOutcome>,
     pub stats: CacheStats,
+    /// Per-pixel uncached counts (present when `record_uncached` was
+    /// requested): exactly what a plain [`rasterize`] stats pass over
+    /// the same projected set would produce, recovered in this single
+    /// pass.
+    ///
+    /// [`rasterize`]: crate::pipeline::raster::rasterize
+    pub uncached: Option<RasterStats>,
 }
 
 /// Rasterize with radiance caching (paper Fig. 10).
@@ -350,6 +364,22 @@ pub fn rasterize_cached(
     width: usize,
     height: usize,
     cache: &mut GroupedRadianceCache,
+) -> CachedRasterOutput {
+    rasterize_cached_ex(projected, bins, width, height, cache, false)
+}
+
+/// [`rasterize_cached`] with optional single-pass recording of the
+/// *uncached* per-pixel counts (see [`CachedRasterOutput::uncached`]):
+/// hit pixels continue scanning their tile list without compositing, so
+/// the RC-GPU cost model gets the exact uncached warp structure without
+/// a second full rasterization.
+pub fn rasterize_cached_ex(
+    projected: &ProjectedScene,
+    bins: &TileBins,
+    width: usize,
+    height: usize,
+    cache: &mut GroupedRadianceCache,
+    record_uncached: bool,
 ) -> CachedRasterOutput {
     let ts = bins.tile_size;
     let k = cache.k();
@@ -372,12 +402,13 @@ pub fn rasterize_cached(
                     if x >= width {
                         break;
                     }
-                    let (value, outcome) = composite_pixel_cached(
+                    let (value, outcome) = composite_pixel_cached_ex(
                         &splats,
                         x as f32 + 0.5,
                         y as f32 + 0.5,
                         k,
                         bank,
+                        record_uncached,
                     );
                     image.set(x, y, value);
                     outcomes[y * width + x] = outcome;
@@ -393,7 +424,11 @@ pub fn rasterize_cached(
     stats.inserts -= stats_before.inserts;
     stats.evictions -= stats_before.evictions;
     stats.short_rays -= stats_before.short_rays;
-    CachedRasterOutput { image, outcomes, stats }
+    let uncached = record_uncached.then(|| RasterStats {
+        iterated: outcomes.iter().map(|o| o.uncached_iterated).collect(),
+        significant: outcomes.iter().map(|o| o.uncached_significant).collect(),
+    });
+    CachedRasterOutput { image, outcomes, stats, uncached }
 }
 
 /// One pixel with cache interaction. Mirrors `raster::composite_pixel`
@@ -406,6 +441,21 @@ pub fn composite_pixel_cached(
     k: usize,
     bank: &mut RadianceCache,
 ) -> ([f32; 3], PixelOutcome) {
+    composite_pixel_cached_ex(splats, px, py, k, bank, false)
+}
+
+/// [`composite_pixel_cached`] with optional uncached-count recording: on
+/// a hit, the scan continues past the cache cutoff — counting, not
+/// compositing — so the outcome also carries the exact counts the plain
+/// compositor would have produced for this pixel.
+pub fn composite_pixel_cached_ex(
+    splats: &[GatheredSplat],
+    px: f32,
+    py: f32,
+    k: usize,
+    bank: &mut RadianceCache,
+    record_uncached: bool,
+) -> ([f32; 3], PixelOutcome) {
     let mut c = [0.0f32; 3];
     let mut t = 1.0f32;
     let mut iterated = 0u32;
@@ -414,21 +464,11 @@ pub fn composite_pixel_cached(
     let mut sig_n = 0usize;
     let mut queried = false;
 
-    for s in splats {
+    for (si, s) in splats.iter().enumerate() {
         iterated += 1;
-        let dx = px - s.mean[0];
-        let dy = py - s.mean[1];
-        if dx * dx + dy * dy > s.r2_sig {
+        let Some(alpha) = splat_alpha(s, px, py) else {
             continue;
-        }
-        let power = -0.5 * (s.conic_a * dx * dx + s.conic_c * dy * dy) - s.conic_b * dx * dy;
-        if power > 0.0 {
-            continue;
-        }
-        let alpha = (s.opacity * power.exp()).min(ALPHA_MAX);
-        if alpha < ALPHA_MIN {
-            continue;
-        }
+        };
         if sig_n < k {
             sig_ids[sig_n] = s.id;
             sig_n += 1;
@@ -436,8 +476,18 @@ pub fn composite_pixel_cached(
         significant += 1;
         let test_t = t * (1.0 - alpha);
         if test_t < T_EPS {
-            // Terminated before the cache query resolved: value is final.
-            return (c, PixelOutcome { iterated, significant, hit: false });
+            // Terminated before the cache query resolved: value is final
+            // and identical to the uncached pipeline's.
+            return (
+                c,
+                PixelOutcome {
+                    iterated,
+                    significant,
+                    hit: false,
+                    uncached_iterated: iterated,
+                    uncached_significant: significant,
+                },
+            );
         }
         let w = alpha * t;
         c[0] += w * s.color[0];
@@ -449,7 +499,25 @@ pub fn composite_pixel_cached(
         if sig_n == k && !queried {
             queried = true;
             if let Some(value) = bank.lookup(&sig_ids[..k]) {
-                return (value, PixelOutcome { iterated, significant, hit: true });
+                // Hit: the cached RGB replaces the remaining integration.
+                // When recording, keep scanning (count-only, same math
+                // and transmittance) to recover the uncached counts the
+                // plain compositor would have produced.
+                let (ui, us) = if record_uncached {
+                    scan_uncached(&splats[si + 1..], px, py, t, iterated, significant)
+                } else {
+                    (iterated, significant)
+                };
+                return (
+                    value,
+                    PixelOutcome {
+                        iterated,
+                        significant,
+                        hit: true,
+                        uncached_iterated: ui,
+                        uncached_significant: us,
+                    },
+                );
             }
         }
     }
@@ -460,7 +528,102 @@ pub fn composite_pixel_cached(
     } else {
         bank.stats.short_rays += 1;
     }
-    (c, PixelOutcome { iterated, significant, hit: false })
+    (
+        c,
+        PixelOutcome {
+            iterated,
+            significant,
+            hit: false,
+            uncached_iterated: iterated,
+            uncached_significant: significant,
+        },
+    )
+}
+
+/// Continue a pixel's tile-list scan past a cache hit without
+/// accumulating color: replicates the plain compositor's control flow
+/// (fast reject, alpha test, early termination) so the returned counts
+/// are bit-identical to an uncached stats pass.
+fn scan_uncached(
+    rest: &[GatheredSplat],
+    px: f32,
+    py: f32,
+    mut t: f32,
+    mut iterated: u32,
+    mut significant: u32,
+) -> (u32, u32) {
+    for s in rest {
+        iterated += 1;
+        let Some(alpha) = splat_alpha(s, px, py) else {
+            continue;
+        };
+        significant += 1;
+        let test_t = t * (1.0 - alpha);
+        if test_t < T_EPS {
+            break;
+        }
+        t = test_t;
+    }
+    (iterated, significant)
+}
+
+/// The radiance-cached [`RasterBackend`]: the RC raster stage of the
+/// frame loop, carrying per-session cache state across frames.
+pub struct CachedRaster {
+    cache: GroupedRadianceCache,
+    record_uncached: bool,
+}
+
+impl CachedRaster {
+    /// `record_uncached` asks every frame for single-pass uncached
+    /// per-pixel counts (required by cost models whose
+    /// `needs_uncached_stats` is true, e.g. the GPU warp model).
+    pub fn new(cache: GroupedRadianceCache, record_uncached: bool) -> Self {
+        CachedRaster { cache, record_uncached }
+    }
+
+    /// The underlying cache (for occupancy/stats inspection).
+    pub fn cache(&self) -> &GroupedRadianceCache {
+        &self.cache
+    }
+}
+
+impl RasterBackend for CachedRaster {
+    fn label(&self) -> &'static str {
+        "radiance-cached"
+    }
+
+    fn render(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+    ) -> RasterFrame {
+        let out = rasterize_cached_ex(
+            projected,
+            bins,
+            width,
+            height,
+            &mut self.cache,
+            self.record_uncached,
+        );
+        RasterFrame {
+            image: out.image,
+            work: RasterWork {
+                width,
+                height,
+                consumed: out.outcomes.iter().map(|o| o.iterated).collect(),
+                significant: out.outcomes.iter().map(|o| o.significant).collect(),
+                uncached: out.uncached,
+                cache_outcomes: Some(
+                    out.outcomes.iter().map(|o| if o.hit { 2u8 } else { 1u8 }).collect(),
+                ),
+                cache: out.stats,
+                swap_bytes: self.cache.swap_traffic_bytes() as u64,
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -646,7 +809,43 @@ mod tests {
     }
 
     #[test]
-    fn smaller_k_hits_more(){
+    fn single_pass_uncached_stats_match_two_pass() {
+        // The RC-GPU cost model used to re-rasterize the whole frame
+        // uncached just to recover warp aggregates; the single-pass
+        // recording must reproduce that second pass bit-for-bit.
+        let (p, bins, intr) = render_setup();
+        let plain_cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
+        let plain = rasterize(&p, &bins, intr.width, intr.height, &plain_cfg);
+        let plain_stats = plain.stats.unwrap();
+        let mut cache = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+        // Cold pass (intra-frame hits) and warm pass (heavy hits): the
+        // recorded uncached counts must match the plain pass in both.
+        for pass in 0..2 {
+            let out =
+                rasterize_cached_ex(&p, &bins, intr.width, intr.height, &mut cache, true);
+            let unc = out.uncached.expect("recording requested");
+            assert_eq!(unc.iterated, plain_stats.iterated, "pass {pass} iterated");
+            assert_eq!(unc.significant, plain_stats.significant, "pass {pass} significant");
+            if pass == 1 {
+                assert!(out.stats.hits > 0, "warm pass should hit");
+            }
+        }
+    }
+
+    #[test]
+    fn unrecorded_pass_reports_actual_counts() {
+        let (p, bins, intr) = render_setup();
+        let mut cache = GroupedRadianceCache::new(bins.tiles_x, bins.tiles_y, 5);
+        let out = rasterize_cached(&p, &bins, intr.width, intr.height, &mut cache);
+        assert!(out.uncached.is_none());
+        for o in &out.outcomes {
+            assert_eq!(o.uncached_iterated, o.iterated);
+            assert_eq!(o.uncached_significant, o.significant);
+        }
+    }
+
+    #[test]
+    fn smaller_k_hits_more() {
         let (p, bins, intr) = render_setup();
         let mut rates = Vec::new();
         for k in [2usize, 5, 8] {

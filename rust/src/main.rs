@@ -2,28 +2,32 @@
 //!
 //! Subcommands:
 //!   render    render a trajectory under one hardware variant
+//!   serve     run N concurrent viewer sessions over one shared scene
 //!   compare   run every paper variant on one config (Fig. 22 style)
 //!   quality   per-frame quality vs the exact pipeline (Fig. 20 style)
 //!   runtime   load the AOT artifacts and smoke-execute them via PJRT
+//!             (requires the `xla-runtime` build feature)
 //!   info      print the resolved config
 //!
 //! Common flags: --config <toml>, --set key=value (repeatable),
-//! --frames N, --out <ppm path> (render only).
+//! --frames N, --out <ppm path> (render only), --sessions N (serve).
 
 use anyhow::{Context, Result};
 
 use lumina::config::{HardwareVariant, LuminaConfig};
-use lumina::coordinator::Coordinator;
+use lumina::coordinator::{Coordinator, SessionPool};
 use lumina::runtime::ArtifactRuntime;
 use lumina::util::cli;
 
-const VALUE_KEYS: &[&str] = &["config", "set", "frames", "out", "variant", "artifacts"];
+const VALUE_KEYS: &[&str] =
+    &["config", "set", "frames", "out", "variant", "artifacts", "sessions"];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = cli::parse(&argv, VALUE_KEYS);
     match args.subcommand.as_deref() {
         Some("render") => cmd_render(&args),
+        Some("serve") => cmd_serve(&args),
         Some("compare") => cmd_compare(&args),
         Some("quality") => cmd_quality(&args),
         Some("runtime") => cmd_runtime(&args),
@@ -48,9 +52,11 @@ fn print_help() {
            --config <file.toml>   load a run configuration\n\
            --set key=value        override a config field (repeatable)\n\
            --variant <name>       hardware variant (gpu, s2-gpu, rc-gpu,\n\
-                                  nru-gpu, s2-acc, rc-acc, lumina, gscore)\n\
+                                  nru-gpu, s2-acc, rc-acc, lumina, gscore,\n\
+                                  lumina-gscore-frontend, ds2-gpu)\n\
            --frames <n>           trajectory length\n\
            --out <prefix>         write rendered frames as PPM\n\
+           --sessions <n>         concurrent viewer sessions (serve cmd)\n\
            --artifacts <dir>      AOT artifact directory (runtime cmd)"
     );
 }
@@ -94,6 +100,26 @@ fn cmd_render(args: &cli::Args) -> Result<()> {
         }
         report.push(f.report);
         frame_idx += 1;
+    }
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n: usize = args.get_parsed("sessions", 4);
+    println!(
+        "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{}",
+        cfg.variant.label(),
+        cfg.gaussian_count(),
+        cfg.camera.frames,
+        cfg.camera.width,
+        cfg.camera.height
+    );
+    let mut pool = SessionPool::new(cfg, n)?;
+    let report = pool.run()?;
+    for (i, r) in report.sessions.iter().enumerate() {
+        println!("  session {i}: {}", r.summary());
     }
     println!("{}", report.summary());
     Ok(())

@@ -1,16 +1,25 @@
 //! The 3DGS rendering pipeline substrate: Projection -> Sorting ->
-//! Rasterization (paper Fig. 1), plus the framebuffer type.
+//! Rasterization (paper Fig. 1), plus the framebuffer type and the
+//! frame-loop stage graph.
 //!
 //! Every stage exposes the statistics hooks the paper's characterization
 //! figures need (per-pixel iterated/significant Gaussian counts, tile
 //! occupancy, order-change rates).
+//!
+//! The [`stage`] module is the seam the coordinator composes against:
+//! a [`stage::FrontendStage`] (projection + sorting, S²-aware) and a
+//! [`stage::RasterBackend`] (plain / radiance-cached / DS-2) produce a
+//! measured [`stage::FrameWorkload`], which the pluggable cost models in
+//! [`crate::sim::cost`] price per hardware target.
 
 pub mod image;
 pub mod project;
 pub mod raster;
 pub mod sort;
+pub mod stage;
 
 pub use image::Image;
 pub use project::{project, ProjectedScene};
 pub use raster::{rasterize, RasterConfig, RasterOutput, RasterStats};
 pub use sort::{bin_and_sort, TileBins};
+pub use stage::{FrameWorkload, FrontendStage, PlainRaster, RasterBackend, RasterFrame};

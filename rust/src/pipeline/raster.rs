@@ -170,6 +170,31 @@ pub fn gather_tile(projected: &ProjectedScene, list: &[u32]) -> Vec<GatheredSpla
         .collect()
 }
 
+/// Evaluate one gathered splat at a pixel: the shared fast-reject +
+/// alpha math of **every** compositing loop (plain, cached, and the
+/// single-pass uncached continuation in `lumina::rc`). Returns `None`
+/// when the splat is insignificant (alpha < 1/255) at this pixel.
+///
+/// The cheap conservative reject comes first: outside the significance
+/// radius the Gaussian cannot pass the 1/255 test (no exp needed).
+#[inline(always)]
+pub fn splat_alpha(s: &GatheredSplat, px: f32, py: f32) -> Option<f32> {
+    let dx = px - s.mean[0];
+    let dy = py - s.mean[1];
+    if dx * dx + dy * dy > s.r2_sig {
+        return None;
+    }
+    let power = -0.5 * (s.conic_a * dx * dx + s.conic_c * dy * dy) - s.conic_b * dx * dy;
+    if power > 0.0 {
+        return None;
+    }
+    let alpha = (s.opacity * power.exp()).min(ALPHA_MAX);
+    if alpha < ALPHA_MIN {
+        return None;
+    }
+    Some(alpha)
+}
+
 /// Composite one pixel against gathered (contiguous) splats.
 #[inline]
 pub fn composite_pixel_gathered(
@@ -185,21 +210,9 @@ pub fn composite_pixel_gathered(
     let mut rec = SigRecord::default();
     for s in splats {
         iterated += 1;
-        let dx = px - s.mean[0];
-        let dy = py - s.mean[1];
-        // Cheap conservative reject: outside the significance radius the
-        // Gaussian cannot pass the 1/255 test (no exp needed).
-        if dx * dx + dy * dy > s.r2_sig {
+        let Some(alpha) = splat_alpha(s, px, py) else {
             continue;
-        }
-        let power = -0.5 * (s.conic_a * dx * dx + s.conic_c * dy * dy) - s.conic_b * dx * dy;
-        if power > 0.0 {
-            continue;
-        }
-        let alpha = (s.opacity * power.exp()).min(ALPHA_MAX);
-        if alpha < ALPHA_MIN {
-            continue;
-        }
+        };
         significant += 1;
         if (rec.len as usize) < record_k {
             rec.push(s.id);

@@ -1,0 +1,348 @@
+//! The frame-loop stage graph: explicit stages with a measured
+//! [`FrameWorkload`] record flowing between them.
+//!
+//! A frame is produced by two functional stages and priced by pluggable
+//! cost models (see [`crate::sim::cost`]):
+//!
+//! ```text
+//!   pose ──> FrontendStage ──(projected, bins)──> RasterBackend ──> image
+//!                 │                                    │
+//!                 └──────────── FrameWorkload <────────┘
+//!                                    │
+//!                     FrontendCostModel + CostModel
+//!                        (GPU / LuminCore / GSCore)
+//! ```
+//!
+//! * [`FrontendStage`] — projection + tile binning + depth sorting,
+//!   S²-aware: with a scheduler attached it reuses the speculative sort
+//!   across the sharing window (paper Sec. 3.1) and reports how much
+//!   frontend work actually ran.
+//! * [`RasterBackend`] — the rasterization stage behind one trait:
+//!   [`PlainRaster`] (exact 3DGS), [`crate::lumina::rc::CachedRaster`]
+//!   (radiance-cached, optionally recording single-pass uncached stats),
+//!   and [`crate::lumina::ds2::Ds2Raster`] (half-res + upsample).
+//! * [`FrameWorkload`] — everything the functional stages measured about
+//!   the frame, in the exact units the hardware cost models consume.
+//!
+//! The coordinator composes these as trait objects; no stage knows which
+//! hardware variant is being modeled.
+
+use crate::camera::{Intrinsics, Pose};
+use crate::lumina::rc::CacheStats;
+use crate::lumina::s2::S2Scheduler;
+use crate::pipeline::image::Image;
+use crate::pipeline::project::{project, ProjectedScene};
+use crate::pipeline::raster::{rasterize, RasterConfig, RasterStats};
+use crate::pipeline::sort::{bin_and_sort, TileBins};
+use crate::scene::GaussianScene;
+
+/// Everything one frame's functional stages measured, in the units the
+/// hardware cost models consume. Produced by [`FrameWorkload::from_stages`]
+/// out of a [`FrontendOutput`] and a [`RasterFrame`].
+#[derive(Debug, Clone)]
+pub struct FrameWorkload {
+    /// Frame index within the trajectory.
+    pub frame: usize,
+    /// Rendered framebuffer width in pixels (the *pipeline* resolution —
+    /// half the session resolution for DS-2).
+    pub width: usize,
+    /// Rendered framebuffer height in pixels.
+    pub height: usize,
+    /// Tile edge in pixels.
+    pub tile_size: usize,
+    /// Tile grid width.
+    pub tiles_x: usize,
+    /// Tile grid height.
+    pub tiles_y: usize,
+    /// Per-tile sorted-list lengths (row-major tile order).
+    pub tile_list_lens: Vec<usize>,
+    /// Scene size: projection frustum-culls every Gaussian.
+    pub scene_gaussians: usize,
+    /// Whether projection + sorting actually ran this frame (false on
+    /// S²-shared frames).
+    pub sorted: bool,
+    /// Tile-list entries produced by sorting (0 when `!sorted`).
+    pub sort_entries: usize,
+    /// Gaussians whose SH color / screen geometry were re-evaluated for
+    /// the current pose (the per-frame S² refresh; 0 without S²).
+    pub refreshed_gaussians: usize,
+    /// Per-pixel Gaussians consumed as run (early termination and cache
+    /// cutoffs included). Row-major, `width * height`.
+    pub consumed: Vec<u32>,
+    /// Per-pixel significant Gaussians encountered while consuming.
+    pub significant: Vec<u32>,
+    /// Per-pixel counts the *uncached* pipeline would have produced,
+    /// recorded in the same rasterization pass (present when the raster
+    /// backend was asked to record them; the GPU cost model prices RC's
+    /// warp-bound time from these).
+    pub uncached: Option<RasterStats>,
+    /// Per-pixel cache interaction: 1 = miss, 2 = hit (None without RC).
+    pub cache_outcomes: Option<Vec<u8>>,
+    /// Radiance-cache statistics for the frame.
+    pub cache: CacheStats,
+    /// LuminCache group save/reload traffic (bytes).
+    pub swap_bytes: u64,
+}
+
+impl FrameWorkload {
+    /// Assemble the workload record from the two stage outputs.
+    pub fn from_stages(
+        frame: usize,
+        scene_gaussians: usize,
+        frontend: &FrontendOutput,
+        raster: RasterWork,
+    ) -> Self {
+        let bins = &frontend.bins;
+        FrameWorkload {
+            frame,
+            width: raster.width,
+            height: raster.height,
+            tile_size: bins.tile_size,
+            tiles_x: bins.tiles_x,
+            tiles_y: bins.tiles_y,
+            tile_list_lens: bins.lists.iter().map(|l| l.len()).collect(),
+            scene_gaussians,
+            sorted: frontend.sorted,
+            sort_entries: frontend.sort_entries,
+            refreshed_gaussians: frontend.refreshed_gaussians,
+            consumed: raster.consumed,
+            significant: raster.significant,
+            uncached: raster.uncached,
+            cache_outcomes: raster.cache_outcomes,
+            cache: raster.cache,
+            swap_bytes: raster.swap_bytes,
+        }
+    }
+
+    /// Framebuffer pixel count.
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// True when the frame went through a radiance cache.
+    pub fn uses_cache(&self) -> bool {
+        self.cache_outcomes.is_some()
+    }
+
+    /// Mean Gaussians iterated per pixel (as run).
+    pub fn mean_iterated(&self) -> f64 {
+        if self.consumed.is_empty() {
+            0.0
+        } else {
+            self.consumed.iter().map(|&v| v as f64).sum::<f64>() / self.consumed.len() as f64
+        }
+    }
+}
+
+/// What the frontend stage produced for one frame.
+pub struct FrontendOutput {
+    /// Projected Gaussian set to rasterize (S²: geometry/colors refreshed
+    /// at the render pose, order frozen from the speculative sort).
+    pub projected: ProjectedScene,
+    /// Per-tile sorted lists.
+    pub bins: TileBins,
+    /// Whether projection + sorting ran this frame.
+    pub sorted: bool,
+    /// Tile-list entries sorted (0 when reused).
+    pub sort_entries: usize,
+    /// Gaussians refreshed for the current pose (S² only).
+    pub refreshed_gaussians: usize,
+}
+
+/// Projection + sorting stage, S²-aware.
+///
+/// The `Plain` form runs the classic per-frame pipeline; the `S2` form
+/// delegates to an [`S2Scheduler`] (speculative sort shared across the
+/// window, per-frame geometry/color refresh), which owns its own
+/// near/far/tile-size state.
+pub enum FrontendStage {
+    Plain { near: f32, far: f32, tile_size: usize },
+    /// Boxed: the scheduler carries the shared sort's projected set,
+    /// which would dwarf the `Plain` variant inline.
+    S2(Box<S2Scheduler>),
+}
+
+impl FrontendStage {
+    /// Classic per-frame projection + sorting.
+    pub fn plain(near: f32, far: f32, tile_size: usize) -> Self {
+        FrontendStage::Plain { near, far, tile_size }
+    }
+
+    /// Sorting-sharing frontend driven by an [`S2Scheduler`].
+    pub fn with_s2(s2: S2Scheduler) -> Self {
+        FrontendStage::S2(Box::new(s2))
+    }
+
+    /// True when this frontend shares sorting across frames.
+    pub fn uses_s2(&self) -> bool {
+        matches!(self, FrontendStage::S2(_))
+    }
+
+    /// Run the frontend for one pose.
+    pub fn run(
+        &mut self,
+        scene: &GaussianScene,
+        pose: &Pose,
+        intr: &Intrinsics,
+    ) -> FrontendOutput {
+        match self {
+            FrontendStage::S2(s2) => {
+                let f = s2.frame(scene, pose, intr);
+                FrontendOutput {
+                    projected: f.projected,
+                    bins: f.bins,
+                    sorted: f.work.sorted,
+                    sort_entries: f.work.sort_entries,
+                    refreshed_gaussians: f.work.refreshed_gaussians,
+                }
+            }
+            FrontendStage::Plain { near, far, tile_size } => {
+                let projected = project(scene, pose, intr, *near, *far, 0.0);
+                let bins = bin_and_sort(&projected, intr, *tile_size, 0.0);
+                let sort_entries = bins.total_entries();
+                FrontendOutput {
+                    projected,
+                    bins,
+                    sorted: true,
+                    sort_entries,
+                    refreshed_gaussians: 0,
+                }
+            }
+        }
+    }
+}
+
+/// What a raster backend measured while rendering (the raster half of a
+/// [`FrameWorkload`]; the image travels separately so backends can
+/// post-process it).
+pub struct RasterWork {
+    pub width: usize,
+    pub height: usize,
+    pub consumed: Vec<u32>,
+    pub significant: Vec<u32>,
+    pub uncached: Option<RasterStats>,
+    pub cache_outcomes: Option<Vec<u8>>,
+    pub cache: CacheStats,
+    pub swap_bytes: u64,
+}
+
+/// One rendered frame from a raster backend.
+pub struct RasterFrame {
+    pub image: Image,
+    pub work: RasterWork,
+}
+
+/// The rasterization stage behind one seam: plain, radiance-cached, or
+/// DS-2 — the coordinator neither knows nor cares which.
+pub trait RasterBackend: Send {
+    /// Short name for reports.
+    fn label(&self) -> &'static str;
+
+    /// Rasterize one frame, measuring per-pixel work.
+    fn render(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+    ) -> RasterFrame;
+
+    /// Post-process the framebuffer into the session's output resolution
+    /// (identity for everything but DS-2's 2x upsample).
+    fn finalize(&self, image: Image) -> Image {
+        image
+    }
+}
+
+/// Exact 3DGS rasterization (no cache).
+pub struct PlainRaster;
+
+impl RasterBackend for PlainRaster {
+    fn label(&self) -> &'static str {
+        "plain"
+    }
+
+    fn render(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+    ) -> RasterFrame {
+        let cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
+        let out = rasterize(projected, bins, width, height, &cfg);
+        let stats = out.stats.expect("stats requested");
+        RasterFrame {
+            image: out.image,
+            work: RasterWork {
+                width,
+                height,
+                consumed: stats.iterated,
+                significant: stats.significant,
+                uncached: None,
+                cache_outcomes: None,
+                cache: CacheStats::default(),
+                swap_bytes: 0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::Pose;
+    use crate::constants::TILE;
+    use crate::math::Vec3;
+    use crate::scene::synth::test_scene;
+
+    #[test]
+    fn plain_frontend_sorts_every_frame() {
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        for _ in 0..3 {
+            let out = fe.run(&scene, &pose, &intr);
+            assert!(out.sorted);
+            assert_eq!(out.sort_entries, out.bins.total_entries());
+            assert_eq!(out.refreshed_gaussians, 0);
+        }
+    }
+
+    #[test]
+    fn s2_frontend_amortizes_sorting() {
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let mut fe = FrontendStage::with_s2(S2Scheduler::new(4, 2, TILE, 0.2, 100.0));
+        assert!(fe.uses_s2());
+        let mut sorts = 0;
+        for _ in 0..8 {
+            let out = fe.run(&scene, &pose, &intr);
+            if out.sorted {
+                sorts += 1;
+            }
+            assert!(out.refreshed_gaussians > 0);
+        }
+        assert_eq!(sorts, 2, "8 frames / window 4");
+    }
+
+    #[test]
+    fn plain_raster_workload_consistent() {
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let fo = fe.run(&scene, &pose, &intr);
+        let mut raster = PlainRaster;
+        let frame = raster.render(&fo.projected, &fo.bins, intr.width, intr.height);
+        let w = FrameWorkload::from_stages(0, scene.len(), &fo, frame.work);
+        assert_eq!(w.pixels(), 128 * 128);
+        assert_eq!(w.consumed.len(), w.pixels());
+        assert!(!w.uses_cache());
+        assert!(w.mean_iterated() > 0.0);
+        assert_eq!(w.tile_list_lens.len(), w.tiles_x * w.tiles_y);
+        assert_eq!(frame.image.data.len(), w.pixels());
+    }
+}

@@ -3,30 +3,31 @@
 //!
 //! This is the layer that keeps Python off the request path: `make
 //! artifacts` runs once at build time; the Rust binary then loads
-//! `artifacts/*.hlo.txt` (`HloModuleProto::from_text_file` ->
-//! `XlaComputation::from_proto` -> `client.compile`) and executes the
-//! compiled kernels with concrete buffers. HLO *text* is the interchange
-//! format because the crate's xla_extension 0.5.1 rejects jax>=0.5
-//! serialized protos (64-bit instruction ids) — see
-//! /opt/xla-example/README.md.
+//! `artifacts/*.hlo.txt` and executes the compiled kernels with concrete
+//! buffers (see `pjrt.rs` for the mechanics).
+//!
+//! The PJRT path needs the vendored `xla` crate (xla_extension 0.5.1) —
+//! an external native dependency — so it is gated behind the
+//! off-by-default `xla-runtime` Cargo feature. The default build gets a
+//! [`stub`] with the identical API whose constructors fail with
+//! guidance, keeping the launcher, examples, and parity tests compiling
+//! (they skip at runtime). Enable with
+//! `cargo build --features xla-runtime` after adding the vendored `xla`
+//! dependency to `Cargo.toml` (see the comment there).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use anyhow::{bail, Result};
 
-use anyhow::{bail, Context, Result};
+use crate::constants::TILE;
 
-use crate::constants::{G_CHUNK, SH_CHUNK, SH_COEFFS, TILE};
-use crate::util::minitoml;
+#[cfg(feature = "xla-runtime")]
+mod pjrt;
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::ArtifactRuntime;
 
-/// A compiled artifact registry bound to a PJRT client.
-pub struct ArtifactRuntime {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Constants recorded by the AOT manifest (sanity-checked against
-    /// `crate::constants`).
-    pub manifest_constants: ManifestConstants,
-    dir: PathBuf,
-}
+#[cfg(not(feature = "xla-runtime"))]
+mod stub;
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::ArtifactRuntime;
 
 /// Compositing constants recorded in `artifacts/manifest.toml`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -61,230 +62,12 @@ impl TileCarry {
     }
 }
 
-impl ArtifactRuntime {
-    /// Load every artifact listed in `<dir>/manifest.toml` and compile it
-    /// on a fresh CPU PJRT client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.toml");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
-        let root = minitoml::parse(&text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-
-        let cget = |k: &str| -> Result<f64> {
-            root.get_path(&format!("constants.{k}"))
-                .and_then(|v| v.as_float())
-                .with_context(|| format!("manifest missing constants.{k}"))
-        };
-        let manifest_constants = ManifestConstants {
-            tile: cget("tile")? as usize,
-            g_chunk: cget("g_chunk")? as usize,
-            tile_batch: cget("tile_batch")? as usize,
-            sh_chunk: cget("sh_chunk")? as usize,
-            alpha_min: cget("alpha_min")? as f32,
-            alpha_max: cget("alpha_max")? as f32,
-            t_eps: cget("t_eps")? as f32,
-        };
-        // The Rust pipeline and the AOT kernels must share semantics.
-        if manifest_constants.tile != TILE
-            || manifest_constants.g_chunk != G_CHUNK
-            || manifest_constants.sh_chunk != SH_CHUNK
-        {
-            bail!(
-                "artifact manifest constants {manifest_constants:?} disagree with crate constants; \
-                 rebuild artifacts"
-            );
-        }
-
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut executables = HashMap::new();
-        let artifacts = root
-            .get_path("artifacts")
-            .and_then(|v| v.as_table())
-            .context("manifest missing [artifacts]")?;
-        for (name, entry) in artifacts {
-            let file = entry
-                .get_path("file")
-                .and_then(|v| v.as_str())
-                .with_context(|| format!("artifact {name} missing file"))?;
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {name}"))?;
-            executables.insert(name.clone(), exe);
-        }
-        Ok(ArtifactRuntime { client, executables, manifest_constants, dir })
-    }
-
-    /// Artifact directory this runtime loaded from.
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Names of loaded artifacts.
-    pub fn artifact_names(&self) -> Vec<&str> {
-        let mut names: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
-        names.sort();
-        names
-    }
-
-    /// PJRT platform string (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.executables
-            .get(name)
-            .with_context(|| format!("artifact {name} not loaded"))
-    }
-
-    /// Execute the `raster_tile` artifact: one chunk of up to G_CHUNK
-    /// depth-sorted Gaussians composited onto one tile, with carry.
-    ///
-    /// Inputs are padded to G_CHUNK with zero-opacity rows (skipped by
-    /// the kernel's significance test).
-    #[allow(clippy::too_many_arguments)]
-    pub fn raster_tile_chunk(
-        &self,
-        means: &[[f32; 2]],
-        conics: &[[f32; 3]],
-        opacs: &[f32],
-        colors: &[[f32; 3]],
-        origin: [f32; 2],
-        carry: &TileCarry,
-    ) -> Result<TileCarry> {
-        let g = means.len();
-        if g > G_CHUNK {
-            bail!("chunk of {g} exceeds G_CHUNK={G_CHUNK}");
-        }
-        let mut m = vec![0f32; G_CHUNK * 2];
-        let mut cn = vec![0f32; G_CHUNK * 3];
-        let mut op = vec![0f32; G_CHUNK];
-        let mut cl = vec![0f32; G_CHUNK * 3];
-        for i in 0..g {
-            m[i * 2..i * 2 + 2].copy_from_slice(&means[i]);
-            cn[i * 3..i * 3 + 3].copy_from_slice(&conics[i]);
-            op[i] = opacs[i];
-            cl[i * 3..i * 3 + 3].copy_from_slice(&colors[i]);
-        }
-        let t = TILE as i64;
-        let args = [
-            xla::Literal::vec1(&m).reshape(&[G_CHUNK as i64, 2])?,
-            xla::Literal::vec1(&cn).reshape(&[G_CHUNK as i64, 3])?,
-            xla::Literal::vec1(&op),
-            xla::Literal::vec1(&cl).reshape(&[G_CHUNK as i64, 3])?,
-            xla::Literal::vec1(&origin),
-            xla::Literal::vec1(&carry.color).reshape(&[t, t, 3])?,
-            xla::Literal::vec1(&carry.transmittance).reshape(&[t, t])?,
-            xla::Literal::vec1(&carry.done).reshape(&[t, t])?,
-        ];
-        let result = self.exe("raster_tile")?.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 3 {
-            bail!("raster_tile returned {} outputs, expected 3", parts.len());
-        }
-        let mut it = parts.into_iter();
-        Ok(TileCarry {
-            color: it.next().unwrap().to_vec::<f32>()?,
-            transmittance: it.next().unwrap().to_vec::<f32>()?,
-            done: it.next().unwrap().to_vec::<f32>()?,
-        })
-    }
-
-    /// Execute the `sh_eval` artifact for up to SH_CHUNK Gaussians.
-    /// Returns per-Gaussian RGB.
-    pub fn sh_eval_chunk(
-        &self,
-        dirs: &[[f32; 3]],
-        coeffs: &[[[f32; 3]; SH_COEFFS]],
-    ) -> Result<Vec<[f32; 3]>> {
-        let n = dirs.len();
-        if n > SH_CHUNK {
-            bail!("chunk of {n} exceeds SH_CHUNK={SH_CHUNK}");
-        }
-        let mut d = vec![0f32; SH_CHUNK * 3];
-        let mut c = vec![0f32; SH_CHUNK * SH_COEFFS * 3];
-        for i in 0..n {
-            d[i * 3..i * 3 + 3].copy_from_slice(&dirs[i]);
-            for k in 0..SH_COEFFS {
-                let off = (i * SH_COEFFS + k) * 3;
-                c[off..off + 3].copy_from_slice(&coeffs[i][k]);
-            }
-        }
-        let args = [
-            xla::Literal::vec1(&d).reshape(&[SH_CHUNK as i64, 3])?,
-            xla::Literal::vec1(&c).reshape(&[SH_CHUNK as i64, SH_COEFFS as i64, 3])?,
-        ];
-        let result =
-            self.exe("sh_eval")?.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?.to_vec::<f32>()?;
-        Ok((0..n).map(|i| [out[i * 3], out[i * 3 + 1], out[i * 3 + 2]]).collect())
-    }
-
-    /// Execute the `alpha_front` artifact: frontend alphas of a Gaussian
-    /// chunk over one tile. Returns (G_CHUNK, TILE, TILE) row-major.
-    pub fn alpha_front_chunk(
-        &self,
-        means: &[[f32; 2]],
-        conics: &[[f32; 3]],
-        opacs: &[f32],
-        origin: [f32; 2],
-    ) -> Result<Vec<f32>> {
-        let g = means.len();
-        if g > G_CHUNK {
-            bail!("chunk of {g} exceeds G_CHUNK={G_CHUNK}");
-        }
-        let mut m = vec![0f32; G_CHUNK * 2];
-        let mut cn = vec![0f32; G_CHUNK * 3];
-        let mut op = vec![0f32; G_CHUNK];
-        for i in 0..g {
-            m[i * 2..i * 2 + 2].copy_from_slice(&means[i]);
-            cn[i * 3..i * 3 + 3].copy_from_slice(&conics[i]);
-            op[i] = opacs[i];
-        }
-        let args = [
-            xla::Literal::vec1(&m).reshape(&[G_CHUNK as i64, 2])?,
-            xla::Literal::vec1(&cn).reshape(&[G_CHUNK as i64, 3])?,
-            xla::Literal::vec1(&op),
-            xla::Literal::vec1(&origin),
-        ];
-        let result =
-            self.exe("alpha_front")?.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-
-    /// Rasterize one full tile (arbitrary list length) by chunking
-    /// through the AOT kernel with carried state.
-    pub fn raster_tile_full(
-        &self,
-        means: &[[f32; 2]],
-        conics: &[[f32; 3]],
-        opacs: &[f32],
-        colors: &[[f32; 3]],
-        origin: [f32; 2],
-    ) -> Result<TileCarry> {
-        let mut carry = TileCarry::fresh();
-        let n = means.len();
-        let mut s = 0usize;
-        while s < n {
-            let e = (s + G_CHUNK).min(n);
-            carry = self.raster_tile_chunk(
-                &means[s..e],
-                &conics[s..e],
-                &opacs[s..e],
-                &colors[s..e],
-                origin,
-                &carry,
-            )?;
-            s = e;
-        }
-        Ok(carry)
-    }
+/// Error for every stub entry point.
+#[allow(dead_code)]
+pub(crate) fn unavailable<T>() -> Result<T> {
+    bail!(
+        "the PJRT artifact runtime is unavailable: lumina was built without the \
+         `xla-runtime` feature. Rebuild with `cargo build --features xla-runtime` \
+         (requires the vendored `xla` crate; see Cargo.toml)."
+    )
 }

@@ -1,0 +1,86 @@
+//! API-compatible stand-in for the PJRT artifact runtime, compiled when
+//! the `xla-runtime` feature is off (the default). Every constructor
+//! fails with guidance, so callers — the `runtime` subcommand, the
+//! `vr_session` example, `tests/runtime_parity.rs` — compile unchanged
+//! and skip gracefully at runtime.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{unavailable, ManifestConstants, TileCarry};
+use crate::constants::SH_COEFFS;
+
+/// Stub artifact registry: construction always fails (see module docs).
+pub struct ArtifactRuntime {
+    /// Kept for API parity with the PJRT-backed runtime.
+    pub manifest_constants: ManifestConstants,
+}
+
+impl ArtifactRuntime {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        unavailable()
+    }
+
+    /// Artifact directory this runtime loaded from.
+    pub fn dir(&self) -> &Path {
+        Path::new("")
+    }
+
+    /// Names of loaded artifacts.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// PJRT platform string (for logs).
+    pub fn platform(&self) -> String {
+        "unavailable (built without xla-runtime)".to_string()
+    }
+
+    /// See the `xla-runtime` implementation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn raster_tile_chunk(
+        &self,
+        _means: &[[f32; 2]],
+        _conics: &[[f32; 3]],
+        _opacs: &[f32],
+        _colors: &[[f32; 3]],
+        _origin: [f32; 2],
+        _carry: &TileCarry,
+    ) -> Result<TileCarry> {
+        unavailable()
+    }
+
+    /// See the `xla-runtime` implementation.
+    pub fn sh_eval_chunk(
+        &self,
+        _dirs: &[[f32; 3]],
+        _coeffs: &[[[f32; 3]; SH_COEFFS]],
+    ) -> Result<Vec<[f32; 3]>> {
+        unavailable()
+    }
+
+    /// See the `xla-runtime` implementation.
+    pub fn alpha_front_chunk(
+        &self,
+        _means: &[[f32; 2]],
+        _conics: &[[f32; 3]],
+        _opacs: &[f32],
+        _origin: [f32; 2],
+    ) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    /// See the `xla-runtime` implementation.
+    pub fn raster_tile_full(
+        &self,
+        _means: &[[f32; 2]],
+        _conics: &[[f32; 3]],
+        _opacs: &[f32],
+        _colors: &[[f32; 3]],
+        _origin: [f32; 2],
+    ) -> Result<TileCarry> {
+        unavailable()
+    }
+}

@@ -84,6 +84,16 @@ impl WarpAggregates {
     /// groups covering two 16-pixel rows of a tile (the CUDA 3DGS
     /// mapping: one thread per pixel).
     pub fn from_stats(stats: &RasterStats, width: usize, height: usize) -> Self {
+        Self::from_slices(&stats.iterated, &stats.significant, width, height)
+    }
+
+    /// Build warp aggregates from raw per-pixel slices (row-major).
+    pub fn from_slices(
+        iterated: &[u32],
+        significant: &[u32],
+        width: usize,
+        height: usize,
+    ) -> Self {
         let mut agg = WarpAggregates::default();
         let tile = 16usize;
         let mut lanes_iter = [0u32; 32];
@@ -102,8 +112,8 @@ impl WarpAggregates {
                         if x >= width {
                             continue;
                         }
-                        lanes_iter[n] = stats.iterated[y * width + x];
-                        lanes_sig[n] = stats.significant[y * width + x];
+                        lanes_iter[n] = iterated[y * width + x];
+                        lanes_sig[n] = significant[y * width + x];
                         n += 1;
                     }
                 }

@@ -1,5 +1,8 @@
 //! Hardware cost models and the cycle-accurate LuminCore simulator.
 //!
+//! * [`cost`]      — the pluggable [`cost::CostModel`] /
+//!   [`cost::FrontendCostModel`] trait seams the coordinator composes;
+//!   implemented by the three hardware models below.
 //! * [`gpu`]       — mobile-Volta SIMT model (warp divergence, stage
 //!   times), calibrated to the paper's published anchors.
 //! * [`lumincore`] — cycle-accurate NRU array + buffers + LuminCache
@@ -8,8 +11,11 @@
 //! * [`dram`]      — LPDDR3-1600 x4 bandwidth/latency/energy.
 //! * [`energy`]    — 12 nm component energy constants (25:1 DRAM:SRAM).
 
+pub mod cost;
 pub mod dram;
 pub mod energy;
 pub mod gpu;
 pub mod gscore;
 pub mod lumincore;
+
+pub use cost::{CostModel, FrontendCostModel, RasterCost};

@@ -8,9 +8,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads (overridable with `LUMINA_THREADS`).
+static CACHED: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads (overridable with `LUMINA_THREADS` or
+/// [`set_num_threads`]).
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
     let c = CACHED.load(Ordering::Relaxed);
     if c != 0 {
         return c;
@@ -24,6 +26,14 @@ pub fn num_threads() -> usize {
         });
     CACHED.store(n, Ordering::Relaxed);
     n
+}
+
+/// Override the worker-thread count at runtime (`0` resets to the
+/// `LUMINA_THREADS`/auto-detect default). Primarily for determinism
+/// tests, which must compare 1-thread and many-thread runs within one
+/// process — the env var is only read once.
+pub fn set_num_threads(n: usize) {
+    CACHED.store(n, Ordering::Relaxed);
 }
 
 /// Parallel map over `0..n`: returns `Vec<T>` with `f(i)` at index `i`.

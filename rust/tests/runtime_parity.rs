@@ -16,6 +16,10 @@ use lumina::scene::sh::eval_color;
 use lumina::scene::synth::test_scene;
 
 fn runtime() -> Option<ArtifactRuntime> {
+    if cfg!(not(feature = "xla-runtime")) {
+        eprintln!("SKIP: built without the `xla-runtime` feature");
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.toml").exists() {
         eprintln!("SKIP: artifacts/ not built; run `make artifacts`");
         return None;
