@@ -4,8 +4,9 @@
 
 use std::sync::Arc;
 
-use lumina::config::{HardwareVariant, LuminaConfig};
-use lumina::coordinator::SessionPool;
+use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
+use lumina::coordinator::{AdmissionController, SessionPool};
 use lumina::scene::synth::synth_scene;
 use lumina::util::bench::Runner;
 
@@ -30,6 +31,32 @@ fn main() {
         r.bench(&format!("session_pool/{n}x4frames"), move || {
             let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
             pool.run().unwrap()
+        });
+    }
+
+    // Tiered serving under admission control: a target sized to ~2.5
+    // full-tier sessions forces a mixed ladder on larger pools (this is
+    // the capacity-managed path: probe -> plan -> epoch re-plans).
+    let full_cost = {
+        let mut probe = SessionPool::with_scene(cfg.clone(), scene.clone(), 1).unwrap();
+        let demands = probe.probe_demands().unwrap();
+        price_workload(&demands[0].workload, cfg.variant)
+    };
+    for n in [4usize, 8] {
+        // Budget 0.75 full-frames per session: all-full cannot fit, the
+        // cheaper mixes can — every run exercises demotion.
+        let target = (1.0 - ADMISSION_HEADROOM) / (0.75 * n as f64 * full_cost);
+        let cfg = cfg.clone();
+        let scene = scene.clone();
+        r.bench(&format!("tiered_pool/{n}x4frames@target"), move || {
+            let ctrl = AdmissionController::new(
+                target,
+                vec![Tier::Full, Tier::Reduced, Tier::Half],
+                cfg.pool.reduced_fraction,
+            )
+            .unwrap();
+            let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
+            pool.serve(&ctrl).unwrap()
         });
     }
 

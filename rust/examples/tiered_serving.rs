@@ -1,0 +1,78 @@
+//! Capacity-managed serving demo: the CostModel-driven admission
+//! controller assigns each viewer a serving tier (full res / reduced
+//! Gaussians / half res) so one modeled device holds a pool-wide
+//! simulated-FPS target — and admits strictly more viewers than an
+//! all-full-res pool can.
+//!
+//! Run with: `cargo run --release --example tiered_serving`
+//! (equivalent CLI: `lumina serve --sessions N --target-fps F`)
+
+use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
+use lumina::coordinator::{AdmissionController, SessionPool};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = LuminaConfig::quick_test();
+    cfg.scene.count = 20_000;
+    cfg.camera.width = 128;
+    cfg.camera.height = 128;
+    cfg.camera.frames = 12;
+    cfg.pool.epoch_frames = 4;
+    cfg.variant = HardwareVariant::Lumina;
+
+    // Size the target from a one-session probe: the device budget fits
+    // about 2.5 full-tier viewers, so every additional admission must
+    // come from tiering.
+    let mut probe = SessionPool::new(cfg.clone(), 1)?;
+    let demands = probe.probe_demands()?;
+    let full_cost = price_workload(&demands[0].workload, cfg.variant);
+    let target = (1.0 - ADMISSION_HEADROOM) / (2.5 * full_cost);
+    println!(
+        "one full-tier frame costs {:.3} ms -> target {:.1} pool sim-fps",
+        full_cost * 1e3,
+        target
+    );
+
+    let max_admitted = |ladder: Vec<Tier>| -> anyhow::Result<usize> {
+        let ctrl = AdmissionController::new(target, ladder, cfg.pool.reduced_fraction)?;
+        let mut admitted = 0;
+        for n in 1..=16 {
+            let mut pool = SessionPool::new(cfg.clone(), n)?;
+            match pool.probe_demands().and_then(|d| ctrl.plan(&d)) {
+                Ok(_) => admitted = n,
+                Err(e) => {
+                    println!("  {n} viewers: {e}");
+                    break;
+                }
+            }
+        }
+        Ok(admitted)
+    };
+
+    println!("\nall-full-res ladder:");
+    let full_max = max_admitted(vec![Tier::Full])?;
+    println!("  admits {full_max} viewers");
+
+    println!("\ntiered ladder [full,reduced,half]:");
+    let tiered_max = max_admitted(cfg.pool.tiers.clone())?;
+    println!("  admits {tiered_max} viewers (+{} over full-res)", tiered_max - full_max);
+
+    // Serve the tiered pool at its maximum admission and verify the
+    // target held end to end.
+    let ctrl =
+        AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)?;
+    let mut pool = SessionPool::new(cfg.clone(), tiered_max)?;
+    let report = pool.serve(&ctrl)?;
+    println!();
+    for (i, r) in report.sessions.iter().enumerate() {
+        println!("  session {i} [{}]: {}", r.tier_sequence().join(">"), r.summary());
+    }
+    println!("{}", report.summary());
+    println!(
+        "pool sim-fps {:.1} vs target {:.1} -> {}",
+        report.pool_fps(),
+        target,
+        if report.pool_fps() >= target { "target held" } else { "TARGET MISSED" }
+    );
+    Ok(())
+}

@@ -133,6 +133,88 @@ impl HardwareVariant {
     }
 }
 
+/// Per-session serving tier: the LoD/resolution ladder tiered pools
+/// serve viewers on. `Ds2Raster` proved resolution is just a backend
+/// policy (PR 1); a tier generalizes that into a per-session quality
+/// level the admission controller can trade against pool capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Session resolution, whole scene — the quality reference.
+    Full,
+    /// Whole resolution, reduced Gaussian budget (a prefix subsample of
+    /// the shared scene; fraction set by `pool.reduced_fraction`).
+    Reduced,
+    /// Half-resolution pipeline + 2x upsample (the DS-2 mechanism),
+    /// composed around whatever raster backend the variant uses.
+    Half,
+}
+
+impl Tier {
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Full => "full",
+            Tier::Reduced => "reduced",
+            Tier::Half => "half",
+        }
+    }
+
+    /// Parse the kebab-case config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "full" => Tier::Full,
+            "reduced" => Tier::Reduced,
+            "half" => Tier::Half,
+            other => bail!("unknown tier: {other} (expected full|reduced|half)"),
+        })
+    }
+
+    /// Parse a comma-separated tier ladder, best quality first. Blank
+    /// segments are skipped; an all-blank ladder is an error.
+    pub fn parse_ladder(s: &str) -> Result<Vec<Tier>> {
+        let tiers = s
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(Tier::parse)
+            .collect::<Result<Vec<_>>>()?;
+        if tiers.is_empty() {
+            bail!("tier ladder is empty");
+        }
+        Ok(tiers)
+    }
+
+    /// Serialize a ladder back to the comma-separated config form.
+    pub fn ladder_name(ladder: &[Tier]) -> String {
+        ladder.iter().map(|t| t.label()).collect::<Vec<_>>().join(",")
+    }
+}
+
+/// Multi-session pool block: tier ladder + admission-control target.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Aggregate simulated-FPS target the admission controller holds
+    /// across the whole pool (the modeled device must deliver one frame
+    /// to *every* session at this rate). `0` disables admission control.
+    pub target_fps: f64,
+    /// Tier ladder, best quality first; demotion walks down it.
+    pub tiers: Vec<Tier>,
+    /// Frames between admission re-plans in `SessionPool::serve`.
+    pub epoch_frames: usize,
+    /// Fraction of the scene's Gaussians the reduced tier serves.
+    pub reduced_fraction: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            target_fps: 0.0,
+            tiers: vec![Tier::Full, Tier::Reduced, Tier::Half],
+            epoch_frames: 6,
+            reduced_fraction: 0.5,
+        }
+    }
+}
+
 fn scene_class_name(c: SceneClass) -> &'static str {
     match c {
         SceneClass::SyntheticSmall => "synthetic-small",
@@ -229,6 +311,7 @@ pub struct LuminaConfig {
     pub camera: CameraConfig,
     pub s2: S2Config,
     pub rc: RcConfig,
+    pub pool: PoolConfig,
     pub variant: HardwareVariant,
     /// Near clip plane.
     pub near: f32,
@@ -256,6 +339,7 @@ impl LuminaConfig {
             },
             s2: S2Config::default(),
             rc: RcConfig::default(),
+            pool: PoolConfig::default(),
             variant: HardwareVariant::Lumina,
             near: 0.2,
             far: 1000.0,
@@ -328,6 +412,31 @@ impl LuminaConfig {
             }
             cfg.rc.alpha_record = k;
         }
+        if let Some(v) = root.get_path("pool.target_fps") {
+            let t = v.as_float().context("pool.target_fps must be a number")?;
+            if t < 0.0 || !t.is_finite() {
+                bail!("pool.target_fps must be finite and >= 0, got {t}");
+            }
+            cfg.pool.target_fps = t;
+        }
+        if let Some(v) = root.get_path("pool.tiers") {
+            let ladder = v.as_str().context("pool.tiers must be a string")?;
+            cfg.pool.tiers = Tier::parse_ladder(ladder)?;
+        }
+        if let Some(v) = root.get_path("pool.epoch_frames") {
+            let e = v.as_int().context("pool.epoch_frames")?;
+            if e < 1 {
+                bail!("pool.epoch_frames must be >= 1, got {e}");
+            }
+            cfg.pool.epoch_frames = e as usize;
+        }
+        if let Some(v) = root.get_path("pool.reduced_fraction") {
+            let f = v.as_float().context("pool.reduced_fraction must be a number")?;
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("pool.reduced_fraction must be in (0, 1], got {f}");
+            }
+            cfg.pool.reduced_fraction = f;
+        }
         Ok(cfg)
     }
 
@@ -359,6 +468,10 @@ impl LuminaConfig {
         set(&mut root, "s2.sharing_window", Value::Integer(self.s2.sharing_window as i64));
         set(&mut root, "s2.expanded_margin", Value::Integer(self.s2.expanded_margin as i64));
         set(&mut root, "rc.alpha_record", Value::Integer(self.rc.alpha_record as i64));
+        set(&mut root, "pool.target_fps", Value::Float(self.pool.target_fps));
+        set(&mut root, "pool.tiers", Value::String(Tier::ladder_name(&self.pool.tiers)));
+        set(&mut root, "pool.epoch_frames", Value::Integer(self.pool.epoch_frames as i64));
+        set(&mut root, "pool.reduced_fraction", Value::Float(self.pool.reduced_fraction));
         minitoml::serialize(&root)
     }
 
@@ -470,6 +583,44 @@ mod tests {
         assert!(c.apply_override("nonsense").is_err());
         assert!(c.apply_override("does.not.exist=1").is_err());
         assert!(c.apply_override("rc.alpha_record=99").is_err());
+    }
+
+    #[test]
+    fn pool_section_roundtrips_and_validates() {
+        let mut c = LuminaConfig::quick_test();
+        assert_eq!(c.pool.target_fps, 0.0);
+        assert_eq!(c.pool.tiers, vec![Tier::Full, Tier::Reduced, Tier::Half]);
+        c.pool.target_fps = 45.0;
+        c.pool.tiers = vec![Tier::Full, Tier::Half];
+        c.pool.epoch_frames = 3;
+        c.pool.reduced_fraction = 0.25;
+        let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.pool.target_fps, 45.0);
+        assert_eq!(back.pool.tiers, vec![Tier::Full, Tier::Half]);
+        assert_eq!(back.pool.epoch_frames, 3);
+        assert_eq!(back.pool.reduced_fraction, 0.25);
+
+        let mut c = LuminaConfig::quick_test();
+        c.apply_override("pool.target_fps=60").unwrap();
+        assert_eq!(c.pool.target_fps, 60.0);
+        c.apply_override("pool.tiers=full,half").unwrap();
+        assert_eq!(c.pool.tiers, vec![Tier::Full, Tier::Half]);
+        assert!(c.apply_override("pool.reduced_fraction=1.5").is_err());
+        assert!(c.apply_override("pool.epoch_frames=0").is_err());
+        assert!(c.apply_override("pool.epoch_frames=-1").is_err());
+        assert!(c.apply_override("pool.tiers=full,bogus").is_err());
+    }
+
+    #[test]
+    fn tier_name_roundtrip() {
+        for t in [Tier::Full, Tier::Reduced, Tier::Half] {
+            assert_eq!(Tier::parse(t.label()).unwrap(), t);
+        }
+        assert_eq!(
+            Tier::parse_ladder("full, reduced ,half").unwrap(),
+            vec![Tier::Full, Tier::Reduced, Tier::Half]
+        );
+        assert!(Tier::parse_ladder("").is_err());
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! CostModel-driven admission control for tiered multi-session serving.
+//!
+//! The controller answers one question per planning epoch: *which tier
+//! should each session serve so the modeled device delivers a frame to
+//! every session at the pool's target rate?* It prices each session's
+//! most recent measured [`FrameWorkload`] through the existing
+//! [`crate::sim::cost`] seams — re-scaled per candidate tier by
+//! [`FrameWorkload::tier_estimate`] — and walks sessions down the tier
+//! ladder, lowest priority first, until the mix fits the frame-time
+//! budget. When even the all-lowest-tier mix cannot fit, admission is
+//! refused with a clear error instead of silently missing the target.
+//!
+//! The capacity model is time-slicing: one modeled device renders every
+//! session's frame each display interval, so a pool sustains
+//! `target_fps` iff the per-frame costs sum to at most
+//! `1 / target_fps` seconds (minus a safety headroom that absorbs
+//! estimator error).
+//!
+//! Everything here is deterministic — float arithmetic over
+//! deterministic workloads, no clocks, no randomness — so planned tier
+//! sequences are bitwise thread-count-invariant like the rest of the
+//! pipeline (`tests/admission.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{HardwareVariant, LuminaConfig, Tier};
+use crate::coordinator::cost_models_for;
+use crate::pipeline::stage::FrameWorkload;
+
+/// Fraction of the frame-time budget held back from the planner to
+/// absorb tier-estimate error (the estimates are conservative, but the
+/// controller's promise — "the pool holds the target" — should not
+/// hinge on that).
+pub const ADMISSION_HEADROOM: f64 = 0.15;
+
+/// One session's input to a planning round.
+pub struct SessionDemand {
+    /// Most recent measured workload (under `tier`).
+    pub workload: FrameWorkload,
+    /// Tier the workload was measured under.
+    pub tier: Tier,
+    /// Hardware variant whose cost models price this session.
+    pub variant: HardwareVariant,
+    /// Whether the session can serve the half-res tier — false for the
+    /// `ds2-gpu` variant (already half) and for odd camera dimensions
+    /// (see `Coordinator::tier_servable`). The planner must never
+    /// assign a tier the session's `set_tier` would reject.
+    pub half_capable: bool,
+    /// Higher = demoted later.
+    pub priority: f64,
+}
+
+impl SessionDemand {
+    /// Whether the planner may put this session on `tier`.
+    pub fn supports(&self, tier: Tier) -> bool {
+        tier != Tier::Half || self.half_capable
+    }
+}
+
+/// The outcome of a planning round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierPlan {
+    /// Planned tier per session, in session order.
+    pub tiers: Vec<Tier>,
+    /// Predicted summed per-frame device time for the mix (s).
+    pub predicted_time_s: f64,
+    /// Frame-time budget the mix was fitted to (headroom included, s).
+    pub budget_s: f64,
+}
+
+impl TierPlan {
+    /// Pool rate the planned mix is predicted to sustain.
+    pub fn predicted_pool_fps(&self) -> f64 {
+        if self.predicted_time_s > 0.0 {
+            1.0 / self.predicted_time_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Price one workload through a variant's cost-model seams: frontend +
+/// rasterization + fixed per-frame overhead, in modeled seconds.
+pub fn price_workload(w: &FrameWorkload, variant: HardwareVariant) -> f64 {
+    let (frontend_cost, mut raster_cost) = cost_models_for(variant);
+    let (front_s, _front_j) = frontend_cost.frontend_cost(w);
+    let raster = raster_cost.raster_cost(w);
+    front_s + raster.time_s + raster_cost.overhead_s()
+}
+
+/// Picks the cheapest tier mix (best quality first) that holds a
+/// per-pool simulated-FPS target.
+pub struct AdmissionController {
+    target_fps: f64,
+    ladder: Vec<Tier>,
+    reduced_fraction: f64,
+}
+
+impl AdmissionController {
+    /// `ladder` is quality-ordered, best first; demotion walks down it.
+    pub fn new(target_fps: f64, ladder: Vec<Tier>, reduced_fraction: f64) -> Result<Self> {
+        ensure!(
+            target_fps > 0.0 && target_fps.is_finite(),
+            "admission target must be a positive fps, got {target_fps}"
+        );
+        ensure!(!ladder.is_empty(), "tier ladder is empty");
+        ensure!(
+            reduced_fraction > 0.0 && reduced_fraction <= 1.0,
+            "reduced fraction must be in (0, 1], got {reduced_fraction}"
+        );
+        Ok(AdmissionController { target_fps, ladder, reduced_fraction })
+    }
+
+    /// Build from the `[pool]` config block (`pool.target_fps` must be
+    /// set).
+    pub fn from_config(cfg: &LuminaConfig) -> Result<Self> {
+        Self::new(cfg.pool.target_fps, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+    }
+
+    pub fn target_fps(&self) -> f64 {
+        self.target_fps
+    }
+
+    pub fn ladder(&self) -> &[Tier] {
+        &self.ladder
+    }
+
+    /// Plan a tier per session. Starts everyone at the ladder's best
+    /// tier and demotes one step at a time until the priced mix fits
+    /// the budget, spreading the pain: among demotable sessions it
+    /// picks the least-demoted first, breaking ties toward lower
+    /// priority and then toward the later session. (Level-first order
+    /// walks through every "prefix of sessions one rung down" mix, so
+    /// a feasible mix is never skipped even when a lower rung prices
+    /// higher than the one above it.) Re-planning each epoch restarts
+    /// from all-best, so sessions promote back up automatically
+    /// whenever headroom appears. Refuses admission when no mix fits.
+    pub fn plan(&self, demands: &[SessionDemand]) -> Result<TierPlan> {
+        ensure!(!demands.is_empty(), "cannot plan an empty pool");
+        let budget_s = (1.0 - ADMISSION_HEADROOM) / self.target_fps;
+
+        // Per-session rungs: the ladder tiers the session can actually
+        // serve, each priced by re-scaling the measured workload from
+        // the tier it was measured under.
+        let mut rungs: Vec<Vec<(Tier, f64)>> = Vec::with_capacity(demands.len());
+        for d in demands {
+            let r: Vec<(Tier, f64)> = self
+                .ladder
+                .iter()
+                .copied()
+                .filter(|&t| d.supports(t))
+                .map(|t| {
+                    let est = d.workload.tier_estimate(d.tier, t, self.reduced_fraction);
+                    (t, price_workload(&est, d.variant))
+                })
+                .collect();
+            ensure!(
+                !r.is_empty(),
+                "no tier in the ladder [{}] is servable by a {} session",
+                Tier::ladder_name(&self.ladder),
+                d.variant.label()
+            );
+            rungs.push(r);
+        }
+
+        let mut level = vec![0usize; demands.len()];
+        let mut total: f64 = rungs.iter().map(|r| r[0].1).sum();
+        while total > budget_s {
+            // Least-demoted session first; among those, lowest priority.
+            let mut pick: Option<usize> = None;
+            for (i, d) in demands.iter().enumerate() {
+                if level[i] + 1 >= rungs[i].len() {
+                    continue;
+                }
+                let better = match pick {
+                    None => true,
+                    Some(p) => {
+                        level[i] < level[p]
+                            || (level[i] == level[p] && d.priority <= demands[p].priority)
+                    }
+                };
+                if better {
+                    pick = Some(i);
+                }
+            }
+            let Some(i) = pick else {
+                bail!(
+                    "admission refused: {} sessions cannot sustain {:.1} pool fps even at \
+                     the lowest tier (predicted {:.1} fps, budget {:.3} ms/frame, \
+                     predicted {:.3} ms/frame)",
+                    demands.len(),
+                    self.target_fps,
+                    1.0 / total,
+                    budget_s * 1e3,
+                    total * 1e3
+                );
+            };
+            total -= rungs[i][level[i]].1;
+            level[i] += 1;
+            total += rungs[i][level[i]].1;
+        }
+
+        let tiers = level.iter().zip(&rungs).map(|(&l, r)| r[l].0).collect();
+        Ok(TierPlan { tiers, predicted_time_s: total, budget_s })
+    }
+
+    /// Each session's lowest servable rung — the best-effort fallback a
+    /// pool pins admitted viewers to when a mid-run re-plan cannot fit.
+    pub fn floor_tiers(&self, demands: &[SessionDemand]) -> Vec<Tier> {
+        demands
+            .iter()
+            .map(|d| {
+                self.ladder
+                    .iter()
+                    .rev()
+                    .copied()
+                    .find(|&t| d.supports(t))
+                    .unwrap_or(Tier::Full)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lumina::rc::CacheStats;
+
+    fn demand(px: usize, priority: f64) -> SessionDemand {
+        let side = (px as f64).sqrt() as usize;
+        let tiles = side.div_ceil(16);
+        SessionDemand {
+            workload: FrameWorkload {
+                frame: 0,
+                width: side,
+                height: side,
+                tile_size: 16,
+                tiles_x: tiles,
+                tiles_y: tiles,
+                tile_list_lens: vec![100; tiles * tiles],
+                scene_gaussians: 10_000,
+                sorted: true,
+                sort_entries: 50_000,
+                refreshed_gaussians: 0,
+                consumed: vec![100; side * side],
+                significant: vec![10; side * side],
+                uncached: None,
+                cache_outcomes: None,
+                cache: CacheStats::default(),
+                swap_bytes: 0,
+            },
+            tier: Tier::Full,
+            variant: HardwareVariant::Gpu,
+            half_capable: true,
+            priority,
+        }
+    }
+
+    fn ladder() -> Vec<Tier> {
+        vec![Tier::Full, Tier::Reduced, Tier::Half]
+    }
+
+    #[test]
+    fn generous_target_keeps_everyone_full() {
+        let one = price_workload(&demand(128 * 128, 0.0).workload, HardwareVariant::Gpu);
+        // Target low enough that 3 full sessions fit with headroom.
+        let target = 0.5 * (1.0 - ADMISSION_HEADROOM) / (3.0 * one);
+        let ctrl = AdmissionController::new(target, ladder(), 0.5).unwrap();
+        let demands = vec![demand(128 * 128, 3.0), demand(128 * 128, 2.0), demand(128 * 128, 1.0)];
+        let plan = ctrl.plan(&demands).unwrap();
+        assert_eq!(plan.tiers, vec![Tier::Full; 3]);
+        assert!(plan.predicted_pool_fps() >= target);
+    }
+
+    #[test]
+    fn pressure_demotes_lowest_priority_first() {
+        let one = price_workload(&demand(128 * 128, 0.0).workload, HardwareVariant::Gpu);
+        // Budget fits ~2.5 full-tier sessions: someone must drop.
+        let target = (1.0 - ADMISSION_HEADROOM) / (2.5 * one);
+        let ctrl = AdmissionController::new(target, ladder(), 0.5).unwrap();
+        let demands = vec![demand(128 * 128, 3.0), demand(128 * 128, 2.0), demand(128 * 128, 1.0)];
+        let plan = ctrl.plan(&demands).unwrap();
+        assert_eq!(plan.tiers[0], Tier::Full, "highest priority demoted first");
+        assert_ne!(plan.tiers[2], Tier::Full, "lowest priority kept full under pressure");
+        assert!(plan.predicted_time_s <= plan.budget_s);
+    }
+
+    #[test]
+    fn impossible_target_refuses_admission() {
+        let ctrl = AdmissionController::new(1e9, ladder(), 0.5).unwrap();
+        let demands = vec![demand(128 * 128, 1.0), demand(128 * 128, 0.0)];
+        let err = ctrl.plan(&demands).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("admission refused"), "unhelpful refusal: {msg}");
+    }
+
+    #[test]
+    fn demoted_tiers_price_cheaper() {
+        let d = demand(128 * 128, 0.0);
+        let full = price_workload(
+            &d.workload.tier_estimate(Tier::Full, Tier::Full, 0.5),
+            d.variant,
+        );
+        let reduced = price_workload(
+            &d.workload.tier_estimate(Tier::Full, Tier::Reduced, 0.5),
+            d.variant,
+        );
+        let half = price_workload(
+            &d.workload.tier_estimate(Tier::Full, Tier::Half, 0.5),
+            d.variant,
+        );
+        assert!(reduced < full, "reduced {reduced} !< full {full}");
+        assert!(half < full, "half {half} !< full {full}");
+    }
+
+    #[test]
+    fn half_incapable_sessions_never_planned_onto_the_half_rung() {
+        // ds2-gpu (already half) and odd-dimension sessions both report
+        // half_capable = false; the planner must respect it.
+        let mut d = demand(64 * 64, 0.0);
+        d.variant = HardwareVariant::Ds2Gpu;
+        d.half_capable = false;
+        let one = price_workload(&d.workload, HardwareVariant::Ds2Gpu);
+        // Tight enough to force demotion off full: the only legal rung
+        // below is reduced — never half (set_tier would reject it).
+        let target = (1.0 - ADMISSION_HEADROOM) / (0.8 * one);
+        let ctrl = AdmissionController::new(target, ladder(), 0.5).unwrap();
+        let plan = ctrl.plan(&[d]).unwrap();
+        assert_eq!(plan.tiers, vec![Tier::Reduced]);
+        // And the best-effort floor is reduced, not half.
+        let d2 = SessionDemand { half_capable: false, ..demand(64 * 64, 0.0) };
+        assert_eq!(ctrl.floor_tiers(&[d2]), vec![Tier::Reduced]);
+    }
+
+    #[test]
+    fn controller_validates_inputs() {
+        assert!(AdmissionController::new(0.0, ladder(), 0.5).is_err());
+        assert!(AdmissionController::new(30.0, vec![], 0.5).is_err());
+        assert!(AdmissionController::new(30.0, ladder(), 0.0).is_err());
+        let ctrl = AdmissionController::new(30.0, ladder(), 0.5).unwrap();
+        assert!(ctrl.plan(&[]).is_err());
+    }
+}

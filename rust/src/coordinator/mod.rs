@@ -20,6 +20,7 @@
 //! [`session::SessionPool`] runs many coordinators — independent viewer
 //! sessions over one shared `Arc<GaussianScene>` — in parallel.
 
+pub mod admission;
 pub mod report;
 pub mod session;
 
@@ -29,7 +30,7 @@ use anyhow::{Context, Result};
 
 use crate::camera::trajectory::{generate, Trajectory};
 use crate::camera::{Intrinsics, Pose};
-use crate::config::{HardwareVariant, LuminaConfig};
+use crate::config::{HardwareVariant, LuminaConfig, Tier};
 use crate::constants::TILE;
 use crate::lumina::ds2::{half_intrinsics, Ds2Raster};
 use crate::lumina::rc::{CachedRaster, GroupedRadianceCache};
@@ -46,6 +47,7 @@ use crate::sim::gpu::{GpuModel, GpuStageTimes};
 use crate::sim::gscore::GsCoreModel;
 use crate::sim::lumincore::LuminCoreSim;
 
+pub use admission::{AdmissionController, SessionDemand, TierPlan};
 pub use report::{FrameReport, RunReport};
 pub use session::{PoolReport, SessionPool};
 
@@ -56,8 +58,8 @@ pub struct Coordinator {
     pub scene: Arc<GaussianScene>,
     /// Output intrinsics (what the viewer sees).
     pub intr: Intrinsics,
-    /// Pipeline intrinsics — differs from `intr` only for DS-2, whose
-    /// render pass runs at half resolution.
+    /// Pipeline intrinsics — differs from `intr` for DS-2 and for the
+    /// half-res serving tier, whose render passes run at half resolution.
     render_intr: Intrinsics,
     pub trajectory: Trajectory,
     frontend: FrontendStage,
@@ -65,6 +67,21 @@ pub struct Coordinator {
     frontend_cost: Box<dyn FrontendCostModel>,
     raster_cost: Box<dyn CostModel>,
     frame_idx: usize,
+    /// Serving tier (LoD ladder); swapped mid-run by [`Self::set_tier`].
+    tier: Tier,
+    /// Reduced-Gaussian subsample served instead of `scene` on the
+    /// reduced tier (shared across a pool's reduced sessions).
+    lod_scene: Option<Arc<GaussianScene>>,
+    /// The most recent frame's measured workload — what the admission
+    /// controller prices through the cost-model seams.
+    last_workload: Option<FrameWorkload>,
+    /// Admission priority: higher keeps quality longer under pressure
+    /// (pools default this to first-admitted-highest).
+    pub priority: f64,
+    #[cfg(test)]
+    pub(crate) fail_at_frame: Option<usize>,
+    #[cfg(test)]
+    pub(crate) panic_at_frame: Option<usize>,
 }
 
 /// Everything one frame produced.
@@ -74,8 +91,9 @@ pub struct FrameResult {
 }
 
 /// Resolve a variant into its (frontend, raster) cost-model pair — the
-/// one place `HardwareVariant` meets hardware models.
-fn cost_models_for(
+/// one place `HardwareVariant` meets hardware models. Also used by the
+/// admission controller to price tier estimates.
+pub(crate) fn cost_models_for(
     variant: HardwareVariant,
 ) -> (Box<dyn FrontendCostModel>, Box<dyn CostModel>) {
     use HardwareVariant::*;
@@ -91,6 +109,82 @@ fn cost_models_for(
         Gpu | S2Gpu | RcGpu | Ds2Gpu => Box::new(GpuModel::xavier_volta()),
     };
     (frontend, raster)
+}
+
+/// The pipeline resolution implied by a config + serving tier: DS-2 and
+/// the half-res tier run the render pass at half the session resolution
+/// (the 2x upsample must land exactly back on it).
+fn tier_intrinsics(cfg: &LuminaConfig, tier: Tier) -> Result<Intrinsics> {
+    let intr = cfg.intrinsics();
+    let base = if cfg.variant == HardwareVariant::Ds2Gpu {
+        anyhow::ensure!(
+            intr.width % 2 == 0 && intr.height % 2 == 0 && intr.width >= 2 && intr.height >= 2,
+            "ds2-gpu needs even camera dimensions, got {}x{}",
+            intr.width,
+            intr.height
+        );
+        half_intrinsics(&intr)
+    } else {
+        intr
+    };
+    if tier == Tier::Half {
+        anyhow::ensure!(
+            cfg.variant != HardwareVariant::Ds2Gpu,
+            "the ds2-gpu variant already renders at half resolution; \
+             it cannot be demoted to the half-res tier"
+        );
+        anyhow::ensure!(
+            base.width % 2 == 0 && base.height % 2 == 0 && base.width >= 2 && base.height >= 2,
+            "the half-res tier needs even camera dimensions, got {}x{}",
+            base.width,
+            base.height
+        );
+        return Ok(half_intrinsics(&base));
+    }
+    Ok(base)
+}
+
+/// Compose the frontend stage for a config (fresh cross-frame state).
+fn compose_frontend(cfg: &LuminaConfig) -> FrontendStage {
+    if cfg.variant.uses_s2() {
+        FrontendStage::with_s2(S2Scheduler::new(
+            cfg.s2.sharing_window,
+            cfg.s2.expanded_margin,
+            TILE,
+            cfg.near,
+            cfg.far,
+        ))
+    } else {
+        FrontendStage::plain(cfg.near, cfg.far, TILE)
+    }
+}
+
+/// Compose the raster backend for a config + pipeline resolution +
+/// serving tier. The half-res tier wraps the variant's own backend in
+/// [`Ds2Raster`], so cached variants keep their cache (sized for the
+/// half-res tile grid) while demoted.
+fn compose_raster(
+    cfg: &LuminaConfig,
+    render_intr: &Intrinsics,
+    record_uncached: bool,
+    tier: Tier,
+) -> Box<dyn RasterBackend> {
+    let (tiles_x, tiles_y) = render_intr.tiles(TILE);
+    let base: Box<dyn RasterBackend> = if cfg.variant.uses_rc() {
+        Box::new(CachedRaster::new(
+            GroupedRadianceCache::new(tiles_x, tiles_y, cfg.rc.alpha_record),
+            record_uncached,
+        ))
+    } else if cfg.variant == HardwareVariant::Ds2Gpu {
+        Box::new(Ds2Raster::new())
+    } else {
+        Box::new(PlainRaster)
+    };
+    if tier == Tier::Half {
+        Box::new(Ds2Raster::wrap(base))
+    } else {
+        base
+    }
 }
 
 impl Coordinator {
@@ -110,51 +204,18 @@ impl Coordinator {
     /// one `Arc<GaussianScene>` without duplicating it.
     pub fn with_scene(cfg: LuminaConfig, scene: Arc<GaussianScene>) -> Result<Self> {
         let intr = cfg.intrinsics();
-        let render_intr = if cfg.variant == HardwareVariant::Ds2Gpu {
-            // The 2x upsample must land exactly back on the session
-            // resolution, or every quality comparison would size-mismatch.
-            anyhow::ensure!(
-                intr.width % 2 == 0 && intr.height % 2 == 0 && intr.width >= 2 && intr.height >= 2,
-                "ds2-gpu needs even camera dimensions, got {}x{}",
-                intr.width,
-                intr.height
-            );
-            half_intrinsics(&intr)
-        } else {
-            intr
-        };
+        let render_intr = tier_intrinsics(&cfg, Tier::Full)?;
         let trajectory = generate(
             cfg.camera.trajectory,
             cfg.camera.seed,
             cfg.camera.frames,
             cfg.scene.class.extent(),
         );
-        let (tiles_x, tiles_y) = render_intr.tiles(TILE);
 
-        let frontend = if cfg.variant.uses_s2() {
-            FrontendStage::with_s2(S2Scheduler::new(
-                cfg.s2.sharing_window,
-                cfg.s2.expanded_margin,
-                TILE,
-                cfg.near,
-                cfg.far,
-            ))
-        } else {
-            FrontendStage::plain(cfg.near, cfg.far, TILE)
-        };
-
+        let frontend = compose_frontend(&cfg);
         let (frontend_cost, raster_cost) = cost_models_for(cfg.variant);
-
-        let raster: Box<dyn RasterBackend> = if cfg.variant.uses_rc() {
-            Box::new(CachedRaster::new(
-                GroupedRadianceCache::new(tiles_x, tiles_y, cfg.rc.alpha_record),
-                raster_cost.needs_uncached_stats(),
-            ))
-        } else if cfg.variant == HardwareVariant::Ds2Gpu {
-            Box::new(Ds2Raster::new())
-        } else {
-            Box::new(PlainRaster)
-        };
+        let raster =
+            compose_raster(&cfg, &render_intr, raster_cost.needs_uncached_stats(), Tier::Full);
 
         Ok(Coordinator {
             cfg,
@@ -167,7 +228,93 @@ impl Coordinator {
             frontend_cost,
             raster_cost,
             frame_idx: 0,
+            tier: Tier::Full,
+            lod_scene: None,
+            last_workload: None,
+            priority: 0.0,
+            #[cfg(test)]
+            fail_at_frame: None,
+            #[cfg(test)]
+            panic_at_frame: None,
         })
+    }
+
+    /// Current serving tier.
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Whether this session can serve a tier: `ds2-gpu` cannot halve
+    /// again, and odd camera dimensions cannot halve at all. The
+    /// admission planner consults this so it never assigns a tier
+    /// [`Self::set_tier`] would reject.
+    pub fn tier_servable(&self, tier: Tier) -> bool {
+        tier_intrinsics(&self.cfg, tier).is_ok()
+    }
+
+    /// The most recent frame's measured workload, if any frame (or
+    /// probe) has rendered yet.
+    pub fn last_workload(&self) -> Option<&FrameWorkload> {
+        self.last_workload.as_ref()
+    }
+
+    /// Switch the session to a serving tier, rebuilding the stages the
+    /// tier parameterizes: pipeline resolution, raster backend (cache
+    /// geometry is tile-grid-sized), the frontend's cross-frame state
+    /// (a stale speculative sort would reference the old tile grid),
+    /// and the reduced-Gaussian LoD scene. A no-op when the tier is
+    /// unchanged; `force_rebuild` resets the stages even then.
+    pub fn set_tier(&mut self, tier: Tier) -> Result<()> {
+        self.set_tier_with(tier, None, false)
+    }
+
+    /// [`Self::set_tier`] with an optional pre-built reduced-Gaussian
+    /// scene (pools share one subsample across their reduced sessions
+    /// instead of cutting it per session).
+    pub fn set_tier_with(
+        &mut self,
+        tier: Tier,
+        reduced: Option<Arc<GaussianScene>>,
+        force_rebuild: bool,
+    ) -> Result<()> {
+        if tier == self.tier && !force_rebuild {
+            return Ok(());
+        }
+        let render_intr = tier_intrinsics(&self.cfg, tier)?;
+        self.lod_scene = if tier == Tier::Reduced {
+            Some(match reduced {
+                Some(s) => s,
+                None => Arc::new(self.scene.reduced_prefix(self.cfg.pool.reduced_fraction)),
+            })
+        } else {
+            None
+        };
+        self.render_intr = render_intr;
+        self.frontend.reset();
+        self.raster = compose_raster(
+            &self.cfg,
+            &self.render_intr,
+            self.raster_cost.needs_uncached_stats(),
+            tier,
+        );
+        self.tier = tier;
+        Ok(())
+    }
+
+    /// Render the *current* pose once to measure a [`FrameWorkload`]
+    /// without advancing the trajectory — how a pool prices sessions
+    /// before any frame has been served. Mutates per-frame stage state
+    /// (deterministically); callers that need a pristine session reset
+    /// tiers afterwards with `force_rebuild`.
+    pub fn probe_workload(&mut self) -> Result<FrameWorkload> {
+        let pose = *self
+            .trajectory
+            .poses
+            .get(self.frame_idx)
+            .context("trajectory exhausted")?;
+        let idx = self.frame_idx;
+        self.render_at(idx, &pose)?;
+        self.last_workload.clone().context("probe recorded no workload")
     }
 
     /// Mutable access to the scene. Panics when the scene `Arc` is
@@ -201,6 +348,15 @@ impl Coordinator {
 
     /// Render the next frame under the configured variant.
     pub fn step(&mut self) -> Result<FrameResult> {
+        #[cfg(test)]
+        {
+            if self.fail_at_frame == Some(self.frame_idx) {
+                anyhow::bail!("injected session failure at frame {}", self.frame_idx);
+            }
+            if self.panic_at_frame == Some(self.frame_idx) {
+                panic!("injected session panic at frame {}", self.frame_idx);
+            }
+        }
         let pose = *self
             .trajectory
             .poses
@@ -230,11 +386,18 @@ impl Coordinator {
     /// cost models -> report. Variant-free by construction.
     fn render_at(&mut self, idx: usize, pose: &Pose) -> Result<FrameResult> {
         let (w, h) = (self.render_intr.width, self.render_intr.height);
+        // The reduced tier serves the LoD subsample instead of the full
+        // shared scene (cheap Arc clone; sidesteps a field-borrow clash
+        // with the mutable frontend).
+        let scene = match &self.lod_scene {
+            Some(s) => s.clone(),
+            None => self.scene.clone(),
+        };
 
         // --- Functional stages ---------------------------------------
-        let fo = self.frontend.run(&self.scene, pose, &self.render_intr);
+        let fo = self.frontend.run(&scene, pose, &self.render_intr);
         let frame = self.raster.render(&fo.projected, &fo.bins, w, h);
-        let workload = FrameWorkload::from_stages(idx, self.scene.len(), &fo, frame.work);
+        let workload = FrameWorkload::from_stages(idx, scene.len(), &fo, frame.work);
         let image = self.raster.finalize(frame.image);
 
         // --- Cost models ---------------------------------------------
@@ -262,7 +425,9 @@ impl Coordinator {
             pe_utilization: raster.pe_utilization,
             mean_iterated: workload.mean_iterated(),
             psnr_vs_ref: None,
+            tier: self.tier.label(),
         };
+        self.last_workload = Some(workload);
         Ok(FrameResult { image, report })
     }
 
@@ -398,6 +563,90 @@ mod tests {
                 "raster delta {delta} != rc overhead {overhead}"
             );
         }
+    }
+
+    #[test]
+    fn half_tier_halves_pipeline_keeps_output_resolution() {
+        let mut base = Coordinator::new(small_cfg(HardwareVariant::Gpu)).unwrap();
+        let fb = base.step().unwrap();
+        let mut c = Coordinator::new(small_cfg(HardwareVariant::Gpu)).unwrap();
+        c.set_tier(Tier::Half).unwrap();
+        assert_eq!(c.tier(), Tier::Half);
+        let f = c.step().unwrap();
+        // Viewer still sees session resolution; pipeline ran at half.
+        assert_eq!(f.image.data.len(), 128 * 128);
+        assert_eq!(f.report.tier, "half");
+        assert!(f.report.raster_s < fb.report.raster_s, "half tier must cut raster cost");
+        let w = c.last_workload().unwrap();
+        assert_eq!((w.width, w.height), (64, 64));
+    }
+
+    #[test]
+    fn reduced_tier_serves_fewer_gaussians() {
+        let mut c = Coordinator::new(small_cfg(HardwareVariant::Gpu)).unwrap();
+        c.set_tier(Tier::Reduced).unwrap();
+        let f = c.step().unwrap();
+        assert_eq!(f.report.tier, "reduced");
+        let w = c.last_workload().unwrap();
+        assert_eq!(w.scene_gaussians, 2500, "default fraction 0.5 of 5000");
+        // Output resolution is untouched.
+        assert_eq!(f.image.data.len(), 128 * 128);
+    }
+
+    #[test]
+    fn tier_swaps_mid_run_and_promotes_back() {
+        // Cached variant: tier changes rebuild the cache geometry.
+        let mut c = Coordinator::new(small_cfg(HardwareVariant::Lumina)).unwrap();
+        let f0 = c.step().unwrap();
+        assert_eq!(f0.report.tier, "full");
+        c.set_tier(Tier::Half).unwrap();
+        let f1 = c.step().unwrap();
+        assert_eq!(f1.report.tier, "half");
+        assert_eq!(f1.image.data.len(), 128 * 128);
+        c.set_tier(Tier::Full).unwrap();
+        let f2 = c.step().unwrap();
+        assert_eq!(f2.report.tier, "full");
+        assert_eq!(f2.image.data.len(), 128 * 128);
+        let mut r = RunReport::new("tiers");
+        for f in [f0.report, f1.report, f2.report] {
+            r.push(f);
+        }
+        assert_eq!(r.tier_sequence(), vec!["full", "half", "full"]);
+    }
+
+    #[test]
+    fn ds2_variant_refuses_half_tier() {
+        let mut c = Coordinator::new(small_cfg(HardwareVariant::Ds2Gpu)).unwrap();
+        let err = c.set_tier(Tier::Half);
+        assert!(err.is_err(), "ds2-gpu cannot halve twice");
+        // Reduced is still allowed.
+        c.set_tier(Tier::Reduced).unwrap();
+        let f = c.step().unwrap();
+        assert_eq!(f.image.data.len(), 128 * 128);
+    }
+
+    #[test]
+    fn tier_servable_reflects_dimension_and_variant_limits() {
+        let mut cfg = small_cfg(HardwareVariant::Gpu);
+        cfg.camera.width = 127; // odd: the half-res tier cannot land back
+        let c = Coordinator::new(cfg).unwrap();
+        assert!(c.tier_servable(Tier::Full));
+        assert!(c.tier_servable(Tier::Reduced));
+        assert!(!c.tier_servable(Tier::Half));
+        let c = Coordinator::new(small_cfg(HardwareVariant::Ds2Gpu)).unwrap();
+        assert!(!c.tier_servable(Tier::Half), "ds2-gpu cannot halve twice");
+        let c = Coordinator::new(small_cfg(HardwareVariant::Gpu)).unwrap();
+        assert!(c.tier_servable(Tier::Half));
+    }
+
+    #[test]
+    fn probe_measures_without_consuming() {
+        let mut c = Coordinator::new(small_cfg(HardwareVariant::Gpu)).unwrap();
+        assert!(c.last_workload().is_none());
+        let w = c.probe_workload().unwrap();
+        assert_eq!(c.remaining(), 8, "probe must not consume the trajectory");
+        assert!(w.mean_iterated() > 0.0);
+        assert!(c.last_workload().is_some());
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct FrameReport {
     pub mean_iterated: f64,
     /// Quality vs the exact pipeline (when measured).
     pub psnr_vs_ref: Option<f64>,
+    /// Serving tier the frame was rendered under (`"full"` outside
+    /// tiered pools). Part of `PartialEq`, so the determinism tests
+    /// also pin mid-run promotion/demotion sequences.
+    pub tier: &'static str,
 }
 
 /// A whole run.
@@ -80,6 +84,19 @@ impl RunReport {
         s.hit_rate()
     }
 
+    /// Distinct serving tiers in frame order (one entry per change) —
+    /// `["full"]` for an untiered run, e.g. `["full", "half"]` after a
+    /// mid-run demotion.
+    pub fn tier_sequence(&self) -> Vec<&'static str> {
+        let mut seq: Vec<&'static str> = Vec::new();
+        for f in &self.frames {
+            if seq.last() != Some(&f.tier) {
+                seq.push(f.tier);
+            }
+        }
+        seq
+    }
+
     /// Mean PSNR over frames that measured quality.
     pub fn mean_psnr(&self) -> Option<f64> {
         let vals: Vec<f64> = self.frames.iter().filter_map(|f| f.psnr_vs_ref).collect();
@@ -124,6 +141,7 @@ mod tests {
             pe_utilization: 1.0,
             mean_iterated: 100.0,
             psnr_vs_ref: Some(30.0),
+            tier: "full",
         }
     }
 

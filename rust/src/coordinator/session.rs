@@ -1,5 +1,6 @@
 //! Multi-session serving: N independent viewer sessions over one shared
-//! scene, stepped in parallel.
+//! scene, stepped in parallel — optionally under tiered admission
+//! control.
 //!
 //! Each session is a full [`Coordinator`] — its own trajectory (camera
 //! seed offset per viewer), its own S² scheduler state, its own radiance
@@ -9,16 +10,29 @@
 //! deterministic given its config, so the pool's output is independent
 //! of `LUMINA_THREADS` (enforced by `tests/sessions.rs`).
 //!
-//! This is the first multi-user serving scenario on the stage-graph
-//! frame loop; ROADMAP "Open items" lists the follow-ons it unlocks
-//! (batched cross-session frontends, async pipelining, LoD tiers).
+//! The machine's thread budget is split between the two nesting levels
+//! with no stranded workers ([`par::split_budget`]) and applied per
+//! worker thread through an RAII [`par::ThreadBudgetGuard`], so the
+//! process-global budget is never mutated — a panicking session cannot
+//! leak a clamped thread count to the rest of the process.
+//!
+//! [`SessionPool::serve`] adds the capacity-managed mode: an
+//! [`AdmissionController`] prices every session's recent
+//! [`crate::pipeline::stage::FrameWorkload`] through the cost-model
+//! seams and assigns each viewer a serving [`Tier`] (full / reduced
+//! Gaussians / half resolution), re-planning every `pool.epoch_frames`
+//! frames — demoting low-priority viewers under pressure, promoting
+//! them back on headroom, and refusing admission when no mix can hold
+//! the pool's simulated-FPS target.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::LuminaConfig;
+use crate::config::{LuminaConfig, Tier};
+use crate::coordinator::admission::{AdmissionController, SessionDemand};
+use crate::coordinator::report::FrameReport;
 use crate::coordinator::{Coordinator, RunReport};
 use crate::scene::synth::synth_scene;
 use crate::scene::GaussianScene;
@@ -27,6 +41,9 @@ use crate::util::par;
 /// A pool of independent viewer sessions over one shared scene.
 pub struct SessionPool {
     sessions: Vec<Coordinator>,
+    /// Lazily cut reduced-Gaussian subsample, shared by every session
+    /// demoted to [`Tier::Reduced`] (scene memory paid once per tier).
+    reduced: Option<Arc<GaussianScene>>,
 }
 
 /// Aggregated result of running every session to completion.
@@ -59,6 +76,18 @@ impl PoolReport {
         }
     }
 
+    /// Pool rate under the time-slicing capacity model: the rate at
+    /// which one modeled device delivers a frame to *every* session
+    /// (the quantity the admission controller targets).
+    pub fn pool_fps(&self) -> f64 {
+        let t: f64 = self.sessions.iter().map(|r| r.mean_time_s()).sum();
+        if t > 0.0 {
+            1.0 / t
+        } else {
+            0.0
+        }
+    }
+
     /// Host rendering throughput: functional frames per wall second.
     pub fn host_fps(&self) -> f64 {
         if self.wall_s > 0.0 {
@@ -68,15 +97,21 @@ impl PoolReport {
         }
     }
 
-    /// One-line throughput summary.
+    /// One-line throughput summary. Heterogeneous trajectories (tiered
+    /// pools, mixed configs) report the min-max frame-count range
+    /// rather than pretending every session matched the first.
     pub fn summary(&self) -> String {
+        let lo = self.sessions.iter().map(|r| r.frames.len()).min().unwrap_or(0);
+        let hi = self.sessions.iter().map(|r| r.frames.len()).max().unwrap_or(0);
+        let frames = if lo == hi { format!("{lo}") } else { format!("{lo}-{hi}") };
         format!(
             "pool: {} sessions x {} frames | aggregate {:.1} sim-fps ({:.1}/session) | \
-             host {:.1} fps | wall {:.3} s",
+             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s",
             self.sessions.len(),
-            self.sessions.first().map(|r| r.frames.len()).unwrap_or(0),
+            frames,
             self.aggregate_fps(),
             self.mean_session_fps(),
+            self.pool_fps(),
             self.host_fps(),
             self.wall_s
         )
@@ -96,7 +131,9 @@ impl SessionPool {
         Self::with_scene(base, Arc::new(scene), n)
     }
 
-    /// Build `n` sessions over an already-built shared scene.
+    /// Build `n` sessions over an already-built shared scene. Admission
+    /// priority defaults to first-admitted-highest (session 0 is the
+    /// last demoted).
     pub fn with_scene(
         base: LuminaConfig,
         scene: Arc<GaussianScene>,
@@ -107,10 +144,12 @@ impl SessionPool {
             .map(|i| {
                 let mut cfg = base.clone();
                 cfg.camera.seed = base.camera.seed.wrapping_add(i as u64);
-                Coordinator::with_scene(cfg, scene.clone())
+                let mut coord = Coordinator::with_scene(cfg, scene.clone())?;
+                coord.priority = (n - i) as f64;
+                Ok(coord)
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(SessionPool { sessions })
+        Ok(SessionPool { sessions, reduced: None })
     }
 
     /// Number of sessions.
@@ -127,47 +166,340 @@ impl SessionPool {
         &self.sessions
     }
 
+    /// Mutable session access (tier experiments, priority overrides).
+    pub fn sessions_mut(&mut self) -> &mut [Coordinator] {
+        &mut self.sessions
+    }
+
+    /// Put session `i` on a serving tier, sharing the pool's one
+    /// reduced-Gaussian subsample across demoted sessions.
+    pub fn set_session_tier(&mut self, i: usize, tier: Tier) -> Result<()> {
+        anyhow::ensure!(i < self.sessions.len(), "no session {i}");
+        let reduced =
+            if tier == Tier::Reduced { Some(self.shared_reduced_scene()) } else { None };
+        self.sessions[i].set_tier_with(tier, reduced, false)
+    }
+
+    /// The pool-wide reduced-tier scene (cut lazily, then shared).
+    fn shared_reduced_scene(&mut self) -> Arc<GaussianScene> {
+        if let Some(s) = &self.reduced {
+            return s.clone();
+        }
+        let base = &self.sessions[0];
+        let s = Arc::new(base.scene.reduced_prefix(base.cfg.pool.reduced_fraction));
+        self.reduced = Some(s.clone());
+        s
+    }
+
     /// Run every session to the end of its trajectory, sessions in
     /// parallel (each session's frames stay sequential — S² and RC
     /// state are inherently frame-ordered).
-    ///
-    /// The machine's thread budget is *split* between the two nesting
-    /// levels — `outer` session workers, each of whose pipeline stages
-    /// parallelizes over `total / outer` workers — instead of letting
-    /// every session independently spawn a full complement (which would
-    /// oversubscribe roughly quadratically). Results are thread-count
-    /// invariant, so the cap affects throughput only.
     pub fn run(&mut self) -> Result<PoolReport> {
         let start = Instant::now();
-        let mut work: Vec<(Coordinator, Option<Result<RunReport>>)> =
-            std::mem::take(&mut self.sessions)
-                .into_iter()
-                .map(|c| (c, None))
-                .collect();
-        let total = par::num_threads();
-        let outer = total.min(work.len()).max(1);
-        let inner = (total / outer).max(1);
-        par::set_num_threads(inner);
-        let chunk = work.len().div_ceil(outer);
-        std::thread::scope(|scope| {
-            for slice in work.chunks_mut(chunk) {
-                scope.spawn(move || {
-                    for (coord, slot) in slice.iter_mut() {
-                        *slot = Some(coord.run());
-                    }
-                });
-            }
-        });
-        par::set_num_threads(total);
+        let frames = self.run_parallel(None)?;
         let wall_s = start.elapsed().as_secs_f64();
-        // Restore every session before surfacing any error so the pool
-        // stays intact even when one session fails.
-        let mut results = Vec::with_capacity(work.len());
-        for (coord, slot) in work {
-            self.sessions.push(coord);
-            results.push(slot.expect("session executed"));
+        Ok(self.assemble_report(vec![frames], wall_s))
+    }
+
+    /// Capacity-managed serving: plan tiers from a probe of every
+    /// session, then run the pool in epochs of `pool.epoch_frames`
+    /// frames, re-pricing the sessions' recent workloads and
+    /// re-planning tiers between epochs (promotion on headroom,
+    /// demotion under pressure). Errors — including a refused
+    /// admission — restore the pool.
+    pub fn serve(&mut self, ctrl: &AdmissionController) -> Result<PoolReport> {
+        anyhow::ensure!(!self.sessions.is_empty(), "cannot serve an empty pool");
+        let epoch = self.sessions[0].cfg.pool.epoch_frames.max(1);
+        let start = Instant::now();
+
+        // Probe: render (without consuming) one frame per session so
+        // the controller has a measured workload to price, then apply
+        // the initial plan with a forced rebuild — wiping the probe's
+        // stage-state side effects so served frames start pristine.
+        // Refusal here is fatal: these viewers were not admitted.
+        let (active, demands) = self.probe_active_demands()?;
+        if !demands.is_empty() {
+            match ctrl.plan(&demands) {
+                Ok(plan) => self.apply_tiers_at(&active, &plan.tiers, true)?,
+                Err(refusal) => {
+                    // Wipe the probe's stage-state side effects before
+                    // surfacing the refusal, so the un-admitted pool
+                    // renders byte-identically to one that never
+                    // attempted serving.
+                    let current: Vec<Tier> =
+                        active.iter().map(|&i| self.sessions[i].tier()).collect();
+                    self.apply_tiers_at(&active, &current, true)?;
+                    return Err(refusal);
+                }
+            }
         }
-        let sessions = results.into_iter().collect::<Result<Vec<_>>>()?;
-        Ok(PoolReport { sessions, wall_s })
+
+        let mut epochs: Vec<Vec<Vec<FrameReport>>> = Vec::new();
+        while self.sessions.iter().any(|c| c.remaining() > 0) {
+            epochs.push(self.run_parallel(Some(epoch))?);
+            // Re-plan over the sessions that still have frames to serve
+            // — finished viewers consume no device time and must not
+            // demote (or refuse) the live ones.
+            let (active, demands) = self.active_demands()?;
+            if active.is_empty() {
+                break;
+            }
+            match ctrl.plan(&demands) {
+                Ok(plan) => self.apply_tiers_at(&active, &plan.tiers, false)?,
+                Err(_) => {
+                    // Admitted viewers are never kicked mid-run: when
+                    // transient load makes even the bottom mix miss the
+                    // target, serve best-effort at each session's lowest
+                    // servable tier until the pressure clears.
+                    let floors = ctrl.floor_tiers(&demands);
+                    self.apply_tiers_at(&active, &floors, false)?;
+                }
+            }
+        }
+        let wall_s = start.elapsed().as_secs_f64();
+        Ok(self.assemble_report(epochs, wall_s))
+    }
+
+    /// (indices, demands) of the sessions that still have frames to
+    /// serve, from each one's most recent measured workload.
+    fn active_demands(&self) -> Result<(Vec<usize>, Vec<SessionDemand>)> {
+        let mut indices = Vec::new();
+        let mut demands = Vec::new();
+        for (i, c) in self.sessions.iter().enumerate() {
+            if c.remaining() == 0 {
+                continue;
+            }
+            let w = c
+                .last_workload()
+                .context("session has no measured workload to price")?;
+            indices.push(i);
+            demands.push(SessionDemand {
+                workload: w.clone(),
+                tier: c.tier(),
+                variant: c.cfg.variant,
+                half_capable: c.tier_servable(Tier::Half),
+                priority: c.priority,
+            });
+        }
+        Ok((indices, demands))
+    }
+
+    /// [`Self::active_demands`] for a pool that has not served a frame
+    /// yet: probe-render each active session's current pose first.
+    fn probe_active_demands(&mut self) -> Result<(Vec<usize>, Vec<SessionDemand>)> {
+        for c in self.sessions.iter_mut() {
+            if c.remaining() > 0 && c.last_workload().is_none() {
+                c.probe_workload()?;
+            }
+        }
+        self.active_demands()
+    }
+
+    /// Demands for every session with frames to serve, probing those
+    /// that have not measured a workload yet (admission what-ifs, e.g.
+    /// "how many viewers fit?" sweeps).
+    pub fn probe_demands(&mut self) -> Result<Vec<SessionDemand>> {
+        Ok(self.probe_active_demands()?.1)
+    }
+
+    /// Apply planned tiers to the sessions at `indices`; `force_rebuild`
+    /// resets stage state even on sessions whose tier is unchanged.
+    fn apply_tiers_at(
+        &mut self,
+        indices: &[usize],
+        tiers: &[Tier],
+        force_rebuild: bool,
+    ) -> Result<()> {
+        anyhow::ensure!(indices.len() == tiers.len(), "plan/pool size mismatch");
+        for (&i, &tier) in indices.iter().zip(tiers) {
+            let reduced =
+                if tier == Tier::Reduced { Some(self.shared_reduced_scene()) } else { None };
+            self.sessions[i].set_tier_with(tier, reduced, force_rebuild)?;
+        }
+        Ok(())
+    }
+
+    /// Step every session up to `cap` frames (or to the end of its
+    /// trajectory when `None`), sessions in parallel.
+    ///
+    /// The thread budget is *split* between the two nesting levels —
+    /// outer session workers whose pipeline stages parallelize over a
+    /// per-worker share — instead of letting every session spawn a full
+    /// complement (which would oversubscribe roughly quadratically).
+    /// The split wastes no threads on non-divisible budgets, and each
+    /// share is installed thread-locally via an RAII guard. Results are
+    /// thread-count invariant, so the split affects throughput only.
+    fn run_parallel(&mut self, cap: Option<usize>) -> Result<Vec<Vec<FrameReport>>> {
+        let n = self.sessions.len();
+        // Only sessions with frames left occupy workers — in the tail
+        // epochs of a heterogeneous pool the whole budget goes to the
+        // sessions still rendering instead of idling on finished ones.
+        let mut work: Vec<(usize, Coordinator, Option<Result<Vec<FrameReport>>>)> = Vec::new();
+        let mut idle: Vec<(usize, Coordinator)> = Vec::new();
+        for (i, c) in std::mem::take(&mut self.sessions).into_iter().enumerate() {
+            if c.remaining() > 0 {
+                work.push((i, c, None));
+            } else {
+                idle.push((i, c));
+            }
+        }
+        if !work.is_empty() {
+            let total = par::num_threads();
+            let outer = total.min(work.len()).max(1);
+            let chunk = work.len().div_ceil(outer);
+            let n_workers = work.len().div_ceil(chunk);
+            let budgets = par::split_budget(total, n_workers);
+            std::thread::scope(|scope| {
+                for (t, slice) in work.chunks_mut(chunk).enumerate() {
+                    let inner = budgets[t];
+                    scope.spawn(move || {
+                        let _budget = par::local_budget_guard(inner);
+                        for (_, coord, slot) in slice.iter_mut() {
+                            *slot = Some(step_session(coord, cap));
+                        }
+                    });
+                }
+            });
+        }
+        // Restore every session (original order) before surfacing any
+        // error so the pool stays intact even when one session fails.
+        let mut slots: Vec<Option<(Coordinator, Result<Vec<FrameReport>>)>> =
+            (0..n).map(|_| None).collect();
+        for (i, c, s) in work {
+            slots[i] = Some((c, s.expect("session executed")));
+        }
+        for (i, c) in idle {
+            slots[i] = Some((c, Ok(Vec::new())));
+        }
+        let mut results = Vec::with_capacity(n);
+        for slot in slots {
+            let (coord, res) = slot.expect("every session accounted for");
+            self.sessions.push(coord);
+            results.push(res);
+        }
+        results.into_iter().collect()
+    }
+
+    /// Stitch per-epoch, per-session frame batches into one
+    /// [`RunReport`] per session.
+    fn assemble_report(
+        &self,
+        epochs: Vec<Vec<Vec<FrameReport>>>,
+        wall_s: f64,
+    ) -> PoolReport {
+        let mut sessions: Vec<RunReport> = self
+            .sessions
+            .iter()
+            .map(|c| RunReport::new(c.cfg.variant.label()))
+            .collect();
+        for epoch in epochs {
+            for (i, frames) in epoch.into_iter().enumerate() {
+                for f in frames {
+                    sessions[i].push(f);
+                }
+            }
+        }
+        PoolReport { sessions, wall_s }
+    }
+}
+
+/// Run one session for up to `cap` frames (whole trajectory if `None`).
+fn step_session(coord: &mut Coordinator, cap: Option<usize>) -> Result<Vec<FrameReport>> {
+    let limit = cap.unwrap_or(usize::MAX);
+    let mut frames = Vec::new();
+    while coord.remaining() > 0 && frames.len() < limit {
+        frames.push(coord.step()?.report);
+    }
+    Ok(frames)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareVariant;
+
+    fn small_cfg() -> LuminaConfig {
+        let mut c = LuminaConfig::quick_test();
+        c.scene.count = 3000;
+        c.camera.width = 64;
+        c.camera.height = 64;
+        c.camera.frames = 4;
+        c.variant = HardwareVariant::Gpu;
+        c
+    }
+
+    #[test]
+    fn erroring_session_restores_thread_budget_and_pool() {
+        let before = par::num_threads();
+        let mut pool = SessionPool::new(small_cfg(), 3).unwrap();
+        pool.sessions[1].fail_at_frame = Some(2);
+        let err = pool.run();
+        assert!(err.is_err(), "injected failure must surface");
+        assert_eq!(
+            par::num_threads(),
+            before,
+            "session error leaked a clamped thread budget"
+        );
+        // The pool itself survives (sessions restored in order).
+        assert_eq!(pool.len(), 3);
+        pool.sessions[1].fail_at_frame = None;
+        let report = pool.run().unwrap();
+        // Session 1 already consumed frames 0-1 before the injected
+        // failure; the others were fully consumed by the first run.
+        assert_eq!(report.sessions[1].frames.len(), 2);
+    }
+
+    #[test]
+    fn panicking_session_restores_thread_budget() {
+        let before = par::num_threads();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut pool = SessionPool::new(small_cfg(), 2).unwrap();
+            pool.sessions[0].panic_at_frame = Some(1);
+            let _ = pool.run();
+        }));
+        assert!(result.is_err(), "injected panic must propagate");
+        assert_eq!(
+            par::num_threads(),
+            before,
+            "session panic leaked a clamped thread budget"
+        );
+    }
+
+    #[test]
+    fn pool_priorities_default_first_admitted_highest() {
+        let pool = SessionPool::new(small_cfg(), 3).unwrap();
+        let p: Vec<f64> = pool.sessions().iter().map(|c| c.priority).collect();
+        assert!(p[0] > p[1] && p[1] > p[2]);
+    }
+
+    #[test]
+    fn serve_excludes_finished_sessions_from_replanning() {
+        let mut cfg = small_cfg();
+        cfg.pool.epoch_frames = 2;
+        let mut pool = SessionPool::new(cfg.clone(), 3).unwrap();
+        // Session 2 finishes after a single frame; later epochs re-plan
+        // over the two live sessions only.
+        pool.sessions[2].trajectory.poses.truncate(1);
+        // Generous target: nobody should be demoted for a dead session.
+        let ctrl =
+            AdmissionController::new(1e-3, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+                .unwrap();
+        let report = pool.serve(&ctrl).unwrap();
+        let frames: Vec<usize> = report.sessions.iter().map(|r| r.frames.len()).collect();
+        assert_eq!(frames, vec![4, 4, 1]);
+        for r in &report.sessions {
+            assert_eq!(r.tier_sequence(), vec!["full"], "generous target must stay full");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_summary_reports_range() {
+        let mut pool = SessionPool::new(small_cfg(), 2).unwrap();
+        // Make the trajectories heterogeneous: truncate session 1.
+        pool.sessions[1].trajectory.poses.truncate(2);
+        let report = pool.run().unwrap();
+        let s = report.summary();
+        assert!(s.contains("2 sessions"), "summary: {s}");
+        assert!(s.contains("2-4 frames"), "summary must not lie about counts: {s}");
     }
 }

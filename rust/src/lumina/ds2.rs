@@ -47,17 +47,30 @@ pub fn render_ds2(
     (out.image.upsample2(), work)
 }
 
-/// The DS-2 [`RasterBackend`]: plain rasterization of the half-res
-/// projection, upsampled 2x at finalize. The coordinator feeds it
-/// half-resolution intrinsics (see [`half_intrinsics`]) so the whole
-/// variant rides the ordinary stage graph.
+/// The DS-2 [`RasterBackend`]: rasterization of the half-res projection
+/// through an arbitrary inner backend, upsampled 2x at finalize. The
+/// coordinator feeds it half-resolution intrinsics (see
+/// [`half_intrinsics`]) so the whole variant rides the ordinary stage
+/// graph.
+///
+/// Because it *wraps* rather than replaces the inner backend, the
+/// half-res serving tier can demote any variant mid-run — including the
+/// radiance-cached ones — by composing `Ds2Raster` around the variant's
+/// own backend ([`Ds2Raster::wrap`]).
 pub struct Ds2Raster {
-    inner: PlainRaster,
+    inner: Box<dyn RasterBackend>,
 }
 
 impl Ds2Raster {
+    /// The classic DS-2 baseline: plain rasterization + 2x upsample.
     pub fn new() -> Self {
-        Ds2Raster { inner: PlainRaster }
+        Self::wrap(Box::new(PlainRaster))
+    }
+
+    /// Compose the half-res + upsample mechanism around an existing
+    /// backend (the half-res tier over cached/plain rasterization).
+    pub fn wrap(inner: Box<dyn RasterBackend>) -> Self {
+        Ds2Raster { inner }
     }
 }
 
@@ -83,7 +96,7 @@ impl RasterBackend for Ds2Raster {
     }
 
     fn finalize(&self, image: Image) -> Image {
-        image.upsample2()
+        self.inner.finalize(image).upsample2()
     }
 }
 

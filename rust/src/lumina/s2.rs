@@ -98,6 +98,16 @@ impl S2Scheduler {
         }
     }
 
+    /// Forget all cross-frame state: the shared sort, the window
+    /// position, and the pose history. Required when the pipeline
+    /// resolution or raster backend is swapped mid-run (tier changes) —
+    /// a stale speculative sort would reference the old tile grid.
+    pub fn reset(&mut self) {
+        self.shared = None;
+        self.frames_in_window = 0;
+        self.prev_pose = None;
+    }
+
     /// Predict the sorting pose for the upcoming window (Eqns. 2-3):
     /// extrapolate N/2 frame intervals ahead so the sort sits at the
     /// center of the window it serves.

@@ -14,13 +14,22 @@
 
 use anyhow::{Context, Result};
 
-use lumina::config::{HardwareVariant, LuminaConfig};
-use lumina::coordinator::{Coordinator, SessionPool};
+use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::coordinator::{AdmissionController, Coordinator, SessionPool};
 use lumina::runtime::ArtifactRuntime;
 use lumina::util::cli;
 
-const VALUE_KEYS: &[&str] =
-    &["config", "set", "frames", "out", "variant", "artifacts", "sessions"];
+const VALUE_KEYS: &[&str] = &[
+    "config",
+    "set",
+    "frames",
+    "out",
+    "variant",
+    "artifacts",
+    "sessions",
+    "target-fps",
+    "tiers",
+];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -57,6 +66,10 @@ fn print_help() {
            --frames <n>           trajectory length\n\
            --out <prefix>         write rendered frames as PPM\n\
            --sessions <n>         concurrent viewer sessions (serve cmd)\n\
+           --target-fps <fps>     pool simulated-FPS target; enables the\n\
+                                  tiered admission controller (serve cmd)\n\
+           --tiers <ladder>       tier ladder, best first, e.g.\n\
+                                  full,reduced,half (serve cmd)\n\
            --artifacts <dir>      AOT artifact directory (runtime cmd)"
     );
 }
@@ -106,7 +119,18 @@ fn cmd_render(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &cli::Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(t) = args.get("target-fps") {
+        let t: f64 = t.parse().context("--target-fps must be a number")?;
+        anyhow::ensure!(
+            t >= 0.0 && t.is_finite(),
+            "--target-fps must be finite and >= 0 (0 disables admission control), got {t}"
+        );
+        cfg.pool.target_fps = t;
+    }
+    if let Some(t) = args.get("tiers") {
+        cfg.pool.tiers = Tier::parse_ladder(t)?;
+    }
     let n: usize = args.get_parsed("sessions", 4);
     println!(
         "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{}",
@@ -116,12 +140,31 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         cfg.camera.width,
         cfg.camera.height
     );
-    let mut pool = SessionPool::new(cfg, n)?;
-    let report = pool.run()?;
+    let admission = cfg.pool.target_fps > 0.0;
+    let mut pool = SessionPool::new(cfg.clone(), n)?;
+    let report = if admission {
+        let ctrl = AdmissionController::from_config(&cfg)?;
+        println!(
+            "admission control: target {:.1} pool sim-fps | ladder [{}]",
+            ctrl.target_fps(),
+            Tier::ladder_name(ctrl.ladder()),
+        );
+        pool.serve(&ctrl)?
+    } else {
+        pool.run()?
+    };
     for (i, r) in report.sessions.iter().enumerate() {
-        println!("  session {i}: {}", r.summary());
+        println!("  session {i} [{}]: {}", r.tier_sequence().join(">"), r.summary());
     }
     println!("{}", report.summary());
+    if admission {
+        println!(
+            "pool sim-fps {:.1} vs target {:.1} -> {}",
+            report.pool_fps(),
+            cfg.pool.target_fps,
+            if report.pool_fps() >= cfg.pool.target_fps { "target held" } else { "TARGET MISSED" }
+        );
+    }
     Ok(())
 }
 

@@ -28,6 +28,7 @@
 //! hardware variant is being modeled.
 
 use crate::camera::{Intrinsics, Pose};
+use crate::config::Tier;
 use crate::lumina::rc::CacheStats;
 use crate::lumina::s2::S2Scheduler;
 use crate::pipeline::image::Image;
@@ -132,6 +133,168 @@ impl FrameWorkload {
             self.consumed.iter().map(|&v| v as f64).sum::<f64>() / self.consumed.len() as f64
         }
     }
+
+    /// Estimate what this workload would look like served under `target`
+    /// tier, given it was *measured* under `measured` tier — the record
+    /// the admission controller feeds through the cost-model seams to
+    /// price a tier mix without re-rendering.
+    ///
+    /// The estimate is deterministic (integer/f64 arithmetic only, no
+    /// sampling) and deliberately conservative: the demoted tiers are
+    /// priced slightly above their observed cost so the controller errs
+    /// toward refusing work rather than missing its FPS target. Cache
+    /// outcome maps are stripped (and recorded uncached counts take the
+    /// place of the hit-shortened as-run ones) so all tiers price the
+    /// same cold-cache structural quantity.
+    pub fn tier_estimate(
+        &self,
+        measured: Tier,
+        target: Tier,
+        reduced_fraction: f64,
+    ) -> FrameWorkload {
+        self.estimate_full(measured, reduced_fraction)
+            .estimate_from_full(target, reduced_fraction)
+    }
+
+    /// Strip per-run extras so tier estimates price comparably.
+    fn normalized(&self) -> FrameWorkload {
+        let mut w = self.clone();
+        // Price the *uncached* per-pixel structure when the raster pass
+        // recorded it: cache hits shorten the as-run counts, but the
+        // planner's conservative contract wants what the frame costs
+        // without a warm cache — tier swaps reset the cache, so a plan
+        // that banks on yesterday's hit rate would blow the budget the
+        // moment it re-tiers. The remaining cache interplay (lookup
+        // overhead, outcome maps) is stripped so every tier prices the
+        // same structural quantity; swap traffic is kept (real transfer
+        // work), conservatively unscaled by the tier transforms.
+        if let Some(u) = w.uncached.take() {
+            w.consumed = u.iterated;
+            w.significant = u.significant;
+        }
+        w.cache_outcomes = None;
+        w.cache = CacheStats::default();
+        w
+    }
+
+    /// Undo the measured tier's scaling: an estimate of the same frame
+    /// served at full tier.
+    fn estimate_full(&self, measured: Tier, reduced_fraction: f64) -> FrameWorkload {
+        let mut w = self.normalized();
+        match measured {
+            Tier::Full => {}
+            Tier::Reduced => w.scale_gaussian_load(1.0 / reduced_fraction),
+            Tier::Half => {
+                let (tw, th) = (w.width * 2, w.height * 2);
+                w.resample(tw, th, 1.0 / HALF_LIST_GROWTH, 1.0 / HALF_ENTRY_KEEP);
+            }
+        }
+        w
+    }
+
+    /// Apply a target tier's scaling to a full-tier workload estimate.
+    fn estimate_from_full(mut self, target: Tier, reduced_fraction: f64) -> FrameWorkload {
+        match target {
+            Tier::Full => {}
+            Tier::Reduced => self.scale_gaussian_load(reduced_fraction),
+            Tier::Half => {
+                let (tw, th) = ((self.width / 2).max(1), (self.height / 2).max(1));
+                self.resample(tw, th, HALF_LIST_GROWTH, HALF_ENTRY_KEEP);
+            }
+        }
+        self
+    }
+
+    /// Scale everything that tracks the Gaussian budget (the reduced
+    /// tier serves a `f`-fraction prefix of the scene; projection,
+    /// sorting, and per-pixel iteration all shrink with it).
+    fn scale_gaussian_load(&mut self, f: f64) {
+        self.scene_gaussians = scale_round(self.scene_gaussians, f);
+        self.sort_entries = scale_round(self.sort_entries, f);
+        self.refreshed_gaussians = scale_round(self.refreshed_gaussians, f);
+        for l in self.tile_list_lens.iter_mut() {
+            *l = scale_round(*l, f);
+        }
+        scale_counts_in_place(&mut self.consumed, f);
+        scale_counts_in_place(&mut self.significant, f);
+    }
+
+    /// Re-grid the per-pixel record to `new_w x new_h` (nearest
+    /// neighbor), scaling each count by `per_pixel_scale` and the
+    /// sort/tile-list totals by `entry_scale`. Projection cost
+    /// (`scene_gaussians`, `refreshed_gaussians`) is untouched: the
+    /// frontend frustum-culls the whole scene at any resolution.
+    fn resample(
+        &mut self,
+        new_w: usize,
+        new_h: usize,
+        per_pixel_scale: f64,
+        entry_scale: f64,
+    ) {
+        let (old_w, old_h) = (self.width, self.height);
+        let consumed = resample_grid(&self.consumed, old_w, old_h, new_w, new_h, per_pixel_scale);
+        let significant =
+            resample_grid(&self.significant, old_w, old_h, new_w, new_h, per_pixel_scale);
+        self.consumed = consumed;
+        self.significant = significant;
+        self.width = new_w;
+        self.height = new_h;
+        self.tiles_x = new_w.div_ceil(self.tile_size.max(1));
+        self.tiles_y = new_h.div_ceil(self.tile_size.max(1));
+        self.sort_entries = scale_round(self.sort_entries, entry_scale);
+        // Tile lists: preserve the scaled total, spread uniformly — the
+        // admission estimate does not track spatial distribution.
+        let total: usize = self.tile_list_lens.iter().sum();
+        let tiles = (self.tiles_x * self.tiles_y).max(1);
+        let per_tile = scale_round(total, entry_scale).div_ceil(tiles);
+        self.tile_list_lens = vec![per_tile; self.tiles_x * self.tiles_y];
+    }
+}
+
+/// Per-pixel list growth when the pipeline drops to half resolution:
+/// each half-res tile covers 2x the world area, so every pixel iterates
+/// a longer list and the savings are sublinear in pixel count (see
+/// `lumina::ds2` — DS-2 is a quality baseline, not a 4x-speed one).
+/// Deliberately conservative: overestimating the demoted tier's cost
+/// makes the admission controller refuse work rather than miss target.
+const HALF_LIST_GROWTH: f64 = 1.5;
+
+/// Sort-entry (and tile-list total) retention at half resolution: the
+/// tile count quarters but each surviving tile binds more Gaussians.
+const HALF_ENTRY_KEEP: f64 = 0.75;
+
+fn scale_round(x: usize, f: f64) -> usize {
+    (x as f64 * f).round() as usize
+}
+
+fn scale_counts_in_place(v: &mut [u32], f: f64) {
+    for x in v.iter_mut() {
+        *x = (*x as f64 * f).round() as u32;
+    }
+}
+
+/// Nearest-neighbor re-grid of a row-major per-pixel count field, with
+/// a per-sample scale factor.
+fn resample_grid(
+    v: &[u32],
+    old_w: usize,
+    old_h: usize,
+    new_w: usize,
+    new_h: usize,
+    scale: f64,
+) -> Vec<u32> {
+    if old_w == 0 || old_h == 0 || v.is_empty() {
+        return vec![0; new_w * new_h];
+    }
+    let mut out = Vec::with_capacity(new_w * new_h);
+    for r in 0..new_h {
+        let sr = (r * old_h / new_h).min(old_h - 1);
+        for c in 0..new_w {
+            let sc = (c * old_w / new_w).min(old_w - 1);
+            out.push((v[sr * old_w + sc] as f64 * scale).round() as u32);
+        }
+    }
+    out
 }
 
 /// What the frontend stage produced for one frame.
@@ -176,6 +339,16 @@ impl FrontendStage {
     /// True when this frontend shares sorting across frames.
     pub fn uses_s2(&self) -> bool {
         matches!(self, FrontendStage::S2(_))
+    }
+
+    /// Drop cross-frame state (the S² shared sort). Required when the
+    /// raster backend or the pipeline resolution is swapped mid-run —
+    /// tier promotion/demotion — since a stale speculative sort would
+    /// reference the old tile grid.
+    pub fn reset(&mut self) {
+        if let FrontendStage::S2(s2) = self {
+            s2.reset();
+        }
     }
 
     /// Run the frontend for one pose.
@@ -326,6 +499,50 @@ mod tests {
             assert!(out.refreshed_gaussians > 0);
         }
         assert_eq!(sorts, 2, "8 frames / window 4");
+    }
+
+    #[test]
+    fn tier_estimate_scales_and_roundtrips() {
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let fo = fe.run(&scene, &pose, &intr);
+        let mut raster = PlainRaster;
+        let frame = raster.render(&fo.projected, &fo.bins, intr.width, intr.height);
+        let w = FrameWorkload::from_stages(0, scene.len(), &fo, frame.work);
+
+        // Full -> Full is the normalized identity.
+        let id = w.tier_estimate(Tier::Full, Tier::Full, 0.5);
+        assert_eq!(id.width, w.width);
+        assert_eq!(id.consumed, w.consumed);
+        assert_eq!(id.sort_entries, w.sort_entries);
+
+        // Half tier quarters the pixel grid and keeps the scene size
+        // (projection culls the whole scene at any resolution).
+        let half = w.tier_estimate(Tier::Full, Tier::Half, 0.5);
+        assert_eq!((half.width, half.height), (64, 64));
+        assert_eq!(half.scene_gaussians, w.scene_gaussians);
+        assert_eq!(half.tile_list_lens.len(), half.tiles_x * half.tiles_y);
+        assert_eq!(half.consumed.len(), 64 * 64);
+        assert!(half.sort_entries < w.sort_entries);
+
+        // Reduced tier scales the Gaussian load by the fraction.
+        let red = w.tier_estimate(Tier::Full, Tier::Reduced, 0.5);
+        assert_eq!((red.width, red.height), (w.width, w.height));
+        assert_eq!(red.scene_gaussians, w.scene_gaussians / 2);
+        assert!(red.sort_entries < w.sort_entries);
+        assert!(red.mean_iterated() < w.mean_iterated());
+
+        // Measured-at-reduced inverts back to (approximately) full.
+        let back = red.tier_estimate(Tier::Reduced, Tier::Full, 0.5);
+        assert_eq!(back.scene_gaussians, w.scene_gaussians);
+        let drift = (back.mean_iterated() - w.mean_iterated()).abs();
+        assert!(drift <= 1.0, "round-trip drift {drift} too large");
+
+        // Half round-trip restores the grid shape.
+        let back = half.tier_estimate(Tier::Half, Tier::Full, 0.5);
+        assert_eq!((back.width, back.height), (w.width, w.height));
     }
 
     #[test]

@@ -155,10 +155,13 @@ impl ArtifactRuntime {
             bail!("raster_tile returned {} outputs, expected 3", parts.len());
         }
         let mut it = parts.into_iter();
+        let mut take = |name: &str| {
+            it.next().with_context(|| format!("raster_tile tuple missing {name} output"))
+        };
         Ok(TileCarry {
-            color: it.next().unwrap().to_vec::<f32>()?,
-            transmittance: it.next().unwrap().to_vec::<f32>()?,
-            done: it.next().unwrap().to_vec::<f32>()?,
+            color: take("color")?.to_vec::<f32>()?,
+            transmittance: take("transmittance")?.to_vec::<f32>()?,
+            done: take("done")?.to_vec::<f32>()?,
         })
     }
 

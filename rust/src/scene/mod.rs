@@ -99,6 +99,31 @@ impl GaussianScene {
         (s.x * s.y * s.z).abs().powf(1.0 / 3.0)
     }
 
+    /// The first `n` Gaussians as an owned scene — the reduced-Gaussian
+    /// LoD tier's subsample. Synthetic scenes draw every attribute
+    /// independently per index, so a prefix is an unbiased random
+    /// subsample; Gaussian indices (and therefore radiance-cache tag
+    /// IDs) are preserved.
+    pub fn prefix(&self, n: usize) -> GaussianScene {
+        let n = n.min(self.len());
+        GaussianScene {
+            pos: self.pos[..n].to_vec(),
+            scale: self.scale[..n].to_vec(),
+            quat: self.quat[..n].to_vec(),
+            opacity: self.opacity[..n].to_vec(),
+            sh: self.sh[..n].to_vec(),
+        }
+    }
+
+    /// The reduced serving tier's subsample: a `fraction` prefix
+    /// (rounded, at least one Gaussian). The single place the
+    /// fraction-to-count policy lives, so a standalone coordinator and
+    /// a pooled session always cut the identical subsample.
+    pub fn reduced_prefix(&self, fraction: f64) -> GaussianScene {
+        let n = ((self.len() as f64 * fraction).round() as usize).clamp(1, self.len());
+        self.prefix(n)
+    }
+
     /// Axis-aligned bounding box of all centers.
     pub fn bounds(&self) -> (Vec3, Vec3) {
         let mut lo = Vec3::new(f32::INFINITY, f32::INFINITY, f32::INFINITY);
@@ -127,6 +152,26 @@ mod tests {
         );
         assert_eq!(s.len(), 1);
         assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn prefix_truncates_and_preserves_order() {
+        let mut s = GaussianScene::default();
+        for i in 0..5 {
+            s.push(
+                Vec3::new(i as f32, 0.0, 0.0),
+                Vec3::new(0.1, 0.1, 0.1),
+                Quat::IDENTITY,
+                0.5,
+                [[0.0; 3]; SH_COEFFS],
+            );
+        }
+        let p = s.prefix(3);
+        assert_eq!(p.len(), 3);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.pos[2].x, 2.0);
+        // Oversized requests clamp.
+        assert_eq!(s.prefix(99).len(), 5);
     }
 
     #[test]

@@ -73,10 +73,22 @@ impl Value {
     }
 
     /// Insert at a dotted path, creating intermediate tables.
+    ///
+    /// An empty path or a path with an empty segment (`""`, `"a..b"`,
+    /// `"a."`) is a `ParseError`, not a panic.
     pub fn set_path(&mut self, path: &str, value: Value) -> Result<(), ParseError> {
         let parts: Vec<&str> = path.split('.').collect();
+        if parts.iter().any(|p| p.is_empty()) {
+            return Err(ParseError::new(
+                0,
+                format!("empty segment in key path {path:?}"),
+            ));
+        }
+        let Some((leaf, parents)) = parts.split_last() else {
+            return Err(ParseError::new(0, "empty key path".into()));
+        };
         let mut node = self;
-        for part in &parts[..parts.len() - 1] {
+        for part in parents {
             let table = node
                 .as_table_mut()
                 .ok_or_else(|| ParseError::new(0, format!("{part} is not a table")))?;
@@ -87,7 +99,7 @@ impl Value {
         let table = node
             .as_table_mut()
             .ok_or_else(|| ParseError::new(0, "leaf parent is not a table".into()))?;
-        table.insert(parts.last().unwrap().to_string(), value);
+        table.insert(leaf.to_string(), value);
         Ok(())
     }
 }
@@ -375,6 +387,17 @@ mod tests {
         let mut v = Value::Table(BTreeMap::new());
         v.set_path("a.b.c", Value::Integer(5)).unwrap();
         assert_eq!(v.get_path("a.b.c").unwrap().as_int(), Some(5));
+    }
+
+    #[test]
+    fn set_path_rejects_empty_segments_without_panicking() {
+        let mut v = Value::Table(BTreeMap::new());
+        assert!(v.set_path("", Value::Integer(1)).is_err());
+        assert!(v.set_path("a..b", Value::Integer(1)).is_err());
+        assert!(v.set_path("a.", Value::Integer(1)).is_err());
+        assert!(v.set_path(".a", Value::Integer(1)).is_err());
+        // The table is untouched by the failed inserts.
+        assert!(v.as_table().unwrap().is_empty());
     }
 
     #[test]

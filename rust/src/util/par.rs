@@ -6,13 +6,27 @@
 //! workloads are statically balanced enough that work stealing isn't
 //! worth the complexity.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 static CACHED: AtomicUsize = AtomicUsize::new(0);
 
-/// Number of worker threads (overridable with `LUMINA_THREADS` or
-/// [`set_num_threads`]).
+thread_local! {
+    /// Per-thread budget override (0 = none). Lets nested parallelism —
+    /// e.g. a `SessionPool` worker whose pipeline stages parallelize —
+    /// clamp only its own thread without mutating the process-global
+    /// budget (which would leak to unrelated threads on panic).
+    static LOCAL_BUDGET: Cell<usize> = Cell::new(0);
+}
+
+/// Number of worker threads (overridable with `LUMINA_THREADS`,
+/// [`set_num_threads`], or — on the current thread only — a
+/// [`ThreadBudgetGuard`]).
 pub fn num_threads() -> usize {
+    let local = LOCAL_BUDGET.with(|c| c.get());
+    if local != 0 {
+        return local;
+    }
     let c = CACHED.load(Ordering::Relaxed);
     if c != 0 {
         return c;
@@ -34,6 +48,47 @@ pub fn num_threads() -> usize {
 /// process — the env var is only read once.
 pub fn set_num_threads(n: usize) {
     CACHED.store(n, Ordering::Relaxed);
+}
+
+/// RAII guard for a *thread-local* worker budget: while alive, `par_*`
+/// calls issued from the current thread see `n` workers; dropping it —
+/// including during a panic unwind — restores the previous value.
+///
+/// This is how nested parallelism splits the machine: each outer worker
+/// holds a guard for its share, and the process-global budget is never
+/// mutated, so a panicking worker cannot leak a clamped thread count to
+/// the rest of the process.
+pub struct ThreadBudgetGuard {
+    prev: usize,
+}
+
+/// Install a thread-local budget of `n` workers for the current thread,
+/// restored when the returned guard drops.
+pub fn local_budget_guard(n: usize) -> ThreadBudgetGuard {
+    let prev = LOCAL_BUDGET.with(|c| c.replace(n.max(1)));
+    ThreadBudgetGuard { prev }
+}
+
+impl Drop for ThreadBudgetGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        LOCAL_BUDGET.with(|c| c.set(prev));
+    }
+}
+
+/// Split a thread budget of `total` across `workers` outer workers with
+/// no stranded threads: each worker gets at least one thread, and the
+/// remainder of `total / workers` is distributed one-per-worker from the
+/// front (8 threads / 3 workers -> [3, 3, 2], not [2, 2, 2]).
+///
+/// When `total >= workers` the shares sum to exactly `total`; when
+/// `total < workers` every worker still gets 1 (mild oversubscription
+/// beats idle sessions).
+pub fn split_budget(total: usize, workers: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    let base = total / workers;
+    let rem = total % workers;
+    (0..workers).map(|i| (base + usize::from(i < rem)).max(1)).collect()
 }
 
 /// Parallel map over `0..n`: returns `Vec<T>` with `f(i)` at index `i`.
@@ -224,6 +279,58 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn split_budget_strands_no_workers() {
+        // The 8/3 case from the session-pool bug: the naive total/outer
+        // split used only 6 of 8 threads.
+        assert_eq!(split_budget(8, 3), vec![3, 3, 2]);
+        assert_eq!(split_budget(8, 8), vec![1; 8]);
+        assert_eq!(split_budget(9, 4), vec![3, 2, 2, 2]);
+        for (total, workers) in [(8, 3), (16, 5), (7, 2), (12, 12), (64, 7)] {
+            let shares = split_budget(total, workers);
+            assert_eq!(shares.len(), workers);
+            assert_eq!(shares.iter().sum::<usize>(), total, "{total}/{workers}");
+            assert!(shares.iter().all(|&s| s >= 1));
+        }
+        // Oversubscribed: everyone still gets a thread.
+        assert_eq!(split_budget(2, 5), vec![1; 5]);
+    }
+
+    #[test]
+    fn local_budget_guard_overrides_and_restores() {
+        let ambient = num_threads();
+        {
+            let _g = local_budget_guard(3);
+            assert_eq!(num_threads(), 3);
+            {
+                let _inner = local_budget_guard(2);
+                assert_eq!(num_threads(), 2);
+            }
+            assert_eq!(num_threads(), 3);
+        }
+        assert_eq!(num_threads(), ambient);
+    }
+
+    #[test]
+    fn local_budget_guard_restores_on_panic() {
+        let ambient = num_threads();
+        let result = std::panic::catch_unwind(|| {
+            let _g = local_budget_guard(1);
+            panic!("injected");
+        });
+        assert!(result.is_err());
+        assert_eq!(num_threads(), ambient, "budget leaked across a panic");
+    }
+
+    #[test]
+    fn local_budget_is_thread_local() {
+        // An implausible-as-ambient value; a fresh thread must not see it.
+        let _g = local_budget_guard(1301);
+        assert_eq!(num_threads(), 1301);
+        let seen = std::thread::spawn(num_threads).join().unwrap();
+        assert_ne!(seen, 1301, "local budget leaked to a fresh thread");
     }
 
     #[test]

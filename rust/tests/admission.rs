@@ -1,0 +1,178 @@
+//! Tiered serving + admission control integration: tier mixes must be
+//! bitwise deterministic regardless of worker-thread count (including
+//! mid-run promotion/demotion), the controller must hold its pool-FPS
+//! target, and a tiered ladder must admit strictly more viewers than an
+//! all-full-res pool.
+
+use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
+use lumina::coordinator::{AdmissionController, PoolReport, SessionPool};
+use lumina::util::par;
+
+/// Tests that flip the global thread count serialize on this lock so
+/// they cannot race each other inside one test binary.
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_cfg(variant: HardwareVariant) -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 4000;
+    c.camera.width = 64;
+    c.camera.height = 64;
+    c.camera.frames = 6;
+    c.pool.epoch_frames = 2;
+    c.variant = variant;
+    c
+}
+
+/// Modeled per-frame cost of one full-tier session under `cfg`.
+fn full_frame_cost(cfg: &LuminaConfig) -> f64 {
+    let mut pool = SessionPool::new(cfg.clone(), 1).unwrap();
+    let demands = pool.probe_demands().unwrap();
+    price_workload(&demands[0].workload, cfg.variant)
+}
+
+#[test]
+fn tiered_pool_bitwise_deterministic_across_thread_counts() {
+    let _lock = lock();
+    let run = |threads: usize| -> PoolReport {
+        par::set_num_threads(threads);
+        let mut pool = SessionPool::new(small_cfg(HardwareVariant::Lumina), 3).unwrap();
+        pool.set_session_tier(0, Tier::Full).unwrap();
+        pool.set_session_tier(1, Tier::Reduced).unwrap();
+        pool.set_session_tier(2, Tier::Half).unwrap();
+        let r = pool.run().unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(
+        serial.sessions, parallel.sessions,
+        "thread count changed a tiered pool's reports"
+    );
+    // Every session rendered its whole trajectory on its own tier.
+    for (r, tier) in serial.sessions.iter().zip(["full", "reduced", "half"]) {
+        assert_eq!(r.frames.len(), 6);
+        assert_eq!(r.tier_sequence(), vec![tier]);
+    }
+}
+
+#[test]
+fn mid_run_tier_swap_sequence_deterministic() {
+    let _lock = lock();
+    // Demotion (full -> half), lateral (half -> reduced), promotion
+    // (reduced -> full) — the sequence a controller would drive.
+    let sequence = [Tier::Full, Tier::Half, Tier::Reduced, Tier::Full];
+    let run = |threads: usize| {
+        par::set_num_threads(threads);
+        let mut pool = SessionPool::new(small_cfg(HardwareVariant::Lumina), 2).unwrap();
+        let mut frames: Vec<Vec<lumina::coordinator::FrameReport>> = vec![Vec::new(); 2];
+        for &tier in sequence.iter() {
+            for i in 0..pool.len() {
+                pool.set_session_tier(i, tier).unwrap();
+            }
+            for (i, c) in pool.sessions_mut().iter_mut().enumerate() {
+                frames[i].push(c.step().unwrap().report);
+            }
+        }
+        par::set_num_threads(0);
+        frames
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial, parallel, "thread count changed a tier-swap run");
+    let tiers: Vec<&str> = serial[0].iter().map(|f| f.tier).collect();
+    assert_eq!(tiers, vec!["full", "half", "reduced", "full"]);
+}
+
+#[test]
+fn admission_serving_bitwise_deterministic() {
+    let _lock = lock();
+    let cfg = small_cfg(HardwareVariant::Lumina);
+    let cost = full_frame_cost(&cfg);
+    // Budget fits ~2.2 full-tier sessions: 3 viewers force a mix, and
+    // epoch re-planning exercises mid-run promotion/demotion.
+    let target = (1.0 - ADMISSION_HEADROOM) / (2.2 * cost);
+    let run = |threads: usize| -> PoolReport {
+        par::set_num_threads(threads);
+        let ctrl =
+            AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+                .unwrap();
+        let mut pool = SessionPool::new(cfg.clone(), 3).unwrap();
+        let r = pool.serve(&ctrl).unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(
+        serial.sessions, parallel.sessions,
+        "thread count changed an admission-controlled run"
+    );
+    // Pressure demoted the lowest-priority session away from full.
+    let tiers = serial.sessions[2].tier_sequence();
+    assert_ne!(tiers, vec!["full"], "expected session 2 demoted, got {tiers:?}");
+    // The highest-priority session was demoted last, if at all: it can
+    // only have been touched when both lower sessions already dropped.
+    assert_eq!(serial.sessions[0].tier_sequence()[0], "full");
+}
+
+#[test]
+fn admission_holds_target_and_admits_more_than_full_res() {
+    let cfg = small_cfg(HardwareVariant::Gpu);
+    let cost = full_frame_cost(&cfg);
+    let target = (1.0 - ADMISSION_HEADROOM) / (2.2 * cost);
+    let frac = cfg.pool.reduced_fraction;
+
+    let full_only = AdmissionController::new(target, vec![Tier::Full], frac).unwrap();
+    let tiered = AdmissionController::new(target, cfg.pool.tiers.clone(), frac).unwrap();
+
+    let max_admitted = |ctrl: &AdmissionController| -> usize {
+        let mut admitted = 0;
+        for n in 1..=8 {
+            let mut pool = SessionPool::new(cfg.clone(), n).unwrap();
+            match pool.probe_demands().and_then(|d| ctrl.plan(&d)) {
+                Ok(_) => admitted = n,
+                Err(_) => break,
+            }
+        }
+        admitted
+    };
+    let full_max = max_admitted(&full_only);
+    let tiered_max = max_admitted(&tiered);
+    assert!(full_max >= 1, "at least one full-res session must fit");
+    assert!(tiered_max < 8, "test target too loose to exercise refusal");
+    assert!(
+        tiered_max > full_max,
+        "tiering must admit strictly more sessions ({tiered_max} vs {full_max})"
+    );
+
+    // The tiered pool at its maximum admission actually sustains the
+    // target (conservative estimates + headroom absorb estimator error).
+    let mut pool = SessionPool::new(cfg.clone(), tiered_max).unwrap();
+    let report = pool.serve(&tiered).unwrap();
+    assert_eq!(report.total_frames(), tiered_max * 6);
+    assert!(
+        report.pool_fps() >= target,
+        "pool {:.1} fps under target {:.1}",
+        report.pool_fps(),
+        target
+    );
+
+    // One more viewer is refused with a clear error.
+    let mut pool = SessionPool::new(cfg.clone(), tiered_max + 1).unwrap();
+    let err = pool.serve(&tiered).unwrap_err();
+    assert!(
+        format!("{err}").contains("admission refused"),
+        "unhelpful refusal: {err}"
+    );
+    // And the refusal left no probe residue: the un-admitted pool runs
+    // byte-identically to one that never attempted serving.
+    let refused_run = pool.run().unwrap();
+    let fresh_run = SessionPool::new(cfg.clone(), tiered_max + 1).unwrap().run().unwrap();
+    assert_eq!(refused_run.sessions, fresh_run.sessions);
+}

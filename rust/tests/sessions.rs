@@ -48,6 +48,23 @@ fn pool_reuses_one_scene_allocation() {
 }
 
 #[test]
+fn pool_thread_split_wastes_no_workers() {
+    // 8 threads / 3 sessions used to strand 2 workers (inner = 8/3 = 2
+    // on every chunk); the remainder must be spread across the outer
+    // chunks instead.
+    for (total, sessions) in [(8usize, 3usize), (6, 4), (12, 5), (16, 16), (9, 2)] {
+        let shares = par::split_budget(total, sessions);
+        assert_eq!(shares.len(), sessions);
+        assert_eq!(
+            shares.iter().sum::<usize>(),
+            total,
+            "budget {total} over {sessions} sessions strands workers: {shares:?}"
+        );
+        assert!(shares.iter().all(|&s| s >= 1));
+    }
+}
+
+#[test]
 fn pool_bitwise_deterministic_across_thread_counts() {
     // Same configs + seeds must produce bitwise-identical per-session
     // reports whether the pool (and the tile rasterizer under it) runs
