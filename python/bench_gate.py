@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate over the `BENCH_*.json` artifacts.
+
+The Rust bench Runner (`rust/src/util/bench.rs`) writes one JSON file
+per bench binary when `LUMINA_BENCH_JSON` is set:
+
+    {"label": "sessions",
+     "results": [{"name": ..., "iters": N,
+                  "min_ns": ..., "median_ns": ..., "mean_ns": ...}, ...]}
+
+Usage:
+    bench_gate.py gate  <baseline.json> <fresh.json> [--tolerance 0.15]
+    bench_gate.py update <baseline.json> <fresh.json>
+
+`gate` fails (exit 1) when any benchmark present in both files lost
+more than `tolerance` throughput (i.e. fresh median time exceeds
+baseline by more than 1/(1-tolerance)).  A baseline with an empty
+`results` list is the bootstrap state: the gate warns and passes, and a
+maintainer promotes a trusted run with `update` (CI also uploads every
+fresh file as an artifact, so there is always a candidate to promote).
+
+Independent of the baseline, `gate` enforces the async-pipelining
+invariant on the fresh file whenever both `pool_depth1/...` and
+`pool_depth2/...` entries exist: the depth-2 (double-buffered) pool
+must not be meaningfully slower than the depth-1 (synchronous) pool —
+overlap is allowed to be a wash on starved runners, never a loss.  This
+check is machine-independent (both numbers come from the same run).
+"""
+
+import argparse
+import json
+import shutil
+import sys
+
+# Depth-2 must reach at least this fraction of depth-1 throughput
+# (small head-room for runner noise; the expectation is > 1.0).
+OVERLAP_FLOOR = 0.98
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if "results" not in data or not isinstance(data["results"], list):
+        raise SystemExit(f"{path}: not a bench JSON (missing 'results')")
+    return data
+
+
+def by_name(data):
+    return {r["name"]: r for r in data["results"]}
+
+
+def gate(baseline_path, fresh_path, tolerance):
+    baseline = load(baseline_path)
+    fresh = load(fresh_path)
+    failures = []
+
+    fresh_by = by_name(fresh)
+    base_by = by_name(baseline)
+
+    if not baseline["results"]:
+        print(f"{baseline_path}: empty baseline (bootstrap) — regression "
+              f"diff skipped; promote a trusted run with "
+              f"'bench_gate.py update'.")
+    else:
+        shared = sorted(set(base_by) & set(fresh_by))
+        if not shared:
+            print(f"warning: no overlapping benchmark names between "
+                  f"{baseline_path} and {fresh_path}")
+        for name in shared:
+            old = base_by[name]["median_ns"]
+            new = fresh_by[name]["median_ns"]
+            if old <= 0:
+                continue
+            # Throughput ratio: < 1 means the fresh run is slower.
+            ratio = old / new if new > 0 else float("inf")
+            verdict = "ok"
+            if ratio < 1.0 - tolerance:
+                verdict = "REGRESSION"
+                failures.append(
+                    f"{name}: throughput fell to {ratio:.2f}x of baseline "
+                    f"({old} ns -> {new} ns median)")
+            print(f"  {name:<48} {old:>12} -> {new:>12} ns  "
+                  f"({ratio:.2f}x)  {verdict}")
+
+    # Same-run pipelining invariant: depth 2 vs depth 1.
+    pairs = [(n, n.replace("pool_depth1", "pool_depth2"))
+             for n in fresh_by if n.startswith("pool_depth1")]
+    for d1, d2 in pairs:
+        if d2 not in fresh_by:
+            continue
+        t1 = fresh_by[d1]["median_ns"]
+        t2 = fresh_by[d2]["median_ns"]
+        if t2 <= 0:
+            continue
+        speedup = t1 / t2
+        verdict = "ok" if speedup >= OVERLAP_FLOOR else "REGRESSION"
+        print(f"  pipelining {d2} vs {d1}: {speedup:.3f}x  {verdict}")
+        if speedup < OVERLAP_FLOOR:
+            failures.append(
+                f"{d2}: pipelined pool at {speedup:.3f}x of synchronous "
+                f"(floor {OVERLAP_FLOOR}) — stage overlap regressed")
+
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+def update(baseline_path, fresh_path):
+    load(fresh_path)  # validate schema before promoting
+    shutil.copyfile(fresh_path, baseline_path)
+    print(f"promoted {fresh_path} -> {baseline_path}")
+    return 0
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("command", choices=["gate", "update"])
+    p.add_argument("baseline")
+    p.add_argument("fresh")
+    p.add_argument("--tolerance", type=float, default=0.15,
+                   help="allowed fractional throughput loss vs baseline "
+                        "(default 0.15)")
+    args = p.parse_args()
+    if args.command == "gate":
+        sys.exit(gate(args.baseline, args.fresh, args.tolerance))
+    sys.exit(update(args.baseline, args.fresh))
+
+
+if __name__ == "__main__":
+    main()

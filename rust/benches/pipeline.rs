@@ -1,6 +1,8 @@
 //! Pipeline hot-path benchmarks: projection, binning+sorting,
 //! rasterization — the per-stage costs behind every end-to-end number.
 //! (Custom harness: the offline vendor set has no criterion.)
+//!
+//! `LUMINA_BENCH_SMOKE=1` shrinks the scenes for the CI bench job.
 
 use lumina::camera::{Intrinsics, Pose};
 use lumina::constants::TILE;
@@ -14,24 +16,27 @@ use lumina::util::bench::Runner;
 fn main() {
     let mut r = Runner::new("pipeline");
     r.header();
+    let smoke = std::env::var("LUMINA_BENCH_SMOKE").is_ok();
 
-    let scene = synth_scene(SceneClass::SyntheticSmall, 42, 60_000);
+    let count = if smoke { 12_000 } else { 60_000 };
+    let side = if smoke { 128 } else { 256 };
+    let scene = synth_scene(SceneClass::SyntheticSmall, 42, count);
     let pose = Pose::look_at(Vec3::new(0.0, 0.3, -2.3), Vec3::ZERO);
-    let intr = Intrinsics::with_fov(256, 256, 0.87);
+    let intr = Intrinsics::with_fov(side, side, 0.87);
 
-    r.bench("project/60k", || project(&scene, &pose, &intr, 0.2, 1000.0, 0.0));
+    r.bench("project/scene", || project(&scene, &pose, &intr, 0.2, 1000.0, 0.0));
 
     let projected = project(&scene, &pose, &intr, 0.2, 1000.0, 0.0);
-    r.bench("bin_and_sort/60k", || bin_and_sort(&projected, &intr, TILE, 0.0));
+    r.bench("bin_and_sort/scene", || bin_and_sort(&projected, &intr, TILE, 0.0));
 
     let bins = bin_and_sort(&projected, &intr, TILE, 0.0);
     let plain = RasterConfig::default();
-    r.bench("rasterize/256px/60k", || {
+    r.bench("rasterize/scene", || {
         rasterize(&projected, &bins, intr.width, intr.height, &plain)
     });
 
     let stats_cfg = RasterConfig { collect_stats: true, sig_record_k: 5 };
-    r.bench("rasterize+stats+records/256px/60k", || {
+    r.bench("rasterize+stats+records/scene", || {
         rasterize(&projected, &bins, intr.width, intr.height, &stats_cfg)
     });
 
@@ -48,9 +53,9 @@ fn main() {
     });
 
     // Large-scene projection (the U360-class frustum-cull workload).
-    let big = synth_scene(SceneClass::RealUnbounded, 42, 600_000);
+    let big = synth_scene(SceneClass::RealUnbounded, 42, if smoke { 60_000 } else { 600_000 });
     let big_pose = Pose::look_at(Vec3::new(0.0, 3.0, -25.0), Vec3::ZERO);
-    r.bench("project/600k", || project(&big, &big_pose, &intr, 0.2, 1000.0, 0.0));
+    r.bench("project/unbounded", || project(&big, &big_pose, &intr, 0.2, 1000.0, 0.0));
 
     r.finish();
 }

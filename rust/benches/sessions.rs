@@ -1,6 +1,11 @@
 //! Multi-session serving benchmarks: end-to-end pool throughput at
 //! several session counts over one shared scene — the scaling curve of
-//! the first multi-user serving scenario.
+//! the first multi-user serving scenario — plus the async-pipelining
+//! comparison (`pool_depth1` vs `pool_depth2`) the CI bench gate
+//! watches.
+//!
+//! `LUMINA_BENCH_SMOKE=1` shrinks every scene so the whole file runs in
+//! CI smoke mode (it also implies the quick measurement budget).
 
 use std::sync::Arc;
 
@@ -13,11 +18,12 @@ use lumina::util::bench::Runner;
 fn main() {
     let mut r = Runner::new("sessions");
     r.header();
+    let smoke = std::env::var("LUMINA_BENCH_SMOKE").is_ok();
 
     let mut cfg = LuminaConfig::quick_test();
-    cfg.scene.count = 20_000;
-    cfg.camera.width = 128;
-    cfg.camera.height = 128;
+    cfg.scene.count = if smoke { 5000 } else { 20_000 };
+    cfg.camera.width = if smoke { 64 } else { 128 };
+    cfg.camera.height = cfg.camera.width;
     cfg.camera.frames = 4;
     cfg.variant = HardwareVariant::Lumina;
 
@@ -57,6 +63,30 @@ fn main() {
             .unwrap();
             let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
             pool.serve(&ctrl).unwrap()
+        });
+    }
+
+    // Async frame pipelining: depth 2 overlaps frame N+1's frontend with
+    // frame N's rasterization inside each session. Frontend-heavy
+    // config — plain GPU variant (sorts every frame), large scene,
+    // small framebuffer — so the two stages are comparable and the
+    // overlap, not raw data parallelism, sets the frame rate. The CI
+    // gate compares pool_depth2 against pool_depth1.
+    let mut fcfg = LuminaConfig::quick_test();
+    fcfg.variant = HardwareVariant::Gpu;
+    fcfg.scene.count = if smoke { 12_000 } else { 60_000 };
+    fcfg.camera.width = 48;
+    fcfg.camera.height = 48;
+    fcfg.camera.frames = 4;
+    let fscene =
+        Arc::new(synth_scene(fcfg.scene.class, fcfg.scene.seed, fcfg.gaussian_count()));
+    for depth in [1usize, 2] {
+        let mut cfg = fcfg.clone();
+        cfg.pool.pipeline_depth = depth;
+        let scene = fscene.clone();
+        r.bench(&format!("pool_depth{depth}/2x4frames"), move || {
+            let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), 2).unwrap();
+            pool.run().unwrap()
         });
     }
 

@@ -189,6 +189,35 @@ impl Tier {
     }
 }
 
+/// How the admission controller prices tier-ladder rungs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PricingMode {
+    /// Re-grid the full per-pixel workload record at every rung
+    /// (O(pixels) per rung) — the reference path.
+    Exact,
+    /// Price rungs from an O(tiles) per-tile aggregate built once per
+    /// session (uniform-within-tile assumption, conservative maxima) —
+    /// keeps epoch re-plans cheap at high resolutions.
+    Aggregate,
+}
+
+impl PricingMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            PricingMode::Exact => "exact",
+            PricingMode::Aggregate => "aggregate",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exact" => PricingMode::Exact,
+            "aggregate" => PricingMode::Aggregate,
+            other => bail!("unknown pricing mode: {other} (expected exact|aggregate)"),
+        })
+    }
+}
+
 /// Multi-session pool block: tier ladder + admission-control target.
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
@@ -202,6 +231,14 @@ pub struct PoolConfig {
     pub epoch_frames: usize,
     /// Fraction of the scene's Gaussians the reduced tier serves.
     pub reduced_fraction: f64,
+    /// Frame slots per session: 1 = synchronous stepping (the
+    /// determinism baseline), 2 = double-buffered — frame N+1's frontend
+    /// (projection + speculative sort) overlaps frame N's rasterization
+    /// and the pool schedules *stages* instead of whole sessions.
+    pub pipeline_depth: usize,
+    /// Admission rung-pricing path (exact per-pixel vs O(tiles)
+    /// aggregate).
+    pub pricing: PricingMode,
 }
 
 impl Default for PoolConfig {
@@ -211,6 +248,8 @@ impl Default for PoolConfig {
             tiers: vec![Tier::Full, Tier::Reduced, Tier::Half],
             epoch_frames: 6,
             reduced_fraction: 0.5,
+            pipeline_depth: 1,
+            pricing: PricingMode::Exact,
         }
     }
 }
@@ -437,6 +476,20 @@ impl LuminaConfig {
             }
             cfg.pool.reduced_fraction = f;
         }
+        if let Some(v) = root.get_path("pool.pipeline_depth") {
+            let d = v.as_int().context("pool.pipeline_depth")?;
+            if !(1..=2).contains(&d) {
+                bail!(
+                    "pool.pipeline_depth must be 1 (synchronous) or 2 \
+                     (double-buffered), got {d}"
+                );
+            }
+            cfg.pool.pipeline_depth = d as usize;
+        }
+        if let Some(v) = root.get_path("pool.pricing") {
+            cfg.pool.pricing =
+                PricingMode::parse(v.as_str().context("pool.pricing must be a string")?)?;
+        }
         Ok(cfg)
     }
 
@@ -472,6 +525,12 @@ impl LuminaConfig {
         set(&mut root, "pool.tiers", Value::String(Tier::ladder_name(&self.pool.tiers)));
         set(&mut root, "pool.epoch_frames", Value::Integer(self.pool.epoch_frames as i64));
         set(&mut root, "pool.reduced_fraction", Value::Float(self.pool.reduced_fraction));
+        set(
+            &mut root,
+            "pool.pipeline_depth",
+            Value::Integer(self.pool.pipeline_depth as i64),
+        );
+        set(&mut root, "pool.pricing", Value::String(self.pool.pricing.label().into()));
         minitoml::serialize(&root)
     }
 
@@ -609,6 +668,26 @@ mod tests {
         assert!(c.apply_override("pool.epoch_frames=0").is_err());
         assert!(c.apply_override("pool.epoch_frames=-1").is_err());
         assert!(c.apply_override("pool.tiers=full,bogus").is_err());
+    }
+
+    #[test]
+    fn pipeline_depth_and_pricing_roundtrip_and_validate() {
+        let mut c = LuminaConfig::quick_test();
+        assert_eq!(c.pool.pipeline_depth, 1, "synchronous by default");
+        assert_eq!(c.pool.pricing, PricingMode::Exact);
+        c.apply_override("pool.pipeline_depth=2").unwrap();
+        assert_eq!(c.pool.pipeline_depth, 2);
+        c.apply_override("pool.pricing=aggregate").unwrap();
+        assert_eq!(c.pool.pricing, PricingMode::Aggregate);
+        let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.pool.pipeline_depth, 2);
+        assert_eq!(back.pool.pricing, PricingMode::Aggregate);
+        assert!(c.apply_override("pool.pipeline_depth=0").is_err());
+        assert!(c.apply_override("pool.pipeline_depth=3").is_err());
+        assert!(c.apply_override("pool.pricing=bogus").is_err());
+        for m in [PricingMode::Exact, PricingMode::Aggregate] {
+            assert_eq!(PricingMode::parse(m.label()).unwrap(), m);
+        }
     }
 
     #[test]

@@ -14,7 +14,19 @@
 //! session's frame each display interval, so a pool sustains
 //! `target_fps` iff the per-frame costs sum to at most
 //! `1 / target_fps` seconds (minus a safety headroom that absorbs
-//! estimator error).
+//! estimator error). A *pipelined* pool (`pool.pipeline_depth = 2`)
+//! overlaps frame N+1's frontend with frame N's rasterization, so its
+//! per-frame device time is `max(frontend, raster + overhead)` rather
+//! than the sum — the controller must price with the same arithmetic
+//! ([`price_workload_at_depth`]) or it would refuse viewers the
+//! pipelined device actually holds.
+//!
+//! Rung pricing has two paths: the exact one re-grids the per-pixel
+//! record at every ladder rung (O(pixels) per rung), and the
+//! [`PricingMode::Aggregate`] one collapses each session's record once
+//! into O(tiles) per-tile statistics and re-scales those — the path
+//! that keeps epoch re-plans cheap at high resolutions, pinned to the
+//! exact path's demotion decisions by `tests/admission.rs`.
 //!
 //! Everything here is deterministic — float arithmetic over
 //! deterministic workloads, no clocks, no randomness — so planned tier
@@ -23,9 +35,9 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{HardwareVariant, LuminaConfig, Tier};
+use crate::config::{HardwareVariant, LuminaConfig, PricingMode, Tier};
 use crate::coordinator::cost_models_for;
-use crate::pipeline::stage::FrameWorkload;
+use crate::pipeline::stage::{AggregateWorkload, FrameWorkload};
 
 /// Fraction of the frame-time budget held back from the planner to
 /// absorb tier-estimate error (the estimates are conservative, but the
@@ -82,10 +94,51 @@ impl TierPlan {
 /// Price one workload through a variant's cost-model seams: frontend +
 /// rasterization + fixed per-frame overhead, in modeled seconds.
 pub fn price_workload(w: &FrameWorkload, variant: HardwareVariant) -> f64 {
+    price_workload_at_depth(w, variant, 1)
+}
+
+/// Combine the two stage times under a `depth`-slot frame pipeline: at
+/// depth >= 2 the frontend overlaps the previous frame's rasterization,
+/// so a steady-state frame occupies the modeled device for the *slower*
+/// stage instead of the sum. The single home of the overlap arithmetic:
+/// both the planner (here) and the report side
+/// (`FrameReport::device_time_s`) go through it, so they cannot
+/// diverge.
+pub(crate) fn combine_stage_times(front_s: f64, raster_s: f64, depth: usize) -> f64 {
+    if depth >= 2 {
+        front_s.max(raster_s)
+    } else {
+        front_s + raster_s
+    }
+}
+
+/// [`price_workload`] under a `depth`-slot frame pipeline: per-frame
+/// device time is `max(frontend, raster + overhead)` at depth >= 2 —
+/// the arithmetic the planner must use for a pool that overlaps frame
+/// N+1's frontend with frame N's rasterization, or it would refuse
+/// viewers the pipelined device can actually hold.
+pub fn price_workload_at_depth(
+    w: &FrameWorkload,
+    variant: HardwareVariant,
+    depth: usize,
+) -> f64 {
     let (frontend_cost, mut raster_cost) = cost_models_for(variant);
     let (front_s, _front_j) = frontend_cost.frontend_cost(w);
     let raster = raster_cost.raster_cost(w);
-    front_s + raster.time_s + raster_cost.overhead_s()
+    combine_stage_times(front_s, raster.time_s + raster_cost.overhead_s(), depth)
+}
+
+/// [`price_workload_at_depth`] over the O(tiles) aggregate record — the
+/// fast rung-pricing path ([`PricingMode::Aggregate`]).
+pub fn price_aggregate_at_depth(
+    a: &AggregateWorkload,
+    variant: HardwareVariant,
+    depth: usize,
+) -> f64 {
+    let (frontend_cost, mut raster_cost) = cost_models_for(variant);
+    let (front_s, _front_j) = frontend_cost.frontend_work_cost(&a.frontend_work());
+    let raster = raster_cost.raster_cost_aggregate(a);
+    combine_stage_times(front_s, raster.time_s + raster_cost.overhead_s(), depth)
 }
 
 /// Picks the cheapest tier mix (best quality first) that holds a
@@ -94,10 +147,17 @@ pub struct AdmissionController {
     target_fps: f64,
     ladder: Vec<Tier>,
     reduced_fraction: f64,
+    /// Frame-slot depth the pool serves at: depth >= 2 prices a frame
+    /// as `max(frontend, raster + overhead)` instead of the sum.
+    pipeline_depth: usize,
+    /// Exact per-pixel rung pricing vs the O(tiles) aggregate path.
+    pricing: PricingMode,
 }
 
 impl AdmissionController {
     /// `ladder` is quality-ordered, best first; demotion walks down it.
+    /// Defaults to synchronous (depth 1) exact pricing; see
+    /// [`Self::with_pipeline_depth`] and [`Self::with_pricing`].
     pub fn new(target_fps: f64, ladder: Vec<Tier>, reduced_fraction: f64) -> Result<Self> {
         ensure!(
             target_fps > 0.0 && target_fps.is_finite(),
@@ -108,13 +168,38 @@ impl AdmissionController {
             reduced_fraction > 0.0 && reduced_fraction <= 1.0,
             "reduced fraction must be in (0, 1], got {reduced_fraction}"
         );
-        Ok(AdmissionController { target_fps, ladder, reduced_fraction })
+        Ok(AdmissionController {
+            target_fps,
+            ladder,
+            reduced_fraction,
+            pipeline_depth: 1,
+            pricing: PricingMode::Exact,
+        })
+    }
+
+    /// Price frames for a `depth`-slot pipelined pool (clamped to the
+    /// supported 1..=2 range).
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
+        self.pipeline_depth = depth.clamp(1, 2);
+        self
+    }
+
+    /// Select the rung-pricing path.
+    pub fn with_pricing(mut self, pricing: PricingMode) -> Self {
+        self.pricing = pricing;
+        self
     }
 
     /// Build from the `[pool]` config block (`pool.target_fps` must be
-    /// set).
+    /// set); picks up `pool.pipeline_depth` and `pool.pricing`.
     pub fn from_config(cfg: &LuminaConfig) -> Result<Self> {
-        Self::new(cfg.pool.target_fps, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+        Ok(Self::new(
+            cfg.pool.target_fps,
+            cfg.pool.tiers.clone(),
+            cfg.pool.reduced_fraction,
+        )?
+        .with_pipeline_depth(cfg.pool.pipeline_depth)
+        .with_pricing(cfg.pool.pricing))
     }
 
     pub fn target_fps(&self) -> f64 {
@@ -123,6 +208,14 @@ impl AdmissionController {
 
     pub fn ladder(&self) -> &[Tier] {
         &self.ladder
+    }
+
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    pub fn pricing(&self) -> PricingMode {
+        self.pricing
     }
 
     /// Plan a tier per session. Starts everyone at the ladder's best
@@ -141,17 +234,32 @@ impl AdmissionController {
 
         // Per-session rungs: the ladder tiers the session can actually
         // serve, each priced by re-scaling the measured workload from
-        // the tier it was measured under.
+        // the tier it was measured under. The aggregate path collapses
+        // the per-pixel record once per session (O(pixels)), then every
+        // rung re-scales and prices in O(tiles).
         let mut rungs: Vec<Vec<(Tier, f64)>> = Vec::with_capacity(demands.len());
         for d in demands {
+            let agg = (self.pricing == PricingMode::Aggregate)
+                .then(|| d.workload.aggregate());
             let r: Vec<(Tier, f64)> = self
                 .ladder
                 .iter()
                 .copied()
                 .filter(|&t| d.supports(t))
                 .map(|t| {
-                    let est = d.workload.tier_estimate(d.tier, t, self.reduced_fraction);
-                    (t, price_workload(&est, d.variant))
+                    let price = match &agg {
+                        Some(a) => price_aggregate_at_depth(
+                            &a.tier_estimate(d.tier, t, self.reduced_fraction),
+                            d.variant,
+                            self.pipeline_depth,
+                        ),
+                        None => price_workload_at_depth(
+                            &d.workload.tier_estimate(d.tier, t, self.reduced_fraction),
+                            d.variant,
+                            self.pipeline_depth,
+                        ),
+                    };
+                    (t, price)
                 })
                 .collect();
             ensure!(
@@ -330,6 +438,69 @@ mod tests {
         // And the best-effort floor is reduced, not half.
         let d2 = SessionDemand { half_capable: false, ..demand(64 * 64, 0.0) };
         assert_eq!(ctrl.floor_tiers(&[d2]), vec![Tier::Reduced]);
+    }
+
+    #[test]
+    fn pipelined_pricing_is_the_stage_max() {
+        let d = demand(128 * 128, 0.0);
+        let synchronous = price_workload_at_depth(&d.workload, d.variant, 1);
+        let pipelined = price_workload_at_depth(&d.workload, d.variant, 2);
+        assert!(pipelined < synchronous, "overlap must price below the stage sum");
+        assert_eq!(synchronous, price_workload(&d.workload, d.variant));
+        // max(frontend, raster+overhead) decomposition: the two depths
+        // bound each other by the frontend share.
+        assert!(pipelined * 2.0 >= synchronous, "max >= sum/2");
+    }
+
+    #[test]
+    fn pipelined_controller_admits_what_sum_pricing_refuses_to_keep_full() {
+        let one = price_workload(&demand(128 * 128, 0.0).workload, HardwareVariant::Gpu);
+        // Budget fits ~2.5 sum-priced sessions: synchronous pricing must
+        // demote someone, overlapped pricing holds all three at full
+        // (the frontend share is well above the ~17% break-even).
+        let target = (1.0 - ADMISSION_HEADROOM) / (2.5 * one);
+        let demands = vec![demand(128 * 128, 3.0), demand(128 * 128, 2.0), demand(128 * 128, 1.0)];
+        let sync = AdmissionController::new(target, ladder(), 0.5).unwrap();
+        assert_eq!(sync.pipeline_depth(), 1);
+        let plan = sync.plan(&demands).unwrap();
+        assert!(plan.tiers.iter().any(|&t| t != Tier::Full));
+        let piped = AdmissionController::new(target, ladder(), 0.5)
+            .unwrap()
+            .with_pipeline_depth(2);
+        assert_eq!(piped.pipeline_depth(), 2);
+        let plan = piped.plan(&demands).unwrap();
+        assert_eq!(plan.tiers, vec![Tier::Full; 3], "pipelined device holds all three");
+    }
+
+    #[test]
+    fn aggregate_pricing_pins_exact_demotion_decisions() {
+        // Uniform synthetic demands: the aggregate transforms are exact,
+        // so the two pricing paths must plan identical tier mixes across
+        // the whole pressure range, and refuse identically.
+        let one = price_workload(&demand(128 * 128, 0.0).workload, HardwareVariant::Gpu);
+        let demands = || {
+            vec![demand(128 * 128, 3.0), demand(128 * 128, 2.0), demand(128 * 128, 1.0)]
+        };
+        for fit in [6.0, 3.2, 2.5, 2.2, 1.6, 1.1, 0.8] {
+            let target = (1.0 - ADMISSION_HEADROOM) / (fit * one);
+            let exact = AdmissionController::new(target, ladder(), 0.5).unwrap();
+            let fast = AdmissionController::new(target, ladder(), 0.5)
+                .unwrap()
+                .with_pricing(PricingMode::Aggregate);
+            assert_eq!(fast.pricing(), PricingMode::Aggregate);
+            match (exact.plan(&demands()), fast.plan(&demands())) {
+                (Ok(e), Ok(f)) => {
+                    assert_eq!(e.tiers, f.tiers, "plans diverged at fit={fit}");
+                }
+                (Err(_), Err(_)) => {} // both refuse: also parity
+                (e, f) => panic!(
+                    "pricing paths disagree on admission at fit={fit}: exact {:?} vs \
+                     aggregate {:?}",
+                    e.map(|p| p.tiers),
+                    f.map(|p| p.tiers)
+                ),
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod admission;
 pub mod report;
 pub mod session;
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -39,7 +40,10 @@ use crate::pipeline::image::Image;
 use crate::pipeline::project::project;
 use crate::pipeline::raster::{rasterize, RasterConfig, RasterStats};
 use crate::pipeline::sort::bin_and_sort;
-use crate::pipeline::stage::{FrameWorkload, FrontendStage, PlainRaster, RasterBackend};
+use crate::pipeline::stage::{
+    CompletedFrame, FrameWorkload, FrontendStage, NextFrameInput, PipelinedSession,
+    PlainRaster, RasterBackend,
+};
 use crate::scene::synth::synth_scene;
 use crate::scene::GaussianScene;
 use crate::sim::cost::{CostModel, FrontendCostModel};
@@ -66,6 +70,12 @@ pub struct Coordinator {
     raster: Box<dyn RasterBackend>,
     frontend_cost: Box<dyn FrontendCostModel>,
     raster_cost: Box<dyn CostModel>,
+    /// Double-buffered frame-slot state machine (depth from
+    /// `cfg.pool.pipeline_depth`; depth 1 = synchronous stepping).
+    pipeline: PipelinedSession,
+    /// Frames completed by an implicit drain (a tier swap with a frame
+    /// in flight) awaiting pickup by the next step call.
+    drained: VecDeque<FrameResult>,
     frame_idx: usize,
     /// Serving tier (LoD ladder); swapped mid-run by [`Self::set_tier`].
     tier: Tier,
@@ -216,6 +226,7 @@ impl Coordinator {
         let (frontend_cost, raster_cost) = cost_models_for(cfg.variant);
         let raster =
             compose_raster(&cfg, &render_intr, raster_cost.needs_uncached_stats(), Tier::Full);
+        let pipeline = PipelinedSession::new(cfg.pool.pipeline_depth);
 
         Ok(Coordinator {
             cfg,
@@ -227,6 +238,8 @@ impl Coordinator {
             raster,
             frontend_cost,
             raster_cost,
+            pipeline,
+            drained: VecDeque::new(),
             frame_idx: 0,
             tier: Tier::Full,
             lod_scene: None,
@@ -242,6 +255,18 @@ impl Coordinator {
     /// Current serving tier.
     pub fn tier(&self) -> Tier {
         self.tier
+    }
+
+    /// Configured pipeline depth (1 = synchronous).
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline.depth()
+    }
+
+    /// Frames this session still owes beyond the unfed trajectory:
+    /// slots mid-flight (frontend done, raster pending) plus drained
+    /// results awaiting pickup.
+    pub fn in_flight(&self) -> usize {
+        self.pipeline.in_flight() + self.drained.len()
     }
 
     /// Whether this session can serve a tier: `ds2-gpu` cannot halve
@@ -281,6 +306,21 @@ impl Coordinator {
             return Ok(());
         }
         let render_intr = tier_intrinsics(&self.cfg, tier)?;
+        // A tier swap rebuilds the raster backend and resets the
+        // frontend's cross-frame state, but a frame mid-flight through
+        // the slot machine must finish under the stages (and pipeline
+        // resolution) that started it: drain it now, under the *old*
+        // tier, and stage the result for the next step call. Only then
+        // may the stages be rebuilt.
+        while self.pipeline.in_flight() > 0 {
+            let (w, h) = (self.render_intr.width, self.render_intr.height);
+            if let Some(done) =
+                self.pipeline.advance(&mut self.frontend, self.raster.as_mut(), None, w, h)
+            {
+                let result = self.complete_frame(done);
+                self.drained.push_back(result);
+            }
+        }
         self.lod_scene = if tier == Tier::Reduced {
             Some(match reduced {
                 Some(s) => s,
@@ -346,8 +386,17 @@ impl Coordinator {
         (out.image, out.stats.unwrap(), p.len(), bins.total_entries())
     }
 
-    /// Render the next frame under the configured variant.
+    /// Render the next frame under the configured variant. Synchronous
+    /// semantics: any frame left over from pipelined stepping (drained
+    /// or mid-flight) is delivered before a new pose is consumed.
     pub fn step(&mut self) -> Result<FrameResult> {
+        if let Some(result) = self.drained.pop_front() {
+            return Ok(result);
+        }
+        if self.pipeline.in_flight() > 0 {
+            let result = self.drain_one()?.expect("in-flight frame drains");
+            return Ok(result);
+        }
         #[cfg(test)]
         {
             if self.fail_at_frame == Some(self.frame_idx) {
@@ -367,23 +416,74 @@ impl Coordinator {
         self.render_at(idx, &pose)
     }
 
+    /// One dispatch of the frame-slot state machine: start the next
+    /// pose's frontend (when poses remain) while the in-flight frame
+    /// rasterizes — at depth 2 the two stages run concurrently on a
+    /// split thread budget. Returns the frame that completed; `None` on
+    /// the priming dispatch that only starts a frontend. Depth-1
+    /// sessions complete the fed frame immediately (synchronous
+    /// semantics), and frames drained by a mid-run tier swap are
+    /// delivered first.
+    pub fn step_pipelined(&mut self) -> Result<Option<FrameResult>> {
+        if let Some(result) = self.drained.pop_front() {
+            return Ok(Some(result));
+        }
+        if self.remaining() == 0 {
+            return self.drain_one();
+        }
+        let idx = self.frame_idx;
+        #[cfg(test)]
+        {
+            if self.fail_at_frame == Some(idx) {
+                anyhow::bail!("injected session failure at frame {idx}");
+            }
+            if self.panic_at_frame == Some(idx) {
+                panic!("injected session panic at frame {idx}");
+            }
+        }
+        let pose = self.trajectory.poses[idx];
+        self.frame_idx += 1;
+        let (w, h) = (self.render_intr.width, self.render_intr.height);
+        let scene = match &self.lod_scene {
+            Some(s) => s.clone(),
+            None => self.scene.clone(),
+        };
+        let intr = self.render_intr;
+        let next = NextFrameInput { frame: idx, scene: &*scene, pose: &pose, intr: &intr };
+        let done =
+            self.pipeline.advance(&mut self.frontend, self.raster.as_mut(), Some(next), w, h);
+        Ok(done.map(|d| self.complete_frame(d)))
+    }
+
+    /// Complete the in-flight frame, if any, without feeding a new one
+    /// (epoch boundaries, end of trajectory).
+    pub fn drain_one(&mut self) -> Result<Option<FrameResult>> {
+        if let Some(result) = self.drained.pop_front() {
+            return Ok(Some(result));
+        }
+        let (w, h) = (self.render_intr.width, self.render_intr.height);
+        let done = self.pipeline.advance(&mut self.frontend, self.raster.as_mut(), None, w, h);
+        Ok(done.map(|d| self.complete_frame(d)))
+    }
+
     /// Frames remaining in the trajectory.
     pub fn remaining(&self) -> usize {
         self.trajectory.poses.len().saturating_sub(self.frame_idx)
     }
 
-    /// Run the full trajectory.
+    /// Run the full trajectory (delivering any frames left over from
+    /// pipelined stepping first).
     pub fn run(&mut self) -> Result<RunReport> {
         let mut report = RunReport::new(self.cfg.variant.label());
-        while self.remaining() > 0 {
+        while self.remaining() > 0 || self.in_flight() > 0 {
             let f = self.step()?;
             report.push(f.report);
         }
         Ok(report)
     }
 
-    /// One pass of the stage graph: frontend -> raster -> workload ->
-    /// cost models -> report. Variant-free by construction.
+    /// One synchronous pass of the stage graph: frontend -> raster ->
+    /// workload -> cost models -> report. Variant-free by construction.
     fn render_at(&mut self, idx: usize, pose: &Pose) -> Result<FrameResult> {
         let (w, h) = (self.render_intr.width, self.render_intr.height);
         // The reduced tier serves the LoD subsample instead of the full
@@ -397,8 +497,25 @@ impl Coordinator {
         // --- Functional stages ---------------------------------------
         let fo = self.frontend.run(&scene, pose, &self.render_intr);
         let frame = self.raster.render(&fo.projected, &fo.bins, w, h);
-        let workload = FrameWorkload::from_stages(idx, scene.len(), &fo, frame.work);
-        let image = self.raster.finalize(frame.image);
+        Ok(self.complete_frame(CompletedFrame {
+            frame: idx,
+            scene_gaussians: scene.len(),
+            frontend: fo,
+            raster: frame,
+        }))
+    }
+
+    /// The back half of the stage graph, shared by the synchronous and
+    /// pipelined paths: assemble the measured [`FrameWorkload`], price
+    /// it through the cost-model seams, finalize the image.
+    fn complete_frame(&mut self, done: CompletedFrame) -> FrameResult {
+        let workload = FrameWorkload::from_stages(
+            done.frame,
+            done.scene_gaussians,
+            &done.frontend,
+            done.raster.work,
+        );
+        let image = self.raster.finalize(done.raster.image);
 
         // --- Cost models ---------------------------------------------
         let (front_s, front_j) = self.frontend_cost.frontend_cost(&workload);
@@ -414,7 +531,7 @@ impl Coordinator {
         energy.gpu += front_j;
 
         let report = FrameReport {
-            frame: idx,
+            frame: workload.frame,
             time_s: stage.total(),
             frontend_s: front_s,
             raster_s: raster.time_s,
@@ -428,7 +545,7 @@ impl Coordinator {
             tier: self.tier.label(),
         };
         self.last_workload = Some(workload);
-        Ok(FrameResult { image, report })
+        FrameResult { image, report }
     }
 
     /// Render a frame and also compute quality vs the exact pipeline.

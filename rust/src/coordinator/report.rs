@@ -1,5 +1,6 @@
 //! Run/frame reporting structures and text rendering.
 
+use crate::coordinator::admission::combine_stage_times;
 use crate::lumina::rc::CacheStats;
 use crate::sim::energy::EnergyBreakdown;
 
@@ -34,6 +35,24 @@ pub struct FrameReport {
     /// tiered pools). Part of `PartialEq`, so the determinism tests
     /// also pin mid-run promotion/demotion sequences.
     pub tier: &'static str,
+}
+
+impl FrameReport {
+    /// Modeled device occupancy of this frame under a `depth`-slot
+    /// frame pipeline: at depth >= 2 the frontend overlaps the next
+    /// frame's rasterization, so a steady-state frame costs the device
+    /// the *slower* stage — `max(frontend, raster + overhead)` — while
+    /// `time_s` remains the frame's end-to-end latency. Shares the
+    /// planner's `combine_stage_times`, so report and admission
+    /// arithmetic cannot diverge.
+    pub fn device_time_s(&self, depth: usize) -> f64 {
+        if depth < 2 {
+            // Bit-exact latency at the synchronous baseline (adding the
+            // re-derived raster term back would cost a ulp).
+            return self.time_s;
+        }
+        combine_stage_times(self.frontend_s, self.time_s - self.frontend_s, depth)
+    }
 }
 
 /// A whole run.
@@ -73,6 +92,17 @@ impl RunReport {
             return 0.0;
         }
         self.frames.iter().map(|f| f.energy_j).sum::<f64>() / self.frames.len() as f64
+    }
+
+    /// Mean per-frame device occupancy under a `depth`-slot pipeline
+    /// (see [`FrameReport::device_time_s`]); equals [`Self::mean_time_s`]
+    /// at depth 1.
+    pub fn mean_device_time_s(&self, depth: usize) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.device_time_s(depth)).sum::<f64>()
+            / self.frames.len() as f64
     }
 
     /// Aggregate cache hit rate over the run.
@@ -155,6 +185,19 @@ mod tests {
         assert!((r.mean_energy_j() - 0.2).abs() < 1e-12);
         assert_eq!(r.mean_psnr(), Some(30.0));
         assert!(r.summary().contains("fps"));
+    }
+
+    #[test]
+    fn device_time_overlaps_stages_at_depth_two() {
+        let f = frame(0.01, 0.1);
+        assert_eq!(f.device_time_s(1), f.time_s);
+        // frontend 0.3t vs raster-and-overhead 0.7t: the slower wins.
+        assert!((f.device_time_s(2) - 0.007).abs() < 1e-12);
+        let mut r = RunReport::new("depth");
+        r.push(frame(0.01, 0.1));
+        r.push(frame(0.03, 0.3));
+        assert!((r.mean_device_time_s(1) - r.mean_time_s()).abs() < 1e-15);
+        assert!(r.mean_device_time_s(2) < r.mean_time_s());
     }
 
     #[test]

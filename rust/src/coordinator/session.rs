@@ -16,6 +16,16 @@
 //! process-global budget is never mutated — a panicking session cannot
 //! leak a clamped thread count to the rest of the process.
 //!
+//! With `pool.pipeline_depth = 2` the pool schedules *stages* instead
+//! of whole sessions: each session runs a double-buffered
+//! [`crate::pipeline::stage::PipelinedSession`] frame slot, so frame
+//! N+1's frontend (projection + S² speculative sort) overlaps frame N's
+//! rasterization on a split thread budget, and the outer worker count
+//! is sized by stage slots. Slots drain at every epoch boundary, so
+//! re-planning sees exactly the state a synchronous pool would — and
+//! the rendered output stays bitwise identical to depth 1 at any
+//! thread count (`tests/sessions.rs`).
+//!
 //! [`SessionPool::serve`] adds the capacity-managed mode: an
 //! [`AdmissionController`] prices every session's recent
 //! [`crate::pipeline::stage::FrameWorkload`] through the cost-model
@@ -53,6 +63,10 @@ pub struct PoolReport {
     pub sessions: Vec<RunReport>,
     /// Host wall-clock time for the whole parallel run (s).
     pub wall_s: f64,
+    /// Frame-slot depth the pool served at (1 = synchronous). Decides
+    /// whether [`Self::pool_fps`] charges full frame latency or the
+    /// overlapped `max(frontend, raster)` device time per frame.
+    pub pipeline_depth: usize,
 }
 
 impl PoolReport {
@@ -78,9 +92,16 @@ impl PoolReport {
 
     /// Pool rate under the time-slicing capacity model: the rate at
     /// which one modeled device delivers a frame to *every* session
-    /// (the quantity the admission controller targets).
+    /// (the quantity the admission controller targets). A pipelined
+    /// pool (depth >= 2) charges each frame the overlapped device time
+    /// — `max(frontend, raster + overhead)` — matching the admission
+    /// controller's pipelined pricing.
     pub fn pool_fps(&self) -> f64 {
-        let t: f64 = self.sessions.iter().map(|r| r.mean_time_s()).sum();
+        let t: f64 = self
+            .sessions
+            .iter()
+            .map(|r| r.mean_device_time_s(self.pipeline_depth))
+            .sum();
         if t > 0.0 {
             1.0 / t
         } else {
@@ -235,7 +256,7 @@ impl SessionPool {
         }
 
         let mut epochs: Vec<Vec<Vec<FrameReport>>> = Vec::new();
-        while self.sessions.iter().any(|c| c.remaining() > 0) {
+        while self.sessions.iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
             epochs.push(self.run_parallel(Some(epoch))?);
             // Re-plan over the sessions that still have frames to serve
             // — finished viewers consume no device time and must not
@@ -266,7 +287,7 @@ impl SessionPool {
         let mut indices = Vec::new();
         let mut demands = Vec::new();
         for (i, c) in self.sessions.iter().enumerate() {
-            if c.remaining() == 0 {
+            if c.remaining() == 0 && c.in_flight() == 0 {
                 continue;
             }
             let w = c
@@ -337,7 +358,7 @@ impl SessionPool {
         let mut work: Vec<(usize, Coordinator, Option<Result<Vec<FrameReport>>>)> = Vec::new();
         let mut idle: Vec<(usize, Coordinator)> = Vec::new();
         for (i, c) in std::mem::take(&mut self.sessions).into_iter().enumerate() {
-            if c.remaining() > 0 {
+            if c.remaining() > 0 || c.in_flight() > 0 {
                 work.push((i, c, None));
             } else {
                 idle.push((i, c));
@@ -345,7 +366,15 @@ impl SessionPool {
         }
         if !work.is_empty() {
             let total = par::num_threads();
-            let outer = total.min(work.len()).max(1);
+            // Stage-level scheduling: a depth-d session dispatches up to
+            // d stages concurrently (frame N+1's frontend alongside
+            // frame N's raster), so size the outer worker count by
+            // *stage slots* rather than whole sessions — fewer outer
+            // workers, each holding the >= depth threads its session's
+            // concurrent stages can actually occupy.
+            let depth =
+                work.iter().map(|(_, c, _)| c.pipeline_depth()).max().unwrap_or(1).max(1);
+            let outer = (total / depth).clamp(1, work.len());
             let chunk = work.len().div_ceil(outer);
             let n_workers = work.len().div_ceil(chunk);
             let budgets = par::split_budget(total, n_workers);
@@ -399,16 +428,44 @@ impl SessionPool {
                 }
             }
         }
-        PoolReport { sessions, wall_s }
+        let pipeline_depth = self
+            .sessions
+            .iter()
+            .map(|c| c.pipeline_depth())
+            .max()
+            .unwrap_or(1);
+        PoolReport { sessions, wall_s, pipeline_depth }
     }
 }
 
-/// Run one session for up to `cap` frames (whole trajectory if `None`).
+/// Run one session for up to `cap` *completed* frames (whole trajectory
+/// if `None`).
+///
+/// Depth-1 sessions step synchronously. Pipelined sessions dispatch
+/// stages: keep feeding frontends while the in-flight frame rasterizes,
+/// then drain — no new frontend — once the epoch's completion target is
+/// covered, so every epoch boundary (where the pool re-plans tiers) sees
+/// empty frame slots and the admission controller prices the same
+/// final-frame workload a synchronous pool would.
 fn step_session(coord: &mut Coordinator, cap: Option<usize>) -> Result<Vec<FrameReport>> {
     let limit = cap.unwrap_or(usize::MAX);
     let mut frames = Vec::new();
-    while coord.remaining() > 0 && frames.len() < limit {
-        frames.push(coord.step()?.report);
+    if coord.pipeline_depth() <= 1 {
+        while coord.remaining() > 0 && frames.len() < limit {
+            frames.push(coord.step()?.report);
+        }
+        return Ok(frames);
+    }
+    let target = limit.min(coord.remaining() + coord.in_flight());
+    while frames.len() < target {
+        let feed = frames.len() + coord.in_flight() < target && coord.remaining() > 0;
+        let done = if feed { coord.step_pipelined()? } else { coord.drain_one()? };
+        if let Some(f) = done {
+            frames.push(f.report);
+        } else if !feed && coord.in_flight() == 0 {
+            // Defensive: nothing in flight and nothing to feed.
+            break;
+        }
     }
     Ok(frames)
 }

@@ -5,12 +5,14 @@
 //!   serve     run N concurrent viewer sessions over one shared scene
 //!   compare   run every paper variant on one config (Fig. 22 style)
 //!   quality   per-frame quality vs the exact pipeline (Fig. 20 style)
+//!   gen-scene synthesize a scene and write it as LGSC (CI caches this)
 //!   runtime   load the AOT artifacts and smoke-execute them via PJRT
 //!             (requires the `xla-runtime` build feature)
 //!   info      print the resolved config
 //!
 //! Common flags: --config <toml>, --set key=value (repeatable),
-//! --frames N, --out <ppm path> (render only), --sessions N (serve).
+//! --frames N, --out <path> (render/gen-scene), --sessions N /
+//! --pipeline-depth D (serve).
 
 use anyhow::{Context, Result};
 
@@ -29,6 +31,7 @@ const VALUE_KEYS: &[&str] = &[
     "sessions",
     "target-fps",
     "tiers",
+    "pipeline-depth",
 ];
 
 fn main() -> Result<()> {
@@ -39,6 +42,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("compare") => cmd_compare(&args),
         Some("quality") => cmd_quality(&args),
+        Some("gen-scene") => cmd_gen_scene(&args),
         Some("runtime") => cmd_runtime(&args),
         Some("info") => cmd_info(&args),
         other => {
@@ -70,6 +74,9 @@ fn print_help() {
                                   tiered admission controller (serve cmd)\n\
            --tiers <ladder>       tier ladder, best first, e.g.\n\
                                   full,reduced,half (serve cmd)\n\
+           --pipeline-depth <d>   frame slots per session: 1 synchronous,\n\
+                                  2 double-buffered — frame N+1's frontend\n\
+                                  overlaps frame N's raster (serve cmd)\n\
            --artifacts <dir>      AOT artifact directory (runtime cmd)"
     );
 }
@@ -131,14 +138,21 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     if let Some(t) = args.get("tiers") {
         cfg.pool.tiers = Tier::parse_ladder(t)?;
     }
+    if let Some(d) = args.get("pipeline-depth") {
+        let d: usize = d.parse().context("--pipeline-depth must be an integer")?;
+        // Route through the config validator (1..=2).
+        cfg.apply_override(&format!("pool.pipeline_depth={d}"))?;
+    }
     let n: usize = args.get_parsed("sessions", 4);
     println!(
-        "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{}",
+        "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{} \
+         | pipeline depth {}",
         cfg.variant.label(),
         cfg.gaussian_count(),
         cfg.camera.frames,
         cfg.camera.width,
-        cfg.camera.height
+        cfg.camera.height,
+        cfg.pool.pipeline_depth
     );
     let admission = cfg.pool.target_fps > 0.0;
     let mut pool = SessionPool::new(cfg.clone(), n)?;
@@ -223,6 +237,24 @@ fn cmd_quality(args: &cli::Args) -> Result<()> {
         report.push(f.report);
     }
     println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_gen_scene(args: &cli::Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get("out").context("gen-scene needs --out <path.lgsc>")?;
+    let scene = lumina::scene::synth::synth_scene(
+        cfg.scene.class,
+        cfg.scene.seed,
+        cfg.gaussian_count(),
+    );
+    lumina::scene::io::write_scene(out, &scene)?;
+    println!(
+        "wrote {} Gaussians (class {:?}, seed {}) to {out}",
+        scene.len(),
+        cfg.scene.class,
+        cfg.scene.seed
+    );
     Ok(())
 }
 

@@ -23,6 +23,13 @@
 //!   and [`crate::lumina::ds2::Ds2Raster`] (half-res + upsample).
 //! * [`FrameWorkload`] — everything the functional stages measured about
 //!   the frame, in the exact units the hardware cost models consume.
+//!   [`FrameWorkload::aggregate`] collapses it into the O(tiles)
+//!   [`AggregateWorkload`] the admission controller's fast rung-pricing
+//!   path re-scales.
+//! * [`PipelinedSession`] — the double-buffered frame-slot state machine
+//!   for async frame pipelining: frame N+1's frontend runs concurrently
+//!   with frame N's rasterization on a split thread budget, bitwise
+//!   invisible in the output.
 //!
 //! The coordinator composes these as trait objects; no stage knows which
 //! hardware variant is being modeled.
@@ -36,6 +43,7 @@ use crate::pipeline::project::{project, ProjectedScene};
 use crate::pipeline::raster::{rasterize, RasterConfig, RasterStats};
 use crate::pipeline::sort::{bin_and_sort, TileBins};
 use crate::scene::GaussianScene;
+use crate::util::par;
 
 /// Everything one frame's functional stages measured, in the units the
 /// hardware cost models consume. Produced by [`FrameWorkload::from_stages`]
@@ -118,6 +126,63 @@ impl FrameWorkload {
     /// Framebuffer pixel count.
     pub fn pixels(&self) -> usize {
         self.width * self.height
+    }
+
+    /// The frontend-stage scalars the frontend cost models price.
+    pub fn frontend_work(&self) -> FrontendWork {
+        FrontendWork {
+            scene_gaussians: self.scene_gaussians,
+            sorted: self.sorted,
+            sort_entries: self.sort_entries,
+            refreshed_gaussians: self.refreshed_gaussians,
+        }
+    }
+
+    /// Collapse the per-pixel record into an O(tiles) aggregate — the
+    /// admission controller's fast rung-pricing representation (built
+    /// once per session per planning round; every ladder rung is then
+    /// re-scaled in O(tiles) instead of re-gridding `width * height`
+    /// pixel counts). The record is normalized first, exactly like the
+    /// per-pixel [`Self::tier_estimate`] path.
+    pub fn aggregate(&self) -> AggregateWorkload {
+        let w = self.normalized();
+        let mut tiles = Vec::with_capacity(w.tiles_x * w.tiles_y);
+        let ts = w.tile_size.max(1);
+        for ty in 0..w.tiles_y {
+            for tx in 0..w.tiles_x {
+                let mut t = TileAggregate {
+                    list_len: w.tile_list_lens[ty * w.tiles_x + tx],
+                    width: ts.min(w.width.saturating_sub(tx * ts)) as u32,
+                    height: ts.min(w.height.saturating_sub(ty * ts)) as u32,
+                    ..TileAggregate::default()
+                };
+                for ly in 0..t.height as usize {
+                    let y = ty * ts + ly;
+                    for lx in 0..t.width as usize {
+                        let x = tx * ts + lx;
+                        let off = y * w.width + x;
+                        let c = w.consumed[off];
+                        t.iter_sum += c as u64;
+                        t.sig_sum += w.significant[off] as u64;
+                        t.iter_max = t.iter_max.max(c);
+                    }
+                }
+                tiles.push(t);
+            }
+        }
+        AggregateWorkload {
+            width: w.width,
+            height: w.height,
+            tile_size: w.tile_size,
+            tiles_x: w.tiles_x,
+            tiles_y: w.tiles_y,
+            scene_gaussians: w.scene_gaussians,
+            sorted: w.sorted,
+            sort_entries: w.sort_entries,
+            refreshed_gaussians: w.refreshed_gaussians,
+            swap_bytes: w.swap_bytes,
+            tiles,
+        }
     }
 
     /// True when the frame went through a radiance cache.
@@ -297,6 +362,226 @@ fn resample_grid(
     out
 }
 
+/// The frontend-stage scalars a frontend cost model prices — common to
+/// the exact per-pixel [`FrameWorkload`] and the O(tiles)
+/// [`AggregateWorkload`].
+#[derive(Debug, Clone, Copy)]
+pub struct FrontendWork {
+    pub scene_gaussians: usize,
+    pub sorted: bool,
+    pub sort_entries: usize,
+    pub refreshed_gaussians: usize,
+}
+
+/// Per-tile statistics of a workload: sums, the deepest lane, and the
+/// tile's sorted-list length — enough for the cost models to price a
+/// frame without the per-pixel grids.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TileAggregate {
+    /// Sorted-list length of the tile.
+    pub list_len: usize,
+    /// Tile extent actually covered, in pixels (edge tiles are
+    /// partial). Kept as a geometry, not a bare count, so warp-shaped
+    /// pricing can reconstruct how many 2x16 warps the tile spans.
+    pub width: u32,
+    pub height: u32,
+    /// Summed per-pixel consumed counts.
+    pub iter_sum: u64,
+    /// Summed per-pixel significant counts.
+    pub sig_sum: u64,
+    /// Deepest per-pixel consumed count (bounds the feature stream and
+    /// the non-remapped PE time).
+    pub iter_max: u32,
+}
+
+impl TileAggregate {
+    /// Pixels the tile covers.
+    pub fn pixels(&self) -> u32 {
+        self.width * self.height
+    }
+}
+
+/// O(tiles) aggregate of a [`FrameWorkload`]: the admission
+/// controller's fast rung-pricing record. Tier re-scaling
+/// ([`Self::tier_estimate`]) mirrors the exact per-pixel transforms but
+/// costs O(tiles) per rung; pricing assumes per-pixel counts are
+/// uniform within a tile, bounded by the tile's recorded maximum —
+/// conservative where it deviates, so the planner still errs toward
+/// refusing work (see `tests/admission.rs` for the decision-parity
+/// pin).
+#[derive(Debug, Clone)]
+pub struct AggregateWorkload {
+    pub width: usize,
+    pub height: usize,
+    pub tile_size: usize,
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+    pub scene_gaussians: usize,
+    pub sorted: bool,
+    pub sort_entries: usize,
+    pub refreshed_gaussians: usize,
+    pub swap_bytes: u64,
+    pub tiles: Vec<TileAggregate>,
+}
+
+impl AggregateWorkload {
+    /// The frontend-stage scalars the frontend cost models price.
+    pub fn frontend_work(&self) -> FrontendWork {
+        FrontendWork {
+            scene_gaussians: self.scene_gaussians,
+            sorted: self.sorted,
+            sort_entries: self.sort_entries,
+            refreshed_gaussians: self.refreshed_gaussians,
+        }
+    }
+
+    /// Total consumed Gaussian-pixel pairs (the GSCore pricing input).
+    pub fn iter_total(&self) -> u64 {
+        self.tiles.iter().map(|t| t.iter_sum).sum()
+    }
+
+    /// O(tiles) mirror of [`FrameWorkload::tier_estimate`]: estimate
+    /// this aggregate re-served under `target` tier given it was
+    /// measured under `measured`.
+    pub fn tier_estimate(
+        &self,
+        measured: Tier,
+        target: Tier,
+        reduced_fraction: f64,
+    ) -> AggregateWorkload {
+        self.estimate_full(measured, reduced_fraction)
+            .estimate_from_full(target, reduced_fraction)
+    }
+
+    fn estimate_full(&self, measured: Tier, reduced_fraction: f64) -> AggregateWorkload {
+        match measured {
+            Tier::Full => self.clone(),
+            Tier::Reduced => {
+                let mut w = self.clone();
+                w.scale_gaussian_load(1.0 / reduced_fraction);
+                w
+            }
+            Tier::Half => self.resample(
+                self.width * 2,
+                self.height * 2,
+                1.0 / HALF_LIST_GROWTH,
+                1.0 / HALF_ENTRY_KEEP,
+            ),
+        }
+    }
+
+    fn estimate_from_full(self, target: Tier, reduced_fraction: f64) -> AggregateWorkload {
+        match target {
+            Tier::Full => self,
+            Tier::Reduced => {
+                let mut w = self;
+                w.scale_gaussian_load(reduced_fraction);
+                w
+            }
+            Tier::Half => self.resample(
+                (self.width / 2).max(1),
+                (self.height / 2).max(1),
+                HALF_LIST_GROWTH,
+                HALF_ENTRY_KEEP,
+            ),
+        }
+    }
+
+    /// Mirror of the per-pixel record's `scale_gaussian_load` over tile
+    /// sums.
+    fn scale_gaussian_load(&mut self, f: f64) {
+        self.scene_gaussians = scale_round(self.scene_gaussians, f);
+        self.sort_entries = scale_round(self.sort_entries, f);
+        self.refreshed_gaussians = scale_round(self.refreshed_gaussians, f);
+        for t in self.tiles.iter_mut() {
+            t.list_len = scale_round(t.list_len, f);
+            // Round at per-pixel granularity (scaled mean, then summed)
+            // like the exact path rounds each pixel's count.
+            let px = f64::from(t.pixels().max(1));
+            t.iter_sum = ((t.iter_sum as f64 / px * f).round() * px) as u64;
+            t.sig_sum = ((t.sig_sum as f64 / px * f).round() * px) as u64;
+            t.iter_max = (t.iter_max as f64 * f).round() as u32;
+        }
+    }
+
+    /// Mirror of the per-pixel record's `resample` at tile granularity: each
+    /// new tile averages the old tiles its pixels nearest-neighbor
+    /// sample from (means scaled by `per_pixel_scale`, maxima kept as
+    /// block maxima — conservative), and tile lists are spread
+    /// uniformly from the `entry_scale`d total exactly like the
+    /// per-pixel path.
+    fn resample(
+        &self,
+        new_w: usize,
+        new_h: usize,
+        per_pixel_scale: f64,
+        entry_scale: f64,
+    ) -> AggregateWorkload {
+        let ts = self.tile_size.max(1);
+        let new_tx = new_w.div_ceil(ts);
+        let new_ty = new_h.div_ceil(ts);
+        let old_tx_n = self.tiles_x.max(1);
+        let old_ty_n = self.tiles_y.max(1);
+        let mut tiles = Vec::with_capacity(new_tx * new_ty);
+        for ty in 0..new_ty {
+            // Old tile rows sourced by this new tile's rows under the
+            // nearest-neighbor pixel mapping.
+            let y0 = ((ty * ts * self.height / new_h) / ts).min(old_ty_n - 1);
+            let y1 = ((((ty + 1) * ts - 1).min(new_h - 1) * self.height / new_h) / ts)
+                .min(old_ty_n - 1);
+            for tx in 0..new_tx {
+                let x0 = ((tx * ts * self.width / new_w) / ts).min(old_tx_n - 1);
+                let x1 = ((((tx + 1) * ts - 1).min(new_w - 1) * self.width / new_w) / ts)
+                    .min(old_tx_n - 1);
+                let (mut px, mut it, mut sg, mut mx) = (0u64, 0u64, 0u64, 0u32);
+                for oy in y0..=y1 {
+                    for ox in x0..=x1 {
+                        let o = &self.tiles[oy * old_tx_n + ox];
+                        px += u64::from(o.pixels());
+                        it += o.iter_sum;
+                        sg += o.sig_sum;
+                        mx = mx.max(o.iter_max);
+                    }
+                }
+                let tw = ts.min(new_w - tx * ts) as u32;
+                let th = ts.min(new_h - ty * ts) as u32;
+                let new_px = u64::from(tw) * u64::from(th);
+                let mean_it = if px > 0 { it as f64 / px as f64 } else { 0.0 };
+                let mean_sg = if px > 0 { sg as f64 / px as f64 } else { 0.0 };
+                // Round the scaled mean at per-pixel granularity, like
+                // the exact path rounds each resampled pixel.
+                tiles.push(TileAggregate {
+                    list_len: 0, // spread uniformly below
+                    width: tw,
+                    height: th,
+                    iter_sum: ((mean_it * per_pixel_scale).round() * new_px as f64) as u64,
+                    sig_sum: ((mean_sg * per_pixel_scale).round() * new_px as f64) as u64,
+                    iter_max: (mx as f64 * per_pixel_scale).round() as u32,
+                });
+            }
+        }
+        let total: usize = self.tiles.iter().map(|t| t.list_len).sum();
+        let n = (new_tx * new_ty).max(1);
+        let per_tile = scale_round(total, entry_scale).div_ceil(n);
+        for t in tiles.iter_mut() {
+            t.list_len = per_tile;
+        }
+        AggregateWorkload {
+            width: new_w,
+            height: new_h,
+            tile_size: self.tile_size,
+            tiles_x: new_tx,
+            tiles_y: new_ty,
+            scene_gaussians: self.scene_gaussians,
+            sorted: self.sorted,
+            sort_entries: scale_round(self.sort_entries, entry_scale),
+            refreshed_gaussians: self.refreshed_gaussians,
+            swap_bytes: self.swap_bytes,
+            tiles,
+        }
+    }
+}
+
 /// What the frontend stage produced for one frame.
 pub struct FrontendOutput {
     /// Projected Gaussian set to rasterize (S²: geometry/colors refreshed
@@ -461,6 +746,190 @@ impl RasterBackend for PlainRaster {
     }
 }
 
+/// Input for the next frame's frontend dispatch.
+pub struct NextFrameInput<'a> {
+    /// Frame index within the trajectory.
+    pub frame: usize,
+    /// Scene the frame renders (the session's LoD scene on the reduced
+    /// tier).
+    pub scene: &'a GaussianScene,
+    pub pose: &'a Pose,
+    /// Pipeline intrinsics (half the session resolution for DS-2/half
+    /// tier).
+    pub intr: &'a Intrinsics,
+}
+
+/// A frame mid-flight through the slot machine: frontend done,
+/// rasterization pending.
+pub struct PendingFrame {
+    pub frame: usize,
+    /// Scene size captured at feed time (the reduced tier's subsample,
+    /// not the shared scene).
+    pub scene_gaussians: usize,
+    pub frontend: FrontendOutput,
+}
+
+/// A frame whose raster stage just finished; the owner assembles the
+/// [`FrameWorkload`] and prices it.
+pub struct CompletedFrame {
+    pub frame: usize,
+    pub scene_gaussians: usize,
+    pub frontend: FrontendOutput,
+    pub raster: RasterFrame,
+}
+
+/// The double-buffered frame-slot state machine: the unit of
+/// stage-level scheduling.
+///
+/// At depth 2 a session holds one frame *in flight* — its frontend
+/// (projection + S² speculative sort) has run, its rasterization has
+/// not — so each [`Self::advance`] dispatch runs frame N+1's frontend
+/// concurrently with frame N's rasterization on a split thread budget.
+/// The two stages touch disjoint state (the frontend owns the S² shared
+/// sort, the raster backend owns the radiance cache), and each
+/// session's frontends and rasters stay strictly frame-ordered, so the
+/// overlap is bitwise invisible in the output: depth 2 produces exactly
+/// the frames depth 1 does, at any thread count (`tests/sessions.rs`).
+///
+/// Depth 1 keeps today's synchronous semantics — a fed frame completes
+/// in the same dispatch — and is the determinism baseline.
+pub struct PipelinedSession {
+    depth: usize,
+    slot: Option<PendingFrame>,
+}
+
+impl PipelinedSession {
+    /// `depth` is clamped to the supported 1 (synchronous) ..= 2
+    /// (double-buffered) range.
+    pub fn new(depth: usize) -> Self {
+        PipelinedSession { depth: depth.clamp(1, 2), slot: None }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Frames whose frontend ran but whose raster has not (0 or 1).
+    pub fn in_flight(&self) -> usize {
+        usize::from(self.slot.is_some())
+    }
+
+    /// One dispatch of the state machine: feed `next`'s frontend (when
+    /// given) while rasterizing the in-flight frame (when one exists),
+    /// overlapping the two on a split thread budget when both are
+    /// ready. Returns the frame that completed — `None` on a priming
+    /// dispatch that only starts a frontend, or when idle.
+    ///
+    /// `width`/`height` are the pipeline resolution the pending frame
+    /// rasterizes at; callers must not change it while a frame is in
+    /// flight (drain first — see `Coordinator::set_tier`).
+    pub fn advance(
+        &mut self,
+        frontend: &mut FrontendStage,
+        raster: &mut dyn RasterBackend,
+        next: Option<NextFrameInput<'_>>,
+        width: usize,
+        height: usize,
+    ) -> Option<CompletedFrame> {
+        if self.depth <= 1 {
+            // Synchronous: a fed frame runs both stages back to back and
+            // completes immediately; nothing is ever in flight.
+            let n = next?;
+            let fo = frontend.run(n.scene, n.pose, n.intr);
+            let rf = raster.render(&fo.projected, &fo.bins, width, height);
+            return Some(CompletedFrame {
+                frame: n.frame,
+                scene_gaussians: n.scene.len(),
+                frontend: fo,
+                raster: rf,
+            });
+        }
+        let pending = self.slot.take();
+        match (next, pending) {
+            (None, None) => None,
+            (Some(n), None) => {
+                // Priming: start the frontend, nothing to rasterize yet.
+                let fo = frontend.run(n.scene, n.pose, n.intr);
+                self.slot = Some(PendingFrame {
+                    frame: n.frame,
+                    scene_gaussians: n.scene.len(),
+                    frontend: fo,
+                });
+                None
+            }
+            (None, Some(p)) => {
+                // Drain: rasterize the in-flight frame alone.
+                let rf = raster.render(&p.frontend.projected, &p.frontend.bins, width, height);
+                Some(CompletedFrame {
+                    frame: p.frame,
+                    scene_gaussians: p.scene_gaussians,
+                    frontend: p.frontend,
+                    raster: rf,
+                })
+            }
+            (Some(n), Some(p)) => {
+                // Steady state: frame N+1's frontend overlaps frame N's
+                // rasterization.
+                let (rf, fo) = run_overlapped(frontend, raster, &n, &p, width, height);
+                self.slot = Some(PendingFrame {
+                    frame: n.frame,
+                    scene_gaussians: n.scene.len(),
+                    frontend: fo,
+                });
+                Some(CompletedFrame {
+                    frame: p.frame,
+                    scene_gaussians: p.scene_gaussians,
+                    frontend: p.frontend,
+                    raster: rf,
+                })
+            }
+        }
+    }
+}
+
+/// Run the pending frame's raster stage and the next frame's frontend
+/// stage, concurrently when the thread budget allows. The stages are
+/// independent (disjoint mutable state, no dataflow between them), so
+/// concurrent and sequential execution produce identical results — the
+/// budget only decides wall-clock time.
+fn run_overlapped(
+    frontend: &mut FrontendStage,
+    raster: &mut dyn RasterBackend,
+    next: &NextFrameInput<'_>,
+    pending: &PendingFrame,
+    width: usize,
+    height: usize,
+) -> (RasterFrame, FrontendOutput) {
+    let total = par::num_threads();
+    if total < 2 {
+        // A single worker gains nothing from two OS threads.
+        let p = &pending.frontend;
+        let rf = raster.render(&p.projected, &p.bins, width, height);
+        let fo = frontend.run(next.scene, next.pose, next.intr);
+        return (rf, fo);
+    }
+    // Stage-level dispatch: the raster stage (typically the heavier) takes
+    // the front share of the split budget, the frontend the rest; each
+    // stage thread installs its share thread-locally so the nested
+    // `par_*` calls cannot oversubscribe the machine.
+    let (raster_share, frontend_share) = par::split_pair(total);
+    let projected = &pending.frontend.projected;
+    let bins = &pending.frontend.bins;
+    std::thread::scope(|scope| {
+        let rh = scope.spawn(move || {
+            let _budget = par::local_budget_guard(raster_share);
+            raster.render(projected, bins, width, height)
+        });
+        let fh = scope.spawn(move || {
+            let _budget = par::local_budget_guard(frontend_share);
+            frontend.run(next.scene, next.pose, next.intr)
+        });
+        let rf = rh.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+        let fo = fh.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+        (rf, fo)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -543,6 +1012,140 @@ mod tests {
         // Half round-trip restores the grid shape.
         let back = half.tier_estimate(Tier::Half, Tier::Full, 0.5);
         assert_eq!((back.width, back.height), (w.width, w.height));
+    }
+
+    #[test]
+    fn pipelined_session_matches_synchronous_stepping() {
+        // Depth-2 slot machine over plain stages must produce exactly
+        // the frames of back-to-back stepping, one dispatch behind.
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let poses: Vec<Pose> = (0..4)
+            .map(|i| {
+                Pose::look_at(Vec3::new(0.1 * i as f32, 0.0, -4.0), Vec3::ZERO)
+            })
+            .collect();
+
+        // Reference: synchronous.
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let mut raster = PlainRaster;
+        let mut reference = Vec::new();
+        for pose in &poses {
+            let fo = fe.run(&scene, pose, &intr);
+            let rf = raster.render(&fo.projected, &fo.bins, intr.width, intr.height);
+            reference.push((rf.image.data.clone(), rf.work.consumed.clone()));
+        }
+
+        // Pipelined: feed all poses, then drain.
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let mut raster = PlainRaster;
+        let mut pipe = PipelinedSession::new(2);
+        assert_eq!(pipe.depth(), 2);
+        let mut got = Vec::new();
+        for (i, pose) in poses.iter().enumerate() {
+            let next = NextFrameInput { frame: i, scene: &scene, pose, intr: &intr };
+            let done =
+                pipe.advance(&mut fe, &mut raster, Some(next), intr.width, intr.height);
+            if i == 0 {
+                assert!(done.is_none(), "priming dispatch completes nothing");
+                assert_eq!(pipe.in_flight(), 1);
+            }
+            if let Some(d) = done {
+                assert_eq!(d.frame, i - 1, "completion is one dispatch behind");
+                got.push((d.raster.image.data, d.raster.work.consumed));
+            }
+        }
+        let d = pipe
+            .advance(&mut fe, &mut raster, None, intr.width, intr.height)
+            .expect("drain completes the in-flight frame");
+        assert_eq!(d.frame, poses.len() - 1);
+        got.push((d.raster.image.data, d.raster.work.consumed));
+        assert_eq!(pipe.in_flight(), 0);
+        assert!(pipe
+            .advance(&mut fe, &mut raster, None, intr.width, intr.height)
+            .is_none());
+        assert_eq!(got.len(), reference.len());
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(g.0, r.0, "frame {i} image diverged");
+            assert_eq!(g.1, r.1, "frame {i} stats diverged");
+        }
+    }
+
+    #[test]
+    fn depth_one_session_is_synchronous() {
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let mut raster = PlainRaster;
+        let mut pipe = PipelinedSession::new(1);
+        let next = NextFrameInput { frame: 0, scene: &scene, pose: &pose, intr: &intr };
+        let done = pipe.advance(&mut fe, &mut raster, Some(next), intr.width, intr.height);
+        assert!(done.is_some(), "depth 1 completes the fed frame immediately");
+        assert_eq!(pipe.in_flight(), 0);
+        // Depths outside 1..=2 clamp.
+        assert_eq!(PipelinedSession::new(0).depth(), 1);
+        assert_eq!(PipelinedSession::new(7).depth(), 2);
+    }
+
+    #[test]
+    fn aggregate_matches_exact_on_uniform_workloads() {
+        // On a perfectly uniform per-pixel record (every admission-test
+        // synthetic demand is one), the O(tiles) aggregate transforms
+        // must track the exact per-pixel transforms.
+        let side = 64usize;
+        let tiles = side.div_ceil(16);
+        let w = FrameWorkload {
+            frame: 0,
+            width: side,
+            height: side,
+            tile_size: 16,
+            tiles_x: tiles,
+            tiles_y: tiles,
+            tile_list_lens: vec![100; tiles * tiles],
+            scene_gaussians: 10_000,
+            sorted: true,
+            sort_entries: 50_000,
+            refreshed_gaussians: 0,
+            consumed: vec![100; side * side],
+            significant: vec![10; side * side],
+            uncached: None,
+            cache_outcomes: None,
+            cache: CacheStats::default(),
+            swap_bytes: 0,
+        };
+        for (measured, target) in [
+            (Tier::Full, Tier::Full),
+            (Tier::Full, Tier::Reduced),
+            (Tier::Full, Tier::Half),
+            (Tier::Reduced, Tier::Full),
+            (Tier::Half, Tier::Full),
+        ] {
+            let exact = w.tier_estimate(measured, target, 0.5);
+            let agg = w.aggregate().tier_estimate(measured, target, 0.5);
+            assert_eq!((agg.width, agg.height), (exact.width, exact.height));
+            assert_eq!((agg.tiles_x, agg.tiles_y), (exact.tiles_x, exact.tiles_y));
+            assert_eq!(agg.scene_gaussians, exact.scene_gaussians);
+            assert_eq!(agg.sort_entries, exact.sort_entries);
+            assert_eq!(
+                agg.tiles.iter().map(|t| t.list_len).sum::<usize>(),
+                exact.tile_list_lens.iter().sum::<usize>(),
+                "{measured:?}->{target:?} tile-list totals"
+            );
+            assert_eq!(
+                agg.iter_total(),
+                exact.consumed.iter().map(|&v| v as u64).sum::<u64>(),
+                "{measured:?}->{target:?} consumed totals"
+            );
+            let exact_max = exact.consumed.iter().copied().max().unwrap_or(0);
+            for t in &agg.tiles {
+                assert_eq!(t.iter_max, exact_max, "{measured:?}->{target:?} maxima");
+            }
+            assert_eq!(
+                agg.tiles.iter().map(|t| u64::from(t.pixels())).sum::<u64>(),
+                (exact.width * exact.height) as u64
+            );
+        }
     }
 
     #[test]

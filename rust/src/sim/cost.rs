@@ -15,7 +15,7 @@
 //! reads only the measured workload, so no implementor needs to know
 //! which [`crate::config::HardwareVariant`] is being evaluated.
 
-use crate::pipeline::stage::FrameWorkload;
+use crate::pipeline::stage::{AggregateWorkload, FrameWorkload, FrontendWork};
 use crate::sim::energy::{EnergyBreakdown, EnergyModel};
 use crate::sim::gpu::{GpuModel, WarpAggregates};
 use crate::sim::gscore::GsCoreModel;
@@ -34,8 +34,15 @@ pub struct RasterCost {
 pub trait FrontendCostModel: Send {
     fn label(&self) -> &'static str;
 
+    /// Returns (seconds, joules) for a frame's frontend scalars — the
+    /// shared entry for the per-pixel record and the O(tiles)
+    /// aggregate, which carry identical frontend information.
+    fn frontend_work_cost(&self, fw: &FrontendWork) -> (f64, f64);
+
     /// Returns (seconds, joules) for the frame's frontend work.
-    fn frontend_cost(&self, w: &FrameWorkload) -> (f64, f64);
+    fn frontend_cost(&self, w: &FrameWorkload) -> (f64, f64) {
+        self.frontend_work_cost(&w.frontend_work())
+    }
 }
 
 /// Prices the rasterization stage (and fixed overhead) of a frame.
@@ -53,6 +60,13 @@ pub trait CostModel: Send {
     /// Price the frame's rasterization.
     fn raster_cost(&mut self, w: &FrameWorkload) -> RasterCost;
 
+    /// Price rasterization from an O(tiles) aggregate — the admission
+    /// controller's fast rung-pricing path. Aggregates are built from
+    /// normalized (cache-stripped) records, so no implementation needs
+    /// cache-outcome handling; within-tile uniformity is assumed, with
+    /// recorded maxima bounding the divergence-sensitive terms.
+    fn raster_cost_aggregate(&mut self, a: &AggregateWorkload) -> RasterCost;
+
     /// Fixed per-frame overhead in seconds (kernel launches for the
     /// GPU; DMA descriptor setup for the accelerators).
     fn overhead_s(&self) -> f64;
@@ -67,14 +81,14 @@ const S2_REFRESH_PROJECTION_FRACTION: f64 = 0.35;
 /// plus the per-frame S² refresh, parameterized by the unit's two time
 /// primitives so GPU and CCU/GSU cannot drift apart.
 fn frontend_time_s(
-    w: &FrameWorkload,
+    fw: &FrontendWork,
     proj_time_s: impl Fn(usize) -> f64,
     sort_time_s: impl Fn(usize) -> f64,
 ) -> f64 {
     // Projection frustum-culls the whole scene, not just survivors.
-    let proj = if w.sorted { proj_time_s(w.scene_gaussians) } else { 0.0 };
-    let sort = if w.sorted { sort_time_s(w.sort_entries) } else { 0.0 };
-    let refresh = S2_REFRESH_PROJECTION_FRACTION * proj_time_s(w.refreshed_gaussians);
+    let proj = if fw.sorted { proj_time_s(fw.scene_gaussians) } else { 0.0 };
+    let sort = if fw.sorted { sort_time_s(fw.sort_entries) } else { 0.0 };
+    let refresh = S2_REFRESH_PROJECTION_FRACTION * proj_time_s(fw.refreshed_gaussians);
     proj + sort + refresh
 }
 
@@ -83,9 +97,9 @@ impl FrontendCostModel for GpuModel {
         "gpu-frontend"
     }
 
-    fn frontend_cost(&self, w: &FrameWorkload) -> (f64, f64) {
+    fn frontend_work_cost(&self, fw: &FrontendWork) -> (f64, f64) {
         let t =
-            frontend_time_s(w, |n| self.projection_time_s(n), |e| self.sorting_time_s(e));
+            frontend_time_s(fw, |n| self.projection_time_s(n), |e| self.sorting_time_s(e));
         (t, EnergyModel::nm12().gpu_energy_j(t))
     }
 }
@@ -95,8 +109,8 @@ impl FrontendCostModel for GsCoreModel {
         "ccu-gsu"
     }
 
-    fn frontend_cost(&self, w: &FrameWorkload) -> (f64, f64) {
-        let t = frontend_time_s(w, |n| self.ccu_time_s(n), |e| self.gsu_time_s(e));
+    fn frontend_work_cost(&self, fw: &FrontendWork) -> (f64, f64) {
+        let t = frontend_time_s(fw, |n| self.ccu_time_s(n), |e| self.gsu_time_s(e));
         (t, self.energy_j(t))
     }
 }
@@ -141,6 +155,21 @@ impl CostModel for GpuModel {
         }
     }
 
+    fn raster_cost_aggregate(&mut self, a: &AggregateWorkload) -> RasterCost {
+        // Aggregates are cache-stripped (normalized), so no RC overhead:
+        // same contract as pricing a normalized per-pixel estimate.
+        let agg = WarpAggregates::from_tile_aggregates(&a.tiles);
+        let t = self.raster_time_s(&agg);
+        RasterCost {
+            time_s: t,
+            energy: EnergyBreakdown {
+                gpu: EnergyModel::nm12().gpu_energy_j(t),
+                ..Default::default()
+            },
+            pe_utilization: 1.0 - agg.masked_fraction(self),
+        }
+    }
+
     fn overhead_s(&self) -> f64 {
         self.launch_overhead_s
     }
@@ -174,6 +203,17 @@ impl CostModel for LuminCoreSim {
         }
     }
 
+    fn raster_cost_aggregate(&mut self, a: &AggregateWorkload) -> RasterCost {
+        let frame = self.frame_from_aggregates(&a.tiles, a.swap_bytes);
+        let mut energy = frame.energy;
+        energy.gpu += self.energy.gpu_idle_energy_j(frame.raster_s);
+        RasterCost {
+            time_s: frame.raster_s,
+            energy,
+            pe_utilization: frame.pe_utilization,
+        }
+    }
+
     fn overhead_s(&self) -> f64 {
         // Kernel launches are replaced by DMA descriptor setup; only a
         // sliver of the GPU's launch overhead remains.
@@ -189,6 +229,17 @@ impl CostModel for GsCoreModel {
     fn raster_cost(&mut self, w: &FrameWorkload) -> RasterCost {
         let pairs: u64 = w.consumed.iter().map(|&v| v as u64).sum();
         let t = self.raster_time_s(pairs);
+        RasterCost {
+            time_s: t,
+            energy: EnergyBreakdown { gpu: self.energy_j(t), ..Default::default() },
+            pe_utilization: 1.0,
+        }
+    }
+
+    fn raster_cost_aggregate(&mut self, a: &AggregateWorkload) -> RasterCost {
+        // GSCore prices total Gaussian-pixel pairs: exact from the tile
+        // sums — the aggregate path loses nothing here.
+        let t = self.raster_time_s(a.iter_total());
         RasterCost {
             time_s: t,
             energy: EnergyBreakdown { gpu: self.energy_j(t), ..Default::default() },
@@ -278,6 +329,32 @@ mod tests {
         let tl = lc.raster_cost(&w).time_s;
         assert!(tl < tg, "LuminCore {tl} should beat GPU {tg}");
         assert!(lc.overhead_s() < gpu.overhead_s());
+    }
+
+    #[test]
+    fn aggregate_pricing_matches_exact_on_uniform_workloads() {
+        // The O(tiles) path's within-tile uniformity assumption is
+        // exact on a uniform record: all three models must agree with
+        // the per-pixel path (to float-summation-order noise).
+        let w = workload(64 * 64);
+        let a = w.aggregate();
+        let mut gpu = GpuModel::xavier_volta();
+        let exact = gpu.raster_cost(&w).time_s;
+        let agg = gpu.raster_cost_aggregate(&a).time_s;
+        assert!((exact - agg).abs() <= 1e-9 * exact, "gpu {exact} vs {agg}");
+        let mut lc = LuminCoreSim::paper_default();
+        let exact = lc.raster_cost(&w).time_s;
+        let agg = lc.raster_cost_aggregate(&a).time_s;
+        assert!((exact - agg).abs() <= 1e-9 * exact, "lumincore {exact} vs {agg}");
+        let mut gs = GsCoreModel::published();
+        assert_eq!(
+            gs.raster_cost(&w).time_s,
+            gs.raster_cost_aggregate(&a).time_s,
+            "gscore aggregate pricing is exact by construction"
+        );
+        // Frontend scalars travel identically through both records.
+        let gpu = GpuModel::xavier_volta();
+        assert_eq!(gpu.frontend_cost(&w), gpu.frontend_work_cost(&a.frontend_work()));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! exactly the divergence of paper Fig. 5.
 
 use crate::pipeline::raster::RasterStats;
+use crate::pipeline::stage::TileAggregate;
 
 /// Xavier-like mobile Volta parameters.
 #[derive(Debug, Clone, Copy)]
@@ -142,6 +143,44 @@ impl WarpAggregates {
                 agg.active_blend_lane_rounds += sum_sig as f64;
                 agg.warps += 1;
             }
+        }
+        agg
+    }
+
+    /// Warp aggregates from O(tiles) per-tile statistics — the
+    /// admission controller's fast pricing path. Every warp in a tile
+    /// is assumed to run to the tile's deepest lane (`iter_max`) with
+    /// the tile's mean significance probability: an upper bound on the
+    /// exact per-warp maxima (equal when the tile is uniform), keeping
+    /// the estimates on the refuse-rather-than-miss side.
+    pub fn from_tile_aggregates(tiles: &[TileAggregate]) -> Self {
+        let mut agg = WarpAggregates::default();
+        for t in tiles {
+            if t.pixels() == 0 {
+                continue;
+            }
+            // Warps are 2-row x 16-col image groups; with 16-px tiles
+            // the warp grid aligns with the tile grid, so a partial
+            // edge tile still spans ceil(h/2) x ceil(w/16) warps (of
+            // fewer live lanes) — counting ceil(pixels/32) instead
+            // would underprice edge columns and rows.
+            let warps = u64::from(t.height.div_ceil(2)) * u64::from(t.width.div_ceil(16));
+            // Live lanes per warp: two rows of the tile's width,
+            // capped at the warp size (over-estimates the last odd
+            // row's warp — the conservative side).
+            let lanes = (2 * t.width).min(32).max(1) as i32;
+            let max = f64::from(t.iter_max);
+            let p = if t.iter_sum > 0 {
+                t.sig_sum as f64 / t.iter_sum as f64
+            } else {
+                0.0
+            };
+            let blend = if max > 0.0 { max * (1.0 - (1.0 - p).powi(lanes)) } else { 0.0 };
+            agg.warp_rounds += warps as f64 * max;
+            agg.blend_rounds += warps as f64 * blend;
+            agg.active_front_lane_rounds += t.iter_sum as f64;
+            agg.active_blend_lane_rounds += t.sig_sum as f64;
+            agg.warps += warps;
         }
         agg
     }

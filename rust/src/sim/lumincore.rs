@@ -29,6 +29,7 @@ use crate::constants::{
     FEATURE_BUF_BYTES, GAUSSIAN_FEATURE_BYTES, NRU_ARRAY, NRU_CLOCK_HZ, OUTPUT_BUF_BYTES,
     PES_PER_NRU,
 };
+use crate::pipeline::stage::TileAggregate;
 use crate::sim::dram::DramModel;
 use crate::sim::energy::{EnergyBreakdown, EnergyModel};
 
@@ -211,6 +212,99 @@ impl LuminCoreSim {
         out.energy.cache = lookups as f64 * e.cache_lookup;
         // Feature buffer: written once by DMA, read by 64 NRUs' PEs
         // (broadcast reads within an NRU counted once per pixel-consume).
+        let sram_bytes = out.feature_bytes as f64
+            + front_total as f64 * GAUSSIAN_FEATURE_BYTES as f64
+            + (OUTPUT_BUF_BYTES as f64) * tiles.len() as f64 / 10.0;
+        out.energy.sram = sram_bytes * e.sram_per_byte;
+        out.energy.dram = self
+            .dram
+            .transfer_energy_j((out.feature_bytes + out.cache_swap_bytes) as usize);
+        out
+    }
+
+    /// O(1)-per-tile mirror of [`Self::frame`] over tile aggregates —
+    /// the admission controller's fast pricing path. Per-pixel counts
+    /// are assumed uniform within each tile (exact when they are), with
+    /// the tile's recorded maximum bounding the peak-group and
+    /// feature-stream terms; aggregates are cache-stripped, so no
+    /// lookup cycles are charged.
+    pub fn frame_from_aggregates(
+        &self,
+        tiles: &[TileAggregate],
+        extra_swap_bytes: u64,
+    ) -> LuminCoreFrame {
+        let mut out = LuminCoreFrame::default();
+        let mut useful = 0u64;
+        let mut issued = 0u64;
+        let mut sig_total = 0u64;
+        let mut front_total = 0u64;
+        let per_nru = self.cfg.pes_per_nru.max(1);
+        let nrus = self.cfg.nrus.max(1);
+        for t in tiles {
+            let px = t.pixels() as usize;
+            if px == 0 {
+                continue;
+            }
+            let groups = px.div_ceil(per_nru);
+            // When the tile has more pixel groups than NRUs, groups wrap
+            // round-robin and the per-NRU times accumulate.
+            let passes = groups.div_ceil(nrus) as f64;
+            // The tile's time is the *max* over its NRU groups — i.e. a
+            // fully-populated group at the tile's mean lane depth.
+            // Dividing the sum by `groups * per_nru` would dilute the
+            // last, partially-filled group below that maximum and price
+            // under the exact path, so charge the full-group depth.
+            let front_mean = if self.cfg.sparsity_remap {
+                (t.iter_sum as f64 / px as f64).ceil()
+            } else {
+                f64::from(t.iter_max)
+            };
+            // The group holding the deepest pixel cannot finish faster
+            // than its share of that lane.
+            let front_peak = if self.cfg.sparsity_remap {
+                (f64::from(t.iter_max) / per_nru as f64).ceil()
+            } else {
+                f64::from(t.iter_max)
+            };
+            // Backend of a fully-populated group: per_nru lanes at the
+            // tile's mean significance.
+            let backend_mean =
+                (t.sig_sum as f64 / px as f64 * per_nru as f64).ceil();
+            let group_cycles =
+                front_mean.max(front_peak).max(backend_mean) + PE_FILL_CYCLES as f64;
+            let cycles = (group_cycles * passes).round() as u64;
+            let compute_s = cycles as f64 / self.cfg.clock_hz;
+            // Feature streaming: same deepest-consumer rule as the exact
+            // path — iter_max is recorded, so this term is exact.
+            let stream_len = u64::from(t.iter_max);
+            let bytes = stream_len.min(t.list_len as u64) * GAUSSIAN_FEATURE_BYTES as u64;
+            let chunk = (FEATURE_BUF_BYTES / 2).max(1);
+            let n_chunks = (bytes as usize).div_ceil(chunk);
+            let dram_s = self.dram.transfer_time_s(bytes as usize)
+                + (n_chunks.saturating_sub(1)) as f64 * 1e-9;
+            out.cycles += cycles;
+            out.compute_s += compute_s;
+            out.feature_bytes += bytes;
+            out.exposed_dram_s += (dram_s - compute_s).max(0.0);
+            useful += t.iter_sum + t.sig_sum;
+            issued += (front_mean * per_nru as f64 * groups as f64
+                + backend_mean * groups as f64)
+                .round() as u64;
+            sig_total += t.sig_sum;
+            front_total += t.iter_sum;
+        }
+        out.cache_swap_bytes = extra_swap_bytes;
+        let swap_s = self.dram.transfer_time_s(extra_swap_bytes as usize);
+        out.raster_s = out.compute_s + out.exposed_dram_s + swap_s * 0.1;
+        out.pe_utilization = if issued > 0 {
+            useful as f64 / issued as f64
+        } else {
+            1.0
+        };
+        let e = &self.energy;
+        out.energy.nru_compute =
+            front_total as f64 * e.pe_frontend_op + sig_total as f64 * e.backend_op;
+        out.energy.cache = 0.0;
         let sram_bytes = out.feature_bytes as f64
             + front_total as f64 * GAUSSIAN_FEATURE_BYTES as f64
             + (OUTPUT_BUF_BYTES as f64) * tiles.len() as f64 / 10.0;

@@ -4,6 +4,13 @@
 //! [`Runner`], registers closures, and calls [`Runner::finish`]. The
 //! runner warms up, runs timed batches until a wall budget is spent, and
 //! reports min/median/mean per iteration plus a throughput column.
+//!
+//! Environment:
+//! * `LUMINA_BENCH_QUICK=1` — short measurement budget.
+//! * `LUMINA_BENCH_SMOKE=1` — CI smoke mode: benches shrink their scenes
+//!   and the quick budget is implied.
+//! * `LUMINA_BENCH_JSON=<path>` — additionally write the measurements as
+//!   JSON (the `BENCH_*.json` artifacts the CI regression gate diffs).
 
 use std::time::{Duration, Instant};
 
@@ -33,7 +40,8 @@ impl Runner {
         let filter = std::env::args()
             .skip(1)
             .find(|a| !a.starts_with('-'));
-        let quick = std::env::var("LUMINA_BENCH_QUICK").is_ok();
+        let quick = std::env::var("LUMINA_BENCH_QUICK").is_ok()
+            || std::env::var("LUMINA_BENCH_SMOKE").is_ok();
         Runner {
             label: label.to_string(),
             budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
@@ -99,11 +107,54 @@ impl Runner {
         println!("{:<48} {:>12} {:>12} {:>12}", "name", "min", "median", "mean");
     }
 
-    /// Finish: returns results for programmatic use.
+    /// Finish: returns results for programmatic use. When
+    /// `LUMINA_BENCH_JSON` names a path, the measurements are also
+    /// written there as JSON for the CI regression gate.
     pub fn finish(self) -> Vec<Measurement> {
         println!("== {} done: {} benchmarks ==", self.label, self.results.len());
+        if let Ok(path) = std::env::var("LUMINA_BENCH_JSON") {
+            match std::fs::write(&path, results_json(&self.label, &self.results)) {
+                Ok(()) => println!("wrote {path}"),
+                Err(e) => eprintln!("failed to write {path}: {e}"),
+            }
+        }
         self.results
     }
+}
+
+/// Serialize measurements as the `BENCH_*.json` schema: a label plus
+/// one `{name, iters, min_ns, median_ns, mean_ns}` entry per benchmark.
+/// Hand-rolled (no serde in the offline vendor set); names are escaped
+/// for the JSON string context.
+pub fn results_json(label: &str, results: &[Measurement]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"label\": \"{}\",\n", escape_json(label)));
+    out.push_str("  \"results\": [\n");
+    for (i, m) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"min_ns\": {}, \"median_ns\": {}, \
+             \"mean_ns\": {}}}{}\n",
+            escape_json(&m.name),
+            m.iters,
+            m.min.as_nanos(),
+            m.median.as_nanos(),
+            m.mean.as_nanos(),
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn escape_json(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
 }
 
 /// Human-friendly duration formatting.
@@ -123,6 +174,23 @@ pub fn fmt_dur(d: Duration) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_schema_stable() {
+        let results = vec![Measurement {
+            name: "pool_depth1/2x4frames".into(),
+            iters: 12,
+            min: Duration::from_nanos(1000),
+            median: Duration::from_nanos(1500),
+            mean: Duration::from_nanos(1600),
+        }];
+        let s = results_json("sessions", &results);
+        assert!(s.contains("\"label\": \"sessions\""), "{s}");
+        assert!(s.contains("\"median_ns\": 1500"), "{s}");
+        assert!(s.contains("pool_depth1/2x4frames"), "{s}");
+        // Quotes and control characters stay inside the string context.
+        assert!(results_json("a\"b", &[]).contains("a\\\"b"));
+    }
 
     #[test]
     fn fmt_ranges() {

@@ -91,6 +91,15 @@ pub fn split_budget(total: usize, workers: usize) -> Vec<usize> {
     (0..workers).map(|i| (base + usize::from(i < rem)).max(1)).collect()
 }
 
+/// Split a thread budget across the two concurrently-running stages of
+/// a double-buffered frame slot: (raster, frontend). The raster stage —
+/// typically the heavier — takes the remainder on odd budgets; both
+/// sides get at least one thread.
+pub fn split_pair(total: usize) -> (usize, usize) {
+    let shares = split_budget(total, 2);
+    (shares[0], shares[1])
+}
+
 /// Parallel map over `0..n`: returns `Vec<T>` with `f(i)` at index `i`.
 ///
 /// Cheap per-item closures (projection-style, n in the tens of
@@ -296,6 +305,14 @@ mod tests {
         }
         // Oversubscribed: everyone still gets a thread.
         assert_eq!(split_budget(2, 5), vec![1; 5]);
+    }
+
+    #[test]
+    fn split_pair_covers_budget() {
+        assert_eq!(split_pair(8), (4, 4));
+        assert_eq!(split_pair(5), (3, 2), "raster takes the remainder");
+        assert_eq!(split_pair(2), (1, 1));
+        assert_eq!(split_pair(1), (1, 1), "both stages always get a thread");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! target, and a tiered ladder must admit strictly more viewers than an
 //! all-full-res pool.
 
-use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::config::{HardwareVariant, LuminaConfig, PricingMode, Tier};
 use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
 use lumina::coordinator::{AdmissionController, PoolReport, SessionPool};
 use lumina::util::par;
@@ -119,6 +119,63 @@ fn admission_serving_bitwise_deterministic() {
     // The highest-priority session was demoted last, if at all: it can
     // only have been touched when both lower sessions already dropped.
     assert_eq!(serial.sessions[0].tier_sequence()[0], "full");
+}
+
+#[test]
+fn pipelined_aggregate_serving_bitwise_deterministic() {
+    let _lock = lock();
+    // Depth-2 serving under admission control with the O(tiles)
+    // aggregate pricing path: the full production configuration must
+    // stay bitwise thread-count invariant.
+    let mut cfg = small_cfg(HardwareVariant::Lumina);
+    cfg.pool.pipeline_depth = 2;
+    let cost = full_frame_cost(&cfg);
+    let target = (1.0 - ADMISSION_HEADROOM) / (2.2 * cost);
+    let run = |threads: usize| -> PoolReport {
+        par::set_num_threads(threads);
+        let ctrl =
+            AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+                .unwrap()
+                .with_pipeline_depth(2)
+                .with_pricing(PricingMode::Aggregate);
+        let mut pool = SessionPool::new(cfg.clone(), 3).unwrap();
+        let r = pool.serve(&ctrl).unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(
+        serial.sessions, parallel.sessions,
+        "thread count changed a pipelined admission-controlled run"
+    );
+    assert_eq!(serial.pipeline_depth, 2);
+    for r in &serial.sessions {
+        assert_eq!(r.frames.len(), 6, "every admitted frame served");
+    }
+    // Pipelined pricing (max of the overlapped stages) admits a mix at
+    // least as good as synchronous sum pricing would.
+    let sync_ctrl =
+        AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+            .unwrap();
+    let mut sync_cfg = cfg.clone();
+    sync_cfg.pool.pipeline_depth = 1;
+    let mut sync_pool = SessionPool::new(sync_cfg, 3).unwrap();
+    let sync_report = sync_pool.serve(&sync_ctrl).unwrap();
+    let demoted = |r: &PoolReport| {
+        r.sessions
+            .iter()
+            .flat_map(|s| s.frames.iter())
+            .filter(|f| f.tier != "full")
+            .count()
+    };
+    assert!(
+        demoted(&serial) <= demoted(&sync_report),
+        "overlap pricing must not demote more frames than sum pricing \
+         ({} vs {})",
+        demoted(&serial),
+        demoted(&sync_report)
+    );
 }
 
 #[test]

@@ -2,8 +2,8 @@
 //! correct, aggregated, and bitwise deterministic regardless of the
 //! worker-thread count.
 
-use lumina::config::{HardwareVariant, LuminaConfig};
-use lumina::coordinator::{PoolReport, SessionPool};
+use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::coordinator::{Coordinator, PoolReport, SessionPool};
 use lumina::util::par;
 
 fn small_cfg(variant: HardwareVariant) -> LuminaConfig {
@@ -62,6 +62,80 @@ fn pool_thread_split_wastes_no_workers() {
         );
         assert!(shares.iter().all(|&s| s >= 1));
     }
+}
+
+#[test]
+fn pipelined_pool_bitwise_identical_to_synchronous_across_thread_counts() {
+    // Depth-2 stage-level scheduling — frame N+1's frontend overlapping
+    // frame N's raster — must be invisible in the output: bitwise equal
+    // to the depth-1 baseline at every thread count.
+    let run = |depth: usize, threads: usize| -> PoolReport {
+        par::set_num_threads(threads);
+        let mut cfg = small_cfg(HardwareVariant::Lumina);
+        cfg.pool.pipeline_depth = depth;
+        let r = SessionPool::new(cfg, 3).unwrap().run().unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let reference = run(1, 1);
+    for threads in [1usize, 3, 8] {
+        let depth2 = run(2, threads);
+        assert_eq!(depth2.pipeline_depth, 2);
+        assert_eq!(
+            reference.sessions, depth2.sessions,
+            "depth 2 @ {threads} threads diverged from the synchronous baseline"
+        );
+        let depth1 = run(1, threads);
+        assert_eq!(
+            reference.sessions, depth1.sessions,
+            "depth 1 @ {threads} threads is thread-count dependent"
+        );
+    }
+    // Every session rendered its whole trajectory.
+    for r in &reference.sessions {
+        assert_eq!(r.frames.len(), 4);
+    }
+}
+
+#[test]
+fn mid_run_set_tier_drains_in_flight_slot() {
+    // Reference: synchronous session, tier swapped after two frames.
+    let mut cfg = small_cfg(HardwareVariant::Lumina);
+    cfg.pool.pipeline_depth = 1;
+    let mut reference = Coordinator::new(cfg.clone()).unwrap();
+    let mut want = Vec::new();
+    for _ in 0..2 {
+        want.push(reference.step().unwrap());
+    }
+    reference.set_tier(Tier::Half).unwrap();
+    while reference.remaining() > 0 {
+        want.push(reference.step().unwrap());
+    }
+
+    // Pipelined: the swap lands while frame 1 is mid-flight; the slot
+    // must drain under the *old* tier and no frame may be lost,
+    // reordered, or re-rendered.
+    cfg.pool.pipeline_depth = 2;
+    let mut c = Coordinator::new(cfg).unwrap();
+    let mut got = Vec::new();
+    assert!(c.step_pipelined().unwrap().is_none(), "priming dispatch");
+    got.push(c.step_pipelined().unwrap().expect("frame 0 completes"));
+    assert_eq!(c.in_flight(), 1, "frame 1 is mid-flight");
+    c.set_tier(Tier::Half).unwrap();
+    assert_eq!(c.in_flight(), 1, "drained frame 1 awaits pickup");
+    while got.len() < want.len() {
+        if let Some(f) = c.step_pipelined().unwrap() {
+            got.push(f);
+        }
+    }
+    assert_eq!(c.remaining(), 0);
+    assert_eq!(c.in_flight(), 0);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.report, w.report, "frame {i} report diverged");
+        assert_eq!(g.image.data, w.image.data, "frame {i} image diverged");
+    }
+    let tiers: Vec<&str> = got.iter().map(|f| f.report.tier).collect();
+    assert_eq!(tiers, vec!["full", "full", "half", "half"]);
 }
 
 #[test]
