@@ -25,6 +25,15 @@ invariant on the fresh file whenever both `pool_depth1/...` and
 must not be meaningfully slower than the depth-1 (synchronous) pool —
 overlap is allowed to be a wash on starved runners, never a loss.  This
 check is machine-independent (both numbers come from the same run).
+
+Entries named `metric/...` are not timings: the bench Runner stores a
+scalar (e.g. a hit rate in ppm) in the ns fields.  They are excluded
+from the cross-run throughput diff and instead feed same-run
+invariants.  Currently: whenever both `metric/hitrate_shared_ppm` and
+`metric/hitrate_private_ppm` exist in the fresh file, the shared-scope
+(snapshot/merge) radiance cache must reach at least the private-scope
+aggregate hit rate on the convergent-pose pool — cross-session sharing
+never loses hits, it can only add them.
 """
 
 import argparse
@@ -62,7 +71,8 @@ def gate(baseline_path, fresh_path, tolerance):
               f"diff skipped; promote a trusted run with "
               f"'bench_gate.py update'.")
     else:
-        shared = sorted(set(base_by) & set(fresh_by))
+        shared = sorted((set(base_by) & set(fresh_by))
+                        - {n for n in fresh_by if n.startswith("metric/")})
         if not shared:
             print(f"warning: no overlapping benchmark names between "
                   f"{baseline_path} and {fresh_path}")
@@ -99,6 +109,23 @@ def gate(baseline_path, fresh_path, tolerance):
             failures.append(
                 f"{d2}: pipelined pool at {speedup:.3f}x of synchronous "
                 f"(floor {OVERLAP_FLOOR}) — stage overlap regressed")
+
+    # Same-run cache-scope invariant: the shared (snapshot/merge) cache
+    # must hit at least as often as per-session private caches on the
+    # convergent-pose pool.
+    sh = fresh_by.get("metric/hitrate_shared_ppm")
+    pr = fresh_by.get("metric/hitrate_private_ppm")
+    if sh is not None and pr is not None:
+        shared_rate = sh["median_ns"] / 1e6
+        private_rate = pr["median_ns"] / 1e6
+        verdict = "ok" if shared_rate >= private_rate else "REGRESSION"
+        print(f"  cache scope hit rate: shared {shared_rate:.4f} vs "
+              f"private {private_rate:.4f}  {verdict}")
+        if shared_rate < private_rate:
+            failures.append(
+                f"shared-scope hit rate {shared_rate:.4f} fell below "
+                f"private-scope {private_rate:.4f} — cross-session cache "
+                f"sharing regressed")
 
     if failures:
         print(f"\nbench gate FAILED ({len(failures)}):", file=sys.stderr)

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use lumina::config::{HardwareVariant, LuminaConfig, Tier};
+use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, Tier};
 use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
 use lumina::coordinator::{AdmissionController, SessionPool};
 use lumina::scene::synth::synth_scene;
@@ -64,6 +64,41 @@ fn main() {
             let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
             pool.serve(&ctrl).unwrap()
         });
+    }
+
+    // Cross-session radiance caching: convergent viewers served against
+    // one pool-wide snapshot/merge cache vs per-session private caches.
+    // Timing rows measure the pool end to end; the metric rows export
+    // each scope's aggregate hit rate (in ppm) for the bench gate's
+    // machine-independent shared >= private invariant.
+    let mut ccfg = cfg.clone();
+    ccfg.variant = HardwareVariant::Lumina;
+    ccfg.pool.epoch_frames = 2;
+    // One 4x4-tile cache group (1024 px): the merged inserts fit the
+    // 4096-entry bank, so the hit-rate comparison measures sharing,
+    // not eviction thrash.
+    ccfg.camera.width = 32;
+    ccfg.camera.height = 32;
+    for scope in [CacheScope::Private, CacheScope::Shared] {
+        let mut run_cfg = ccfg.clone();
+        run_cfg.pool.cache_scope = scope;
+        let stagger = run_cfg.pool.epoch_frames;
+        let bench_cfg = run_cfg.clone();
+        let bench_scene = scene.clone();
+        r.bench(&format!("cache_scope_{}/3x4frames_convergent", scope.label()), move || {
+            SessionPool::convergent_with_scene(bench_cfg.clone(), bench_scene.clone(), 3, stagger)
+                .unwrap()
+                .run()
+                .unwrap()
+        });
+        let metric_name = format!("metric/hitrate_{}_ppm", scope.label());
+        if r.enabled(&metric_name) {
+            let report = SessionPool::convergent_with_scene(run_cfg, scene.clone(), 3, stagger)
+                .unwrap()
+                .run()
+                .unwrap();
+            r.metric(&metric_name, (report.cache_hit_rate() * 1e6).round() as u64);
+        }
     }
 
     // Async frame pipelining: depth 2 overlaps frame N+1's frontend with

@@ -189,6 +189,36 @@ impl Tier {
     }
 }
 
+/// Radiance-cache ownership across a pool's sessions (the
+/// cache-topology seam of `lumina::rc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheScope {
+    /// Each session owns its cache outright — the pre-sharing behavior.
+    Private,
+    /// One pool-wide snapshot/merge cache: sessions render epochs
+    /// against a frozen shared snapshot and their insert deltas are
+    /// merged at epoch boundaries in session-index order, so nearby
+    /// viewers serve each other's hits deterministically.
+    Shared,
+}
+
+impl CacheScope {
+    pub fn label(self) -> &'static str {
+        match self {
+            CacheScope::Private => "private",
+            CacheScope::Shared => "shared",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "private" => CacheScope::Private,
+            "shared" => CacheScope::Shared,
+            other => bail!("unknown cache scope: {other} (expected private|shared)"),
+        })
+    }
+}
+
 /// How the admission controller prices tier-ladder rungs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PricingMode {
@@ -239,6 +269,12 @@ pub struct PoolConfig {
     /// Admission rung-pricing path (exact per-pixel vs O(tiles)
     /// aggregate).
     pub pricing: PricingMode,
+    /// Radiance-cache ownership: `private` (per-session caches, the
+    /// pre-sharing behavior) or `shared` (one pool-wide snapshot/merge
+    /// cache; only meaningful on RC variants). Shared pools run in
+    /// epochs of `epoch_frames` even outside admission control, since
+    /// the epoch boundary is where deltas merge.
+    pub cache_scope: CacheScope,
 }
 
 impl Default for PoolConfig {
@@ -250,6 +286,7 @@ impl Default for PoolConfig {
             reduced_fraction: 0.5,
             pipeline_depth: 1,
             pricing: PricingMode::Exact,
+            cache_scope: CacheScope::Private,
         }
     }
 }
@@ -490,6 +527,10 @@ impl LuminaConfig {
             cfg.pool.pricing =
                 PricingMode::parse(v.as_str().context("pool.pricing must be a string")?)?;
         }
+        if let Some(v) = root.get_path("pool.cache_scope") {
+            cfg.pool.cache_scope =
+                CacheScope::parse(v.as_str().context("pool.cache_scope must be a string")?)?;
+        }
         Ok(cfg)
     }
 
@@ -531,6 +572,11 @@ impl LuminaConfig {
             Value::Integer(self.pool.pipeline_depth as i64),
         );
         set(&mut root, "pool.pricing", Value::String(self.pool.pricing.label().into()));
+        set(
+            &mut root,
+            "pool.cache_scope",
+            Value::String(self.pool.cache_scope.label().into()),
+        );
         minitoml::serialize(&root)
     }
 
@@ -687,6 +733,20 @@ mod tests {
         assert!(c.apply_override("pool.pricing=bogus").is_err());
         for m in [PricingMode::Exact, PricingMode::Aggregate] {
             assert_eq!(PricingMode::parse(m.label()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn cache_scope_roundtrips_and_validates() {
+        let mut c = LuminaConfig::quick_test();
+        assert_eq!(c.pool.cache_scope, CacheScope::Private, "private by default");
+        c.apply_override("pool.cache_scope=shared").unwrap();
+        assert_eq!(c.pool.cache_scope, CacheScope::Shared);
+        let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.pool.cache_scope, CacheScope::Shared);
+        assert!(c.apply_override("pool.cache_scope=bogus").is_err());
+        for s in [CacheScope::Private, CacheScope::Shared] {
+            assert_eq!(CacheScope::parse(s.label()).unwrap(), s);
         }
     }
 

@@ -28,6 +28,14 @@
 //! that keeps epoch re-plans cheap at high resolutions, pinned to the
 //! exact path's demotion decisions by `tests/admission.rs`.
 //!
+//! Shared-cache pools change the pricing inputs in both directions: the
+//! LuminCore model charges shared-lookup port contention (a structural
+//! cost that survives tier re-estimation), and the raster stage is
+//! discounted by the **pool-wide** observed hit rate
+//! ([`SHARED_HIT_RASTER_SAVINGS`]) — under shared scope a session's
+//! future hits come from the pool's merged inserts, not its own
+//! history, so per-session rates would be the wrong signal.
+//!
 //! Everything here is deterministic — float arithmetic over
 //! deterministic workloads, no clocks, no randomness — so planned tier
 //! sequences are bitwise thread-count-invariant like the rest of the
@@ -45,6 +53,19 @@ use crate::pipeline::stage::{AggregateWorkload, FrameWorkload};
 /// hinge on that).
 pub const ADMISSION_HEADROOM: f64 = 0.15;
 
+/// Fraction of a hit pixel's rasterization cost the shared cache
+/// actually saves. A hit still pays projection-side work, the first-k
+/// significant iterations, and the lookup itself, so the discount the
+/// planner applies to the conservative cold-cache price is deliberately
+/// partial — and it never touches the *structural* floor (fixed
+/// overhead + shared-lookup contention, [`StagePrices`]), which is paid
+/// warm or cold. Private sessions keep the plain cold-cache price —
+/// their cache is wiped by every tier swap, so banking on yesterday's
+/// hit rate would blow the budget; a *shared* snapshot survives any one
+/// session's re-tiering, which is what makes the pool-wide observed
+/// rate a sound pricing input.
+pub const SHARED_HIT_RASTER_SAVINGS: f64 = 0.5;
+
 /// One session's input to a planning round.
 pub struct SessionDemand {
     /// Most recent measured workload (under `tier`).
@@ -60,6 +81,15 @@ pub struct SessionDemand {
     pub half_capable: bool,
     /// Higher = demoted later.
     pub priority: f64,
+    /// Whether this session renders against the pool-shared cache
+    /// snapshot (false = private scope, today's pricing unchanged).
+    pub cache_shared: bool,
+    /// Pool-wide observed cache hit rate (0..1) across every served
+    /// frame so far — the same value for all sessions, because under
+    /// shared scope a session's future hits come from the *pool's*
+    /// merged inserts, not its own history. Consumed only when
+    /// `cache_shared` ([`SHARED_HIT_RASTER_SAVINGS`]).
+    pub pool_hit_rate: f64,
 }
 
 impl SessionDemand {
@@ -112,6 +142,61 @@ pub(crate) fn combine_stage_times(front_s: f64, raster_s: f64, depth: usize) -> 
     }
 }
 
+/// One workload's stage prices, split the way the planner needs them:
+/// frontend, raster (fixed overhead and any structural contention
+/// included), and the *structural floor* — the part of the raster price
+/// cache hits cannot save (fixed per-frame overhead plus shared-lookup
+/// contention, which is paid per lookup whether it hits or misses).
+#[derive(Debug, Clone, Copy)]
+pub struct StagePrices {
+    pub front_s: f64,
+    pub raster_s: f64,
+    pub structural_s: f64,
+}
+
+impl StagePrices {
+    /// Raster price with the shared-scope pool-hit-rate discount
+    /// applied to the discountable (non-structural) part only. A
+    /// discount of 1.0 returns `raster_s` bit-exactly, so private
+    /// pricing is untouched.
+    pub fn discounted_raster_s(&self, hit_discount: f64) -> f64 {
+        if hit_discount >= 1.0 {
+            self.raster_s
+        } else {
+            self.structural_s + (self.raster_s - self.structural_s) * hit_discount
+        }
+    }
+}
+
+/// Price one workload's stages separately — the split the planner needs
+/// so it can discount the hit-savable raster work by the pool-wide
+/// observed hit rate without touching the frontend (hits save
+/// compositing, not sorting) or the structural floor.
+pub fn price_stages(w: &FrameWorkload, variant: HardwareVariant) -> StagePrices {
+    let (frontend_cost, mut raster_cost) = cost_models_for(variant);
+    let (front_s, _front_j) = frontend_cost.frontend_cost(w);
+    let raster = raster_cost.raster_cost(w);
+    let overhead = raster_cost.overhead_s();
+    let structural_s = overhead
+        + if w.cache_shared { raster_cost.shared_lookup_cost_s(w.pixels()) } else { 0.0 };
+    StagePrices { front_s, raster_s: raster.time_s + overhead, structural_s }
+}
+
+/// [`price_stages`] over the O(tiles) aggregate record.
+pub fn price_aggregate_stages(a: &AggregateWorkload, variant: HardwareVariant) -> StagePrices {
+    let (frontend_cost, mut raster_cost) = cost_models_for(variant);
+    let (front_s, _front_j) = frontend_cost.frontend_work_cost(&a.frontend_work());
+    let raster = raster_cost.raster_cost_aggregate(a);
+    let overhead = raster_cost.overhead_s();
+    let structural_s = overhead
+        + if a.cache_shared {
+            raster_cost.shared_lookup_cost_s(a.width * a.height)
+        } else {
+            0.0
+        };
+    StagePrices { front_s, raster_s: raster.time_s + overhead, structural_s }
+}
+
 /// [`price_workload`] under a `depth`-slot frame pipeline: per-frame
 /// device time is `max(frontend, raster + overhead)` at depth >= 2 —
 /// the arithmetic the planner must use for a pool that overlaps frame
@@ -122,10 +207,8 @@ pub fn price_workload_at_depth(
     variant: HardwareVariant,
     depth: usize,
 ) -> f64 {
-    let (frontend_cost, mut raster_cost) = cost_models_for(variant);
-    let (front_s, _front_j) = frontend_cost.frontend_cost(w);
-    let raster = raster_cost.raster_cost(w);
-    combine_stage_times(front_s, raster.time_s + raster_cost.overhead_s(), depth)
+    let p = price_stages(w, variant);
+    combine_stage_times(p.front_s, p.raster_s, depth)
 }
 
 /// [`price_workload_at_depth`] over the O(tiles) aggregate record — the
@@ -135,10 +218,8 @@ pub fn price_aggregate_at_depth(
     variant: HardwareVariant,
     depth: usize,
 ) -> f64 {
-    let (frontend_cost, mut raster_cost) = cost_models_for(variant);
-    let (front_s, _front_j) = frontend_cost.frontend_work_cost(&a.frontend_work());
-    let raster = raster_cost.raster_cost_aggregate(a);
-    combine_stage_times(front_s, raster.time_s + raster_cost.overhead_s(), depth)
+    let p = price_aggregate_stages(a, variant);
+    combine_stage_times(p.front_s, p.raster_s, depth)
 }
 
 /// Picks the cheapest tier mix (best quality first) that holds a
@@ -241,24 +322,46 @@ impl AdmissionController {
         for d in demands {
             let agg = (self.pricing == PricingMode::Aggregate)
                 .then(|| d.workload.aggregate());
+            // Shared scope prices the raster stage with the pool-wide
+            // observed hit rate: a viewer joining a warm pool inherits
+            // the pool's hits (the snapshot outlives any one session's
+            // tier swaps), so the cold-cache price would systematically
+            // refuse viewers the shared device actually holds. Private
+            // scope keeps the conservative cold-cache price unchanged.
+            let base_discount = if d.cache_shared {
+                1.0 - d.pool_hit_rate.clamp(0.0, 1.0) * SHARED_HIT_RASTER_SAVINGS
+            } else {
+                1.0
+            };
             let r: Vec<(Tier, f64)> = self
                 .ladder
                 .iter()
                 .copied()
                 .filter(|&t| d.supports(t))
                 .map(|t| {
-                    let price = match &agg {
-                        Some(a) => price_aggregate_at_depth(
+                    let p = match &agg {
+                        Some(a) => price_aggregate_stages(
                             &a.tier_estimate(d.tier, t, self.reduced_fraction),
                             d.variant,
-                            self.pipeline_depth,
                         ),
-                        None => price_workload_at_depth(
+                        None => price_stages(
                             &d.workload.tier_estimate(d.tier, t, self.reduced_fraction),
                             d.variant,
-                            self.pipeline_depth,
                         ),
                     };
+                    // The observed rate only transfers to rungs that
+                    // keep the session's cache geometry: full and
+                    // reduced share the render grid (one snapshot),
+                    // while the half-res tier re-attaches to a
+                    // different — possibly cold — snapshot, so
+                    // geometry-changing rungs are priced cold.
+                    let same_geometry = (t == Tier::Half) == (d.tier == Tier::Half);
+                    let hit_discount = if same_geometry { base_discount } else { 1.0 };
+                    let price = combine_stage_times(
+                        p.front_s,
+                        p.discounted_raster_s(hit_discount),
+                        self.pipeline_depth,
+                    );
                     (t, price)
                 })
                 .collect();
@@ -355,12 +458,15 @@ mod tests {
                 uncached: None,
                 cache_outcomes: None,
                 cache: CacheStats::default(),
+                cache_shared: false,
                 swap_bytes: 0,
             },
             tier: Tier::Full,
             variant: HardwareVariant::Gpu,
             half_capable: true,
             priority,
+            cache_shared: false,
+            pool_hit_rate: 0.0,
         }
     }
 
@@ -501,6 +607,55 @@ mod tests {
                 ),
             }
         }
+    }
+
+    #[test]
+    fn pool_hit_rate_discount_admits_what_cold_pricing_refuses() {
+        // Shared-scope demands at a high observed pool hit rate price
+        // their raster stage cheaper; a budget sitting between the
+        // discounted and undiscounted sums separates the two plans.
+        let mk = |rate: f64| -> Vec<SessionDemand> {
+            (0..3)
+                .map(|i| SessionDemand {
+                    cache_shared: true,
+                    pool_hit_rate: rate,
+                    ..demand(128 * 128, (3 - i) as f64)
+                })
+                .collect()
+        };
+        let d = demand(128 * 128, 0.0);
+        let p = price_stages(&d.workload, d.variant);
+        let cold = p.front_s + p.raster_s;
+        let warm = p.front_s + p.discounted_raster_s(1.0 - 0.9 * SHARED_HIT_RASTER_SAVINGS);
+        assert!(warm < cold);
+        assert!(
+            p.discounted_raster_s(0.0) >= p.structural_s,
+            "even a perfect hit rate cannot discount the structural floor"
+        );
+        let per_session = (cold + warm) / 2.0;
+        let target = (1.0 - ADMISSION_HEADROOM) / (3.0 * per_session);
+        let ctrl = AdmissionController::new(target, vec![Tier::Full], 0.5).unwrap();
+        assert!(ctrl.plan(&mk(0.0)).is_err(), "cold pricing must refuse");
+        let plan = ctrl.plan(&mk(0.9)).unwrap();
+        assert_eq!(plan.tiers, vec![Tier::Full; 3], "warm pool holds all three");
+        // Private scope ignores the rate entirely.
+        let mut private = mk(0.9);
+        for p in private.iter_mut() {
+            p.cache_shared = false;
+        }
+        assert!(ctrl.plan(&private).is_err(), "discount must be shared-scope only");
+
+        // Geometry-changing rungs are never discounted: the half-res
+        // tier re-attaches to a different (possibly cold) snapshot, so
+        // the observed rate does not transfer there.
+        let ph = price_stages(&d.workload.tier_estimate(Tier::Full, Tier::Half, 0.5), d.variant);
+        let half_cold = ph.front_s + ph.raster_s;
+        let half_target = (1.0 - ADMISSION_HEADROOM) / (3.0 * half_cold * 0.9);
+        let half_ctrl = AdmissionController::new(half_target, vec![Tier::Half], 0.5).unwrap();
+        assert!(
+            half_ctrl.plan(&mk(0.9)).is_err(),
+            "a half rung from full-tier demands must price cold"
+        );
     }
 
     #[test]

@@ -34,7 +34,9 @@ use crate::camera::{Intrinsics, Pose};
 use crate::config::{HardwareVariant, LuminaConfig, Tier};
 use crate::constants::TILE;
 use crate::lumina::ds2::{half_intrinsics, Ds2Raster};
-use crate::lumina::rc::{CachedRaster, GroupedRadianceCache};
+use crate::lumina::rc::{
+    CacheDelta, CacheGeometry, CacheHub, CacheSnapshot, CachedRaster, GroupedRadianceCache,
+};
 use crate::lumina::s2::S2Scheduler;
 use crate::pipeline::image::Image;
 use crate::pipeline::project::project;
@@ -88,6 +90,11 @@ pub struct Coordinator {
     /// Admission priority: higher keeps quality longer under pressure
     /// (pools default this to first-admitted-highest).
     pub priority: f64,
+    /// Pool-shared cache hub (shared scope only): the raster backend
+    /// renders against the hub's snapshot for its geometry, and tier
+    /// rebuilds re-attach through it — invalidating only this session's
+    /// delta, never the pool's snapshots.
+    cache_hub: Option<Arc<CacheHub>>,
     #[cfg(test)]
     pub(crate) fail_at_frame: Option<usize>,
     #[cfg(test)]
@@ -172,19 +179,28 @@ fn compose_frontend(cfg: &LuminaConfig) -> FrontendStage {
 /// Compose the raster backend for a config + pipeline resolution +
 /// serving tier. The half-res tier wraps the variant's own backend in
 /// [`Ds2Raster`], so cached variants keep their cache (sized for the
-/// half-res tile grid) while demoted.
+/// half-res tile grid) while demoted. With a [`CacheHub`] attached
+/// (shared-scope pools) the cached backend renders against the hub's
+/// snapshot for this geometry instead of a private cache.
 fn compose_raster(
     cfg: &LuminaConfig,
     render_intr: &Intrinsics,
     record_uncached: bool,
     tier: Tier,
+    hub: Option<&Arc<CacheHub>>,
 ) -> Box<dyn RasterBackend> {
     let (tiles_x, tiles_y) = render_intr.tiles(TILE);
     let base: Box<dyn RasterBackend> = if cfg.variant.uses_rc() {
-        Box::new(CachedRaster::new(
-            GroupedRadianceCache::new(tiles_x, tiles_y, cfg.rc.alpha_record),
-            record_uncached,
-        ))
+        match hub {
+            Some(h) => Box::new(CachedRaster::shared(
+                h.snapshot_for(CacheGeometry { tiles_x, tiles_y, k: cfg.rc.alpha_record }),
+                record_uncached,
+            )),
+            None => Box::new(CachedRaster::new(
+                GroupedRadianceCache::new(tiles_x, tiles_y, cfg.rc.alpha_record),
+                record_uncached,
+            )),
+        }
     } else if cfg.variant == HardwareVariant::Ds2Gpu {
         Box::new(Ds2Raster::new())
     } else {
@@ -213,6 +229,18 @@ impl Coordinator {
     /// This is the seam [`SessionPool`] uses to run many sessions over
     /// one `Arc<GaussianScene>` without duplicating it.
     pub fn with_scene(cfg: LuminaConfig, scene: Arc<GaussianScene>) -> Result<Self> {
+        Self::with_scene_in_pool(cfg, scene, None)
+    }
+
+    /// [`Self::with_scene`] for a session joining a shared-cache pool:
+    /// with a hub, the raster backend renders against the hub's
+    /// snapshot for this session's cache geometry from the start — no
+    /// private cache is ever allocated just to be thrown away.
+    pub fn with_scene_in_pool(
+        cfg: LuminaConfig,
+        scene: Arc<GaussianScene>,
+        cache_hub: Option<Arc<CacheHub>>,
+    ) -> Result<Self> {
         let intr = cfg.intrinsics();
         let render_intr = tier_intrinsics(&cfg, Tier::Full)?;
         let trajectory = generate(
@@ -224,8 +252,13 @@ impl Coordinator {
 
         let frontend = compose_frontend(&cfg);
         let (frontend_cost, raster_cost) = cost_models_for(cfg.variant);
-        let raster =
-            compose_raster(&cfg, &render_intr, raster_cost.needs_uncached_stats(), Tier::Full);
+        let raster = compose_raster(
+            &cfg,
+            &render_intr,
+            raster_cost.needs_uncached_stats(),
+            Tier::Full,
+            cache_hub.as_ref(),
+        );
         let pipeline = PipelinedSession::new(cfg.pool.pipeline_depth);
 
         Ok(Coordinator {
@@ -245,6 +278,7 @@ impl Coordinator {
             lod_scene: None,
             last_workload: None,
             priority: 0.0,
+            cache_hub,
             #[cfg(test)]
             fail_at_frame: None,
             #[cfg(test)]
@@ -331,14 +365,48 @@ impl Coordinator {
         };
         self.render_intr = render_intr;
         self.frontend.reset();
+        // Shared scope: the rebuild re-attaches to the hub's snapshot
+        // for the *new* geometry with a fresh delta — this session's
+        // un-merged inserts are invalidated (they referenced the old
+        // tile grid), while every other session's snapshot view is
+        // untouched.
         self.raster = compose_raster(
             &self.cfg,
             &self.render_intr,
             self.raster_cost.needs_uncached_stats(),
             tier,
+            self.cache_hub.as_ref(),
         );
         self.tier = tier;
         Ok(())
+    }
+
+    /// Whether this session renders against a pool-shared cache.
+    pub fn shares_cache(&self) -> bool {
+        self.cache_hub.is_some() && self.cfg.variant.uses_rc()
+    }
+
+    /// The cache geometry this session's render pass bins (None for
+    /// uncached variants) — the key under which shared-scope sessions
+    /// pool their snapshots.
+    pub fn cache_geometry(&self) -> Option<CacheGeometry> {
+        if !self.cfg.variant.uses_rc() {
+            return None;
+        }
+        let (tiles_x, tiles_y) = self.render_intr.tiles(TILE);
+        Some(CacheGeometry { tiles_x, tiles_y, k: self.cfg.rc.alpha_record })
+    }
+
+    /// Detach the session's shared-cache delta (epoch merge; None under
+    /// private scope).
+    pub fn take_cache_delta(&mut self) -> Option<CacheDelta> {
+        self.raster.take_cache_delta()
+    }
+
+    /// Install the next epoch's merged snapshot (no-op under private
+    /// scope).
+    pub fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
+        self.raster.install_cache_snapshot(snapshot, sharers);
     }
 
     /// Render the *current* pose once to measure a [`FrameWorkload`]

@@ -40,10 +40,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{LuminaConfig, Tier};
+use crate::config::{CacheScope, LuminaConfig, Tier};
 use crate::coordinator::admission::{AdmissionController, SessionDemand};
 use crate::coordinator::report::FrameReport;
 use crate::coordinator::{Coordinator, RunReport};
+use crate::lumina::rc::{CacheDelta, CacheGeometry, CacheHub, CacheStats};
 use crate::scene::synth::synth_scene;
 use crate::scene::GaussianScene;
 use crate::util::par;
@@ -54,6 +55,12 @@ pub struct SessionPool {
     /// Lazily cut reduced-Gaussian subsample, shared by every session
     /// demoted to [`Tier::Reduced`] (scene memory paid once per tier).
     reduced: Option<Arc<GaussianScene>>,
+    /// Shared-scope cache hub (`pool.cache_scope = "shared"` on an RC
+    /// variant): sessions render whole epochs against frozen snapshots
+    /// and the pool merges their insert deltas at epoch boundaries, in
+    /// session-index order — bitwise identical at any thread count and
+    /// pipeline depth.
+    cache_hub: Option<Arc<CacheHub>>,
 }
 
 /// Aggregated result of running every session to completion.
@@ -118,6 +125,26 @@ impl PoolReport {
         }
     }
 
+    /// Pool-wide radiance-cache statistics: every session's per-frame
+    /// stats merged (hit provenance included). All-zero for uncached
+    /// variants.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for r in &self.sessions {
+            for f in &r.frames {
+                s.merge(&f.cache);
+            }
+        }
+        s
+    }
+
+    /// Merged pool-wide cache hit rate (see [`Self::cache_stats`]);
+    /// per-session rates are on each session's
+    /// [`RunReport::cache_hit_rate`].
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_stats().hit_rate()
+    }
+
     /// One-line throughput summary. Heterogeneous trajectories (tiered
     /// pools, mixed configs) report the min-max frame-count range
     /// rather than pretending every session matched the first.
@@ -125,16 +152,31 @@ impl PoolReport {
         let lo = self.sessions.iter().map(|r| r.frames.len()).min().unwrap_or(0);
         let hi = self.sessions.iter().map(|r| r.frames.len()).max().unwrap_or(0);
         let frames = if lo == hi { format!("{lo}") } else { format!("{lo}-{hi}") };
+        let cache = self.cache_stats();
+        let hit = if cache.lookups > 0 {
+            format!(
+                " | cache hit {:.1}% ({:.1}% cross-session)",
+                cache.hit_rate() * 100.0,
+                if cache.hits > 0 {
+                    cache.snapshot_hits as f64 / cache.hits as f64 * 100.0
+                } else {
+                    0.0
+                }
+            )
+        } else {
+            String::new()
+        };
         format!(
             "pool: {} sessions x {} frames | aggregate {:.1} sim-fps ({:.1}/session) | \
-             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s",
+             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s{}",
             self.sessions.len(),
             frames,
             self.aggregate_fps(),
             self.mean_session_fps(),
             self.pool_fps(),
             self.host_fps(),
-            self.wall_s
+            self.wall_s,
+            hit
         )
     }
 }
@@ -144,12 +186,51 @@ impl SessionPool {
     /// and shared; each session gets a distinct camera seed (base + i)
     /// so the viewers follow different trajectories.
     pub fn new(base: LuminaConfig, n: usize) -> Result<Self> {
-        let scene = match &base.scene.path {
+        let scene = Self::built_scene(&base)?;
+        Self::with_scene(base, scene, n)
+    }
+
+    /// The scene a config describes (loaded or synthesized), ready to
+    /// share across sessions.
+    fn built_scene(base: &LuminaConfig) -> Result<Arc<GaussianScene>> {
+        Ok(Arc::new(match &base.scene.path {
             Some(p) => crate::scene::io::read_scene(p)
                 .with_context(|| format!("loading scene {p}"))?,
             None => synth_scene(base.scene.class, base.scene.seed, base.gaussian_count()),
-        };
-        Self::with_scene(base, Arc::new(scene), n)
+        }))
+    }
+
+    /// Build `n` viewers converging on one camera path, staggered by
+    /// `stagger` frames: every session replays session 0's generated
+    /// trajectory, viewer `i` trailing viewer `i+1` by `stagger`
+    /// frames, each serving `base.camera.frames` frames of its window.
+    /// The cross-view-redundancy workload the shared cache scope
+    /// targets (after each epoch merge the trailing viewers revisit
+    /// poses the pool has already cached) — shared by the benches and
+    /// the determinism/hit-rate tests so they measure one workload.
+    pub fn convergent(base: LuminaConfig, n: usize, stagger: usize) -> Result<Self> {
+        let scene = Self::built_scene(&base)?;
+        Self::convergent_with_scene(base, scene, n, stagger)
+    }
+
+    /// [`Self::convergent`] over an already-built shared scene.
+    pub fn convergent_with_scene(
+        base: LuminaConfig,
+        scene: Arc<GaussianScene>,
+        n: usize,
+        stagger: usize,
+    ) -> Result<Self> {
+        let frames = base.camera.frames;
+        let mut gen_cfg = base;
+        gen_cfg.camera.frames = frames + stagger * n.saturating_sub(1);
+        let mut pool = Self::with_scene(gen_cfg, scene, n)?;
+        let full = pool.sessions[0].trajectory.clone();
+        for (i, c) in pool.sessions.iter_mut().enumerate() {
+            let mut t = full.clone();
+            t.poses = t.poses[i * stagger..i * stagger + frames].to_vec();
+            c.trajectory = t;
+        }
+        Ok(pool)
     }
 
     /// Build `n` sessions over an already-built shared scene. Admission
@@ -161,16 +242,25 @@ impl SessionPool {
         n: usize,
     ) -> Result<Self> {
         anyhow::ensure!(n > 0, "a pool needs at least one session");
+        let cache_hub = (base.pool.cache_scope == CacheScope::Shared
+            && base.variant.uses_rc())
+        .then(|| Arc::new(CacheHub::new()));
         let sessions = (0..n)
             .map(|i| {
                 let mut cfg = base.clone();
                 cfg.camera.seed = base.camera.seed.wrapping_add(i as u64);
-                let mut coord = Coordinator::with_scene(cfg, scene.clone())?;
+                let mut coord =
+                    Coordinator::with_scene_in_pool(cfg, scene.clone(), cache_hub.clone())?;
                 coord.priority = (n - i) as f64;
                 Ok(coord)
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(SessionPool { sessions, reduced: None })
+        let mut pool = SessionPool { sessions, reduced: None, cache_hub };
+        // Shared scope: set sharer counts (each view attached with its
+        // own full-reload charge; the install below is snapshot-ptr
+        // idempotent). A no-op for private pools.
+        pool.sync_shared_cache();
+        Ok(pool)
     }
 
     /// Number of sessions.
@@ -193,12 +283,47 @@ impl SessionPool {
     }
 
     /// Put session `i` on a serving tier, sharing the pool's one
-    /// reduced-Gaussian subsample across demoted sessions.
+    /// reduced-Gaussian subsample across demoted sessions. Under shared
+    /// cache scope the swap re-attaches the session to the snapshot for
+    /// its new cache geometry (its old-geometry delta is invalidated;
+    /// the pool's snapshots — and every other session — are untouched).
     pub fn set_session_tier(&mut self, i: usize, tier: Tier) -> Result<()> {
         anyhow::ensure!(i < self.sessions.len(), "no session {i}");
         let reduced =
             if tier == Tier::Reduced { Some(self.shared_reduced_scene()) } else { None };
-        self.sessions[i].set_tier_with(tier, reduced, false)
+        self.sessions[i].set_tier_with(tier, reduced, false)?;
+        self.sync_shared_cache();
+        Ok(())
+    }
+
+    /// (Re)install every shared-scope session's snapshot from the hub,
+    /// with sharer counts per cache geometry — called after
+    /// construction, tier changes, and epoch merges. Re-installing an
+    /// unchanged snapshot is free, so this is idempotent.
+    fn sync_shared_cache(&mut self) {
+        let Some(hub) = self.cache_hub.clone() else { return };
+        let geoms: Vec<Option<CacheGeometry>> =
+            self.sessions.iter().map(|c| c.cache_geometry()).collect();
+        for (i, g) in geoms.iter().enumerate() {
+            let Some(g) = g else { continue };
+            let sharers = geoms.iter().flatten().filter(|x| *x == g).count();
+            self.sessions[i].install_cache_snapshot(hub.snapshot_for(*g), sharers);
+        }
+    }
+
+    /// Epoch boundary of the shared cache: collect every session's
+    /// insert delta **in session-index order**, replay them into the
+    /// next snapshots, and re-install. The order is the whole
+    /// shared-scope determinism argument — rendering inside an epoch
+    /// reads only (frozen snapshot, own delta), and this merge is the
+    /// single, serial, index-ordered point where sessions' writes meet.
+    /// A no-op under private scope.
+    fn merge_cache_epoch(&mut self) {
+        let Some(hub) = self.cache_hub.clone() else { return };
+        let deltas: Vec<CacheDelta> =
+            self.sessions.iter_mut().filter_map(|c| c.take_cache_delta()).collect();
+        hub.merge_in_order(deltas);
+        self.sync_shared_cache();
     }
 
     /// The pool-wide reduced-tier scene (cut lazily, then shared).
@@ -214,12 +339,35 @@ impl SessionPool {
 
     /// Run every session to the end of its trajectory, sessions in
     /// parallel (each session's frames stay sequential — S² and RC
-    /// state are inherently frame-ordered).
+    /// state are inherently frame-ordered). Shared-scope pools run in
+    /// epochs of `pool.epoch_frames`, merging cache deltas at every
+    /// boundary; private pools run straight through.
     pub fn run(&mut self) -> Result<PoolReport> {
         let start = Instant::now();
-        let frames = self.run_parallel(None)?;
+        let mut epochs = Vec::new();
+        // (`with_scene` guarantees a non-empty pool; the emptiness
+        // check keeps the indexing below robust regardless.)
+        if self.cache_hub.is_some() && !self.sessions.is_empty() {
+            let epoch = self.sessions[0].cfg.pool.epoch_frames.max(1);
+            while self.sessions.iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
+                epochs.push(self.run_epoch(epoch)?);
+            }
+        } else {
+            epochs.push(self.run_parallel(None)?);
+        }
         let wall_s = start.elapsed().as_secs_f64();
-        Ok(self.assemble_report(vec![frames], wall_s))
+        Ok(self.assemble_report(epochs, wall_s))
+    }
+
+    /// One pool epoch: step every session up to `frames` completed
+    /// frames (sessions in parallel, pipelined slots drained at the
+    /// boundary), then merge the shared-cache deltas in session-index
+    /// order (a no-op under private scope). Returns the epoch's frame
+    /// reports per session.
+    pub fn run_epoch(&mut self, frames: usize) -> Result<Vec<Vec<FrameReport>>> {
+        let out = self.run_parallel(Some(frames.max(1)))?;
+        self.merge_cache_epoch();
+        Ok(out)
     }
 
     /// Capacity-managed serving: plan tiers from a probe of every
@@ -256,12 +404,22 @@ impl SessionPool {
         }
 
         let mut epochs: Vec<Vec<Vec<FrameReport>>> = Vec::new();
+        // Pool-wide observed cache stats over every served frame: the
+        // hit rate shared-scope pricing consumes (a session's future
+        // hits come from the pool's merged inserts, not its own
+        // history). Deterministic: merged in epoch/session order.
+        let mut served = CacheStats::default();
         while self.sessions.iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
-            epochs.push(self.run_parallel(Some(epoch))?);
+            epochs.push(self.run_epoch(epoch)?);
+            for frames in epochs.last().into_iter().flatten() {
+                for f in frames {
+                    served.merge(&f.cache);
+                }
+            }
             // Re-plan over the sessions that still have frames to serve
             // — finished viewers consume no device time and must not
             // demote (or refuse) the live ones.
-            let (active, demands) = self.active_demands()?;
+            let (active, demands) = self.active_demands(served.hit_rate())?;
             if active.is_empty() {
                 break;
             }
@@ -283,7 +441,12 @@ impl SessionPool {
 
     /// (indices, demands) of the sessions that still have frames to
     /// serve, from each one's most recent measured workload.
-    fn active_demands(&self) -> Result<(Vec<usize>, Vec<SessionDemand>)> {
+    /// `pool_hit_rate` is the pool-wide observed cache hit rate the
+    /// shared-scope pricing discount consumes (0 before any serving).
+    fn active_demands(
+        &self,
+        pool_hit_rate: f64,
+    ) -> Result<(Vec<usize>, Vec<SessionDemand>)> {
         let mut indices = Vec::new();
         let mut demands = Vec::new();
         for (i, c) in self.sessions.iter().enumerate() {
@@ -300,20 +463,23 @@ impl SessionPool {
                 variant: c.cfg.variant,
                 half_capable: c.tier_servable(Tier::Half),
                 priority: c.priority,
+                cache_shared: c.shares_cache(),
+                pool_hit_rate,
             });
         }
         Ok((indices, demands))
     }
 
     /// [`Self::active_demands`] for a pool that has not served a frame
-    /// yet: probe-render each active session's current pose first.
+    /// yet: probe-render each active session's current pose first (no
+    /// observed hit rate yet — the shared discount starts at zero).
     fn probe_active_demands(&mut self) -> Result<(Vec<usize>, Vec<SessionDemand>)> {
         for c in self.sessions.iter_mut() {
             if c.remaining() > 0 && c.last_workload().is_none() {
                 c.probe_workload()?;
             }
         }
-        self.active_demands()
+        self.active_demands(0.0)
     }
 
     /// Demands for every session with frames to serve, probing those
@@ -337,6 +503,10 @@ impl SessionPool {
                 if tier == Tier::Reduced { Some(self.shared_reduced_scene()) } else { None };
             self.sessions[i].set_tier_with(tier, reduced, force_rebuild)?;
         }
+        // Tier swaps can change cache geometries (and rebuilds detach
+        // deltas): refresh every shared session's snapshot + sharer
+        // count.
+        self.sync_shared_cache();
         Ok(())
     }
 

@@ -2,7 +2,10 @@
 //! (Fig. 20): render at half resolution through the full 3DGS pipeline,
 //! then bilinearly upsample to the target resolution.
 
+use std::sync::Arc;
+
 use crate::camera::{Intrinsics, Pose};
+use crate::lumina::rc::{CacheDelta, CacheSnapshot};
 use crate::pipeline::image::Image;
 use crate::pipeline::project::{project, ProjectedScene};
 use crate::pipeline::raster::{rasterize, RasterConfig};
@@ -97,6 +100,16 @@ impl RasterBackend for Ds2Raster {
 
     fn finalize(&self, image: Image) -> Image {
         self.inner.finalize(image).upsample2()
+    }
+
+    // The half-res tier wraps cached backends, so the cache-topology
+    // hooks must pass through to the inner backend.
+    fn take_cache_delta(&mut self) -> Option<CacheDelta> {
+        self.inner.take_cache_delta()
+    }
+
+    fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
+        self.inner.install_cache_snapshot(snapshot, sharers);
     }
 }
 

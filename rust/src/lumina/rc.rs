@@ -15,6 +15,21 @@
 //! contents partitioned per 4x4-tile group (64x64 px) with save/flush/
 //! reload semantics between groups (modeled functionally as per-group
 //! sub-caches; the traffic is charged by the simulator).
+//!
+//! **Cache topology** (DESIGN.md §4): nearby viewers produce the same
+//! first-k tags, so a pool can serve one viewer's miss from another's
+//! earlier insert. Ownership is a seam ([`CacheView`]) with two
+//! implementations: `private` — the session owns a
+//! [`GroupedRadianceCache`] outright (today's behavior, bit-for-bit) —
+//! and `shared` — every session of a pool reads one frozen, immutable
+//! [`CacheSnapshot`] for the whole epoch while logging its own inserts
+//! into a private [`CacheDelta`]; at epoch boundaries the pool replays
+//! the deltas into the next snapshot **in session-index order**
+//! ([`CacheHub::merge_in_order`]), so shared-scope output is bitwise
+//! identical at any thread count and pipeline depth.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::constants::{
     CACHE_ID_BITS, CACHE_ID_LO_BIT, CACHE_SETS, CACHE_TILE_GROUP, CACHE_WAYS, T_EPS,
@@ -25,6 +40,10 @@ use crate::pipeline::raster::{gather_tile, splat_alpha, GatheredSplat, RasterSta
 use crate::pipeline::sort::TileBins;
 use crate::pipeline::stage::{RasterBackend, RasterFrame, RasterWork};
 
+/// Bytes one cache entry occupies in DRAM during a group save/reload:
+/// 10 B tag material + 3 B RGB (paper Sec. 5).
+pub const CACHE_ENTRY_BYTES: usize = 13;
+
 /// One cache entry: packed high-bit tag + cached pixel RGB.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Entry {
@@ -32,11 +51,27 @@ struct Entry {
     value: [f32; 3],
 }
 
+/// What an insert did to the set it landed in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum InsertOutcome {
+    /// Tag already present; value updated in place.
+    Updated,
+    /// Placed in a free way.
+    Filled,
+    /// Placed by evicting the pseudo-LRU victim.
+    Evicted,
+}
+
 /// Running cache statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
     pub lookups: u64,
     pub hits: u64,
+    /// Of `hits`, how many were served from the pool-shared frozen
+    /// snapshot rather than the session's own inserts — the hit
+    /// provenance that tells cross-session sharing apart from the
+    /// private hit path (always 0 under private scope).
+    pub snapshot_hits: u64,
     pub inserts: u64,
     pub evictions: u64,
     /// Pixels whose ray met fewer than k significant Gaussians
@@ -56,6 +91,7 @@ impl CacheStats {
     pub fn merge(&mut self, o: &CacheStats) {
         self.lookups += o.lookups;
         self.hits += o.hits;
+        self.snapshot_hits += o.snapshot_hits;
         self.inserts += o.inserts;
         self.evictions += o.evictions;
         self.short_rays += o.short_rays;
@@ -122,12 +158,36 @@ impl RadianceCache {
     /// Look up a tag; on hit returns the cached RGB and touches pLRU.
     pub fn lookup(&mut self, ids: &[u32]) -> Option<[f32; 3]> {
         self.stats.lookups += 1;
+        let hit = self.probe_touch(ids);
+        if hit.is_some() {
+            self.stats.hits += 1;
+        }
+        hit
+    }
+
+    /// Read-only probe against frozen contents: tag compare without
+    /// touching stats or pLRU — the shared-snapshot lookup path, safe
+    /// for any number of concurrent readers.
+    pub fn probe(&self, ids: &[u32]) -> Option<[f32; 3]> {
         let (set, tag) = self.index_tag(ids);
         for w in 0..self.ways {
-            let slot = set * self.ways + w;
-            if let Some(e) = self.entries[slot] {
+            if let Some(e) = self.entries[set * self.ways + w] {
                 if e.tag == tag {
-                    self.stats.hits += 1;
+                    return Some(e.value);
+                }
+            }
+        }
+        None
+    }
+
+    /// Probe that refreshes pLRU on a hit but leaves stats untouched —
+    /// the delta-overlay read path, whose stats live in the
+    /// [`CacheDelta`].
+    fn probe_touch(&mut self, ids: &[u32]) -> Option<[f32; 3]> {
+        let (set, tag) = self.index_tag(ids);
+        for w in 0..self.ways {
+            if let Some(e) = self.entries[set * self.ways + w] {
+                if e.tag == tag {
                     self.touch(set, w);
                     return Some(e.value);
                 }
@@ -138,6 +198,20 @@ impl RadianceCache {
 
     /// Insert (or update) a tag with a pixel value, evicting pseudo-LRU.
     pub fn insert(&mut self, ids: &[u32], value: [f32; 3]) {
+        match self.insert_tracked(ids, value) {
+            InsertOutcome::Updated => {}
+            InsertOutcome::Filled => self.stats.inserts += 1,
+            InsertOutcome::Evicted => {
+                self.stats.inserts += 1;
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    /// [`Self::insert`] without the stats side effects, reporting what
+    /// happened — lets callers that account stats elsewhere (the shared
+    /// delta overlay) reuse the placement/eviction logic.
+    fn insert_tracked(&mut self, ids: &[u32], value: [f32; 3]) -> InsertOutcome {
         let (set, tag) = self.index_tag(ids);
         // Update in place on tag match.
         for w in 0..self.ways {
@@ -146,7 +220,7 @@ impl RadianceCache {
                 if e.tag == tag {
                     e.value = value;
                     self.touch(set, w);
-                    return;
+                    return InsertOutcome::Updated;
                 }
             }
         }
@@ -155,17 +229,15 @@ impl RadianceCache {
             let slot = set * self.ways + w;
             if self.entries[slot].is_none() {
                 self.entries[slot] = Some(Entry { tag, value });
-                self.stats.inserts += 1;
                 self.touch(set, w);
-                return;
+                return InsertOutcome::Filled;
             }
         }
         // Evict the pseudo-LRU victim.
         let w = self.victim(set);
         self.entries[set * self.ways + w] = Some(Entry { tag, value });
-        self.stats.inserts += 1;
-        self.stats.evictions += 1;
         self.touch(set, w);
+        InsertOutcome::Evicted
     }
 
     /// Tree-pLRU touch: flip node bits toward the accessed way.
@@ -260,13 +332,27 @@ fn set_bit(b: &mut u8, bit: u8, value: bool) {
     }
 }
 
+/// The tile-grid shape (and alpha-record length) a cache serves: the
+/// key under which shared-scope sessions pool their snapshots — two
+/// sessions share if and only if their render passes bin the same tile
+/// grid with the same k (tiers change the grid, hence the geometry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheGeometry {
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+    pub k: usize,
+}
+
 /// The full LuminCache: one [`RadianceCache`] bank per 4x4-tile group,
 /// persisted across frames (the hardware saves/reloads group contents to
 /// DRAM between tile batches; double-buffering hides the latency, the
 /// simulator charges the traffic).
+#[derive(Debug, Clone)]
 pub struct GroupedRadianceCache {
     pub groups_x: usize,
     pub groups_y: usize,
+    tiles_x: usize,
+    tiles_y: usize,
     banks: Vec<RadianceCache>,
     k: usize,
 }
@@ -278,6 +364,8 @@ impl GroupedRadianceCache {
         GroupedRadianceCache {
             groups_x,
             groups_y,
+            tiles_x,
+            tiles_y,
             banks: (0..groups_x * groups_y)
                 .map(|_| RadianceCache::paper_default(k))
                 .collect(),
@@ -289,11 +377,41 @@ impl GroupedRadianceCache {
         self.k
     }
 
-    /// Bank serving a tile coordinate.
-    pub fn bank_for_tile(&mut self, tx: usize, ty: usize) -> &mut RadianceCache {
+    /// The tile-grid geometry this cache was sized for.
+    pub fn geometry(&self) -> CacheGeometry {
+        CacheGeometry { tiles_x: self.tiles_x, tiles_y: self.tiles_y, k: self.k }
+    }
+
+    /// Bank index serving a tile coordinate.
+    pub fn group_for_tile(&self, tx: usize, ty: usize) -> usize {
         let gx = tx / CACHE_TILE_GROUP;
         let gy = ty / CACHE_TILE_GROUP;
-        &mut self.banks[gy * self.groups_x + gx]
+        gy * self.groups_x + gx
+    }
+
+    /// Read access to the bank serving a tile — the lookup path, which
+    /// an `Arc`-shared snapshot can serve concurrently. (The old
+    /// `&mut self` accessor forced exclusive access even for reads,
+    /// structurally ruling out any sharing.)
+    pub fn bank_for_tile(&self, tx: usize, ty: usize) -> &RadianceCache {
+        &self.banks[self.group_for_tile(tx, ty)]
+    }
+
+    /// Write access to the bank serving a tile — the insert/pLRU path.
+    pub fn bank_for_tile_mut(&mut self, tx: usize, ty: usize) -> &mut RadianceCache {
+        let g = self.group_for_tile(tx, ty);
+        &mut self.banks[g]
+    }
+
+    /// Replay an ordered insertion log — the epoch-merge path. Entries
+    /// land through the normal placement path (in-place update,
+    /// free-way fill, pLRU eviction), in log order, without touching
+    /// bank stats: insert/eviction accounting belongs to the session
+    /// deltas, not the published snapshot.
+    fn replay(&mut self, log: &[LoggedInsert]) {
+        for e in log {
+            self.banks[e.group as usize].insert_tracked(&e.ids[..e.k as usize], e.value);
+        }
     }
 
     /// Aggregate statistics over all banks.
@@ -305,16 +423,295 @@ impl GroupedRadianceCache {
         s
     }
 
-    /// Bytes moved per frame for group save+reload (entries * entry size *
-    /// 2 directions) — the DRAM traffic the simulator charges.
+    /// Live entries across all banks.
+    pub fn occupancy(&self) -> usize {
+        self.banks.iter().map(|b| b.occupancy()).sum()
+    }
+
+    /// Bytes moved per frame for group save+reload (entries * entry size
+    /// * 2 directions) — the DRAM traffic the simulator charges for a
+    /// **private** (per-session) cache, which really is spilled and
+    /// refilled around every frame's tile batches. A pool-shared
+    /// snapshot is saved/reloaded once per pool epoch instead; that
+    /// scope-aware accounting lives in [`CacheView::swap_bytes_for_frame`],
+    /// built from [`Self::occupancy`] and [`CACHE_ENTRY_BYTES`].
     pub fn swap_traffic_bytes(&self) -> usize {
-        // Entry: 10 B tag material + 3 B RGB (paper Sec. 5).
-        let entry_bytes = 13;
-        self.banks.iter().map(|b| b.occupancy() * entry_bytes * 2).sum()
+        self.occupancy() * CACHE_ENTRY_BYTES * 2
     }
 
     pub fn num_banks(&self) -> usize {
         self.banks.len()
+    }
+}
+
+/// An immutable, epoch-stamped view of a merged radiance cache: what
+/// every session of a shared-scope pool reads for the whole epoch.
+/// Lookups are pure reads (no stats, no pLRU touch), so any number of
+/// sessions can probe one snapshot concurrently with bitwise-identical
+/// results — the determinism half of the snapshot/merge contract
+/// (DESIGN.md §4).
+#[derive(Debug, Clone)]
+pub struct CacheSnapshot {
+    cache: GroupedRadianceCache,
+    /// Merge generation: bumped every time [`CacheHub::merge_in_order`]
+    /// publishes a successor, so views can tell a genuinely new
+    /// snapshot from a sharer-count refresh.
+    epoch: u64,
+}
+
+impl CacheSnapshot {
+    /// An empty snapshot for a cache geometry (epoch 0).
+    pub fn empty(geom: CacheGeometry) -> Self {
+        CacheSnapshot {
+            cache: GroupedRadianceCache::new(geom.tiles_x, geom.tiles_y, geom.k),
+            epoch: 0,
+        }
+    }
+
+    /// Frozen lookup: the cached RGB for a tag, if present.
+    pub fn lookup(&self, tx: usize, ty: usize, ids: &[u32]) -> Option<[f32; 3]> {
+        self.cache.bank_for_tile(tx, ty).probe(ids)
+    }
+
+    pub fn geometry(&self) -> CacheGeometry {
+        self.cache.geometry()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Live entries across all banks.
+    pub fn occupancy(&self) -> usize {
+        self.cache.occupancy()
+    }
+
+    /// DRAM bytes to save + reload the whole snapshot once — charged
+    /// once per pool epoch (amortized over the sharers), not once per
+    /// session per frame.
+    pub fn swap_traffic_bytes(&self) -> usize {
+        self.cache.swap_traffic_bytes()
+    }
+}
+
+/// One logged insert of a [`CacheDelta`]: enough to replay the exact
+/// insert against the next snapshot at the epoch merge.
+#[derive(Debug, Clone, Copy)]
+pub struct LoggedInsert {
+    group: u32,
+    k: u8,
+    ids: [u32; MAX_SIG_K],
+    value: [f32; 3],
+}
+
+/// A session's private epoch-local cache state under shared scope: an
+/// overlay cache answering lookups for the session's own fresh inserts
+/// (so intra-frame and intra-epoch self-hits keep working), plus the
+/// ordered insertion log the pool replays into the next snapshot at the
+/// epoch merge. Nothing here is visible to other sessions until the
+/// merge publishes it.
+///
+/// The log grows with the epoch's miss count (adjacent same-tag stores
+/// coalesce, but distinct misses are irreducible under the ordered-
+/// replay contract): roughly `pixels * miss_rate * epoch_frames`
+/// entries of ~60 B. Pools serving paper-scale frames should keep
+/// `pool.epoch_frames` modest; log compaction is a recorded follow-on
+/// (ROADMAP).
+#[derive(Debug)]
+pub struct CacheDelta {
+    overlay: GroupedRadianceCache,
+    log: Vec<LoggedInsert>,
+    stats: CacheStats,
+}
+
+impl CacheDelta {
+    pub fn new(geom: CacheGeometry) -> Self {
+        CacheDelta {
+            overlay: GroupedRadianceCache::new(geom.tiles_x, geom.tiles_y, geom.k),
+            log: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn geometry(&self) -> CacheGeometry {
+        self.overlay.geometry()
+    }
+
+    /// Inserts logged since the delta was (re)created.
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    /// View statistics accumulated while rendering against this delta.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// The cache-topology seam: where one session's lookups and inserts go.
+pub enum CacheView {
+    /// Session-owned cache — the pre-sharing behavior, bit-for-bit.
+    Private(GroupedRadianceCache),
+    /// Pool-shared: reads check the session's own delta overlay first
+    /// (freshest), then the frozen epoch snapshot; writes go to the
+    /// delta only.
+    Shared {
+        snapshot: Arc<CacheSnapshot>,
+        delta: CacheDelta,
+        /// Snapshot-reload DRAM bytes still to charge — the session's
+        /// amortized share of the once-per-pool-epoch snapshot swap,
+        /// consumed by the next rendered frame.
+        pending_snapshot_bytes: u64,
+    },
+}
+
+impl CacheView {
+    pub fn private(cache: GroupedRadianceCache) -> Self {
+        CacheView::Private(cache)
+    }
+
+    /// A shared view over a snapshot, with a fresh (empty) delta. The
+    /// freshly attached session must reload the whole snapshot once, so
+    /// the full swap traffic is pending; pool installs that follow a
+    /// merge amortize over the sharer count instead
+    /// ([`Self::install_snapshot`]).
+    pub fn shared(snapshot: Arc<CacheSnapshot>) -> Self {
+        let delta = CacheDelta::new(snapshot.geometry());
+        let pending = snapshot.swap_traffic_bytes() as u64;
+        CacheView::Shared { snapshot, delta, pending_snapshot_bytes: pending }
+    }
+
+    pub fn is_shared(&self) -> bool {
+        matches!(self, CacheView::Shared { .. })
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            CacheView::Private(c) => c.k(),
+            CacheView::Shared { delta, .. } => delta.overlay.k(),
+        }
+    }
+
+    /// Lifetime view statistics (bank stats under private scope, delta
+    /// stats under shared).
+    pub fn stats(&self) -> CacheStats {
+        match self {
+            CacheView::Private(c) => c.stats(),
+            CacheView::Shared { delta, .. } => delta.stats,
+        }
+    }
+
+    /// Detach the accumulated delta, leaving a fresh one behind (`None`
+    /// under private scope). The pool calls this at every epoch
+    /// boundary, in session-index order.
+    pub fn take_delta(&mut self) -> Option<CacheDelta> {
+        match self {
+            CacheView::Private(_) => None,
+            CacheView::Shared { delta, .. } => {
+                let fresh = CacheDelta::new(delta.geometry());
+                Some(std::mem::replace(delta, fresh))
+            }
+        }
+    }
+
+    /// Swap in the next epoch's merged snapshot. `sharers` is how many
+    /// sessions read this snapshot: the once-per-pool-epoch save+reload
+    /// traffic is split across them, so the pool as a whole is charged
+    /// the swap once — not once per session per frame. Re-installing
+    /// the same snapshot (a sharer-count refresh) charges nothing.
+    pub fn install_snapshot(&mut self, snap: Arc<CacheSnapshot>, sharers: usize) {
+        if let CacheView::Shared { snapshot, delta, pending_snapshot_bytes } = self {
+            if Arc::ptr_eq(snapshot, &snap) {
+                return;
+            }
+            if snap.geometry() != delta.geometry() {
+                // Defensive: a geometry change must come with a fresh
+                // delta (set_tier rebuilds the whole view; this path
+                // covers direct installs only).
+                *delta = CacheDelta::new(snap.geometry());
+            }
+            *pending_snapshot_bytes +=
+                (snap.swap_traffic_bytes() as u64).div_ceil(sharers.max(1) as u64);
+            *snapshot = snap;
+        }
+    }
+
+    /// DRAM swap traffic to charge the frame that is being rendered
+    /// right now. Private: the whole cache is spilled/refilled around
+    /// the frame's tile batches, every frame (the pre-sharing model,
+    /// unchanged). Shared: the session's delta working set is
+    /// saved+reloaded each frame exactly like a private cache of the
+    /// same occupancy, plus whatever share of the epoch's snapshot swap
+    /// is still pending (consumed here, charged once per install).
+    pub fn swap_bytes_for_frame(&mut self) -> u64 {
+        match self {
+            CacheView::Private(c) => c.swap_traffic_bytes() as u64,
+            CacheView::Shared { delta, pending_snapshot_bytes, .. } => {
+                let snapshot_share = std::mem::take(pending_snapshot_bytes);
+                snapshot_share + delta.overlay.swap_traffic_bytes() as u64
+            }
+        }
+    }
+}
+
+/// Pool-wide owner of the shared snapshots, keyed by [`CacheGeometry`]
+/// (sessions on different serving tiers render different tile grids and
+/// therefore share with their geometry peers only — a `set_tier` swap
+/// invalidates just that session's delta, never the snapshots).
+///
+/// The hub is only ever touched from the pool's coordination thread
+/// (construction, tier application, epoch merges); during rendering,
+/// sessions hold their own `Arc<CacheSnapshot>` and never reach the
+/// hub, so the mutex is uncontended and cannot order-scramble anything.
+#[derive(Debug, Default)]
+pub struct CacheHub {
+    snapshots: Mutex<HashMap<CacheGeometry, Arc<CacheSnapshot>>>,
+}
+
+impl CacheHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current snapshot for a geometry (an empty epoch-0 snapshot
+    /// is created on first request).
+    pub fn snapshot_for(&self, geom: CacheGeometry) -> Arc<CacheSnapshot> {
+        self.snapshots
+            .lock()
+            .expect("cache hub poisoned")
+            .entry(geom)
+            .or_insert_with(|| Arc::new(CacheSnapshot::empty(geom)))
+            .clone()
+    }
+
+    /// Merge session deltas into next-epoch snapshots **in the order
+    /// given** — the pool passes session-index order, which is the
+    /// whole determinism contract: the merged contents (values, pLRU
+    /// state, evictions) depend only on that order, never on how many
+    /// threads rendered the epoch. Geometries untouched by any delta
+    /// keep their current snapshot (same `Arc`, same epoch), so idle
+    /// epochs charge no snapshot swap.
+    pub fn merge_in_order(&self, deltas: Vec<CacheDelta>) {
+        let mut map = self.snapshots.lock().expect("cache hub poisoned");
+        let mut dirty: HashMap<CacheGeometry, (GroupedRadianceCache, u64)> = HashMap::new();
+        for d in deltas {
+            if d.log.is_empty() {
+                continue;
+            }
+            let geom = d.geometry();
+            let (work, _) = dirty.entry(geom).or_insert_with(|| match map.get(&geom) {
+                Some(s) => (s.cache.clone(), s.epoch),
+                None => (GroupedRadianceCache::new(geom.tiles_x, geom.tiles_y, geom.k), 0),
+            });
+            work.replay(&d.log);
+        }
+        for (geom, (cache, epoch)) in dirty {
+            map.insert(geom, Arc::new(CacheSnapshot { cache, epoch: epoch + 1 }));
+        }
     }
 }
 
@@ -327,6 +724,10 @@ pub struct PixelOutcome {
     pub significant: u32,
     /// True when the pixel's value came from the cache.
     pub hit: bool,
+    /// Hit provenance: true when the value came from the pool-shared
+    /// frozen snapshot rather than the session's own inserts (always
+    /// false under private scope).
+    pub snapshot_hit: bool,
     /// Gaussians the *uncached* pipeline would have iterated. Equal to
     /// `iterated` except on hit pixels rendered with
     /// `record_uncached = true`, where the scan continues (without
@@ -381,54 +782,181 @@ pub fn rasterize_cached_ex(
     cache: &mut GroupedRadianceCache,
     record_uncached: bool,
 ) -> CachedRasterOutput {
+    rasterize_cached_source(
+        projected,
+        bins,
+        width,
+        height,
+        &mut TileSource::Private(cache),
+        record_uncached,
+    )
+}
+
+/// Report only one call's statistics: `after` minus `before`.
+fn stats_delta(after: CacheStats, before: CacheStats) -> CacheStats {
+    CacheStats {
+        lookups: after.lookups - before.lookups,
+        hits: after.hits - before.hits,
+        snapshot_hits: after.snapshot_hits - before.snapshot_hits,
+        inserts: after.inserts - before.inserts,
+        evictions: after.evictions - before.evictions,
+        short_rays: after.short_rays - before.short_rays,
+    }
+}
+
+/// [`rasterize_cached_ex`] over the topology seam: both scopes run the
+/// same loop driver; only the per-tile bank construction differs.
+pub fn rasterize_cached_view(
+    projected: &ProjectedScene,
+    bins: &TileBins,
+    width: usize,
+    height: usize,
+    view: &mut CacheView,
+    record_uncached: bool,
+) -> CachedRasterOutput {
+    let mut source = match view {
+        CacheView::Private(cache) => TileSource::Private(cache),
+        CacheView::Shared { snapshot, delta, .. } => {
+            debug_assert_eq!(
+                snapshot.geometry(),
+                delta.geometry(),
+                "snapshot/delta geometry split"
+            );
+            TileSource::Shared { snapshot: &**snapshot, delta }
+        }
+    };
+    rasterize_cached_source(projected, bins, width, height, &mut source, record_uncached)
+}
+
+/// Where a rasterization call's per-tile banks come from — the driver's
+/// end of the topology seam. Private: the session's own mutable bank.
+/// Shared: a frozen snapshot bank paired with the session's delta
+/// overlay/log — the snapshot is never written, so concurrent sessions
+/// cannot observe each other mid-epoch; sharing becomes visible only
+/// through the deterministic epoch merge.
+enum TileSource<'s> {
+    Private(&'s mut GroupedRadianceCache),
+    Shared { snapshot: &'s CacheSnapshot, delta: &'s mut CacheDelta },
+}
+
+impl TileSource<'_> {
+    fn k(&self) -> usize {
+        match self {
+            TileSource::Private(c) => c.k(),
+            TileSource::Shared { delta, .. } => delta.overlay.k(),
+        }
+    }
+
+    fn stats(&self) -> CacheStats {
+        match self {
+            TileSource::Private(c) => c.stats(),
+            TileSource::Shared { delta, .. } => delta.stats,
+        }
+    }
+}
+
+/// The one tile/pixel loop driver both topologies share — any change to
+/// tile iteration, edge clamping, or stats assembly lands on private
+/// and shared scope alike, preserving their documented equivalence.
+fn rasterize_cached_source(
+    projected: &ProjectedScene,
+    bins: &TileBins,
+    width: usize,
+    height: usize,
+    source: &mut TileSource<'_>,
+    record_uncached: bool,
+) -> CachedRasterOutput {
     let ts = bins.tile_size;
-    let k = cache.k();
+    let k = source.k();
     let mut image = Image::new(width, height);
     let mut outcomes = vec![PixelOutcome::default(); width * height];
-    let stats_before = cache.stats();
+    let stats_before = source.stats();
 
     for ty in 0..bins.tiles_y {
         for tx in 0..bins.tiles_x {
             let tile = ty * bins.tiles_x + tx;
             let splats = gather_tile(projected, &bins.lists[tile]);
-            let bank = cache.bank_for_tile(tx, ty);
-            for ly in 0..ts {
-                let y = ty * ts + ly;
-                if y >= height {
-                    break;
-                }
-                for lx in 0..ts {
-                    let x = tx * ts + lx;
-                    if x >= width {
-                        break;
-                    }
-                    let (value, outcome) = composite_pixel_cached_ex(
+            match source {
+                TileSource::Private(cache) => run_tile(
+                    cache.bank_for_tile_mut(tx, ty),
+                    &splats,
+                    (tx, ty),
+                    ts,
+                    (width, height),
+                    k,
+                    record_uncached,
+                    &mut image,
+                    &mut outcomes,
+                ),
+                TileSource::Shared { snapshot, delta } => {
+                    let CacheDelta { overlay, log, stats } = &mut **delta;
+                    let group = overlay.group_for_tile(tx, ty) as u32;
+                    let mut bank = SharedBank {
+                        frozen: snapshot.cache.bank_for_tile(tx, ty),
+                        overlay: overlay.bank_for_tile_mut(tx, ty),
+                        log,
+                        stats,
+                        group,
+                    };
+                    run_tile(
+                        &mut bank,
                         &splats,
-                        x as f32 + 0.5,
-                        y as f32 + 0.5,
+                        (tx, ty),
+                        ts,
+                        (width, height),
                         k,
-                        bank,
                         record_uncached,
+                        &mut image,
+                        &mut outcomes,
                     );
-                    image.set(x, y, value);
-                    outcomes[y * width + x] = outcome;
                 }
             }
         }
     }
 
-    let mut stats = cache.stats();
-    // Report only this call's deltas.
-    stats.lookups -= stats_before.lookups;
-    stats.hits -= stats_before.hits;
-    stats.inserts -= stats_before.inserts;
-    stats.evictions -= stats_before.evictions;
-    stats.short_rays -= stats_before.short_rays;
+    let stats = stats_delta(source.stats(), stats_before);
     let uncached = record_uncached.then(|| RasterStats {
         iterated: outcomes.iter().map(|o| o.uncached_iterated).collect(),
         significant: outcomes.iter().map(|o| o.uncached_significant).collect(),
     });
     CachedRasterOutput { image, outcomes, stats, uncached }
+}
+
+/// One tile's pixel loop over a cache endpoint.
+#[allow(clippy::too_many_arguments)]
+fn run_tile<B: PixelCache>(
+    bank: &mut B,
+    splats: &[GatheredSplat],
+    (tx, ty): (usize, usize),
+    ts: usize,
+    (width, height): (usize, usize),
+    k: usize,
+    record_uncached: bool,
+    image: &mut Image,
+    outcomes: &mut [PixelOutcome],
+) {
+    for ly in 0..ts {
+        let y = ty * ts + ly;
+        if y >= height {
+            break;
+        }
+        for lx in 0..ts {
+            let x = tx * ts + lx;
+            if x >= width {
+                break;
+            }
+            let (value, outcome) = composite_pixel_cached_generic(
+                splats,
+                x as f32 + 0.5,
+                y as f32 + 0.5,
+                k,
+                bank,
+                record_uncached,
+            );
+            image.set(x, y, value);
+            outcomes[y * width + x] = outcome;
+        }
+    }
 }
 
 /// One pixel with cache interaction. Mirrors `raster::composite_pixel`
@@ -454,6 +982,108 @@ pub fn composite_pixel_cached_ex(
     py: f32,
     k: usize,
     bank: &mut RadianceCache,
+    record_uncached: bool,
+) -> ([f32; 3], PixelOutcome) {
+    composite_pixel_cached_generic(splats, px, py, k, bank, record_uncached)
+}
+
+/// The per-pixel cache endpoint the compositor talks to — one tile's
+/// end of the topology seam. Private scope is a bank; shared scope is a
+/// frozen bank + the session's delta overlay/log.
+trait PixelCache {
+    /// Query a tag: the cached RGB plus provenance (`true` = served
+    /// from the shared frozen snapshot).
+    fn query(&mut self, ids: &[u32]) -> Option<([f32; 3], bool)>;
+    /// Record a fully-composited value under its tag.
+    fn store(&mut self, ids: &[u32], value: [f32; 3]);
+    /// Note an uncacheable short ray.
+    fn short_ray(&mut self);
+}
+
+impl PixelCache for RadianceCache {
+    fn query(&mut self, ids: &[u32]) -> Option<([f32; 3], bool)> {
+        self.lookup(ids).map(|v| (v, false))
+    }
+
+    fn store(&mut self, ids: &[u32], value: [f32; 3]) {
+        self.insert(ids, value);
+    }
+
+    fn short_ray(&mut self) {
+        self.stats.short_rays += 1;
+    }
+}
+
+/// One tile's shared-scope cache endpoint: frozen snapshot bank +
+/// session-private overlay bank + the delta's insertion log and stats.
+struct SharedBank<'a> {
+    frozen: &'a RadianceCache,
+    overlay: &'a mut RadianceCache,
+    log: &'a mut Vec<LoggedInsert>,
+    stats: &'a mut CacheStats,
+    group: u32,
+}
+
+impl PixelCache for SharedBank<'_> {
+    fn query(&mut self, ids: &[u32]) -> Option<([f32; 3], bool)> {
+        self.stats.lookups += 1;
+        // The session's own inserts are freshest: overlay first.
+        if let Some(v) = self.overlay.probe_touch(ids) {
+            self.stats.hits += 1;
+            return Some((v, false));
+        }
+        if let Some(v) = self.frozen.probe(ids) {
+            self.stats.hits += 1;
+            self.stats.snapshot_hits += 1;
+            return Some((v, true));
+        }
+        None
+    }
+
+    fn store(&mut self, ids: &[u32], value: [f32; 3]) {
+        let mut rec = LoggedInsert {
+            group: self.group,
+            k: ids.len() as u8,
+            ids: [0; MAX_SIG_K],
+            value,
+        };
+        rec.ids[..ids.len()].copy_from_slice(ids);
+        // Adjacent same-tag stores coalesce: replaying [X=a, X=b]
+        // back-to-back is state-identical to replaying [X=b] (the
+        // second insert is an in-place update touching the same way),
+        // so the log stays shorter with no effect on the merge.
+        match self.log.last_mut() {
+            Some(last)
+                if last.group == rec.group && last.k == rec.k && last.ids == rec.ids =>
+            {
+                last.value = rec.value;
+            }
+            _ => self.log.push(rec),
+        }
+        match self.overlay.insert_tracked(ids, value) {
+            InsertOutcome::Updated => {}
+            InsertOutcome::Filled => self.stats.inserts += 1,
+            InsertOutcome::Evicted => {
+                self.stats.inserts += 1;
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    fn short_ray(&mut self) {
+        self.stats.short_rays += 1;
+    }
+}
+
+/// The compositing loop shared by both topologies — identical math and
+/// control flow to the original private-path compositor; only the cache
+/// endpoint is generic.
+fn composite_pixel_cached_generic<C: PixelCache>(
+    splats: &[GatheredSplat],
+    px: f32,
+    py: f32,
+    k: usize,
+    bank: &mut C,
     record_uncached: bool,
 ) -> ([f32; 3], PixelOutcome) {
     let mut c = [0.0f32; 3];
@@ -484,6 +1114,7 @@ pub fn composite_pixel_cached_ex(
                     iterated,
                     significant,
                     hit: false,
+                    snapshot_hit: false,
                     uncached_iterated: iterated,
                     uncached_significant: significant,
                 },
@@ -498,7 +1129,7 @@ pub fn composite_pixel_cached_ex(
         // Once the alpha-record fills, query the cache (paper step 4).
         if sig_n == k && !queried {
             queried = true;
-            if let Some(value) = bank.lookup(&sig_ids[..k]) {
+            if let Some((value, from_snapshot)) = bank.query(&sig_ids[..k]) {
                 // Hit: the cached RGB replaces the remaining integration.
                 // When recording, keep scanning (count-only, same math
                 // and transmittance) to recover the uncached counts the
@@ -514,6 +1145,7 @@ pub fn composite_pixel_cached_ex(
                         iterated,
                         significant,
                         hit: true,
+                        snapshot_hit: from_snapshot,
                         uncached_iterated: ui,
                         uncached_significant: us,
                     },
@@ -524,9 +1156,9 @@ pub fn composite_pixel_cached_ex(
 
     // Miss (or short ray): full value computed; update the cache.
     if queried {
-        bank.insert(&sig_ids[..k], c);
+        bank.store(&sig_ids[..k], c);
     } else {
-        bank.stats.short_rays += 1;
+        bank.short_ray();
     }
     (
         c,
@@ -534,6 +1166,7 @@ pub fn composite_pixel_cached_ex(
             iterated,
             significant,
             hit: false,
+            snapshot_hit: false,
             uncached_iterated: iterated,
             uncached_significant: significant,
         },
@@ -568,23 +1201,32 @@ fn scan_uncached(
 }
 
 /// The radiance-cached [`RasterBackend`]: the RC raster stage of the
-/// frame loop, carrying per-session cache state across frames.
+/// frame loop, carrying per-session cache state across frames — a
+/// private [`GroupedRadianceCache`] or a shared snapshot + delta,
+/// behind the [`CacheView`] topology seam.
 pub struct CachedRaster {
-    cache: GroupedRadianceCache,
+    view: CacheView,
     record_uncached: bool,
 }
 
 impl CachedRaster {
-    /// `record_uncached` asks every frame for single-pass uncached
-    /// per-pixel counts (required by cost models whose
-    /// `needs_uncached_stats` is true, e.g. the GPU warp model).
+    /// Private scope: the session owns its cache outright (today's
+    /// behavior, bit-for-bit). `record_uncached` asks every frame for
+    /// single-pass uncached per-pixel counts (required by cost models
+    /// whose `needs_uncached_stats` is true, e.g. the GPU warp model).
     pub fn new(cache: GroupedRadianceCache, record_uncached: bool) -> Self {
-        CachedRaster { cache, record_uncached }
+        CachedRaster { view: CacheView::private(cache), record_uncached }
     }
 
-    /// The underlying cache (for occupancy/stats inspection).
-    pub fn cache(&self) -> &GroupedRadianceCache {
-        &self.cache
+    /// Shared scope: render against a pool snapshot, logging inserts
+    /// into a fresh session delta.
+    pub fn shared(snapshot: Arc<CacheSnapshot>, record_uncached: bool) -> Self {
+        CachedRaster { view: CacheView::shared(snapshot), record_uncached }
+    }
+
+    /// The underlying cache view (for occupancy/stats inspection).
+    pub fn view(&self) -> &CacheView {
+        &self.view
     }
 }
 
@@ -600,14 +1242,15 @@ impl RasterBackend for CachedRaster {
         width: usize,
         height: usize,
     ) -> RasterFrame {
-        let out = rasterize_cached_ex(
+        let out = rasterize_cached_view(
             projected,
             bins,
             width,
             height,
-            &mut self.cache,
+            &mut self.view,
             self.record_uncached,
         );
+        let swap_bytes = self.view.swap_bytes_for_frame();
         RasterFrame {
             image: out.image,
             work: RasterWork {
@@ -617,12 +1260,28 @@ impl RasterBackend for CachedRaster {
                 significant: out.outcomes.iter().map(|o| o.significant).collect(),
                 uncached: out.uncached,
                 cache_outcomes: Some(
-                    out.outcomes.iter().map(|o| if o.hit { 2u8 } else { 1u8 }).collect(),
+                    out.outcomes
+                        .iter()
+                        .map(|o| match (o.hit, o.snapshot_hit) {
+                            (true, true) => 3u8,
+                            (true, false) => 2,
+                            _ => 1,
+                        })
+                        .collect(),
                 ),
                 cache: out.stats,
-                swap_bytes: self.cache.swap_traffic_bytes() as u64,
+                cache_shared: self.view.is_shared(),
+                swap_bytes,
             },
         }
+    }
+
+    fn take_cache_delta(&mut self) -> Option<CacheDelta> {
+        self.view.take_delta()
+    }
+
+    fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
+        self.view.install_snapshot(snapshot, sharers);
     }
 }
 
@@ -785,7 +1444,7 @@ mod tests {
         // Quality: overall PSNR stays high, and the *median* hit-pixel
         // color error reproduces the paper's Fig. 12 claim (average color
         // difference ~0.5-1.0 out of 255 for k=5). The tail is heavier
-        // than in trained scenes (DESIGN.md §5: synthetic statistics),
+        // than in trained scenes (DESIGN.md §6: synthetic statistics),
         // which is what cache-aware fine-tuning addresses.
         let exact = rasterize(&p2, &b2, intr.width, intr.height, &RasterConfig::default());
         let psnr = crate::metrics::psnr(&exact.image, &out.image);
@@ -867,17 +1526,228 @@ mod tests {
         let mut cache = GroupedRadianceCache::new(8, 8, 5);
         assert_eq!(cache.num_banks(), 4);
         let ids = [8, 16, 24, 32, 40];
-        cache.bank_for_tile(0, 0).insert(&ids, [1.0; 3]);
-        assert!(cache.bank_for_tile(0, 0).lookup(&ids).is_some());
-        assert!(cache.bank_for_tile(7, 7).lookup(&ids).is_none());
+        cache.bank_for_tile_mut(0, 0).insert(&ids, [1.0; 3]);
+        assert!(cache.bank_for_tile_mut(0, 0).lookup(&ids).is_some());
+        assert!(cache.bank_for_tile_mut(7, 7).lookup(&ids).is_none());
+        // The read accessor probes without exclusive access — the split
+        // that makes Arc-shared snapshots possible at all.
+        assert!(cache.bank_for_tile(0, 0).probe(&ids).is_some());
+        assert!(cache.bank_for_tile(7, 7).probe(&ids).is_none());
     }
 
     #[test]
     fn swap_traffic_grows_with_occupancy() {
         let mut cache = GroupedRadianceCache::new(4, 4, 5);
         assert_eq!(cache.swap_traffic_bytes(), 0);
-        cache.bank_for_tile(0, 0).insert(&[8, 16, 24, 32, 40], [0.5; 3]);
+        cache.bank_for_tile_mut(0, 0).insert(&[8, 16, 24, 32, 40], [0.5; 3]);
         assert_eq!(cache.swap_traffic_bytes(), 26); // 13 B x 2 directions
+    }
+
+    #[test]
+    fn stats_merge_and_hit_rate_on_empty_and_partial() {
+        // Empty stats: no lookups -> defined 0.0 hit rate, and merging
+        // an empty into an empty stays empty.
+        let mut a = CacheStats::default();
+        assert_eq!(a.hit_rate(), 0.0);
+        a.merge(&CacheStats::default());
+        assert_eq!(a, CacheStats::default());
+        // Partial: merge accumulates every field and hit_rate follows.
+        let b = CacheStats {
+            lookups: 8,
+            hits: 2,
+            snapshot_hits: 1,
+            inserts: 6,
+            evictions: 1,
+            short_rays: 3,
+        };
+        a.merge(&b);
+        assert_eq!(a, b);
+        assert_eq!(a.hit_rate(), 0.25);
+        let c = CacheStats { lookups: 8, hits: 6, ..CacheStats::default() };
+        a.merge(&c);
+        assert_eq!(a.lookups, 16);
+        assert_eq!(a.hits, 8);
+        assert_eq!(a.snapshot_hits, 1);
+        assert_eq!(a.inserts, 6);
+        assert_eq!(a.hit_rate(), 0.5);
+        // Merging empty into partial changes nothing.
+        let before = a;
+        a.merge(&CacheStats::default());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn frozen_probe_never_mutates() {
+        let mut bank = RadianceCache::paper_default(5);
+        let ids = [8, 16, 24, 32, 40];
+        bank.insert(&ids, [0.25; 3]);
+        let stats = bank.stats;
+        for _ in 0..3 {
+            assert_eq!(bank.probe(&ids), Some([0.25; 3]));
+            assert_eq!(bank.probe(&[48, 56, 64, 72, 80]), None);
+        }
+        assert_eq!(bank.stats, stats, "probe must not touch stats");
+        assert_eq!(bank.occupancy(), 1);
+    }
+
+    fn geom(tiles: usize, k: usize) -> CacheGeometry {
+        CacheGeometry { tiles_x: tiles, tiles_y: tiles, k }
+    }
+
+    #[test]
+    fn shared_view_overlay_snapshot_precedence_and_provenance() {
+        // Snapshot holds tag A; the session inserts tag B and re-inserts
+        // A with a fresher value: lookups must prefer the overlay, and
+        // provenance must tell snapshot hits from own hits.
+        let g = geom(4, 5);
+        let ids_a = [8u32, 16, 24, 32, 40];
+        let ids_b = [48u32, 56, 64, 72, 80];
+        let mut base = CacheSnapshot::empty(g);
+        base.cache.bank_for_tile_mut(0, 0).insert(&ids_a, [0.1; 3]);
+        let snap = Arc::new(base);
+        let mut view = CacheView::shared(snap.clone());
+        let CacheView::Shared { snapshot, delta, .. } = &mut view else { unreachable!() };
+        let probe = |snapshot: &CacheSnapshot, delta: &mut CacheDelta, ids: &[u32]| {
+            let group = delta.overlay.group_for_tile(0, 0) as u32;
+            let mut bank = SharedBank {
+                frozen: snapshot.cache.bank_for_tile(0, 0),
+                overlay: delta.overlay.bank_for_tile_mut(0, 0),
+                log: &mut delta.log,
+                stats: &mut delta.stats,
+                group,
+            };
+            bank.query(ids)
+        };
+        assert_eq!(probe(&**snapshot, delta, &ids_a), Some(([0.1; 3], true)), "snapshot hit");
+        assert_eq!(probe(&**snapshot, delta, &ids_b), None);
+        // Session inserts B and overrides A.
+        {
+            let group = delta.overlay.group_for_tile(0, 0) as u32;
+            let mut bank = SharedBank {
+                frozen: snapshot.cache.bank_for_tile(0, 0),
+                overlay: delta.overlay.bank_for_tile_mut(0, 0),
+                log: &mut delta.log,
+                stats: &mut delta.stats,
+                group,
+            };
+            bank.store(&ids_b, [0.5; 3]);
+            bank.store(&ids_a, [0.9; 3]);
+        }
+        assert_eq!(probe(&**snapshot, delta, &ids_b), Some(([0.5; 3], false)), "own hit");
+        assert_eq!(probe(&**snapshot, delta, &ids_a), Some(([0.9; 3], false)), "overlay wins");
+        let s = delta.stats();
+        assert_eq!(s.lookups, 5);
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.snapshot_hits, 1);
+        assert_eq!(s.inserts, 2);
+        assert_eq!(delta.len(), 2, "every store is logged, updates included");
+        // The snapshot itself never changed.
+        assert_eq!(snap.occupancy(), 1);
+        assert_eq!(snap.lookup(0, 0, &ids_a), Some([0.1; 3]));
+    }
+
+    #[test]
+    fn hub_merges_deltas_in_session_index_order() {
+        let g = geom(4, 5);
+        let hub = CacheHub::new();
+        let empty = hub.snapshot_for(g);
+        assert_eq!(empty.epoch(), 0);
+        let ids = [8u32, 16, 24, 32, 40];
+        // Two sessions insert the same tag with different values: the
+        // later session's insert must win (session-index replay order).
+        let mk_delta = |value: [f32; 3]| {
+            let mut d = CacheDelta::new(g);
+            let group = d.overlay.group_for_tile(0, 0) as u32;
+            let mut bank = SharedBank {
+                frozen: empty.cache.bank_for_tile(0, 0),
+                overlay: d.overlay.bank_for_tile_mut(0, 0),
+                log: &mut d.log,
+                stats: &mut d.stats,
+                group,
+            };
+            bank.store(&ids, value);
+            d
+        };
+        hub.merge_in_order(vec![mk_delta([0.1; 3]), mk_delta([0.7; 3])]);
+        let merged = hub.snapshot_for(g);
+        assert_eq!(merged.epoch(), 1);
+        assert_eq!(merged.lookup(0, 0, &ids), Some([0.7; 3]), "later session wins");
+        assert_eq!(merged.occupancy(), 1);
+        // Reversed order flips the winner — order is the contract.
+        let hub2 = CacheHub::new();
+        hub2.merge_in_order(vec![mk_delta([0.7; 3]), mk_delta([0.1; 3])]);
+        assert_eq!(hub2.snapshot_for(g).lookup(0, 0, &ids), Some([0.1; 3]));
+        // An all-empty merge keeps the snapshot (same Arc, same epoch).
+        let before = hub.snapshot_for(g);
+        hub.merge_in_order(vec![CacheDelta::new(g)]);
+        assert!(Arc::ptr_eq(&before, &hub.snapshot_for(g)));
+    }
+
+    #[test]
+    fn shared_swap_traffic_charged_once_per_snapshot_install() {
+        let g = geom(4, 5);
+        let mut base = CacheSnapshot::empty(g);
+        // Leading IDs spread across sets (low index bits vary), so all
+        // ten inserts coexist without evictions.
+        for i in 0..10u32 {
+            base.cache.bank_for_tile_mut(0, 0).insert(&[(i + 1) << 3, 16, 24, 32, 40], [0.5; 3]);
+        }
+        assert_eq!(base.occupancy(), 10);
+        let bytes = base.swap_traffic_bytes() as u64;
+        assert_eq!(bytes, 10 * 13 * 2);
+        let snap = Arc::new(base);
+
+        // Private scope: the whole occupancy is charged EVERY frame.
+        let mut private = CacheView::private(snap.cache.clone());
+        assert_eq!(private.swap_bytes_for_frame(), bytes);
+        assert_eq!(private.swap_bytes_for_frame(), bytes);
+
+        // Shared scope: the snapshot share is charged once per install,
+        // then only the session's own delta working set.
+        let mut view = CacheView::shared(snap.clone());
+        assert_eq!(view.swap_bytes_for_frame(), bytes, "fresh attach reloads once");
+        assert_eq!(view.swap_bytes_for_frame(), 0, "steady frames charge only the delta");
+        // Re-installing the same snapshot (sharer refresh) is free.
+        view.install_snapshot(snap.clone(), 4);
+        assert_eq!(view.swap_bytes_for_frame(), 0);
+        // A new merged snapshot charges the amortized share only.
+        let next = Arc::new(CacheSnapshot { cache: snap.cache.clone(), epoch: snap.epoch() + 1 });
+        view.install_snapshot(next, 4);
+        assert_eq!(view.swap_bytes_for_frame(), bytes.div_ceil(4));
+        assert_eq!(view.swap_bytes_for_frame(), 0);
+    }
+
+    #[test]
+    fn shared_rasterization_hits_across_sessions_after_merge() {
+        // Session A renders a frame (cold snapshot), the pool merges its
+        // delta, session B renders the same pose against the merged
+        // snapshot: B's first frame must hit where A inserted, with
+        // snapshot provenance — the cross-session redundancy win.
+        let (p, bins, intr) = render_setup();
+        let g = CacheGeometry { tiles_x: bins.tiles_x, tiles_y: bins.tiles_y, k: 5 };
+        let hub = CacheHub::new();
+        let mut a = CacheView::shared(hub.snapshot_for(g));
+        let cold =
+            rasterize_cached_view(&p, &bins, intr.width, intr.height, &mut a, false);
+        assert_eq!(cold.stats.snapshot_hits, 0, "cold snapshot cannot hit");
+        hub.merge_in_order(vec![a.take_delta().unwrap()]);
+
+        let mut b = CacheView::shared(hub.snapshot_for(g));
+        let warm =
+            rasterize_cached_view(&p, &bins, intr.width, intr.height, &mut b, false);
+        assert!(
+            warm.stats.snapshot_hits > 0,
+            "cross-session hits expected: {:?}",
+            warm.stats
+        );
+        assert!(warm.stats.hit_rate() > cold.stats.hit_rate());
+        // Provenance is consistent between stats and outcomes.
+        let snap_hits =
+            warm.outcomes.iter().filter(|o| o.snapshot_hit).count() as u64;
+        assert_eq!(snap_hits, warm.stats.snapshot_hits);
+        // B hits at least as often as a private second pass over the
+        // same pose would, since A's inserts cover the same rays.
+        assert!(warm.stats.hit_rate() > 0.5, "hit rate {}", warm.stats.hit_rate());
     }
 }
 

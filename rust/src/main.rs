@@ -32,6 +32,7 @@ const VALUE_KEYS: &[&str] = &[
     "target-fps",
     "tiers",
     "pipeline-depth",
+    "cache-scope",
 ];
 
 fn main() -> Result<()> {
@@ -77,6 +78,9 @@ fn print_help() {
            --pipeline-depth <d>   frame slots per session: 1 synchronous,\n\
                                   2 double-buffered — frame N+1's frontend\n\
                                   overlaps frame N's raster (serve cmd)\n\
+           --cache-scope <s>      radiance-cache ownership: private\n\
+                                  (per-session) or shared (one pool-wide\n\
+                                  snapshot/merge cache) (serve cmd)\n\
            --artifacts <dir>      AOT artifact directory (runtime cmd)"
     );
 }
@@ -143,16 +147,21 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         // Route through the config validator (1..=2).
         cfg.apply_override(&format!("pool.pipeline_depth={d}"))?;
     }
+    if let Some(s) = args.get("cache-scope") {
+        // Route through the config validator (private|shared).
+        cfg.apply_override(&format!("pool.cache_scope={s}"))?;
+    }
     let n: usize = args.get_parsed("sessions", 4);
     println!(
         "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{} \
-         | pipeline depth {}",
+         | pipeline depth {} | cache scope {}",
         cfg.variant.label(),
         cfg.gaussian_count(),
         cfg.camera.frames,
         cfg.camera.width,
         cfg.camera.height,
-        cfg.pool.pipeline_depth
+        cfg.pool.pipeline_depth,
+        cfg.pool.cache_scope.label()
     );
     let admission = cfg.pool.target_fps > 0.0;
     let mut pool = SessionPool::new(cfg.clone(), n)?;

@@ -34,9 +34,11 @@
 //! The coordinator composes these as trait objects; no stage knows which
 //! hardware variant is being modeled.
 
+use std::sync::Arc;
+
 use crate::camera::{Intrinsics, Pose};
 use crate::config::Tier;
-use crate::lumina::rc::CacheStats;
+use crate::lumina::rc::{CacheDelta, CacheSnapshot, CacheStats};
 use crate::lumina::s2::S2Scheduler;
 use crate::pipeline::image::Image;
 use crate::pipeline::project::{project, ProjectedScene};
@@ -85,11 +87,23 @@ pub struct FrameWorkload {
     /// backend was asked to record them; the GPU cost model prices RC's
     /// warp-bound time from these).
     pub uncached: Option<RasterStats>,
-    /// Per-pixel cache interaction: 1 = miss, 2 = hit (None without RC).
+    /// Per-pixel cache interaction: 1 = miss, 2 = hit from the
+    /// session's own inserts, 3 = hit from the pool-shared snapshot
+    /// (None without RC).
     pub cache_outcomes: Option<Vec<u8>>,
-    /// Radiance-cache statistics for the frame.
+    /// Radiance-cache statistics for the frame (hit provenance
+    /// included: [`CacheStats::snapshot_hits`]).
     pub cache: CacheStats,
-    /// LuminCache group save/reload traffic (bytes).
+    /// Whether the frame rendered against a pool-shared cache snapshot.
+    /// A *structural* property of the session — shared-scope lookups
+    /// pay port/lock contention at any tier, with or without a warm
+    /// cache — so unlike the stats it survives
+    /// [`Self::tier_estimate`]'s normalization and the cost models can
+    /// keep pricing the contention the paper warns about.
+    pub cache_shared: bool,
+    /// LuminCache group save/reload traffic (bytes). Scope-aware at the
+    /// source: a private cache swaps per frame, a shared snapshot is
+    /// charged once per pool epoch (amortized over its sharers).
     pub swap_bytes: u64,
 }
 
@@ -119,6 +133,7 @@ impl FrameWorkload {
             uncached: raster.uncached,
             cache_outcomes: raster.cache_outcomes,
             cache: raster.cache,
+            cache_shared: raster.cache_shared,
             swap_bytes: raster.swap_bytes,
         }
     }
@@ -180,6 +195,7 @@ impl FrameWorkload {
             sorted: w.sorted,
             sort_entries: w.sort_entries,
             refreshed_gaussians: w.refreshed_gaussians,
+            cache_shared: w.cache_shared,
             swap_bytes: w.swap_bytes,
             tiles,
         }
@@ -239,6 +255,9 @@ impl FrameWorkload {
         }
         w.cache_outcomes = None;
         w.cache = CacheStats::default();
+        // `cache_shared` is deliberately kept: the shared-lookup
+        // contention is structural (paid at any tier, warm or cold), so
+        // the planner must keep pricing it.
         w
     }
 
@@ -420,6 +439,9 @@ pub struct AggregateWorkload {
     pub sorted: bool,
     pub sort_entries: usize,
     pub refreshed_gaussians: usize,
+    /// Shared-cache scope flag, mirrored from the per-pixel record so
+    /// both pricing paths charge the same contention.
+    pub cache_shared: bool,
     pub swap_bytes: u64,
     pub tiles: Vec<TileAggregate>,
 }
@@ -576,6 +598,7 @@ impl AggregateWorkload {
             sorted: self.sorted,
             sort_entries: scale_round(self.sort_entries, entry_scale),
             refreshed_gaussians: self.refreshed_gaussians,
+            cache_shared: self.cache_shared,
             swap_bytes: self.swap_bytes,
             tiles,
         }
@@ -681,6 +704,9 @@ pub struct RasterWork {
     pub uncached: Option<RasterStats>,
     pub cache_outcomes: Option<Vec<u8>>,
     pub cache: CacheStats,
+    /// True when the backend rendered against a pool-shared cache
+    /// snapshot (see [`FrameWorkload::cache_shared`]).
+    pub cache_shared: bool,
     pub swap_bytes: u64,
 }
 
@@ -710,6 +736,20 @@ pub trait RasterBackend: Send {
     fn finalize(&self, image: Image) -> Image {
         image
     }
+
+    /// Detach the session's accumulated shared-cache insert delta,
+    /// leaving a fresh one behind. `None` under private scope and for
+    /// uncached backends. The pool calls this at every epoch boundary,
+    /// in session-index order — the shared-scope determinism contract.
+    fn take_cache_delta(&mut self) -> Option<CacheDelta> {
+        None
+    }
+
+    /// Install the next epoch's merged cache snapshot (no-op under
+    /// private scope / uncached backends). `sharers` amortizes the
+    /// once-per-pool-epoch snapshot swap traffic across the sessions
+    /// reading it.
+    fn install_cache_snapshot(&mut self, _snapshot: Arc<CacheSnapshot>, _sharers: usize) {}
 }
 
 /// Exact 3DGS rasterization (no cache).
@@ -740,6 +780,7 @@ impl RasterBackend for PlainRaster {
                 uncached: None,
                 cache_outcomes: None,
                 cache: CacheStats::default(),
+                cache_shared: false,
                 swap_bytes: 0,
             },
         }
@@ -1112,6 +1153,7 @@ mod tests {
             uncached: None,
             cache_outcomes: None,
             cache: CacheStats::default(),
+            cache_shared: false,
             swap_bytes: 0,
         };
         for (measured, target) in [

@@ -70,7 +70,24 @@ pub trait CostModel: Send {
     /// Fixed per-frame overhead in seconds (kernel launches for the
     /// GPU; DMA descriptor setup for the accelerators).
     fn overhead_s(&self) -> f64;
+
+    /// Pool-shared cache lookup contention for a frame of `pixels`
+    /// lookups — the *structural* cost of sharing (paid warm or cold,
+    /// at any tier; cache hits cannot save it). Implementations add it
+    /// to `raster_cost`/`raster_cost_aggregate` whenever the workload's
+    /// `cache_shared` flag is set, and the admission planner excludes
+    /// it from the pool-hit-rate discount. 0 for models that never
+    /// price a shared cache (GSCore's variant has no RC).
+    fn shared_lookup_cost_s(&self, _pixels: usize) -> f64 {
+        0.0
+    }
 }
+
+/// Cross-session sharing multiplies the GPU's RC lookup serialization:
+/// other viewers' lookups contend for the same locks the paper blames
+/// for RC-on-GPU's slowdown. Charged as a fraction of the
+/// single-session lookup overhead.
+const GPU_SHARED_LOOKUP_FACTOR: f64 = 0.5;
 
 /// S² re-evaluates SH colors (and light per-Gaussian geometry) every
 /// frame on the frontend unit: ~35% of a projection pass over the
@@ -145,6 +162,12 @@ impl CostModel for GpuModel {
             // Lookup serialization + lock contention (paper Sec. 4).
             t += self.rc_overhead_time_s(w.pixels());
         }
+        if w.cache_shared {
+            // Cross-session lock contention on the shared cache — a
+            // structural charge (independent of the stripped outcome
+            // maps), so tier estimates keep paying it.
+            t += CostModel::shared_lookup_cost_s(self, w.pixels());
+        }
         RasterCost {
             time_s: t,
             energy: EnergyBreakdown {
@@ -159,7 +182,11 @@ impl CostModel for GpuModel {
         // Aggregates are cache-stripped (normalized), so no RC overhead:
         // same contract as pricing a normalized per-pixel estimate.
         let agg = WarpAggregates::from_tile_aggregates(&a.tiles);
-        let t = self.raster_time_s(&agg);
+        let mut t = self.raster_time_s(&agg);
+        if a.cache_shared {
+            // Same structural contention charge as the exact path.
+            t += CostModel::shared_lookup_cost_s(self, a.width * a.height);
+        }
         RasterCost {
             time_s: t,
             energy: EnergyBreakdown {
@@ -172,6 +199,10 @@ impl CostModel for GpuModel {
 
     fn overhead_s(&self) -> f64 {
         self.launch_overhead_s
+    }
+
+    fn shared_lookup_cost_s(&self, pixels: usize) -> f64 {
+        GPU_SHARED_LOOKUP_FACTOR * self.rc_overhead_time_s(pixels)
     }
 }
 
@@ -196,28 +227,41 @@ impl CostModel for LuminCoreSim {
         let mut energy = frame.energy;
         // The GPU idles (leakage only) while the NRUs rasterize.
         energy.gpu += self.energy.gpu_idle_energy_j(frame.raster_s);
-        RasterCost {
-            time_s: frame.raster_s,
-            energy,
-            pe_utilization: frame.pe_utilization,
+        let mut time_s = frame.raster_s;
+        if w.cache_shared {
+            // Pool-shared LuminCache: every pixel's lookup pays bank
+            // port arbitration against the other sessions. Bounded by
+            // the pixel count (each pixel queries at most once); a
+            // structural charge, so it survives the planner's
+            // normalized tier estimates and admission pricing consumes
+            // it.
+            time_s += CostModel::shared_lookup_cost_s(self, w.pixels());
         }
+        RasterCost { time_s, energy, pe_utilization: frame.pe_utilization }
     }
 
     fn raster_cost_aggregate(&mut self, a: &AggregateWorkload) -> RasterCost {
         let frame = self.frame_from_aggregates(&a.tiles, a.swap_bytes);
         let mut energy = frame.energy;
         energy.gpu += self.energy.gpu_idle_energy_j(frame.raster_s);
-        RasterCost {
-            time_s: frame.raster_s,
-            energy,
-            pe_utilization: frame.pe_utilization,
+        let mut time_s = frame.raster_s;
+        if a.cache_shared {
+            // Same structural contention charge as the exact path —
+            // both derive it from the pixel count, so the two pricing
+            // paths stay in lockstep.
+            time_s += CostModel::shared_lookup_cost_s(self, a.width * a.height);
         }
+        RasterCost { time_s, energy, pe_utilization: frame.pe_utilization }
     }
 
     fn overhead_s(&self) -> f64 {
         // Kernel launches are replaced by DMA descriptor setup; only a
         // sliver of the GPU's launch overhead remains.
         0.1 * GpuModel::xavier_volta().launch_overhead_s
+    }
+
+    fn shared_lookup_cost_s(&self, pixels: usize) -> f64 {
+        LuminCoreSim::shared_contention_s(self, pixels as u64)
     }
 }
 
@@ -276,6 +320,7 @@ mod tests {
             uncached: None,
             cache_outcomes: None,
             cache: CacheStats::default(),
+            cache_shared: false,
             swap_bytes: 0,
         }
     }
@@ -355,6 +400,49 @@ mod tests {
         // Frontend scalars travel identically through both records.
         let gpu = GpuModel::xavier_volta();
         assert_eq!(gpu.frontend_cost(&w), gpu.frontend_work_cost(&a.frontend_work()));
+    }
+
+    #[test]
+    fn lumincore_charges_shared_lookup_contention() {
+        // A shared-scope workload must price strictly above its private
+        // twin (the paper's lock-contention concern, as a cost), and
+        // the exact and aggregate paths must charge it identically.
+        let mut lc = LuminCoreSim::paper_default();
+        let w = workload(64 * 64);
+        let mut shared = w.clone();
+        shared.cache_shared = true;
+        let private_t = lc.raster_cost(&w).time_s;
+        let shared_t = lc.raster_cost(&shared).time_s;
+        let contention = lc.shared_contention_s((64 * 64) as u64);
+        assert!(contention > 0.0);
+        assert!(
+            (shared_t - private_t - contention).abs() < 1e-15,
+            "shared {shared_t} vs private {private_t} + contention {contention}"
+        );
+        let agg = shared.aggregate();
+        assert!(agg.cache_shared, "aggregation must keep the scope flag");
+        let agg_t = lc.raster_cost_aggregate(&agg).time_s;
+        let agg_private_t = lc.raster_cost_aggregate(&w.aggregate()).time_s;
+        assert!((agg_t - agg_private_t - contention).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gpu_charges_shared_lookup_contention_too() {
+        // RC-on-GPU under shared scope pays extra lock serialization —
+        // the discount-eligible variants and the contention-charging
+        // variants must be the same set, or shared pricing would be
+        // strictly optimistic on GPU pools.
+        let mut gpu = GpuModel::xavier_volta();
+        let w = workload(64 * 64);
+        let mut shared = w.clone();
+        shared.cache_shared = true;
+        let expect = CostModel::shared_lookup_cost_s(&gpu, 64 * 64);
+        assert!(expect > 0.0);
+        let d = gpu.raster_cost(&shared).time_s - gpu.raster_cost(&w).time_s;
+        assert!((d - expect).abs() < 1e-15, "exact path: {d} vs {expect}");
+        let agg_d = gpu.raster_cost_aggregate(&shared.aggregate()).time_s
+            - gpu.raster_cost_aggregate(&w.aggregate()).time_s;
+        assert!((agg_d - expect).abs() < 1e-15, "aggregate path: {agg_d} vs {expect}");
     }
 
     #[test]

@@ -37,6 +37,12 @@ use crate::sim::energy::{EnergyBreakdown, EnergyModel};
 const PE_FILL_CYCLES: u64 = 2;
 /// Cycles for one LuminCache lookup (index + 4-way compare + select).
 const CACHE_LOOKUP_CYCLES: u64 = 2;
+/// Extra arbitration cycles a lookup pays when the LuminCache is
+/// pool-shared: concurrent sessions probing one snapshot contend for
+/// the bank read ports (the lock-contention hazard the paper ascribes
+/// to RC-on-GPU, priced here instead of ignored so the cost model can
+/// say when sharing stops paying).
+pub const SHARED_LOOKUP_CONTENTION_CYCLES: u64 = 1;
 
 /// LuminCore configuration (defaults = paper Sec. 5).
 #[derive(Debug, Clone, Copy)]
@@ -110,6 +116,14 @@ impl LuminCoreSim {
             dram: DramModel::lpddr3_1600_x4(),
             energy: EnergyModel::nm12(),
         }
+    }
+
+    /// Modeled port/lock-contention time for `lookups` shared-scope
+    /// cache probes ([`SHARED_LOOKUP_CONTENTION_CYCLES`] each). Zero
+    /// only when there are no lookups — a shared cache always pays
+    /// arbitration, warm or cold.
+    pub fn shared_contention_s(&self, lookups: u64) -> f64 {
+        (lookups * SHARED_LOOKUP_CONTENTION_CYCLES) as f64 / self.cfg.clock_hz
     }
 
     /// Simulate one tile; returns (cycles, useful_pe_cycles, issued_pe_cycles).
@@ -319,7 +333,10 @@ impl LuminCoreSim {
 /// Build per-tile workloads from functional rasterizer outputs.
 ///
 /// `consumed`/`significant` are per-pixel (row-major, width x height);
-/// `cache_outcome` is 0/1/2 per pixel (none/miss/hit).
+/// `cache_outcome` is 0/1/2/3 per pixel (none/miss/own-hit/shared-
+/// snapshot-hit — any nonzero value is a lookup; provenance does not
+/// change the per-lookup timing, only the frame-level contention term
+/// charged by the cost model for shared scope).
 pub fn tiles_from_stats(
     lists: &[usize],
     tiles_x: usize,

@@ -51,13 +51,18 @@ impl Runner {
         }
     }
 
+    /// Whether `name` passes the CLI filter — lets callers skip the
+    /// *work* behind a filtered-out measurement (e.g. the pool run a
+    /// metric is computed from), not just its registration.
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter.as_ref().is_none_or(|f| name.contains(f.as_str()))
+    }
+
     /// Time `f` repeatedly; `f` should perform one logical iteration and
     /// return a value (kept opaque to the optimizer via `black_box`).
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
-        if let Some(filt) = &self.filter {
-            if !name.contains(filt.as_str()) {
-                return;
-            }
+        if !self.enabled(name) {
+            return;
         }
         // Warmup.
         let start = Instant::now();
@@ -99,6 +104,27 @@ impl Runner {
             m.iters
         );
         self.results.push(m);
+    }
+
+    /// Record a non-timing scalar as a pseudo-measurement: `value`
+    /// lands in the ns fields of the JSON schema unchanged. Used for
+    /// machine-independent invariants the bench gate checks *within*
+    /// one run (e.g. the shared-vs-private cache hit rates in ppm).
+    /// Name such entries `metric/...` — the gate's cross-run throughput
+    /// diff skips that prefix, since these are not timings.
+    pub fn metric(&mut self, name: &str, value: u64) {
+        if !self.enabled(name) {
+            return;
+        }
+        let d = Duration::from_nanos(value);
+        println!("{name:<48} {value:>12} (metric value, not a timing)");
+        self.results.push(Measurement {
+            name: name.to_string(),
+            iters: 1,
+            min: d,
+            median: d,
+            mean: d,
+        });
     }
 
     /// Print the header row (call before the first bench).

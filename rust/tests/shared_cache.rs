@@ -1,0 +1,192 @@
+//! Shared cross-session radiance caching: the snapshot/merge cache
+//! topology must be bitwise deterministic (across thread counts,
+//! pipeline depths, and mid-run tier swaps), strictly improve hit rates
+//! on convergent-pose pools over private per-session caches, and make
+//! its lock/port-contention cost visible to admission pricing.
+
+use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, Tier};
+use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
+use lumina::coordinator::{AdmissionController, FrameReport, SessionPool};
+use lumina::sim::lumincore::LuminCoreSim;
+use lumina::util::par;
+
+/// Tests that flip the global thread count serialize on this lock so
+/// they cannot race each other inside one test binary.
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn shared_cfg() -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 4000;
+    // 32x32 = one 4x4-tile cache group of 1024 pixels: the pool's
+    // merged inserts stay well inside the 4096-entry bank, so the
+    // cross-session entries survive pLRU instead of thrashing (the
+    // capacity-pressure regime is exercised by fig24/benches, not
+    // here).
+    c.camera.width = 32;
+    c.camera.height = 32;
+    c.camera.frames = 6;
+    c.pool.epoch_frames = 2;
+    c.variant = HardwareVariant::Lumina;
+    c.pool.cache_scope = CacheScope::Shared;
+    c
+}
+
+/// A pool of `n` viewers converging on one camera path, staggered by
+/// `stagger` frames (viewer `i` trails viewer `i+1`): after each epoch
+/// merge the trailing viewers revisit poses the pool has already
+/// cached. Private per-session caches cannot serve these hits; the
+/// shared snapshot can — the workload the tentpole targets. Thin
+/// wrapper over the shared [`SessionPool::convergent`] builder so the
+/// benches and these tests measure one workload.
+fn convergent_pool(cfg: &LuminaConfig, n: usize, stagger: usize) -> SessionPool {
+    SessionPool::convergent(cfg.clone(), n, stagger).unwrap()
+}
+
+#[test]
+fn shared_pool_bitwise_deterministic_across_threads_depths_and_tier_swaps() {
+    let _lock = lock();
+    // The acceptance contract: a shared-scope pool of 3 convergent
+    // sessions is bitwise identical at 1/2/4 threads and at pipeline
+    // depth 1 vs 2, including a mid-run set_tier (demotion to the
+    // half-res grid and promotion back).
+    let run = |threads: usize, depth: usize| -> Vec<Vec<FrameReport>> {
+        par::set_num_threads(threads);
+        let mut cfg = shared_cfg();
+        cfg.pool.pipeline_depth = depth;
+        let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+        let mut frames: Vec<Vec<FrameReport>> = vec![Vec::new(); 3];
+        let mut collect = |frames: &mut Vec<Vec<FrameReport>>,
+                           epoch: Vec<Vec<FrameReport>>| {
+            for (i, f) in epoch.into_iter().enumerate() {
+                frames[i].extend(f);
+            }
+        };
+        collect(&mut frames, pool.run_epoch(2).unwrap());
+        // Mid-run tier swap: session 1 drops to the half-res tile grid
+        // (its delta is invalidated, the pool snapshots are untouched),
+        // serves an epoch there, and is promoted back.
+        pool.set_session_tier(1, Tier::Half).unwrap();
+        collect(&mut frames, pool.run_epoch(2).unwrap());
+        pool.set_session_tier(1, Tier::Full).unwrap();
+        collect(&mut frames, pool.run_epoch(2).unwrap());
+        par::set_num_threads(0);
+        frames
+    };
+    let reference = run(1, 1);
+    for (threads, depth) in [(2usize, 1usize), (4, 1), (1, 2), (2, 2), (4, 2)] {
+        let got = run(threads, depth);
+        assert_eq!(
+            reference, got,
+            "shared-scope pool diverged at {threads} threads, depth {depth}"
+        );
+    }
+    for s in &reference {
+        assert_eq!(s.len(), 6, "every session serves its whole trajectory");
+    }
+    let tiers: Vec<&str> = reference[1].iter().map(|f| f.tier).collect();
+    assert_eq!(tiers, vec!["full", "full", "half", "half", "full", "full"]);
+    // And the sharing is real: cross-session snapshot hits occurred.
+    let snapshot_hits: u64 =
+        reference.iter().flatten().map(|f| f.cache.snapshot_hits).sum();
+    assert!(snapshot_hits > 0, "convergent shared pool produced no cross-session hits");
+}
+
+#[test]
+fn shared_scope_strictly_beats_private_hit_rate_on_convergent_pool() {
+    let cfg = shared_cfg();
+    let mut private_cfg = cfg.clone();
+    private_cfg.pool.cache_scope = CacheScope::Private;
+    let stagger = cfg.pool.epoch_frames;
+
+    let shared = convergent_pool(&cfg, 3, stagger).run().unwrap();
+    let private = convergent_pool(&private_cfg, 3, stagger).run().unwrap();
+
+    let sh = shared.cache_stats();
+    let pr = private.cache_stats();
+    assert!(pr.lookups > 0 && sh.lookups > 0);
+    assert!(
+        sh.hit_rate() > pr.hit_rate(),
+        "shared scope must strictly beat private on convergent poses: \
+         shared {:.4} vs private {:.4}",
+        sh.hit_rate(),
+        pr.hit_rate()
+    );
+    assert!(sh.snapshot_hits > 0, "the extra hits must come from the snapshot");
+    assert_eq!(pr.snapshot_hits, 0, "private scope has no snapshot to hit");
+
+    // Hit rates are surfaced per session and merged.
+    assert!(shared.summary().contains("cache hit"), "summary: {}", shared.summary());
+    for r in &shared.sessions {
+        assert!(r.cache_hit_rate() >= 0.0);
+    }
+}
+
+#[test]
+fn contention_cost_reported_and_consumed_by_admission_pricing() {
+    // LuminCore reports a nonzero shared-lookup contention cost...
+    let sim = LuminCoreSim::paper_default();
+    assert!(sim.shared_contention_s((64 * 64) as u64) > 0.0);
+
+    // ...and a shared-scope measured workload prices strictly above its
+    // private twin through the same seams admission planning uses.
+    let cfg = shared_cfg();
+    let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+    let demands = pool.probe_demands().unwrap();
+    assert!(demands.iter().all(|d| d.cache_shared), "pool must mark shared demands");
+    let w = &demands[0].workload;
+    assert!(w.cache_shared, "workload must carry scope provenance");
+    let mut private_twin = w.clone();
+    private_twin.cache_shared = false;
+    let shared_price = price_workload(w, HardwareVariant::Lumina);
+    let private_price = price_workload(&private_twin, HardwareVariant::Lumina);
+    assert!(
+        shared_price > private_price,
+        "contention must surface in the admission price: {shared_price} vs {private_price}"
+    );
+    // The scope flag survives the planner's normalized tier estimates,
+    // so every ladder rung keeps paying the structural contention.
+    let est = w.tier_estimate(Tier::Full, Tier::Reduced, 0.5);
+    assert!(est.cache_shared, "normalization must keep the scope flag");
+    assert!(est.cache_outcomes.is_none(), "stats are still stripped");
+}
+
+#[test]
+fn shared_pool_serves_under_admission_control() {
+    let _lock = lock();
+    // End to end through SessionPool::serve: epoch merges interleave
+    // with re-planning, and the run stays thread-count deterministic.
+    let cfg = shared_cfg();
+    let cost = {
+        let mut probe = SessionPool::new(cfg.clone(), 1).unwrap();
+        let demands = probe.probe_demands().unwrap();
+        price_workload(&demands[0].workload, cfg.variant)
+    };
+    // Generous target: everyone stays full; the point here is the
+    // serve-path merge plumbing, not demotion.
+    let target = (1.0 - ADMISSION_HEADROOM) / (6.0 * cost);
+    let run = |threads: usize| {
+        par::set_num_threads(threads);
+        let ctrl =
+            AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+                .unwrap();
+        let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+        let r = pool.serve(&ctrl).unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(
+        serial.sessions, parallel.sessions,
+        "thread count changed a shared-scope admission-controlled run"
+    );
+    assert_eq!(serial.total_frames(), 18);
+    assert!(
+        serial.cache_stats().snapshot_hits > 0,
+        "served epochs must merge and cross-hit"
+    );
+}
