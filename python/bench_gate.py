@@ -29,11 +29,18 @@ check is machine-independent (both numbers come from the same run).
 Entries named `metric/...` are not timings: the bench Runner stores a
 scalar (e.g. a hit rate in ppm) in the ns fields.  They are excluded
 from the cross-run throughput diff and instead feed same-run
-invariants.  Currently: whenever both `metric/hitrate_shared_ppm` and
-`metric/hitrate_private_ppm` exist in the fresh file, the shared-scope
-(snapshot/merge) radiance cache must reach at least the private-scope
-aggregate hit rate on the convergent-pose pool — cross-session sharing
-never loses hits, it can only add them.
+invariants.  Currently:
+
+* whenever both `metric/hitrate_shared_ppm` and
+  `metric/hitrate_private_ppm` exist in the fresh file, the
+  shared-scope (snapshot/merge) radiance cache must reach at least the
+  private-scope aggregate hit rate on the convergent-pose pool —
+  cross-session sharing never loses hits, it can only add them;
+* whenever both `metric/leader_sorts_clustered` and
+  `metric/leader_sorts_private` exist, the pool-clustered S² sort scope
+  must perform at most as many speculative sorts as private
+  per-session windows on the convergent-pose pool — clustering
+  deduplicates sorts, it never adds them.
 """
 
 import argparse
@@ -125,6 +132,23 @@ def gate(baseline_path, fresh_path, tolerance):
             failures.append(
                 f"shared-scope hit rate {shared_rate:.4f} fell below "
                 f"private-scope {private_rate:.4f} — cross-session cache "
+                f"sharing regressed")
+
+    # Same-run sort-scope invariant: pool-clustered S² must not sort
+    # more often than private per-session windows on the convergent
+    # pool (the whole point of clustering is deduplicating sorts).
+    sc = fresh_by.get("metric/leader_sorts_clustered")
+    sp = fresh_by.get("metric/leader_sorts_private")
+    if sc is not None and sp is not None:
+        clustered_sorts = sc["median_ns"]
+        private_sorts = sp["median_ns"]
+        verdict = "ok" if clustered_sorts <= private_sorts else "REGRESSION"
+        print(f"  sort scope sorts: clustered {clustered_sorts} vs "
+              f"private {private_sorts}  {verdict}")
+        if clustered_sorts > private_sorts:
+            failures.append(
+                f"clustered sort scope ran {clustered_sorts} speculative "
+                f"sorts vs {private_sorts} private — pool-clustered S² "
                 f"sharing regressed")
 
     if failures:

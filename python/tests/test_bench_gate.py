@@ -1,0 +1,105 @@
+"""Tests for the CI bench-regression gate (`python/bench_gate.py`).
+
+The tests themselves are pure-stdlib (no jax), but collecting this file
+loads `python/tests/conftest.py`, which imports numpy — so running it
+needs `pytest` and `numpy` installed (the CI bench job installs both),
+just not the jax stack the sibling test modules require. Each test
+writes baseline/fresh JSON fixtures to a tmp dir and calls `gate()` /
+`update()` directly (they return process exit codes).
+"""
+
+import json
+
+import bench_gate
+
+
+def entry(name, median_ns, iters=3):
+    return {
+        "name": name,
+        "iters": iters,
+        "min_ns": median_ns,
+        "median_ns": median_ns,
+        "mean_ns": median_ns,
+    }
+
+
+def write(path, results, label="sessions"):
+    path.write_text(json.dumps({"label": label, "results": results}))
+    return str(path)
+
+
+def test_empty_baseline_bootstrap_passes(tmp_path):
+    base = write(tmp_path / "base.json", [])
+    fresh = write(tmp_path / "fresh.json", [entry("pool/1", 1000)])
+    assert bench_gate.gate(base, fresh, 0.15) == 0
+
+
+def test_regression_beyond_tolerance_fails(tmp_path):
+    base = write(tmp_path / "base.json", [entry("pool/1", 1000)])
+    ok = write(tmp_path / "ok.json", [entry("pool/1", 1100)])
+    bad = write(tmp_path / "bad.json", [entry("pool/1", 2000)])
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    assert bench_gate.gate(base, bad, 0.15) == 1
+
+
+def test_metric_rows_excluded_from_timing_diff(tmp_path):
+    # A metric present in both files with a wild "timing" change must
+    # not trip the throughput gate — metrics are not timings.
+    base = write(tmp_path / "base.json",
+                 [entry("pool/1", 1000), entry("metric/hitrate_shared_ppm", 1)])
+    fresh = write(tmp_path / "fresh.json",
+                  [entry("pool/1", 1000),
+                   entry("metric/hitrate_shared_ppm", 1_000_000)])
+    assert bench_gate.gate(base, fresh, 0.15) == 0
+
+
+def test_pipelining_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [])
+    bad = write(tmp_path / "bad.json",
+                [entry("pool_depth1/2x", 1000), entry("pool_depth2/2x", 2000)])
+    ok = write(tmp_path / "ok.json",
+               [entry("pool_depth1/2x", 1000), entry("pool_depth2/2x", 900)])
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, ok, 0.15) == 0
+
+
+def test_cache_hitrate_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [])
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/hitrate_shared_ppm", 100_000),
+                 entry("metric/hitrate_private_ppm", 200_000)])
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/hitrate_shared_ppm", 200_000),
+                entry("metric/hitrate_private_ppm", 100_000)])
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, ok, 0.15) == 0
+
+
+def test_clustered_sort_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [])
+    # Clustered must sort at most as often as private.
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/leader_sorts_clustered", 9),
+                 entry("metric/leader_sorts_private", 6)])
+    eq = write(tmp_path / "eq.json",
+               [entry("metric/leader_sorts_clustered", 6),
+                entry("metric/leader_sorts_private", 6)])
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/leader_sorts_clustered", 2),
+                entry("metric/leader_sorts_private", 6)])
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, eq, 0.15) == 0
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    # One metric alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/leader_sorts_clustered", 9)])
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
+def test_update_promotes_fresh_file(tmp_path):
+    fresh = write(tmp_path / "fresh.json", [entry("pool/1", 1000)])
+    base = tmp_path / "base.json"
+    write(base, [])
+    assert bench_gate.update(str(base), fresh) == 0
+    promoted = json.loads(base.read_text())
+    assert promoted["results"][0]["name"] == "pool/1"

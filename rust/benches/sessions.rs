@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, Tier};
+use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, SortScope, Tier};
 use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
 use lumina::coordinator::{AdmissionController, SessionPool};
 use lumina::scene::synth::synth_scene;
@@ -99,6 +99,55 @@ fn main() {
                 .unwrap();
             r.metric(&metric_name, (report.cache_hit_rate() * 1e6).round() as u64);
         }
+    }
+
+    // Pool-clustered S² sorting: convergent viewers share one leader
+    // sort per pose cluster per epoch vs private per-session windows.
+    // Timing rows measure the pool end to end; the metric rows export
+    // each scope's speculative-sort count for the bench gate's
+    // machine-independent clustered <= private invariant. The divergent
+    // pool (distinct camera seeds, tight radius) is the degenerate
+    // case: singleton clusters, one sort per session per epoch.
+    let mut scfg = cfg.clone();
+    scfg.variant = HardwareVariant::S2Gpu;
+    scfg.camera.width = 32;
+    scfg.camera.height = 32;
+    scfg.pool.epoch_frames = 2;
+    scfg.s2.sharing_window = 2;
+    scfg.pool.cluster_radius = 3.2;
+    for scope in [SortScope::Private, SortScope::Clustered] {
+        let mut run_cfg = scfg.clone();
+        run_cfg.pool.sort_scope = scope;
+        let stagger = run_cfg.pool.epoch_frames;
+        let bench_cfg = run_cfg.clone();
+        let bench_scene = scene.clone();
+        r.bench(&format!("sort_scope_{}/3x4frames_convergent", scope.label()), move || {
+            SessionPool::convergent_with_scene(bench_cfg.clone(), bench_scene.clone(), 3, stagger)
+                .unwrap()
+                .run()
+                .unwrap()
+        });
+        let metric_name = format!("metric/leader_sorts_{}", scope.label());
+        if r.enabled(&metric_name) {
+            let report =
+                SessionPool::convergent_with_scene(run_cfg, scene.clone(), 3, stagger)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+            r.metric(&metric_name, report.sorted_frames() as u64);
+        }
+    }
+    {
+        let mut div_cfg = scfg.clone();
+        div_cfg.pool.sort_scope = SortScope::Clustered;
+        div_cfg.pool.cluster_radius = 0.01;
+        let scene = scene.clone();
+        r.bench("sort_scope_clustered/3x4frames_divergent", move || {
+            SessionPool::with_scene(div_cfg.clone(), scene.clone(), 3)
+                .unwrap()
+                .run()
+                .unwrap()
+        });
     }
 
     // Async frame pipelining: depth 2 overlaps frame N+1's frontend with

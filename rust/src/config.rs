@@ -219,6 +219,39 @@ impl CacheScope {
     }
 }
 
+/// Speculative-sort ownership across a pool's sessions (the
+/// sort-topology seam of `lumina::s2`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SortScope {
+    /// Each S² session runs its own windowed speculative sort — the
+    /// pre-sharing behavior, bit-for-bit.
+    Private,
+    /// Pool-clustered sorting: at every epoch boundary the pool groups
+    /// sessions by sort geometry and predicted-pose proximity
+    /// (`pool.cluster_radius`), computes one speculative sort per
+    /// cluster (leader = lowest session index), and every member
+    /// renders the epoch against the frozen shared sort while still
+    /// refreshing colors/geometry at its own pose.
+    Clustered,
+}
+
+impl SortScope {
+    pub fn label(self) -> &'static str {
+        match self {
+            SortScope::Private => "private",
+            SortScope::Clustered => "clustered",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "private" => SortScope::Private,
+            "clustered" => SortScope::Clustered,
+            other => bail!("unknown sort scope: {other} (expected private|clustered)"),
+        })
+    }
+}
+
 /// How the admission controller prices tier-ladder rungs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PricingMode {
@@ -275,6 +308,16 @@ pub struct PoolConfig {
     /// epochs of `epoch_frames` even outside admission control, since
     /// the epoch boundary is where deltas merge.
     pub cache_scope: CacheScope,
+    /// Speculative-sort ownership: `private` (per-session windowed S²,
+    /// the pre-sharing behavior) or `clustered` (one pool-wide sort per
+    /// pose cluster per epoch; only meaningful on S² variants).
+    /// Clustered pools run in epochs of `epoch_frames` even outside
+    /// admission control — the boundary is where clusters re-form and
+    /// sorts re-publish.
+    pub sort_scope: SortScope,
+    /// Maximum angular distance (radians) between two sessions'
+    /// predicted sort poses for them to share one cluster sort.
+    pub cluster_radius: f64,
 }
 
 impl Default for PoolConfig {
@@ -287,6 +330,8 @@ impl Default for PoolConfig {
             pipeline_depth: 1,
             pricing: PricingMode::Exact,
             cache_scope: CacheScope::Private,
+            sort_scope: SortScope::Private,
+            cluster_radius: 0.35,
         }
     }
 }
@@ -531,6 +576,17 @@ impl LuminaConfig {
             cfg.pool.cache_scope =
                 CacheScope::parse(v.as_str().context("pool.cache_scope must be a string")?)?;
         }
+        if let Some(v) = root.get_path("pool.sort_scope") {
+            cfg.pool.sort_scope =
+                SortScope::parse(v.as_str().context("pool.sort_scope must be a string")?)?;
+        }
+        if let Some(v) = root.get_path("pool.cluster_radius") {
+            let r = v.as_float().context("pool.cluster_radius must be a number")?;
+            if !(r > 0.0) || !r.is_finite() {
+                bail!("pool.cluster_radius must be finite and > 0, got {r}");
+            }
+            cfg.pool.cluster_radius = r;
+        }
         Ok(cfg)
     }
 
@@ -577,6 +633,12 @@ impl LuminaConfig {
             "pool.cache_scope",
             Value::String(self.pool.cache_scope.label().into()),
         );
+        set(
+            &mut root,
+            "pool.sort_scope",
+            Value::String(self.pool.sort_scope.label().into()),
+        );
+        set(&mut root, "pool.cluster_radius", Value::Float(self.pool.cluster_radius));
         minitoml::serialize(&root)
     }
 
@@ -747,6 +809,26 @@ mod tests {
         assert!(c.apply_override("pool.cache_scope=bogus").is_err());
         for s in [CacheScope::Private, CacheScope::Shared] {
             assert_eq!(CacheScope::parse(s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn sort_scope_and_cluster_radius_roundtrip_and_validate() {
+        let mut c = LuminaConfig::quick_test();
+        assert_eq!(c.pool.sort_scope, SortScope::Private, "private by default");
+        assert_eq!(c.pool.cluster_radius, 0.35);
+        c.apply_override("pool.sort_scope=clustered").unwrap();
+        assert_eq!(c.pool.sort_scope, SortScope::Clustered);
+        c.apply_override("pool.cluster_radius=1.2").unwrap();
+        assert_eq!(c.pool.cluster_radius, 1.2);
+        let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.pool.sort_scope, SortScope::Clustered);
+        assert_eq!(back.pool.cluster_radius, 1.2);
+        assert!(c.apply_override("pool.sort_scope=bogus").is_err());
+        assert!(c.apply_override("pool.cluster_radius=0").is_err());
+        assert!(c.apply_override("pool.cluster_radius=-1").is_err());
+        for s in [SortScope::Private, SortScope::Clustered] {
+            assert_eq!(SortScope::parse(s.label()).unwrap(), s);
         }
     }
 

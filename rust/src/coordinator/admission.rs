@@ -36,6 +36,17 @@
 //! future hits come from the pool's merged inserts, not its own
 //! history, so per-session rates would be the wrong signal.
 //!
+//! Pool-clustered S² pools amortize the *frontend* the same way: a
+//! cluster runs one speculative sort per epoch, so every clustered
+//! session's sorting rung carries that sort amortized over the epoch's
+//! frames (`sorted_front_s`, estimated from the frozen tile lists when
+//! the measured frame was a reuse frame — which in steady state it
+//! almost always is), while a multi-member cluster's followers are
+//! priced at their per-frame refresh plus a broadcast/contention term —
+//! never below the refresh floor ([`StagePrices::follower_front_s`]),
+//! the same discipline that keeps the raster discount off the
+//! structural floor.
+//!
 //! Everything here is deterministic — float arithmetic over
 //! deterministic workloads, no clocks, no randomness — so planned tier
 //! sequences are bitwise thread-count-invariant like the rest of the
@@ -45,7 +56,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::{HardwareVariant, LuminaConfig, PricingMode, Tier};
 use crate::coordinator::cost_models_for;
-use crate::pipeline::stage::{AggregateWorkload, FrameWorkload};
+use crate::pipeline::stage::{AggregateWorkload, FrameWorkload, FrontendWork};
 
 /// Fraction of the frame-time budget held back from the planner to
 /// absorb tier-estimate error (the estimates are conservative, but the
@@ -90,6 +101,22 @@ pub struct SessionDemand {
     /// merged inserts, not its own history. Consumed only when
     /// `cache_shared` ([`SHARED_HIT_RASTER_SAVINGS`]).
     pub pool_hit_rate: f64,
+    /// Whether this session runs the pool-clustered sort topology —
+    /// its cluster (a singleton included) sorts once per epoch, so its
+    /// sorting rungs price the per-epoch sort amortized over
+    /// `epoch_frames` even when the measured frame was a reuse frame.
+    pub sort_clustered: bool,
+    /// Sessions sharing this session's speculative sort (itself
+    /// included); 1 outside the pool-clustered S² sort scope. With
+    /// `sort_leader`, the frontend amortization seam: a cluster pays
+    /// its leader's sort once, and followers pay only their per-frame
+    /// refresh plus a broadcast/contention term — never below the
+    /// refresh floor ([`StagePrices::follower_front_s`]).
+    pub sort_sharers: usize,
+    /// Whether this session pays for its own sorts (private topology
+    /// or cluster leader). Followers (`sort_sharers >= 2` and not
+    /// leader) get the amortized frontend price.
+    pub sort_leader: bool,
 }
 
 impl SessionDemand {
@@ -144,12 +171,31 @@ pub(crate) fn combine_stage_times(front_s: f64, raster_s: f64, depth: usize) -> 
 
 /// One workload's stage prices, split the way the planner needs them:
 /// frontend, raster (fixed overhead and any structural contention
-/// included), and the *structural floor* — the part of the raster price
-/// cache hits cannot save (fixed per-frame overhead plus shared-lookup
-/// contention, which is paid per lookup whether it hits or misses).
+/// included), and two floors the discounts must respect — the raster's
+/// *structural floor* (fixed per-frame overhead plus shared-lookup
+/// contention, paid per lookup whether it hits or misses) and the
+/// frontend's *refresh floor* (the per-frame S² color/geometry refresh,
+/// which every cluster member runs at its own pose no matter who
+/// sorted). `broadcast_s` is the frontend's shared-sort receive term
+/// for clustered followers.
 #[derive(Debug, Clone, Copy)]
 pub struct StagePrices {
     pub front_s: f64,
+    /// Frontend price with the sort stripped (refresh only) — the part
+    /// of the frontend no amortization can save.
+    pub refresh_floor_s: f64,
+    /// Frontend price *with* a sort — `front_s` when the measured frame
+    /// sorted; estimated from the frozen tile-list total otherwise
+    /// (steady-state S² frames reuse a sort, so their measured record
+    /// carries no sort work, but a session that leaves its cluster must
+    /// run one). The planner prices clustered sessions' tier-change
+    /// rungs with this, so "demote and exit the cluster" can never look
+    /// cheaper than the sort it implies.
+    pub sorted_front_s: f64,
+    /// Broadcast/arbitration cost of receiving the cluster's frozen
+    /// tile lists instead of sorting them
+    /// ([`crate::sim::cost::FrontendCostModel::shared_sort_broadcast_s`]).
+    pub broadcast_s: f64,
     pub raster_s: f64,
     pub structural_s: f64,
 }
@@ -166,35 +212,87 @@ impl StagePrices {
             self.structural_s + (self.raster_s - self.structural_s) * hit_discount
         }
     }
+
+    /// Frontend price for a pool-clustered S² *follower*: the leader's
+    /// sort is paid once per cluster (on the leader's own demand), so
+    /// a follower pays only its per-frame refresh plus the
+    /// broadcast/contention term. `broadcast_s >= 0`, so this can never
+    /// fall below the refresh floor — the same never-discount-the-floor
+    /// discipline as the raster's [`Self::discounted_raster_s`].
+    pub fn follower_front_s(&self) -> f64 {
+        self.refresh_floor_s + self.broadcast_s
+    }
+}
+
+/// The frontend prices shared by both pricing paths, derived from the
+/// frontend scalars + frozen tile-list total.
+fn frontend_prices(
+    frontend_cost: &dyn crate::sim::cost::FrontendCostModel,
+    fw: FrontendWork,
+    tile_entries: usize,
+) -> (f64, f64, f64, f64) {
+    let (front_s, _) = frontend_cost.frontend_work_cost(&fw);
+    let (refresh_floor_s, _) = frontend_cost
+        .frontend_work_cost(&FrontendWork { sorted: false, sort_entries: 0, ..fw });
+    // A frame that reused a sort measured none: estimate the sort a
+    // private re-sort would run from the frozen tile-list total it
+    // rendered against.
+    let sorted_front_s = if fw.sorted {
+        front_s
+    } else {
+        let sorted = FrontendWork { sorted: true, sort_entries: tile_entries, ..fw };
+        frontend_cost.frontend_work_cost(&sorted).0
+    };
+    let broadcast_s = frontend_cost.shared_sort_broadcast_s(tile_entries);
+    (front_s, refresh_floor_s, sorted_front_s, broadcast_s)
 }
 
 /// Price one workload's stages separately — the split the planner needs
 /// so it can discount the hit-savable raster work by the pool-wide
-/// observed hit rate without touching the frontend (hits save
-/// compositing, not sorting) or the structural floor.
+/// observed hit rate, and amortize a clustered follower's sort, without
+/// ever touching the structural and refresh floors.
 pub fn price_stages(w: &FrameWorkload, variant: HardwareVariant) -> StagePrices {
     let (frontend_cost, mut raster_cost) = cost_models_for(variant);
-    let (front_s, _front_j) = frontend_cost.frontend_cost(w);
+    let (front_s, refresh_floor_s, sorted_front_s, broadcast_s) = frontend_prices(
+        frontend_cost.as_ref(),
+        w.frontend_work(),
+        w.tile_list_lens.iter().sum::<usize>(),
+    );
     let raster = raster_cost.raster_cost(w);
-    let overhead = raster_cost.overhead_s();
-    let structural_s = overhead
-        + if w.cache_shared { raster_cost.shared_lookup_cost_s(w.pixels()) } else { 0.0 };
-    StagePrices { front_s, raster_s: raster.time_s + overhead, structural_s }
+    let shared_lookup_s =
+        if w.cache_shared { raster_cost.shared_lookup_cost_s(w.pixels()) } else { 0.0 };
+    StagePrices {
+        front_s,
+        refresh_floor_s,
+        sorted_front_s,
+        broadcast_s,
+        raster_s: raster.time_s + raster_cost.overhead_s(),
+        structural_s: raster_cost.overhead_s() + shared_lookup_s,
+    }
 }
 
 /// [`price_stages`] over the O(tiles) aggregate record.
 pub fn price_aggregate_stages(a: &AggregateWorkload, variant: HardwareVariant) -> StagePrices {
     let (frontend_cost, mut raster_cost) = cost_models_for(variant);
-    let (front_s, _front_j) = frontend_cost.frontend_work_cost(&a.frontend_work());
+    let (front_s, refresh_floor_s, sorted_front_s, broadcast_s) = frontend_prices(
+        frontend_cost.as_ref(),
+        a.frontend_work(),
+        a.tiles.iter().map(|t| t.list_len).sum::<usize>(),
+    );
     let raster = raster_cost.raster_cost_aggregate(a);
-    let overhead = raster_cost.overhead_s();
-    let structural_s = overhead
-        + if a.cache_shared {
-            raster_cost.shared_lookup_cost_s(a.width * a.height)
-        } else {
-            0.0
-        };
-    StagePrices { front_s, raster_s: raster.time_s + overhead, structural_s }
+    let shared_lookup_s = if a.cache_shared {
+        raster_cost.shared_lookup_cost_s(a.width * a.height)
+    } else {
+        0.0
+    };
+    StagePrices {
+        front_s,
+        refresh_floor_s,
+        sorted_front_s,
+        broadcast_s,
+        raster_s: raster.time_s + raster_cost.overhead_s(),
+        structural_s: raster_cost.overhead_s() + shared_lookup_s,
+    }
 }
 
 /// [`price_workload`] under a `depth`-slot frame pipeline: per-frame
@@ -233,6 +331,10 @@ pub struct AdmissionController {
     pipeline_depth: usize,
     /// Exact per-pixel rung pricing vs the O(tiles) aggregate path.
     pricing: PricingMode,
+    /// Frames per pool epoch — the amortization window for clustered
+    /// sessions' per-epoch sorts. Defaults to 1 (the whole sort charged
+    /// per frame, the conservative end).
+    epoch_frames: usize,
 }
 
 impl AdmissionController {
@@ -255,6 +357,7 @@ impl AdmissionController {
             reduced_fraction,
             pipeline_depth: 1,
             pricing: PricingMode::Exact,
+            epoch_frames: 1,
         })
     }
 
@@ -271,8 +374,16 @@ impl AdmissionController {
         self
     }
 
+    /// Amortize clustered sessions' per-epoch sorts over `epoch_frames`
+    /// frames (clamped to >= 1).
+    pub fn with_epoch_frames(mut self, epoch_frames: usize) -> Self {
+        self.epoch_frames = epoch_frames.max(1);
+        self
+    }
+
     /// Build from the `[pool]` config block (`pool.target_fps` must be
-    /// set); picks up `pool.pipeline_depth` and `pool.pricing`.
+    /// set); picks up `pool.pipeline_depth`, `pool.pricing`, and
+    /// `pool.epoch_frames`.
     pub fn from_config(cfg: &LuminaConfig) -> Result<Self> {
         Ok(Self::new(
             cfg.pool.target_fps,
@@ -280,7 +391,8 @@ impl AdmissionController {
             cfg.pool.reduced_fraction,
         )?
         .with_pipeline_depth(cfg.pool.pipeline_depth)
-        .with_pricing(cfg.pool.pricing))
+        .with_pricing(cfg.pool.pricing)
+        .with_epoch_frames(cfg.pool.epoch_frames))
     }
 
     pub fn target_fps(&self) -> f64 {
@@ -297,6 +409,10 @@ impl AdmissionController {
 
     pub fn pricing(&self) -> PricingMode {
         self.pricing
+    }
+
+    pub fn epoch_frames(&self) -> usize {
+        self.epoch_frames
     }
 
     /// Plan a tier per session. Starts everyone at the ladder's best
@@ -357,8 +473,37 @@ impl AdmissionController {
                     // geometry-changing rungs are priced cold.
                     let same_geometry = (t == Tier::Half) == (d.tier == Tier::Half);
                     let hit_discount = if same_geometry { base_discount } else { 1.0 };
+                    // Clustered-S² frontend amortization. On the rung
+                    // that keeps a follower in its (multi-member)
+                    // cluster, it pays refresh + broadcast instead of
+                    // the sort. Every other clustered rung — the
+                    // leader's, a singleton cluster's, or any tier
+                    // change (which alters the sort geometry and drops
+                    // the session to a singleton until the next
+                    // re-cluster) — runs one sort per epoch, priced as
+                    // the epoch-amortized `sorted_front_s` over the
+                    // refresh floor. The measured frame of a clustered
+                    // session is almost always a reuse frame carrying
+                    // no sort work of its own; pricing it as measured
+                    // would omit every cluster's sort from every plan.
+                    let front_s = if d.sort_clustered {
+                        let amortized = p.refresh_floor_s
+                            + (p.sorted_front_s - p.refresh_floor_s)
+                                / self.epoch_frames as f64;
+                        if t == d.tier && d.sort_sharers >= 2 && !d.sort_leader {
+                            // Floored at the measured price: a follower
+                            // whose kill switch is tripping sorts
+                            // privately every frame, and that measured
+                            // cost must not be amortized away.
+                            p.front_s.max(p.follower_front_s())
+                        } else {
+                            p.front_s.max(amortized)
+                        }
+                    } else {
+                        p.front_s
+                    };
                     let price = combine_stage_times(
-                        p.front_s,
+                        front_s,
                         p.discounted_raster_s(hit_discount),
                         self.pipeline_depth,
                     );
@@ -467,7 +612,20 @@ mod tests {
             priority,
             cache_shared: false,
             pool_hit_rate: 0.0,
+            sort_clustered: false,
+            sort_sharers: 1,
+            sort_leader: true,
         }
+    }
+
+    /// A demand shaped like an S² session's sorted frame: the frontend
+    /// carries projection + sorting + a per-frame refresh, so the
+    /// clustered amortization has something to strip and a floor to
+    /// respect.
+    fn s2_demand(priority: f64) -> SessionDemand {
+        let mut d = demand(128 * 128, priority);
+        d.workload.refreshed_gaussians = 8_000;
+        d
     }
 
     fn ladder() -> Vec<Tier> {
@@ -656,6 +814,151 @@ mod tests {
             half_ctrl.plan(&mk(0.9)).is_err(),
             "a half rung from full-tier demands must price cold"
         );
+    }
+
+    #[test]
+    fn follower_front_price_sits_between_refresh_floor_and_full_frontend() {
+        let d = s2_demand(0.0);
+        let p = price_stages(&d.workload, d.variant);
+        assert!(p.refresh_floor_s > 0.0, "refresh work must price above zero");
+        assert!(p.broadcast_s > 0.0, "sharing a sort is not free");
+        assert!(
+            p.follower_front_s() >= p.refresh_floor_s,
+            "amortization must never discount below the refresh floor"
+        );
+        assert!(
+            p.follower_front_s() < p.front_s,
+            "a follower must price below a sorting session: follower {} vs full {}",
+            p.follower_front_s(),
+            p.front_s
+        );
+        // A sorted workload's as-if-sorted price is its real price.
+        assert_eq!(p.sorted_front_s, p.front_s);
+        // Stripping the sort from an unsorted workload changes nothing:
+        // the floor equals the full frontend price.
+        let mut unsorted = d.workload.clone();
+        unsorted.sorted = false;
+        unsorted.sort_entries = 0;
+        let pu = price_stages(&unsorted, d.variant);
+        assert_eq!(pu.front_s, pu.refresh_floor_s);
+        // Aggregate path carries the same floors.
+        let pa = price_aggregate_stages(&d.workload.aggregate(), d.variant);
+        assert!((pa.refresh_floor_s - p.refresh_floor_s).abs() < 1e-15);
+        assert!((pa.broadcast_s - p.broadcast_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tier_change_rungs_price_the_sort_a_cluster_exit_implies() {
+        // Steady state: a clustered session's measured frame *reused*
+        // the cluster sort, so its record carries no sort work. The
+        // as-if-sorted estimate (from the frozen tile-list total) must
+        // still price the sort a cluster exit implies — above both the
+        // refresh floor and the follower's amortized price — or
+        // demotion would look frontend-free.
+        let mut d = s2_demand(0.0);
+        d.sort_clustered = true;
+        d.sort_sharers = 3;
+        d.sort_leader = false;
+        d.workload.sorted = false;
+        d.workload.sort_entries = 0;
+        let p = price_stages(&d.workload, d.variant);
+        assert_eq!(p.front_s, p.refresh_floor_s, "reuse frames measure no sort");
+        assert!(
+            p.sorted_front_s > p.follower_front_s(),
+            "a private re-sort must price above the amortized follower frontend: \
+             sorted {} vs follower {}",
+            p.sorted_front_s,
+            p.follower_front_s()
+        );
+        let pa = price_aggregate_stages(&d.workload.aggregate(), d.variant);
+        assert!((pa.sorted_front_s - p.sorted_front_s).abs() <= 1e-12 * p.sorted_front_s);
+    }
+
+    #[test]
+    fn steady_state_cluster_pricing_charges_the_per_epoch_sort() {
+        // Steady state: every clustered demand is an unsorted reuse
+        // frame. A clustered session's sorting rung (here a singleton
+        // cluster's) must still carry the per-epoch sort, amortized
+        // over the epoch — pricing the measured (refresh-only) frame
+        // would omit every cluster's sort from every plan and
+        // over-admit.
+        let mk = |clustered: bool| {
+            let mut d = s2_demand(1.0);
+            d.workload.sorted = false;
+            d.workload.sort_entries = 0;
+            d.sort_clustered = clustered;
+            d.sort_sharers = 1;
+            d.sort_leader = true;
+            d
+        };
+        let d = mk(true);
+        let p = price_stages(&d.workload, d.variant);
+        let epoch = 4usize;
+        let amortized =
+            p.refresh_floor_s + (p.sorted_front_s - p.refresh_floor_s) / epoch as f64;
+        assert!(amortized > p.refresh_floor_s);
+        // Budget between the refresh-only and amortized-sort totals.
+        let budget = p.raster_s + (p.refresh_floor_s + amortized) / 2.0;
+        let target = (1.0 - ADMISSION_HEADROOM) / budget;
+        let ctrl = AdmissionController::new(target, vec![Tier::Full], 0.5)
+            .unwrap()
+            .with_epoch_frames(epoch);
+        assert_eq!(ctrl.epoch_frames(), epoch);
+        assert!(ctrl.plan(&[mk(true)]).is_err(), "the per-epoch sort must be priced");
+        // A private-scope S² session still prices its measured frame
+        // (steady-state amortization for private windows is a recorded
+        // ROADMAP follow-on, unchanged here).
+        assert!(ctrl.plan(&[mk(false)]).is_ok());
+    }
+
+    #[test]
+    fn cluster_amortization_prices_followers_below_singleton_sorters() {
+        // Steady state (unsorted reuse frames): one leader sort per
+        // epoch serves the whole cluster, so a 3-member cluster must
+        // fit a budget that three singleton clusters — each paying its
+        // own per-epoch sort — miss.
+        let epoch = 2usize;
+        let mk = |sharers: usize, leader: bool, priority: f64| {
+            let mut d = s2_demand(priority);
+            d.workload.sorted = false;
+            d.workload.sort_entries = 0;
+            d.sort_clustered = true;
+            d.sort_sharers = sharers;
+            d.sort_leader = leader;
+            d
+        };
+        let cluster = || vec![mk(3, true, 3.0), mk(3, false, 2.0), mk(3, false, 1.0)];
+        let singletons = || vec![mk(1, true, 3.0), mk(1, true, 2.0), mk(1, true, 1.0)];
+        let d = mk(3, false, 0.0);
+        let p = price_stages(&d.workload, d.variant);
+        let amortized =
+            p.refresh_floor_s + (p.sorted_front_s - p.refresh_floor_s) / epoch as f64;
+        let leader_total = amortized + p.raster_s;
+        let follower_total = p.follower_front_s() + p.raster_s;
+        assert!(follower_total < leader_total, "amortization must bite");
+        // Budget: one sorter + two followers fit; three sorters miss.
+        let budget = 2.0 * leader_total + follower_total;
+        let target = (1.0 - ADMISSION_HEADROOM) / budget;
+        let ctrl = AdmissionController::new(target, vec![Tier::Full], 0.5)
+            .unwrap()
+            .with_epoch_frames(epoch);
+        assert!(ctrl.plan(&singletons()).is_err(), "three solo sorters must refuse");
+        let plan = ctrl.plan(&cluster()).unwrap();
+        assert_eq!(plan.tiers, vec![Tier::Full; 3], "one shared sort fits all three");
+
+        // A follower that is measurably sorting every frame (a tripping
+        // kill switch) is floored at its measured price: the target
+        // that admitted the healthy cluster refuses when all three
+        // members measure full sorts.
+        let killed: Vec<SessionDemand> = cluster()
+            .into_iter()
+            .map(|mut d| {
+                d.workload.sorted = true;
+                d.workload.sort_entries = 50_000;
+                d
+            })
+            .collect();
+        assert!(ctrl.plan(&killed).is_err(), "measured sorts must not amortize away");
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::lumina::ds2::{half_intrinsics, Ds2Raster};
 use crate::lumina::rc::{
     CacheDelta, CacheGeometry, CacheHub, CacheSnapshot, CachedRaster, GroupedRadianceCache,
 };
-use crate::lumina::s2::S2Scheduler;
+use crate::lumina::s2::{speculative_sort, S2Scheduler, SharedSort, SortGeometry, SortView};
 use crate::pipeline::image::Image;
 use crate::pipeline::project::project;
 use crate::pipeline::raster::{rasterize, RasterConfig, RasterStats};
@@ -162,15 +162,23 @@ fn tier_intrinsics(cfg: &LuminaConfig, tier: Tier) -> Result<Intrinsics> {
 }
 
 /// Compose the frontend stage for a config (fresh cross-frame state).
-fn compose_frontend(cfg: &LuminaConfig) -> FrontendStage {
+/// `clustered` selects the pool-clustered sort topology for S²
+/// variants; standalone coordinators always run the private view
+/// (clustering needs a pool to publish cluster sorts).
+fn compose_frontend(cfg: &LuminaConfig, clustered: bool) -> FrontendStage {
     if cfg.variant.uses_s2() {
-        FrontendStage::with_s2(S2Scheduler::new(
+        let sched = S2Scheduler::new(
             cfg.s2.sharing_window,
             cfg.s2.expanded_margin,
             TILE,
             cfg.near,
             cfg.far,
-        ))
+        );
+        if clustered {
+            FrontendStage::with_sort_view(SortView::clustered(sched))
+        } else {
+            FrontendStage::with_s2(sched)
+        }
     } else {
         FrontendStage::plain(cfg.near, cfg.far, TILE)
     }
@@ -250,7 +258,7 @@ impl Coordinator {
             cfg.scene.class.extent(),
         );
 
-        let frontend = compose_frontend(&cfg);
+        let frontend = compose_frontend(&cfg, false);
         let (frontend_cost, raster_cost) = cost_models_for(cfg.variant);
         let raster = compose_raster(
             &cfg,
@@ -407,6 +415,108 @@ impl Coordinator {
     /// scope).
     pub fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
         self.raster.install_cache_snapshot(snapshot, sharers);
+    }
+
+    /// Switch this session's S² frontend between the private and the
+    /// pool-clustered sort topology (a no-op for non-S² variants and
+    /// when the requested topology is already composed). An actual
+    /// switch recomposes the frontend — dropping all cross-frame sort
+    /// state, as any topology change must — but preserves runtime
+    /// scheduler overrides (the kill-switch threshold). Pools call this
+    /// right after construction (before any frame renders) and for
+    /// per-session clustering opt-outs.
+    pub fn set_sort_clustered(&mut self, clustered: bool) {
+        if self.sorts_clustered() == clustered {
+            return;
+        }
+        let max_rotation =
+            self.frontend.sort_view().map(|v| v.scheduler().max_rotation_per_frame);
+        self.frontend = compose_frontend(&self.cfg, clustered);
+        if let (Some(r), Some(v)) = (max_rotation, self.frontend.sort_view_mut()) {
+            v.scheduler_mut().max_rotation_per_frame = r;
+        }
+    }
+
+    /// Whether this session renders against pool-clustered sorts.
+    pub fn sorts_clustered(&self) -> bool {
+        self.frontend.sort_view().is_some_and(SortView::is_clustered)
+    }
+
+    /// Sessions sharing this session's current sort (itself included);
+    /// 1 outside clustered scope.
+    pub fn sort_sharers(&self) -> usize {
+        self.frontend.sort_view().map_or(1, SortView::sharers)
+    }
+
+    /// Whether this session pays for its own sorts (private topology
+    /// or cluster leader) rather than reusing a cluster leader's.
+    pub fn sort_is_leader(&self) -> bool {
+        self.frontend.sort_view().is_none_or(SortView::is_cluster_leader)
+    }
+
+    /// Set the S² rapid-rotation kill-switch threshold (rad/frame;
+    /// `f32::INFINITY` disables). A no-op for non-S² variants.
+    pub fn set_s2_max_rotation(&mut self, max_rotation_per_frame: f32) {
+        if let Some(v) = self.frontend.sort_view_mut() {
+            v.scheduler_mut().max_rotation_per_frame = max_rotation_per_frame;
+        }
+    }
+
+    /// This session's input to an epoch-boundary sort-clustering round:
+    /// its sort geometry and predicted sort pose for the upcoming
+    /// epoch. `None` when the session does not participate (not a
+    /// clustered-S² frontend, or nothing left to render).
+    pub fn sort_candidate(&self) -> Option<(SortGeometry, Pose)> {
+        let view = self.frontend.sort_view()?;
+        if !view.is_clustered() || self.remaining() == 0 {
+            return None;
+        }
+        let next = self.trajectory.poses[self.frame_idx];
+        // The cluster sort serves the whole epoch, so predict its pose
+        // at the epoch's center — the same N/2 rule the private
+        // scheduler uses for its window.
+        let horizon = self.cfg.pool.epoch_frames.max(1) as f32 / 2.0;
+        let pose = view.predicted_pose(&next, horizon);
+        let scene_gaussians = match &self.lod_scene {
+            Some(s) => s.len(),
+            None => self.scene.len(),
+        };
+        let geometry = SortGeometry {
+            width: self.render_intr.width,
+            height: self.render_intr.height,
+            tile_size: TILE,
+            scene_gaussians,
+        };
+        Some((geometry, pose))
+    }
+
+    /// Compute the cluster's speculative sort at `pose` over this
+    /// session's served scene and pipeline intrinsics — the leader's
+    /// contribution, run serially on the pool's coordination thread at
+    /// the epoch boundary (so it is deterministic at any thread count).
+    pub fn compute_shared_sort(&self, pose: &Pose) -> SharedSort {
+        let scene = match &self.lod_scene {
+            Some(s) => s.clone(),
+            None => self.scene.clone(),
+        };
+        speculative_sort(
+            &scene,
+            *pose,
+            &self.render_intr,
+            self.cfg.near,
+            self.cfg.far,
+            TILE,
+            self.cfg.s2.expanded_margin as f32,
+        )
+    }
+
+    /// Install the epoch's frozen cluster sort (no-op for non-S² or
+    /// private-topology frontends). The leader also takes on the sort's
+    /// work accounting, charged to its next frame.
+    pub fn install_shared_sort(&mut self, sort: Arc<SharedSort>, leader: bool, sharers: usize) {
+        if let Some(v) = self.frontend.sort_view_mut() {
+            v.install_shared_sort(sort, leader, sharers);
+        }
     }
 
     /// Render the *current* pose once to measure a [`FrameWorkload`]

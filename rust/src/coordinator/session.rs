@@ -40,11 +40,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{CacheScope, LuminaConfig, Tier};
+use crate::config::{CacheScope, LuminaConfig, SortScope, Tier};
 use crate::coordinator::admission::{AdmissionController, SessionDemand};
 use crate::coordinator::report::FrameReport;
 use crate::coordinator::{Coordinator, RunReport};
 use crate::lumina::rc::{CacheDelta, CacheGeometry, CacheHub, CacheStats};
+use crate::camera::Pose;
+use crate::lumina::s2::{SharedSort, SortCandidate, SortGeometry, SortHub};
 use crate::scene::synth::synth_scene;
 use crate::scene::GaussianScene;
 use crate::util::par;
@@ -61,6 +63,25 @@ pub struct SessionPool {
     /// session-index order — bitwise identical at any thread count and
     /// pipeline depth.
     cache_hub: Option<Arc<CacheHub>>,
+    /// Clustered-scope sort hub (`pool.sort_scope = "clustered"` on an
+    /// S² variant): at every epoch boundary the pool re-clusters
+    /// sessions by sort geometry and predicted pose, computes one
+    /// speculative sort per cluster (on the coordination thread, leader
+    /// = lowest session index), and publishes it as a frozen
+    /// `Arc<SharedSort>` every member renders against.
+    sort_hub: Option<SortHub>,
+    /// Cluster sorts published by the most recent sort sync, keyed by
+    /// (leader geometry, leader predicted pose) — the only inputs the
+    /// sort depends on. Consecutive syncs with an unchanged key (e.g.
+    /// the epoch boundary's merge sync followed immediately by a no-op
+    /// tier application, or a membership-only change) reuse the
+    /// published `Arc` instead of recomputing a sort that determinism
+    /// guarantees would be identical.
+    sort_published: Vec<(SortGeometry, Pose, Arc<SharedSort>)>,
+    /// Pool-wide cache statistics over every epoch-served frame — the
+    /// observed hit rate admission pricing consumes (shared scope), and
+    /// the warm-handoff rate for viewers admitted mid-run.
+    served: CacheStats,
 }
 
 /// Aggregated result of running every session to completion.
@@ -80,6 +101,19 @@ impl PoolReport {
     /// Total frames rendered across sessions.
     pub fn total_frames(&self) -> usize {
         self.sessions.iter().map(|r| r.frames.len()).sum()
+    }
+
+    /// Frames that executed a speculative sort (projection + binning +
+    /// depth sort) across all sessions — the cross-session redundancy
+    /// measure pool-clustered S² sorting minimizes: cluster leaders'
+    /// boundary sorts and kill-switch fallbacks count, followers' reuse
+    /// frames do not.
+    pub fn sorted_frames(&self) -> usize {
+        self.sessions
+            .iter()
+            .flat_map(|r| &r.frames)
+            .filter(|f| f.sorted_this_frame)
+            .count()
     }
 
     /// Aggregate *simulated* throughput: the summed frame rate the
@@ -245,20 +279,38 @@ impl SessionPool {
         let cache_hub = (base.pool.cache_scope == CacheScope::Shared
             && base.variant.uses_rc())
         .then(|| Arc::new(CacheHub::new()));
+        let sort_hub = (base.pool.sort_scope == SortScope::Clustered
+            && base.variant.uses_s2())
+        .then(|| SortHub::new(base.pool.cluster_radius as f32));
         let sessions = (0..n)
             .map(|i| {
                 let mut cfg = base.clone();
                 cfg.camera.seed = base.camera.seed.wrapping_add(i as u64);
                 let mut coord =
                     Coordinator::with_scene_in_pool(cfg, scene.clone(), cache_hub.clone())?;
+                if sort_hub.is_some() {
+                    coord.set_sort_clustered(true);
+                }
                 coord.priority = (n - i) as f64;
                 Ok(coord)
             })
             .collect::<Result<Vec<_>>>()?;
-        let mut pool = SessionPool { sessions, reduced: None, cache_hub };
+        let mut pool = SessionPool {
+            sessions,
+            reduced: None,
+            cache_hub,
+            sort_hub,
+            sort_published: Vec::new(),
+            served: CacheStats::default(),
+        };
         // Shared scope: set sharer counts (each view attached with its
         // own full-reload charge; the install below is snapshot-ptr
-        // idempotent). A no-op for private pools.
+        // idempotent). A no-op for private pools. Cluster sorts are
+        // deliberately NOT published here: callers (the convergent
+        // builders, tests) may still rewrite trajectories, and a
+        // construction-time sort would be a throwaway — the first
+        // `run_epoch` publishes lazily against the poses it actually
+        // renders.
         pool.sync_shared_cache();
         Ok(pool)
     }
@@ -287,13 +339,40 @@ impl SessionPool {
     /// cache scope the swap re-attaches the session to the snapshot for
     /// its new cache geometry (its old-geometry delta is invalidated;
     /// the pool's snapshots — and every other session — are untouched).
+    /// Under clustered sort scope the swap re-clusters immediately —
+    /// the session's sort geometry changed, so it leaves its old
+    /// cluster (whose shared sort is untouched) and joins whatever
+    /// cluster its new geometry and predicted pose land it in.
     pub fn set_session_tier(&mut self, i: usize, tier: Tier) -> Result<()> {
         anyhow::ensure!(i < self.sessions.len(), "no session {i}");
         let reduced =
             if tier == Tier::Reduced { Some(self.shared_reduced_scene()) } else { None };
         self.sessions[i].set_tier_with(tier, reduced, false)?;
         self.sync_shared_cache();
+        self.sync_shared_sorts();
         Ok(())
+    }
+
+    /// Opt session `i` out of (or back into) pool-clustered sorting:
+    /// opted-out sessions keep the private windowed scheduler — their
+    /// per-session kill switch from sharing — while the rest of the
+    /// pool keeps clustering without them. A no-op on pools without a
+    /// clustered sort scope.
+    pub fn set_sort_opt_out(&mut self, i: usize, opt_out: bool) -> Result<()> {
+        anyhow::ensure!(i < self.sessions.len(), "no session {i}");
+        if self.sort_hub.is_none() {
+            return Ok(());
+        }
+        self.sessions[i].set_sort_clustered(!opt_out);
+        self.sync_shared_sorts();
+        Ok(())
+    }
+
+    /// Pool-wide observed cache hit rate across every epoch-served
+    /// frame so far (0 before any serving) — the rate shared-scope
+    /// admission pricing and mid-run warm handoff consume.
+    pub fn pool_hit_rate(&self) -> f64 {
+        self.served.hit_rate()
     }
 
     /// (Re)install every shared-scope session's snapshot from the hub,
@@ -326,6 +405,61 @@ impl SessionPool {
         self.sync_shared_cache();
     }
 
+    /// Epoch boundary of the clustered sort scope: re-cluster the
+    /// participating sessions by sort geometry and predicted pose,
+    /// compute one speculative sort per cluster at the *leader's*
+    /// predicted pose (serially, on this coordination thread — frame
+    /// slots are drained at every boundary, so the predictions see
+    /// exactly the state a synchronous pool would), and install it as a
+    /// frozen `Arc` into every member. Followers render whole epochs
+    /// against the frozen sort while refreshing colors/geometry at
+    /// their own poses; nothing a rendering thread touches is shared,
+    /// so clustered-scope output is bitwise identical at any thread
+    /// count and pipeline depth. A no-op under private sort scope.
+    fn sync_shared_sorts(&mut self) {
+        let Some(hub) = self.sort_hub else { return };
+        let cands: Vec<SortCandidate> = self
+            .sessions
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                c.sort_candidate().map(|(geometry, pose)| SortCandidate {
+                    session: i,
+                    geometry,
+                    pose,
+                })
+            })
+            .collect();
+        let mut published = Vec::new();
+        for cluster in hub.cluster(&cands) {
+            let lead = cands
+                .iter()
+                .find(|c| c.session == cluster[0])
+                .expect("leader is a candidate");
+            let (geometry, pose) = (lead.geometry, lead.pose);
+            // Reuse the published sort when its inputs — the leader's
+            // geometry and predicted pose — are unchanged: the
+            // recompute is deterministic, so it could only produce the
+            // identical result. Installs still run — a tier rebuild may
+            // have dropped a member's copy — and re-set the leader's
+            // pending work accounting (idempotent until a frame
+            // consumes it).
+            let sort = match self
+                .sort_published
+                .iter()
+                .find(|(g, p, _)| *g == geometry && *p == pose)
+            {
+                Some((_, _, s)) => s.clone(),
+                None => Arc::new(self.sessions[cluster[0]].compute_shared_sort(&pose)),
+            };
+            for (pos, &s) in cluster.iter().enumerate() {
+                self.sessions[s].install_shared_sort(sort.clone(), pos == 0, cluster.len());
+            }
+            published.push((geometry, pose, sort));
+        }
+        self.sort_published = published;
+    }
+
     /// The pool-wide reduced-tier scene (cut lazily, then shared).
     fn shared_reduced_scene(&mut self) -> Arc<GaussianScene> {
         if let Some(s) = &self.reduced {
@@ -339,15 +473,17 @@ impl SessionPool {
 
     /// Run every session to the end of its trajectory, sessions in
     /// parallel (each session's frames stay sequential — S² and RC
-    /// state are inherently frame-ordered). Shared-scope pools run in
-    /// epochs of `pool.epoch_frames`, merging cache deltas at every
-    /// boundary; private pools run straight through.
+    /// state are inherently frame-ordered). Pools with a shared cache
+    /// or clustered sort scope run in epochs of `pool.epoch_frames` —
+    /// the boundary is where cache deltas merge and cluster sorts
+    /// re-publish; fully private pools run straight through.
     pub fn run(&mut self) -> Result<PoolReport> {
         let start = Instant::now();
         let mut epochs = Vec::new();
         // (`with_scene` guarantees a non-empty pool; the emptiness
         // check keeps the indexing below robust regardless.)
-        if self.cache_hub.is_some() && !self.sessions.is_empty() {
+        let epoch_scoped = self.cache_hub.is_some() || self.sort_hub.is_some();
+        if epoch_scoped && !self.sessions.is_empty() {
             let epoch = self.sessions[0].cfg.pool.epoch_frames.max(1);
             while self.sessions.iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
                 epochs.push(self.run_epoch(epoch)?);
@@ -362,11 +498,26 @@ impl SessionPool {
     /// One pool epoch: step every session up to `frames` completed
     /// frames (sessions in parallel, pipelined slots drained at the
     /// boundary), then merge the shared-cache deltas in session-index
-    /// order (a no-op under private scope). Returns the epoch's frame
-    /// reports per session.
+    /// order and re-cluster/re-publish the shared sorts (each a no-op
+    /// under the corresponding private scope). Returns the epoch's
+    /// frame reports per session.
     pub fn run_epoch(&mut self, frames: usize) -> Result<Vec<Vec<FrameReport>>> {
+        // First epoch of a clustered pool: nothing is published yet
+        // (construction defers, since builders may rewrite
+        // trajectories), so publish now against the poses this epoch
+        // actually renders. A cheap no-op whenever sorts are already
+        // installed or there are no candidates.
+        if self.sort_published.is_empty() {
+            self.sync_shared_sorts();
+        }
         let out = self.run_parallel(Some(frames.max(1)))?;
+        for frames in &out {
+            for f in frames {
+                self.served.merge(&f.cache);
+            }
+        }
         self.merge_cache_epoch();
+        self.sync_shared_sorts();
         Ok(out)
     }
 
@@ -404,22 +555,17 @@ impl SessionPool {
         }
 
         let mut epochs: Vec<Vec<Vec<FrameReport>>> = Vec::new();
-        // Pool-wide observed cache stats over every served frame: the
-        // hit rate shared-scope pricing consumes (a session's future
-        // hits come from the pool's merged inserts, not its own
-        // history). Deterministic: merged in epoch/session order.
-        let mut served = CacheStats::default();
+        // `self.served` accumulates pool-wide observed cache stats over
+        // every epoch-served frame: the hit rate shared-scope pricing
+        // consumes (a session's future hits come from the pool's merged
+        // inserts, not its own history). Deterministic: merged in
+        // epoch/session order.
         while self.sessions.iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
             epochs.push(self.run_epoch(epoch)?);
-            for frames in epochs.last().into_iter().flatten() {
-                for f in frames {
-                    served.merge(&f.cache);
-                }
-            }
             // Re-plan over the sessions that still have frames to serve
             // — finished viewers consume no device time and must not
             // demote (or refuse) the live ones.
-            let (active, demands) = self.active_demands(served.hit_rate())?;
+            let (active, demands) = self.active_demands(self.pool_hit_rate())?;
             if active.is_empty() {
                 break;
             }
@@ -453,33 +599,43 @@ impl SessionPool {
             if c.remaining() == 0 && c.in_flight() == 0 {
                 continue;
             }
-            let w = c
-                .last_workload()
-                .context("session has no measured workload to price")?;
             indices.push(i);
-            demands.push(SessionDemand {
-                workload: w.clone(),
-                tier: c.tier(),
-                variant: c.cfg.variant,
-                half_capable: c.tier_servable(Tier::Half),
-                priority: c.priority,
-                cache_shared: c.shares_cache(),
-                pool_hit_rate,
-            });
+            demands.push(Self::demand_for(c, pool_hit_rate)?);
         }
         Ok((indices, demands))
     }
 
+    /// One session's planning input from its most recent measured
+    /// workload.
+    fn demand_for(c: &Coordinator, pool_hit_rate: f64) -> Result<SessionDemand> {
+        let w = c
+            .last_workload()
+            .context("session has no measured workload to price")?;
+        Ok(SessionDemand {
+            workload: w.clone(),
+            tier: c.tier(),
+            variant: c.cfg.variant,
+            half_capable: c.tier_servable(Tier::Half),
+            priority: c.priority,
+            cache_shared: c.shares_cache(),
+            pool_hit_rate,
+            sort_clustered: c.sorts_clustered(),
+            sort_sharers: c.sort_sharers(),
+            sort_leader: c.sort_is_leader(),
+        })
+    }
+
     /// [`Self::active_demands`] for a pool that has not served a frame
-    /// yet: probe-render each active session's current pose first (no
-    /// observed hit rate yet — the shared discount starts at zero).
+    /// yet: probe-render each active session's current pose first. The
+    /// shared-scope discount uses whatever hit rate the pool has
+    /// observed so far — zero on a fresh pool.
     fn probe_active_demands(&mut self) -> Result<(Vec<usize>, Vec<SessionDemand>)> {
         for c in self.sessions.iter_mut() {
             if c.remaining() > 0 && c.last_workload().is_none() {
                 c.probe_workload()?;
             }
         }
-        self.active_demands(0.0)
+        self.active_demands(self.pool_hit_rate())
     }
 
     /// Demands for every session with frames to serve, probing those
@@ -505,9 +661,52 @@ impl SessionPool {
         }
         // Tier swaps can change cache geometries (and rebuilds detach
         // deltas): refresh every shared session's snapshot + sharer
-        // count.
+        // count. They change sort geometries too (and rebuilds drop
+        // installed cluster sorts), so re-cluster and re-publish.
         self.sync_shared_cache();
+        self.sync_shared_sorts();
         Ok(())
+    }
+
+    /// Admit a new viewer mid-run. The session is built over the pool's
+    /// shared scene (joining the cache hub and clustered sort scope
+    /// when the pool has them), probe-rendered once, and priced
+    /// alongside the still-active sessions — with its raster stage
+    /// discounted by the **pool-wide observed hit rate** rather than
+    /// cold (the warm handoff): under shared cache scope the snapshot a
+    /// late joiner attaches to is already merged and warm, so its hits
+    /// arrive from frame one and cold pricing would refuse viewers the
+    /// pool actually holds. The joiner enters at the lowest priority
+    /// (demoted first under pressure). On refusal the pool is left
+    /// exactly as it was; on success the new session's index is
+    /// returned and the planned tiers are applied pool-wide.
+    pub fn admit(&mut self, cfg: LuminaConfig, ctrl: &AdmissionController) -> Result<usize> {
+        anyhow::ensure!(!self.sessions.is_empty(), "cannot admit into an empty pool");
+        let scene = self.sessions[0].scene.clone();
+        let mut joiner = Coordinator::with_scene_in_pool(cfg, scene, self.cache_hub.clone())?;
+        if self.sort_hub.is_some() {
+            joiner.set_sort_clustered(true);
+        }
+        joiner.priority = 0.0;
+        joiner.probe_workload()?;
+        let rate = self.pool_hit_rate();
+        let (active, mut demands) = self.active_demands(rate)?;
+        demands.push(Self::demand_for(&joiner, rate)?);
+        // A refusal drops the joiner here and touches nothing else.
+        let plan = ctrl.plan(&demands)?;
+        let (existing, joined) = plan.tiers.split_at(active.len());
+        let tier = joined[0];
+        let reduced =
+            if tier == Tier::Reduced { Some(self.shared_reduced_scene()) } else { None };
+        // Forced rebuild: wipe the probe's stage-state side effects so
+        // the admitted session serves pristine frames.
+        joiner.set_tier_with(tier, reduced, true)?;
+        let idx = self.sessions.len();
+        self.sessions.push(joiner);
+        // Applies the re-planned tiers and re-syncs shared cache
+        // snapshots (sharer counts grew) and cluster sorts.
+        self.apply_tiers_at(&active, existing, false)?;
+        Ok(idx)
     }
 
     /// Step every session up to `cap` frames (or to the end of its

@@ -155,6 +155,24 @@ impl RadianceCache {
         ((index as usize) & (self.sets - 1), tag)
     }
 
+    /// The set a tag indexes — the compaction key of the shared-scope
+    /// insertion log.
+    fn set_index(&self, ids: &[u32]) -> usize {
+        self.index_tag(ids).0
+    }
+
+    /// Structural equality of cache contents — entries and pLRU state,
+    /// statistics ignored. What "bitwise-identical replay" means for a
+    /// bank: two banks that are `state_eq` respond identically to every
+    /// future lookup/insert sequence.
+    pub fn state_eq(&self, other: &RadianceCache) -> bool {
+        self.ways == other.ways
+            && self.sets == other.sets
+            && self.k == other.k
+            && self.entries == other.entries
+            && self.plru == other.plru
+    }
+
     /// Look up a tag; on hit returns the cached RGB and touches pLRU.
     pub fn lookup(&mut self, ids: &[u32]) -> Option<[f32; 3]> {
         self.stats.lookups += 1;
@@ -442,6 +460,17 @@ impl GroupedRadianceCache {
     pub fn num_banks(&self) -> usize {
         self.banks.len()
     }
+
+    /// Structural equality over all banks (see
+    /// [`RadianceCache::state_eq`]).
+    pub fn state_eq(&self, other: &GroupedRadianceCache) -> bool {
+        self.groups_x == other.groups_x
+            && self.groups_y == other.groups_y
+            && self.tiles_x == other.tiles_x
+            && self.tiles_y == other.tiles_y
+            && self.banks.len() == other.banks.len()
+            && self.banks.iter().zip(&other.banks).all(|(a, b)| a.state_eq(b))
+    }
 }
 
 /// An immutable, epoch-stamped view of a merged radiance cache: what
@@ -511,16 +540,23 @@ pub struct LoggedInsert {
 /// epoch merge. Nothing here is visible to other sessions until the
 /// merge publishes it.
 ///
-/// The log grows with the epoch's miss count (adjacent same-tag stores
-/// coalesce, but distinct misses are irreducible under the ordered-
-/// replay contract): roughly `pixels * miss_rate * epoch_frames`
-/// entries of ~60 B. Pools serving paper-scale frames should keep
-/// `pool.epoch_frames` modest; log compaction is a recorded follow-on
-/// (ROADMAP).
+/// The log is compacted **at record time, per cache set** (see
+/// [`SharedBank::store`]): a re-insert whose tag matches the most
+/// recent insert into the same `(group, set)` folds into that entry —
+/// exactly equivalent under ordered replay, because inserts into other
+/// sets never touch this set's ways or pLRU bits. The dominant log
+/// growth — the same hot tags re-missing frame after frame within an
+/// epoch — therefore collapses to one entry per tag run, bounding delta
+/// memory by tag *alternations* across the touched sets rather than the
+/// epoch's raw miss count. (`last_in_set` carries one index per touched
+/// set to find the fold target in O(1).)
 #[derive(Debug)]
 pub struct CacheDelta {
     overlay: GroupedRadianceCache,
     log: Vec<LoggedInsert>,
+    /// Per-(group, set): index into `log` of the most recent insert
+    /// into that set — the set-level compaction cursor.
+    last_in_set: HashMap<(u32, u32), u32>,
     stats: CacheStats,
 }
 
@@ -529,6 +565,7 @@ impl CacheDelta {
         CacheDelta {
             overlay: GroupedRadianceCache::new(geom.tiles_x, geom.tiles_y, geom.k),
             log: Vec::new(),
+            last_in_set: HashMap::new(),
             stats: CacheStats::default(),
         }
     }
@@ -889,12 +926,13 @@ fn rasterize_cached_source(
                     &mut outcomes,
                 ),
                 TileSource::Shared { snapshot, delta } => {
-                    let CacheDelta { overlay, log, stats } = &mut **delta;
+                    let CacheDelta { overlay, log, last_in_set, stats } = &mut **delta;
                     let group = overlay.group_for_tile(tx, ty) as u32;
                     let mut bank = SharedBank {
                         frozen: snapshot.cache.bank_for_tile(tx, ty),
                         overlay: overlay.bank_for_tile_mut(tx, ty),
                         log,
+                        last_in_set,
                         stats,
                         group,
                     };
@@ -1015,11 +1053,13 @@ impl PixelCache for RadianceCache {
 }
 
 /// One tile's shared-scope cache endpoint: frozen snapshot bank +
-/// session-private overlay bank + the delta's insertion log and stats.
+/// session-private overlay bank + the delta's insertion log (with its
+/// set-level compaction cursor) and stats.
 struct SharedBank<'a> {
     frozen: &'a RadianceCache,
     overlay: &'a mut RadianceCache,
     log: &'a mut Vec<LoggedInsert>,
+    last_in_set: &'a mut HashMap<(u32, u32), u32>,
     stats: &'a mut CacheStats,
     group: u32,
 }
@@ -1048,17 +1088,36 @@ impl PixelCache for SharedBank<'_> {
             value,
         };
         rec.ids[..ids.len()].copy_from_slice(ids);
-        // Adjacent same-tag stores coalesce: replaying [X=a, X=b]
-        // back-to-back is state-identical to replaying [X=b] (the
-        // second insert is an in-place update touching the same way),
-        // so the log stays shorter with no effect on the merge.
-        match self.log.last_mut() {
-            Some(last)
-                if last.group == rec.group && last.k == rec.k && last.ids == rec.ids =>
-            {
-                last.value = rec.value;
+        // Set-level net-effect coalescing: when the most recent insert
+        // into this (group, set) carries the same tag, replaying
+        // [X=a, <other-set inserts>, X=b] is state-identical to
+        // replaying [X=b at X=a's position, <other-set inserts>] —
+        // inserts into other sets never touch this set's ways or pLRU
+        // bits, and the later insert is an in-place update touching
+        // exactly the way the earlier one placed (X cannot be evicted
+        // in between: nothing else landed in its set). So the earlier
+        // entry absorbs the new value, exactly — `tests` pins bitwise
+        // replay equivalence. Re-misses of the same hot tags across an
+        // epoch's frames (the dominant log growth) collapse to one
+        // entry per tag run, bounding delta memory by tag alternations
+        // per touched set rather than the epoch's miss count.
+        let set = self.overlay.set_index(ids) as u32;
+        let key = (self.group, set);
+        let coalesced = match self.last_in_set.get(&key) {
+            Some(&idx) => {
+                let last = &mut self.log[idx as usize];
+                if last.k == rec.k && last.ids == rec.ids {
+                    last.value = rec.value;
+                    true
+                } else {
+                    false
+                }
             }
-            _ => self.log.push(rec),
+            None => false,
+        };
+        if !coalesced {
+            self.last_in_set.insert(key, self.log.len() as u32);
+            self.log.push(rec);
         }
         match self.overlay.insert_tracked(ids, value) {
             InsertOutcome::Updated => {}
@@ -1613,6 +1672,7 @@ mod tests {
                 frozen: snapshot.cache.bank_for_tile(0, 0),
                 overlay: delta.overlay.bank_for_tile_mut(0, 0),
                 log: &mut delta.log,
+                last_in_set: &mut delta.last_in_set,
                 stats: &mut delta.stats,
                 group,
             };
@@ -1627,6 +1687,7 @@ mod tests {
                 frozen: snapshot.cache.bank_for_tile(0, 0),
                 overlay: delta.overlay.bank_for_tile_mut(0, 0),
                 log: &mut delta.log,
+                last_in_set: &mut delta.last_in_set,
                 stats: &mut delta.stats,
                 group,
             };
@@ -1647,6 +1708,125 @@ mod tests {
     }
 
     #[test]
+    fn compacted_log_replays_bitwise_identically_to_uncompacted() {
+        // The set-level coalescing contract: a compacted delta log,
+        // replayed into a (non-empty) snapshot, must produce a cache
+        // whose entries AND pLRU state match an uncompacted
+        // insert-by-insert replay of the exact store sequence — while
+        // the log itself stays bounded by tag alternations per set.
+        let g = geom(4, 2);
+        // k = 2, 1024 sets => 5 index bits per ID: `field(hi, lo)`
+        // places `lo` in the set-index bits and `hi` in the tag bits,
+        // so same-`lo` ids share a set and same-`hi` ids share a tag.
+        let field = |hi: u32, lo: u32| ((hi << 5) | lo) << 3;
+        let tag_a = [field(0, 1), field(0, 2)]; // set S1
+        let tag_b = [field(1, 1), field(0, 2)]; // set S1, different tag
+        let tag_c = [field(0, 3), field(0, 4)]; // a different set S2
+
+        // Non-empty initial state: the snapshot already holds tag A.
+        let mut base = CacheSnapshot::empty(g);
+        base.cache.bank_for_tile_mut(0, 0).insert(&tag_a, [0.05; 3]);
+        let snap = Arc::new(base);
+
+        // The store sequence, with same-set repeats (fold), an
+        // other-set interleave (must not break the fold), and a tag
+        // alternation (must NOT fold).
+        let seq: Vec<([u32; 2], [f32; 3])> = vec![
+            (tag_a, [0.1; 3]),
+            (tag_a, [0.2; 3]), // folds into the previous entry
+            (tag_b, [0.3; 3]), // same set, new tag: alternation
+            (tag_c, [0.4; 3]), // other set
+            (tag_a, [0.5; 3]), // set's last insert is B: no fold
+            (tag_c, [0.6; 3]), // folds across the set boundary above
+            (tag_a, [0.7; 3]), // folds into the 0.5 entry: C was other-set
+        ];
+
+        let mut delta = CacheDelta::new(g);
+        // Uncompacted reference: every store applied in true order.
+        let mut reference = snap.cache.clone();
+        {
+            let group = delta.overlay.group_for_tile(0, 0) as u32;
+            let mut bank = SharedBank {
+                frozen: snap.cache.bank_for_tile(0, 0),
+                overlay: delta.overlay.bank_for_tile_mut(0, 0),
+                log: &mut delta.log,
+                last_in_set: &mut delta.last_in_set,
+                stats: &mut delta.stats,
+                group,
+            };
+            for (ids, v) in &seq {
+                bank.store(ids, *v);
+                reference.bank_for_tile_mut(0, 0).insert_tracked(ids, *v);
+            }
+        }
+        assert_eq!(delta.len(), 4, "7 stores must compact to 4 log entries");
+
+        let mut merged = snap.cache.clone();
+        merged.replay(&delta.log);
+        assert!(
+            merged.state_eq(&reference),
+            "compacted replay diverged from uncompacted replay"
+        );
+        // And the values landed: the folds kept the *last* value.
+        assert_eq!(merged.bank_for_tile(0, 0).probe(&tag_a), Some([0.7; 3]));
+        assert_eq!(merged.bank_for_tile(0, 0).probe(&tag_b), Some([0.3; 3]));
+        assert_eq!(merged.bank_for_tile(0, 0).probe(&tag_c), Some([0.6; 3]));
+
+        // The ordered multi-session merge stays equivalent too:
+        // session 1's (compacted) delta replayed before session 2's
+        // must match the sequential uncompacted replay of both.
+        let mk = |stores: &[([u32; 2], [f32; 3])], reference: &mut GroupedRadianceCache| {
+            let mut d = CacheDelta::new(g);
+            let group = d.overlay.group_for_tile(0, 0) as u32;
+            let mut bank = SharedBank {
+                frozen: snap.cache.bank_for_tile(0, 0),
+                overlay: d.overlay.bank_for_tile_mut(0, 0),
+                log: &mut d.log,
+                last_in_set: &mut d.last_in_set,
+                stats: &mut d.stats,
+                group,
+            };
+            for (ids, v) in stores {
+                bank.store(ids, *v);
+                reference.bank_for_tile_mut(0, 0).insert_tracked(ids, *v);
+            }
+            d
+        };
+        let mut reference = snap.cache.clone();
+        let d1 = mk(&[(tag_a, [0.11; 3]), (tag_a, [0.12; 3])], &mut reference);
+        let d2 = mk(&[(tag_b, [0.21; 3]), (tag_a, [0.22; 3])], &mut reference);
+        assert_eq!(d1.len(), 1, "session 1's run of A folds to one entry");
+        let mut merged = snap.cache.clone();
+        merged.replay(&d1.log);
+        merged.replay(&d2.log);
+        assert!(merged.state_eq(&reference), "ordered merge equivalence broke");
+
+        // A detached delta starts with a fresh compaction cursor.
+        let mut d = CacheDelta::new(g);
+        {
+            let group = d.overlay.group_for_tile(0, 0) as u32;
+            let mut bank = SharedBank {
+                frozen: snap.cache.bank_for_tile(0, 0),
+                overlay: d.overlay.bank_for_tile_mut(0, 0),
+                log: &mut d.log,
+                last_in_set: &mut d.last_in_set,
+                stats: &mut d.stats,
+                group,
+            };
+            bank.store(&tag_a, [0.9; 3]);
+        }
+        let mut view = CacheView::Shared {
+            snapshot: snap.clone(),
+            delta: d,
+            pending_snapshot_bytes: 0,
+        };
+        let taken = view.take_delta().unwrap();
+        assert_eq!(taken.len(), 1);
+        let CacheView::Shared { delta, .. } = &view else { unreachable!() };
+        assert!(delta.is_empty() && delta.last_in_set.is_empty());
+    }
+
+    #[test]
     fn hub_merges_deltas_in_session_index_order() {
         let g = geom(4, 5);
         let hub = CacheHub::new();
@@ -1662,6 +1842,7 @@ mod tests {
                 frozen: empty.cache.bank_for_tile(0, 0),
                 overlay: d.overlay.bank_for_tile_mut(0, 0),
                 log: &mut d.log,
+                last_in_set: &mut d.last_in_set,
                 stats: &mut d.stats,
                 group,
             };

@@ -17,6 +17,23 @@
 //! adjacent pairs out of order at the render pose) used by the paper's
 //! "only 0.2% of orders change" claim, and a rapid-rotation kill switch
 //! (Sec. 8).
+//!
+//! **Sort topology** (DESIGN.md §5): the speculative sort is the same
+//! redundant work across *viewers*, not just across frames — N
+//! convergent sessions of one scene would otherwise run N identical
+//! sorts per window. Sort ownership is therefore a seam ([`SortView`])
+//! with two implementations: `Private` — the session drives its own
+//! [`S2Scheduler`], bit-for-bit the pre-seam behavior — and `Clustered`
+//! — a pool groups sessions at epoch boundaries by sort geometry and
+//! predicted-pose proximity ([`SortHub`]), elects the lowest session
+//! index of each cluster as leader, computes one [`SharedSort`] per
+//! cluster on the pool's coordination thread, and publishes it as a
+//! frozen `Arc<SharedSort>` every member renders against — still
+//! refreshing colors/geometry at its *own* pose each frame, and still
+//! free to drop to private per-frame sorts when its rotation outruns
+//! the kill switch.
+
+use std::sync::Arc;
 
 use crate::camera::{Intrinsics, Pose};
 use crate::pipeline::project::{project, refresh_colors, reproject_geometry, ProjectedScene};
@@ -47,6 +64,43 @@ pub struct SharedSort {
     pub projected: ProjectedScene,
     /// Frozen tile lists + per-tile depth order.
     pub bins: TileBins,
+}
+
+/// Run the speculative-sort pipeline once: project the scene at
+/// `sort_pose` with the expanded viewport, bin and depth-sort every
+/// tile. The one sort implementation behind both ends of the
+/// [`SortView`] seam — the private scheduler and the pool's
+/// cluster-leader path cannot drift apart.
+pub fn speculative_sort(
+    scene: &GaussianScene,
+    sort_pose: Pose,
+    intr: &Intrinsics,
+    near: f32,
+    far: f32,
+    tile_size: usize,
+    margin: f32,
+) -> SharedSort {
+    let projected = project(scene, &sort_pose, intr, near, far, margin);
+    let bins = bin_and_sort(&projected, intr, tile_size, margin);
+    SharedSort { sort_pose, projected, bins }
+}
+
+/// Sorting-shared rendering against a frozen sort: clone the frozen
+/// set and re-evaluate screen geometry + SH colors at the *current*
+/// pose. Tile membership and depth order stay from the speculative
+/// sort. Returns the refreshed set, the (cloned) frozen bins, and the
+/// refreshed-Gaussian count.
+fn refresh_frame(
+    shared: &SharedSort,
+    scene: &GaussianScene,
+    pose: &Pose,
+    intr: &Intrinsics,
+) -> (ProjectedScene, TileBins, usize) {
+    let mut projected = shared.projected.clone();
+    reproject_geometry(&mut projected, scene, pose, intr);
+    refresh_colors(&mut projected, scene, pose);
+    let refreshed = projected.len();
+    (projected, shared.bins.clone(), refreshed)
 }
 
 /// S^2 scheduler state.
@@ -135,39 +189,44 @@ impl S2Scheduler {
         intr: &Intrinsics,
     ) -> S2Frame {
         let kill = self.rotation_too_fast(pose);
+        let cold = self.prev_pose.is_none();
         let need_sort =
             self.shared.is_none() || self.frames_in_window >= self.sharing_window || kill;
 
         let mut work = S2FrameWork::default();
+        let mut full_pipeline = false;
         if need_sort {
             let sort_pose = if kill { *pose } else { self.predict_sort_pose(pose) };
-            let projected =
-                project(scene, &sort_pose, intr, self.near, self.far, self.expanded_margin);
-            let bins = bin_and_sort(&projected, intr, self.tile_size, self.expanded_margin);
+            let shared = speculative_sort(
+                scene,
+                sort_pose,
+                intr,
+                self.near,
+                self.far,
+                self.tile_size,
+                self.expanded_margin,
+            );
             work.sorted = true;
-            work.projected_gaussians = projected.len();
-            work.sort_entries = bins.total_entries();
-            self.shared = Some(SharedSort { sort_pose, projected, bins });
+            work.projected_gaussians = shared.projected.len();
+            work.sort_entries = shared.bins.total_entries();
+            // A full-pipeline frame is one whose sort ran at the render
+            // pose itself (nothing speculative about it): a cold start
+            // — no pose history to extrapolate, so the predicted pose
+            // *is* the current pose — or the rapid-rotation kill
+            // switch. Window-expiry sorts extrapolate ahead and are
+            // speculative at any window length, window 1 included.
+            full_pipeline = kill || cold;
+            self.shared = Some(shared);
             self.frames_in_window = 0;
         }
         self.frames_in_window += 1;
         self.prev_pose = Some(*pose);
 
         let shared = self.shared.as_ref().expect("shared sort present");
-        // Sorting-shared rendering: clone the frozen set, re-evaluate
-        // geometry + colors at the *current* pose. Tile membership and
-        // depth order stay from the speculative sort.
-        let mut projected = shared.projected.clone();
-        reproject_geometry(&mut projected, scene, pose, intr);
-        refresh_colors(&mut projected, scene, pose);
-        work.refreshed_gaussians = projected.len();
+        let (projected, bins, refreshed) = refresh_frame(shared, scene, pose, intr);
+        work.refreshed_gaussians = refreshed;
 
-        S2Frame {
-            projected,
-            bins: shared.bins.clone(),
-            work,
-            full_pipeline: work.sorted && self.sharing_window == 1,
-        }
+        S2Frame { projected, bins, work, full_pipeline }
     }
 
     /// Stale-order error among each pixel's *significant* Gaussians: the
@@ -234,6 +293,305 @@ impl S2Scheduler {
     /// Access the current shared sort (for tests/analysis).
     pub fn shared(&self) -> Option<&SharedSort> {
         self.shared.as_ref()
+    }
+}
+
+/// Work accounting for one speculative sort, carried from the pool's
+/// epoch-boundary computation to the cluster leader's next frame so the
+/// cost models charge the sort exactly once per cluster per epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct SortWork {
+    pub projected_gaussians: usize,
+    pub sort_entries: usize,
+}
+
+impl SortWork {
+    /// The work a computed [`SharedSort`] represents.
+    pub fn of(sort: &SharedSort) -> Self {
+        SortWork {
+            projected_gaussians: sort.projected.len(),
+            sort_entries: sort.bins.total_entries(),
+        }
+    }
+}
+
+/// A session's end of the pool-clustered sort topology: the frozen
+/// cluster sort it renders against (installed by the pool at epoch
+/// boundaries), plus its own [`S2Scheduler`] — which the session keeps
+/// for its *parameters and pose history only* (kill-switch velocity,
+/// boundary pose prediction). Followers never mutate window state they
+/// do not own: the scheduler's `shared`/`frames_in_window` fields stay
+/// untouched on this path.
+pub struct ClusteredSort {
+    sched: S2Scheduler,
+    /// The cluster's frozen epoch sort (`None` until the pool's first
+    /// install, and again after a tier swap resets the view — both fall
+    /// back to private per-frame sorts until the next re-cluster).
+    shared: Option<Arc<SharedSort>>,
+    /// Leader only: sort work computed at the epoch boundary, charged
+    /// to this session's next rendered frame.
+    pending: Option<SortWork>,
+    /// Members of this session's cluster (itself included).
+    sharers: usize,
+    /// Whether this session is its cluster's leader (lowest index).
+    leader: bool,
+}
+
+impl ClusteredSort {
+    fn new(sched: S2Scheduler) -> Self {
+        ClusteredSort { sched, shared: None, pending: None, sharers: 1, leader: true }
+    }
+
+    fn frame(&mut self, scene: &GaussianScene, pose: &Pose, intr: &Intrinsics) -> S2Frame {
+        let kill = self.sched.rotation_too_fast(pose);
+        let cluster_sort = if kill { None } else { self.shared.clone() };
+        let frame = match cluster_sort {
+            Some(shared) => {
+                // Render against the cluster's frozen sort, refreshing
+                // geometry + colors at this session's own pose. The
+                // leader's first frame after an install carries the
+                // boundary sort's work; followers report pure reuse.
+                let mut work = S2FrameWork::default();
+                if let Some(w) = self.pending.take() {
+                    work.sorted = true;
+                    work.projected_gaussians = w.projected_gaussians;
+                    work.sort_entries = w.sort_entries;
+                }
+                let (projected, bins, refreshed) = refresh_frame(&shared, scene, pose, intr);
+                work.refreshed_gaussians = refreshed;
+                S2Frame { projected, bins, work, full_pipeline: false }
+            }
+            None => {
+                // Kill switch (or no cluster sort installed yet): a
+                // private full-pipeline sort at the render pose. The
+                // cluster's shared sort is left untouched — the session
+                // drops out for this frame only and rejoins the moment
+                // its rotation slows (or the next install lands).
+                let shared = speculative_sort(
+                    scene,
+                    *pose,
+                    intr,
+                    self.sched.near,
+                    self.sched.far,
+                    self.sched.tile_size,
+                    self.sched.expanded_margin,
+                );
+                let mut work = S2FrameWork {
+                    sorted: true,
+                    projected_gaussians: shared.projected.len(),
+                    sort_entries: shared.bins.total_entries(),
+                    refreshed_gaussians: 0,
+                };
+                let (projected, bins, refreshed) = refresh_frame(&shared, scene, pose, intr);
+                work.refreshed_gaussians = refreshed;
+                S2Frame { projected, bins, work, full_pipeline: true }
+            }
+        };
+        self.sched.prev_pose = Some(*pose);
+        frame
+    }
+
+    fn reset(&mut self) {
+        self.sched.reset();
+        self.shared = None;
+        self.pending = None;
+        self.sharers = 1;
+        self.leader = true;
+    }
+}
+
+/// The sort-topology seam: who owns a session's speculative sort.
+///
+/// `Private` is bit-for-bit the pre-seam behavior — the session's own
+/// [`S2Scheduler`] sorts once per sharing window. `Clustered` renders
+/// against a pool-published frozen [`SharedSort`] (one per pose
+/// cluster per epoch), mirroring the radiance cache's snapshot/merge
+/// topology: everything a session reads during an epoch is frozen or
+/// session-local, so output is bitwise identical at any thread count
+/// and pipeline depth.
+pub enum SortView {
+    Private(S2Scheduler),
+    Clustered(ClusteredSort),
+}
+
+impl SortView {
+    /// Session-owned windowed sorting (the pre-seam behavior).
+    pub fn private(sched: S2Scheduler) -> Self {
+        SortView::Private(sched)
+    }
+
+    /// Pool-clustered sorting; private per-frame fallback until the
+    /// pool installs the first cluster sort.
+    pub fn clustered(sched: S2Scheduler) -> Self {
+        SortView::Clustered(ClusteredSort::new(sched))
+    }
+
+    pub fn is_clustered(&self) -> bool {
+        matches!(self, SortView::Clustered(_))
+    }
+
+    /// Process one frame through whichever topology owns the sort.
+    pub fn frame(&mut self, scene: &GaussianScene, pose: &Pose, intr: &Intrinsics) -> S2Frame {
+        match self {
+            SortView::Private(sched) => sched.frame(scene, pose, intr),
+            SortView::Clustered(c) => c.frame(scene, pose, intr),
+        }
+    }
+
+    /// Forget all cross-frame state: the (cluster) sort, window
+    /// position, pose history, and any pending leader work.
+    pub fn reset(&mut self) {
+        match self {
+            SortView::Private(sched) => sched.reset(),
+            SortView::Clustered(c) => c.reset(),
+        }
+    }
+
+    /// The underlying scheduler (parameters + pose history).
+    pub fn scheduler(&self) -> &S2Scheduler {
+        match self {
+            SortView::Private(sched) => sched,
+            SortView::Clustered(c) => &c.sched,
+        }
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut S2Scheduler {
+        match self {
+            SortView::Private(sched) => sched,
+            SortView::Clustered(c) => &mut c.sched,
+        }
+    }
+
+    /// The pose this session would speculative-sort at, extrapolated
+    /// `horizon` frame intervals past `next` (the next pose it will
+    /// render) — what the pool clusters sessions by. Falls back to
+    /// `next` without pose history, exactly like
+    /// [`S2Scheduler::predict_sort_pose`].
+    pub fn predicted_pose(&self, next: &Pose, horizon: f32) -> Pose {
+        match &self.scheduler().prev_pose {
+            Some(prev) => Pose::extrapolate(prev, next, horizon),
+            None => *next,
+        }
+    }
+
+    /// Install the cluster's frozen epoch sort. The leader additionally
+    /// takes on the sort's work accounting, charged to its next frame.
+    /// A no-op for private views.
+    pub fn install_shared_sort(&mut self, sort: Arc<SharedSort>, leader: bool, sharers: usize) {
+        if let SortView::Clustered(c) = self {
+            c.pending = if leader { Some(SortWork::of(&sort)) } else { None };
+            c.shared = Some(sort);
+            c.sharers = sharers.max(1);
+            c.leader = leader;
+        }
+    }
+
+    /// Sessions sharing this view's sort (itself included); 1 for
+    /// private views and for clustered views awaiting their first
+    /// install.
+    pub fn sharers(&self) -> usize {
+        match self {
+            SortView::Private(_) => 1,
+            SortView::Clustered(c) => c.sharers,
+        }
+    }
+
+    /// Whether this session pays for its own sorts (private views and
+    /// cluster leaders) rather than reusing a leader's.
+    pub fn is_cluster_leader(&self) -> bool {
+        match self {
+            SortView::Private(_) => true,
+            SortView::Clustered(c) => c.leader,
+        }
+    }
+}
+
+/// The sort-geometry key: sessions may share one speculative sort only
+/// when their frontends project the *same scene* onto the *same grid*.
+/// `scene_gaussians` is the scene-identity proxy — a reduced-tier
+/// session projects a prefix subsample whose indices are meaningless
+/// against the full scene (and vice versa), and the half-res tier bins
+/// a different tile grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SortGeometry {
+    pub width: usize,
+    pub height: usize,
+    pub tile_size: usize,
+    pub scene_gaussians: usize,
+}
+
+/// One session's input to an epoch-boundary clustering round.
+#[derive(Debug, Clone, Copy)]
+pub struct SortCandidate {
+    /// Session index in the pool (the determinism anchor: clusters and
+    /// leader election depend only on these indices and the candidate
+    /// poses, never on thread scheduling).
+    pub session: usize,
+    pub geometry: SortGeometry,
+    /// Predicted sort pose for the upcoming epoch.
+    pub pose: Pose,
+}
+
+/// Pool-level owner of the sort-clustering policy: groups sessions at
+/// epoch boundaries by sort geometry and predicted-pose proximity so
+/// one leader sort per cluster serves every member. Clustering runs on
+/// the pool's coordination thread only, so — like the cache hub's
+/// merge — it cannot be order-scrambled by rendering threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SortHub {
+    cluster_radius: f32,
+}
+
+impl SortHub {
+    /// `cluster_radius` is the maximum angular distance (radians)
+    /// between predicted poses of a leader and any member it absorbs.
+    pub fn new(cluster_radius: f32) -> Self {
+        SortHub { cluster_radius }
+    }
+
+    pub fn cluster_radius(&self) -> f32 {
+        self.cluster_radius
+    }
+
+    /// Greedy index-ordered clustering: walk candidates in session
+    /// order; each still-unassigned session founds a cluster (becoming
+    /// its leader — lowest index by construction) and absorbs every
+    /// later unassigned session with the same sort geometry whose
+    /// predicted pose sits within the cluster radius of the leader's.
+    /// Every candidate lands in exactly one cluster (possibly a
+    /// singleton), and the result is a pure function of the candidate
+    /// list — deterministic at any thread count.
+    ///
+    /// The gate is rotation-only ([`Pose::angular_distance`]): the S²
+    /// expanded margin plus the per-frame geometry refresh is what
+    /// absorbs the members' *positional* spread, exactly as it absorbs
+    /// pose drift across a private window — viewers far apart but
+    /// looking the same way will cluster, trading follower quality for
+    /// the shared sort. A translation-aware gate (position distance
+    /// scaled by scene extent) and margin auto-widening with cluster
+    /// spread are recorded ROADMAP follow-ons.
+    pub fn cluster(&self, cands: &[SortCandidate]) -> Vec<Vec<usize>> {
+        let mut assigned = vec![false; cands.len()];
+        let mut clusters = Vec::new();
+        for i in 0..cands.len() {
+            if assigned[i] {
+                continue;
+            }
+            assigned[i] = true;
+            let leader = &cands[i];
+            let mut members = vec![leader.session];
+            for j in i + 1..cands.len() {
+                if assigned[j] || cands[j].geometry != leader.geometry {
+                    continue;
+                }
+                if leader.pose.angular_distance(&cands[j].pose) <= self.cluster_radius {
+                    assigned[j] = true;
+                    members.push(cands[j].session);
+                }
+            }
+            clusters.push(members);
+        }
+        clusters
     }
 }
 
@@ -347,6 +705,129 @@ mod tests {
         let pred = sched.predict_sort_pose(&p1);
         // Velocity 0.1/frame, window 6 -> predicted 0.3 ahead of p1.
         assert!((pred.position.x - (0.1 + 0.3)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn full_pipeline_flags_cold_start_and_kill_switch_only() {
+        // Regression: the flag used to read `sorted && window == 1`,
+        // which missed cold-start/kill-switch sorts at window > 1 and
+        // mislabeled warm window-1 sorts (which are speculative).
+        let (scene, poses, intr) = setup();
+        let mut sched = S2Scheduler::new(6, 4, 16, 0.2, 100.0);
+        let f0 = sched.frame(&scene, &poses[0], &intr);
+        assert!(f0.work.sorted && f0.full_pipeline, "cold start is a full-pipeline run");
+        for pose in poses.iter().take(13).skip(1) {
+            let f = sched.frame(&scene, pose, &intr);
+            assert!(
+                !f.full_pipeline,
+                "window-expiry sorts are speculative, not full-pipeline"
+            );
+        }
+
+        let mut w1 = S2Scheduler::new(1, 0, 16, 0.2, 100.0);
+        assert!(w1.frame(&scene, &poses[0], &intr).full_pipeline, "cold window-1 start");
+        let f = w1.frame(&scene, &poses[1], &intr);
+        assert!(f.work.sorted, "window 1 still sorts every frame");
+        assert!(!f.full_pipeline, "warm window-1 sorts extrapolate: speculative");
+
+        let mut k = S2Scheduler::new(6, 4, 16, 0.2, 100.0);
+        k.max_rotation_per_frame = -1.0; // any rotation trips the switch
+        let _ = k.frame(&scene, &poses[0], &intr);
+        let f = k.frame(&scene, &poses[1], &intr);
+        assert!(f.work.sorted && f.full_pipeline, "kill-switch sorts are full-pipeline");
+    }
+
+    #[test]
+    fn clustered_view_reuses_installed_sort_and_charges_leader_once() {
+        let (scene, poses, intr) = setup();
+        let sched = || S2Scheduler::new(6, 4, 16, 0.2, 100.0);
+
+        // Without an installed cluster sort, the view falls back to a
+        // private full-pipeline sort every frame.
+        let mut orphan = SortView::clustered(sched());
+        assert!(orphan.is_clustered());
+        assert_eq!(orphan.sharers(), 1);
+        for pose in poses.iter().take(2) {
+            let f = orphan.frame(&scene, pose, &intr);
+            assert!(f.work.sorted && f.full_pipeline, "no cluster sort => private sort");
+        }
+
+        // Install a cluster sort: the leader's next frame carries the
+        // sort's work exactly once, followers report pure reuse, and
+        // both refresh at their own pose.
+        let sort = Arc::new(speculative_sort(&scene, poses[0], &intr, 0.2, 100.0, 16, 4.0));
+        let mut leader = SortView::clustered(sched());
+        let mut follower = SortView::clustered(sched());
+        leader.install_shared_sort(sort.clone(), true, 2);
+        follower.install_shared_sort(sort.clone(), false, 2);
+        assert!(leader.is_cluster_leader() && !follower.is_cluster_leader());
+        assert_eq!(leader.sharers(), 2);
+
+        let lf = leader.frame(&scene, &poses[1], &intr);
+        assert!(lf.work.sorted, "leader's first frame carries the boundary sort");
+        assert_eq!(lf.work.sort_entries, sort.bins.total_entries());
+        assert!(!lf.full_pipeline, "the cluster sort is speculative");
+        let lf2 = leader.frame(&scene, &poses[2], &intr);
+        assert!(!lf2.work.sorted, "the sort is charged exactly once");
+        assert!(lf2.work.refreshed_gaussians > 0);
+
+        let ff = follower.frame(&scene, &poses[2], &intr);
+        assert!(!ff.work.sorted, "followers never sort");
+        assert!(ff.work.refreshed_gaussians > 0, "followers still refresh per frame");
+        // The refresh really ran at the follower's own pose: geometry
+        // differs from the frozen sort-pose set.
+        assert_ne!(ff.projected.means, sort.projected.means);
+
+        // A kill-switch frame drops to a private sort without touching
+        // the installed cluster sort.
+        follower.scheduler_mut().max_rotation_per_frame = -1.0;
+        let kf = follower.frame(&scene, &poses[3], &intr);
+        assert!(kf.work.sorted && kf.full_pipeline, "kill switch forces a private sort");
+        follower.scheduler_mut().max_rotation_per_frame = f32::INFINITY;
+        let rf = follower.frame(&scene, &poses[4], &intr);
+        assert!(!rf.work.sorted, "the cluster sort survives a member's kill frame");
+
+        // Reset clears the installed sort and pending work.
+        leader.reset();
+        assert_eq!(leader.sharers(), 1);
+        let f = leader.frame(&scene, &poses[3], &intr);
+        assert!(f.full_pipeline, "after reset the view is cold again");
+    }
+
+    #[test]
+    fn sort_hub_clusters_by_geometry_and_pose_with_lowest_index_leader() {
+        let hub = SortHub::new(0.2);
+        assert_eq!(hub.cluster_radius(), 0.2);
+        let geom = |g: usize| SortGeometry {
+            width: 128,
+            height: 128,
+            tile_size: 16,
+            scene_gaussians: g,
+        };
+        let pose = |th: f32| {
+            Pose::look_at(Vec3::new(4.0 * th.sin(), 0.3, -4.0 * th.cos()), Vec3::ZERO)
+        };
+        let cands = vec![
+            SortCandidate { session: 0, geometry: geom(5000), pose: pose(0.00) },
+            SortCandidate { session: 1, geometry: geom(5000), pose: pose(0.05) },
+            // Same pose, different scene (reduced tier): never clusters.
+            SortCandidate { session: 2, geometry: geom(2500), pose: pose(0.05) },
+            // Same geometry, far pose: its own cluster.
+            SortCandidate { session: 3, geometry: geom(5000), pose: pose(1.50) },
+            // Close to session 3's pose: joins the later cluster.
+            SortCandidate { session: 4, geometry: geom(5000), pose: pose(1.55) },
+        ];
+        let clusters = hub.cluster(&cands);
+        assert_eq!(clusters, vec![vec![0, 1], vec![2], vec![3, 4]]);
+
+        // A generous radius merges geometry peers regardless of pose;
+        // leaders stay the lowest session index.
+        let wide = SortHub::new(10.0);
+        let clusters = wide.cluster(&cands);
+        assert_eq!(clusters, vec![vec![0, 1, 3, 4], vec![2]]);
+
+        // Zero candidates: zero clusters.
+        assert!(hub.cluster(&[]).is_empty());
     }
 
     #[test]

@@ -33,6 +33,7 @@ const VALUE_KEYS: &[&str] = &[
     "tiers",
     "pipeline-depth",
     "cache-scope",
+    "sort-scope",
 ];
 
 fn main() -> Result<()> {
@@ -81,6 +82,10 @@ fn print_help() {
            --cache-scope <s>      radiance-cache ownership: private\n\
                                   (per-session) or shared (one pool-wide\n\
                                   snapshot/merge cache) (serve cmd)\n\
+           --sort-scope <s>       S^2 speculative-sort ownership: private\n\
+                                  (per-session windows) or clustered (one\n\
+                                  pool-wide sort per pose cluster per\n\
+                                  epoch) (serve cmd)\n\
            --artifacts <dir>      AOT artifact directory (runtime cmd)"
     );
 }
@@ -151,17 +156,22 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         // Route through the config validator (private|shared).
         cfg.apply_override(&format!("pool.cache_scope={s}"))?;
     }
+    if let Some(s) = args.get("sort-scope") {
+        // Route through the config validator (private|clustered).
+        cfg.apply_override(&format!("pool.sort_scope={s}"))?;
+    }
     let n: usize = args.get_parsed("sessions", 4);
     println!(
         "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{} \
-         | pipeline depth {} | cache scope {}",
+         | pipeline depth {} | cache scope {} | sort scope {}",
         cfg.variant.label(),
         cfg.gaussian_count(),
         cfg.camera.frames,
         cfg.camera.width,
         cfg.camera.height,
         cfg.pool.pipeline_depth,
-        cfg.pool.cache_scope.label()
+        cfg.pool.cache_scope.label(),
+        cfg.pool.sort_scope.label()
     );
     let admission = cfg.pool.target_fps > 0.0;
     let mut pool = SessionPool::new(cfg.clone(), n)?;

@@ -39,7 +39,7 @@ use std::sync::Arc;
 use crate::camera::{Intrinsics, Pose};
 use crate::config::Tier;
 use crate::lumina::rc::{CacheDelta, CacheSnapshot, CacheStats};
-use crate::lumina::s2::S2Scheduler;
+use crate::lumina::s2::{S2Scheduler, SortView};
 use crate::pipeline::image::Image;
 use crate::pipeline::project::{project, ProjectedScene};
 use crate::pipeline::raster::{rasterize, RasterConfig, RasterStats};
@@ -623,14 +623,15 @@ pub struct FrontendOutput {
 /// Projection + sorting stage, S²-aware.
 ///
 /// The `Plain` form runs the classic per-frame pipeline; the `S2` form
-/// delegates to an [`S2Scheduler`] (speculative sort shared across the
-/// window, per-frame geometry/color refresh), which owns its own
-/// near/far/tile-size state.
+/// delegates to a [`SortView`] — the sort-topology seam: a private
+/// [`S2Scheduler`] (speculative sort shared across the session's own
+/// window) or a pool-clustered view rendering against a frozen cluster
+/// sort. Either way the view owns its own near/far/tile-size state.
 pub enum FrontendStage {
     Plain { near: f32, far: f32, tile_size: usize },
-    /// Boxed: the scheduler carries the shared sort's projected set,
-    /// which would dwarf the `Plain` variant inline.
-    S2(Box<S2Scheduler>),
+    /// Boxed: the view carries the shared sort's projected set, which
+    /// would dwarf the `Plain` variant inline.
+    S2(Box<SortView>),
 }
 
 impl FrontendStage {
@@ -639,9 +640,16 @@ impl FrontendStage {
         FrontendStage::Plain { near, far, tile_size }
     }
 
-    /// Sorting-sharing frontend driven by an [`S2Scheduler`].
+    /// Sorting-sharing frontend driven by a session-private
+    /// [`S2Scheduler`] (the pre-seam behavior, bit-for-bit).
     pub fn with_s2(s2: S2Scheduler) -> Self {
-        FrontendStage::S2(Box::new(s2))
+        FrontendStage::S2(Box::new(SortView::private(s2)))
+    }
+
+    /// Sorting-sharing frontend over an explicit [`SortView`] (pools
+    /// compose the clustered topology through this).
+    pub fn with_sort_view(view: SortView) -> Self {
+        FrontendStage::S2(Box::new(view))
     }
 
     /// True when this frontend shares sorting across frames.
@@ -649,13 +657,28 @@ impl FrontendStage {
         matches!(self, FrontendStage::S2(_))
     }
 
+    /// The S² sort view, if this frontend has one.
+    pub fn sort_view(&self) -> Option<&SortView> {
+        match self {
+            FrontendStage::S2(v) => Some(v),
+            FrontendStage::Plain { .. } => None,
+        }
+    }
+
+    pub fn sort_view_mut(&mut self) -> Option<&mut SortView> {
+        match self {
+            FrontendStage::S2(v) => Some(v),
+            FrontendStage::Plain { .. } => None,
+        }
+    }
+
     /// Drop cross-frame state (the S² shared sort). Required when the
     /// raster backend or the pipeline resolution is swapped mid-run —
     /// tier promotion/demotion — since a stale speculative sort would
     /// reference the old tile grid.
     pub fn reset(&mut self) {
-        if let FrontendStage::S2(s2) = self {
-            s2.reset();
+        if let FrontendStage::S2(v) = self {
+            v.reset();
         }
     }
 

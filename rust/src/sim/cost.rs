@@ -43,6 +43,17 @@ pub trait FrontendCostModel: Send {
     fn frontend_cost(&self, w: &FrameWorkload) -> (f64, f64) {
         self.frontend_work_cost(&w.frontend_work())
     }
+
+    /// Time to receive a pool-shared speculative sort of `entries`
+    /// frozen tile-list entries instead of computing it — the
+    /// clustered-S² follower's broadcast + arbitration term. It
+    /// replaces the sort, never the per-frame refresh: the admission
+    /// planner adds it on top of the refresh floor
+    /// (`StagePrices::follower_front_s`). Defaults to 0 for units that
+    /// never receive a shared sort.
+    fn shared_sort_broadcast_s(&self, _entries: usize) -> f64 {
+        0.0
+    }
 }
 
 /// Prices the rasterization stage (and fixed overhead) of a frame.
@@ -94,6 +105,13 @@ const GPU_SHARED_LOOKUP_FACTOR: f64 = 0.5;
 /// refreshed set (paper Sec. 3.1 accounting).
 const S2_REFRESH_PROJECTION_FRACTION: f64 = 0.35;
 
+/// A pool-clustered follower receives the cluster's frozen tile lists
+/// (DMA of the sorted entries + arbitration against its co-followers)
+/// instead of sorting them: charged as a fraction of the unit's own
+/// sorting-time primitive over the shared list size — streaming sorted
+/// data is much cheaper than producing it, but not free.
+const SORT_BROADCAST_FRACTION: f64 = 0.15;
+
 /// Shared frontend pricing shape: `sorted`-gated projection + sorting
 /// plus the per-frame S² refresh, parameterized by the unit's two time
 /// primitives so GPU and CCU/GSU cannot drift apart.
@@ -119,6 +137,10 @@ impl FrontendCostModel for GpuModel {
             frontend_time_s(fw, |n| self.projection_time_s(n), |e| self.sorting_time_s(e));
         (t, EnergyModel::nm12().gpu_energy_j(t))
     }
+
+    fn shared_sort_broadcast_s(&self, entries: usize) -> f64 {
+        SORT_BROADCAST_FRACTION * self.sorting_time_s(entries)
+    }
 }
 
 impl FrontendCostModel for GsCoreModel {
@@ -129,6 +151,10 @@ impl FrontendCostModel for GsCoreModel {
     fn frontend_work_cost(&self, fw: &FrontendWork) -> (f64, f64) {
         let t = frontend_time_s(fw, |n| self.ccu_time_s(n), |e| self.gsu_time_s(e));
         (t, self.energy_j(t))
+    }
+
+    fn shared_sort_broadcast_s(&self, entries: usize) -> f64 {
+        SORT_BROADCAST_FRACTION * self.gsu_time_s(entries)
     }
 }
 
@@ -443,6 +469,22 @@ mod tests {
         let agg_d = gpu.raster_cost_aggregate(&shared.aggregate()).time_s
             - gpu.raster_cost_aggregate(&w.aggregate()).time_s;
         assert!((agg_d - expect).abs() < 1e-15, "aggregate path: {agg_d} vs {expect}");
+    }
+
+    #[test]
+    fn sort_broadcast_is_cheaper_than_sorting() {
+        // Receiving a frozen sort must cost something (DMA +
+        // arbitration) but strictly less than producing it — on both
+        // frontend units — or clustering could never pay.
+        let entries = 50_000;
+        let gpu = GpuModel::xavier_volta();
+        let b = gpu.shared_sort_broadcast_s(entries);
+        assert!(b > 0.0);
+        assert!(b < gpu.sorting_time_s(entries));
+        let gs = GsCoreModel::published();
+        let b = gs.shared_sort_broadcast_s(entries);
+        assert!(b > 0.0);
+        assert!(b < gs.gsu_time_s(entries));
     }
 
     #[test]

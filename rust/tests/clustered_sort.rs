@@ -1,0 +1,191 @@
+//! Pool-wide pose-clustered S² sorting: the sort-topology seam must be
+//! bitwise deterministic (across thread counts, pipeline depths, and
+//! mid-run tier swaps), perform strictly fewer speculative sorts than
+//! private per-session windows on convergent-pose pools — while every
+//! follower still refreshes colors/geometry at its own pose — and keep
+//! the kill switch per-session: a fast-rotating member drops to private
+//! per-frame sorts without perturbing its cluster.
+
+use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, SortScope, Tier};
+use lumina::coordinator::{FrameReport, SessionPool};
+use lumina::util::par;
+
+/// Tests that flip the global thread count serialize on this lock so
+/// they cannot race each other inside one test binary.
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn clustered_cfg() -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 4000;
+    c.camera.width = 64;
+    c.camera.height = 64;
+    c.camera.frames = 6;
+    // Clustered scope shares one sort per epoch; give the private
+    // comparison the same amortization window so the redundancy
+    // assertion measures cross-session sharing, not window length.
+    c.pool.epoch_frames = 2;
+    c.s2.sharing_window = 2;
+    c.variant = HardwareVariant::S2Gpu;
+    c.pool.sort_scope = SortScope::Clustered;
+    // Generous radius: the convergent viewers' predicted poses always
+    // share one cluster, so the sort count is exactly one per epoch.
+    c.pool.cluster_radius = 3.2;
+    c
+}
+
+fn convergent_pool(cfg: &LuminaConfig, n: usize, stagger: usize) -> SessionPool {
+    SessionPool::convergent(cfg.clone(), n, stagger).unwrap()
+}
+
+#[test]
+fn clustered_pool_bitwise_deterministic_across_threads_depths_and_tier_swaps() {
+    let _lock = lock();
+    // The acceptance contract: a clustered-sort pool of 3 convergent
+    // sessions — on the full Lumina variant, with the shared cache
+    // scope engaged too, so the two hubs' epoch machinery interleaves —
+    // is bitwise identical at 1/2/4 threads and pipeline depth 1 vs 2,
+    // including a mid-run set_tier (demotion to the half-res grid,
+    // which leaves the cluster, and promotion back into it).
+    let run = |threads: usize, depth: usize| -> Vec<Vec<FrameReport>> {
+        par::set_num_threads(threads);
+        let mut cfg = clustered_cfg();
+        cfg.variant = HardwareVariant::Lumina;
+        cfg.pool.cache_scope = CacheScope::Shared;
+        cfg.pool.pipeline_depth = depth;
+        let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+        let mut frames: Vec<Vec<FrameReport>> = vec![Vec::new(); 3];
+        let mut collect = |frames: &mut Vec<Vec<FrameReport>>,
+                           epoch: Vec<Vec<FrameReport>>| {
+            for (i, f) in epoch.into_iter().enumerate() {
+                frames[i].extend(f);
+            }
+        };
+        collect(&mut frames, pool.run_epoch(2).unwrap());
+        pool.set_session_tier(1, Tier::Half).unwrap();
+        collect(&mut frames, pool.run_epoch(2).unwrap());
+        pool.set_session_tier(1, Tier::Full).unwrap();
+        collect(&mut frames, pool.run_epoch(2).unwrap());
+        par::set_num_threads(0);
+        frames
+    };
+    let reference = run(1, 1);
+    for (threads, depth) in [(2usize, 1usize), (4, 1), (1, 2), (2, 2), (4, 2)] {
+        let got = run(threads, depth);
+        assert_eq!(
+            reference, got,
+            "clustered-sort pool diverged at {threads} threads, depth {depth}"
+        );
+    }
+    for s in &reference {
+        assert_eq!(s.len(), 6, "every session serves its whole trajectory");
+    }
+    let tiers: Vec<&str> = reference[1].iter().map(|f| f.tier).collect();
+    assert_eq!(tiers, vec!["full", "full", "half", "half", "full", "full"]);
+    // The sharing is real: followers rendered frames without sorting.
+    let reused = reference
+        .iter()
+        .flatten()
+        .filter(|f| !f.sorted_this_frame)
+        .count();
+    assert!(reused > 0, "clustered pool produced no sort reuse");
+}
+
+#[test]
+fn clustered_scope_performs_strictly_fewer_sorts_on_convergent_pool() {
+    let cfg = clustered_cfg();
+    let mut private_cfg = cfg.clone();
+    private_cfg.pool.sort_scope = SortScope::Private;
+    let stagger = cfg.pool.epoch_frames;
+
+    let clustered = convergent_pool(&cfg, 3, stagger).run().unwrap();
+    let private = convergent_pool(&private_cfg, 3, stagger).run().unwrap();
+
+    // Private: every session sorts once per window (6 frames / window 2
+    // = 3 sorts x 3 sessions). Clustered: one leader sort per epoch
+    // (6 frames / epoch 2 = 3 sorts, pool-wide).
+    assert_eq!(private.sorted_frames(), 9, "private windows sort per session");
+    assert_eq!(clustered.sorted_frames(), 3, "one cluster sort per epoch");
+    assert!(
+        clustered.sorted_frames() < private.sorted_frames(),
+        "clustered scope must perform strictly fewer speculative sorts"
+    );
+
+    // Followers (sessions 1, 2) never sorted — the leader did.
+    for i in 1..3 {
+        assert!(
+            clustered.sessions[i].frames.iter().all(|f| !f.sorted_this_frame),
+            "session {i} is a follower and must not sort"
+        );
+    }
+    // ...but every frame still pays per-pose refresh work: the
+    // frontend is never free, and per-session outputs differ because
+    // each viewer refreshed colors/geometry at its own staggered pose.
+    for s in &clustered.sessions {
+        for f in &s.frames {
+            assert!(f.frontend_s > 0.0, "refresh must cost frontend time every frame");
+        }
+    }
+    assert_ne!(
+        clustered.sessions[1].frames, clustered.sessions[2].frames,
+        "followers render their own staggered poses, not the leader's"
+    );
+}
+
+#[test]
+fn kill_switch_drops_member_to_private_sorts_without_perturbing_cluster() {
+    let _lock = lock();
+    let baseline = {
+        let mut pool = convergent_pool(&clustered_cfg(), 3, 2);
+        pool.run().unwrap()
+    };
+    let run_killed = |threads: usize| {
+        par::set_num_threads(threads);
+        let mut pool = convergent_pool(&clustered_cfg(), 3, 2);
+        // Session 2 trips the kill switch on every frame that has pose
+        // history (negative threshold = any rotation is too fast).
+        pool.sessions_mut()[2].set_s2_max_rotation(-1.0);
+        let r = pool.run().unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let killed = run_killed(1);
+
+    // The fast-rotating member sorted privately: frame 0 follows the
+    // cluster (no pose history yet), every later frame sorts.
+    let sorted: Vec<bool> =
+        killed.sessions[2].frames.iter().map(|f| f.sorted_this_frame).collect();
+    assert_eq!(sorted, vec![false, true, true, true, true, true]);
+
+    // The rest of the cluster is bitwise unperturbed: same leader, same
+    // shared sorts, same frames.
+    assert_eq!(baseline.sessions[0].frames, killed.sessions[0].frames);
+    assert_eq!(baseline.sessions[1].frames, killed.sessions[1].frames);
+
+    // And the kill-switch run itself stays thread-count deterministic.
+    let killed4 = run_killed(4);
+    assert_eq!(killed.sessions, killed4.sessions);
+}
+
+#[test]
+fn opt_out_session_keeps_private_windows_while_cluster_shares() {
+    let mut pool = convergent_pool(&clustered_cfg(), 3, 2);
+    pool.set_sort_opt_out(1, true).unwrap();
+    assert!(!pool.sessions()[1].sorts_clustered());
+    assert!(pool.sessions()[0].sorts_clustered());
+    let report = pool.run().unwrap();
+
+    // Session 1 runs its own private windows (6 frames / window 2 = 3
+    // sorts); the remaining two-member cluster still shares one sort
+    // per epoch through its leader, session 0.
+    let sorts_per_session: Vec<usize> = report
+        .sessions
+        .iter()
+        .map(|r| r.frames.iter().filter(|f| f.sorted_this_frame).count())
+        .collect();
+    assert_eq!(sorts_per_session, vec![3, 3, 0]);
+    assert_eq!(report.sorted_frames(), 6);
+}

@@ -5,7 +5,10 @@
 //! its lock/port-contention cost visible to admission pricing.
 
 use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, Tier};
-use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
+use lumina::coordinator::admission::{
+    price_stages, price_workload, SessionDemand, ADMISSION_HEADROOM,
+    SHARED_HIT_RASTER_SAVINGS,
+};
 use lumina::coordinator::{AdmissionController, FrameReport, SessionPool};
 use lumina::sim::lumincore::LuminCoreSim;
 use lumina::util::par;
@@ -152,6 +155,99 @@ fn contention_cost_reported_and_consumed_by_admission_pricing() {
     let est = w.tier_estimate(Tier::Full, Tier::Reduced, 0.5);
     assert!(est.cache_shared, "normalization must keep the scope flag");
     assert!(est.cache_outcomes.is_none(), "stats are still stripped");
+}
+
+#[test]
+fn warm_handoff_prices_late_joiner_with_pool_hit_rate() {
+    // A viewer admitted mid-run attaches to the already-merged (warm)
+    // snapshot, so its demand must be priced with the pool-wide
+    // observed hit rate — cold pricing would refuse viewers the pool
+    // actually holds. Mirror the planner's exact rung arithmetic to
+    // pick a target between the cold-joiner and warm-joiner totals.
+    use lumina::pipeline::stage::FrameWorkload;
+    let cfg = shared_cfg();
+    let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+    pool.run_epoch(2).unwrap();
+    pool.run_epoch(2).unwrap();
+    let rate = pool.pool_hit_rate();
+    assert!(rate > 0.0, "convergent epochs must produce an observed hit rate");
+
+    let price_at = |w: &FrameWorkload, rate: f64| {
+        let est = w.tier_estimate(Tier::Full, Tier::Full, cfg.pool.reduced_fraction);
+        let p = price_stages(&est, cfg.variant);
+        p.front_s
+            + p.discounted_raster_s(1.0 - rate.clamp(0.0, 1.0) * SHARED_HIT_RASTER_SAVINGS)
+    };
+    let demand = |w: &FrameWorkload, rate: f64| SessionDemand {
+        workload: w.clone(),
+        tier: Tier::Full,
+        variant: cfg.variant,
+        half_capable: true,
+        priority: 1.0,
+        cache_shared: true,
+        pool_hit_rate: rate,
+        sort_clustered: false,
+        sort_sharers: 1,
+        sort_leader: true,
+    };
+
+    let active: Vec<FrameWorkload> = pool
+        .sessions()
+        .iter()
+        .map(|c| c.last_workload().unwrap().clone())
+        .collect();
+    // The joiner's probe workload: its first convergent pose, same as
+    // the pool's own first frame shape — session 0's current record is
+    // a fine stand-in since all demands go through the same pricing.
+    let joiner_w = active[0].clone();
+    let active_total: f64 = active.iter().map(|w| price_at(w, rate)).sum();
+    let joiner_cold = price_at(&joiner_w, 0.0);
+    let joiner_warm = price_at(&joiner_w, rate);
+    assert!(joiner_warm < joiner_cold, "the warm discount must bite");
+    let budget_mid = active_total + (joiner_cold + joiner_warm) / 2.0;
+    let target = (1.0 - ADMISSION_HEADROOM) / budget_mid;
+    let ctrl = AdmissionController::new(target, vec![Tier::Full], 0.5).unwrap();
+
+    let mut demands: Vec<SessionDemand> =
+        active.iter().map(|w| demand(w, rate)).collect();
+    demands.push(demand(&joiner_w, 0.0)); // pre-handoff behavior: cold
+    assert!(ctrl.plan(&demands).is_err(), "cold joiner pricing must refuse");
+    demands.pop();
+    demands.push(demand(&joiner_w, rate)); // warm handoff
+    let plan = ctrl.plan(&demands).unwrap();
+    assert_eq!(plan.tiers, vec![Tier::Full; 4], "warm joiner admits at full");
+}
+
+#[test]
+fn admit_joins_warm_pool_mid_run_and_refuses_cleanly() {
+    // End to end through SessionPool::admit: a convergent late joiner
+    // enters a served pool, inherits the shared snapshot, and renders
+    // cross-session hits from its first epoch; an impossible target
+    // refuses and leaves the pool untouched.
+    let cfg = shared_cfg();
+    let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+    pool.run_epoch(2).unwrap();
+    pool.run_epoch(2).unwrap();
+    assert!(pool.pool_hit_rate() > 0.0);
+
+    let join_cfg = pool.sessions()[0].cfg.clone();
+    let impossible = AdmissionController::new(1e9, vec![Tier::Full], 0.5).unwrap();
+    assert!(pool.admit(join_cfg.clone(), &impossible).is_err());
+    assert_eq!(pool.len(), 3, "a refused joiner must not enter the pool");
+
+    let generous =
+        AdmissionController::new(1e-3, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
+            .unwrap();
+    let idx = pool.admit(join_cfg, &generous).unwrap();
+    assert_eq!(idx, 3);
+    assert_eq!(pool.len(), 4);
+    let epoch = pool.run_epoch(2).unwrap();
+    assert_eq!(epoch[3].len(), 2, "the admitted session serves the next epoch");
+    let joiner_hits: u64 = epoch[3].iter().map(|f| f.cache.snapshot_hits).sum();
+    assert!(
+        joiner_hits > 0,
+        "a convergent late joiner must hit the pool's warm snapshot immediately"
+    );
 }
 
 #[test]
