@@ -40,7 +40,12 @@ invariants.  Currently:
   `metric/leader_sorts_private` exist, the pool-clustered S² sort scope
   must perform at most as many speculative sorts as private
   per-session windows on the convergent-pose pool — clustering
-  deduplicates sorts, it never adds them.
+  deduplicates sorts, it never adds them;
+* whenever both `metric/binned_entries_exact` and
+  `metric/binned_entries_rect` exist, exact-intersection tile binning
+  must emit at most as many (splat, tile) entries as the bounding-rect
+  reference on the same projected scene — the exact test only culls,
+  it never adds pairs.
 """
 
 import argparse
@@ -150,6 +155,22 @@ def gate(baseline_path, fresh_path, tolerance):
                 f"clustered sort scope ran {clustered_sorts} speculative "
                 f"sorts vs {private_sorts} private — pool-clustered S² "
                 f"sharing regressed")
+
+    # Same-run binning invariant: the exact circle-vs-tile test filters
+    # the rect walk's candidates, so it can only shrink the entry count.
+    be = fresh_by.get("metric/binned_entries_exact")
+    br = fresh_by.get("metric/binned_entries_rect")
+    if be is not None and br is not None:
+        exact_entries = be["median_ns"]
+        rect_entries = br["median_ns"]
+        verdict = "ok" if exact_entries <= rect_entries else "REGRESSION"
+        print(f"  binned entries: exact {exact_entries} vs "
+              f"rect {rect_entries}  {verdict}")
+        if exact_entries > rect_entries:
+            failures.append(
+                f"exact binning emitted {exact_entries} entries vs "
+                f"{rect_entries} rect — exact-intersection culling "
+                f"regressed")
 
     if failures:
         print(f"\nbench gate FAILED ({len(failures)}):", file=sys.stderr)

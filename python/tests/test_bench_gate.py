@@ -96,6 +96,31 @@ def test_clustered_sort_invariant(tmp_path):
     assert bench_gate.gate(base, partial, 0.15) == 0
 
 
+def test_exact_binning_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [], label="raster")
+    # Exact binning may only shrink the entry count vs the rect walk.
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/binned_entries_exact", 5000),
+                 entry("metric/binned_entries_rect", 4000)],
+                label="raster")
+    eq = write(tmp_path / "eq.json",
+               [entry("metric/binned_entries_exact", 4000),
+                entry("metric/binned_entries_rect", 4000)],
+               label="raster")
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/binned_entries_exact", 3000),
+                entry("metric/binned_entries_rect", 4000)],
+               label="raster")
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, eq, 0.15) == 0
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    # One metric alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/binned_entries_rect", 4000)],
+                    label="raster")
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
 def test_update_promotes_fresh_file(tmp_path):
     fresh = write(tmp_path / "fresh.json", [entry("pool/1", 1000)])
     base = tmp_path / "base.json"

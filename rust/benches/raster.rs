@@ -1,0 +1,68 @@
+//! Raster hot-path benchmarks: exact-intersection binning vs the rect
+//! reference, the parallel scatter, and chunked rasterization — the
+//! costs the FlashGS-style overhaul targets (DESIGN.md §"Raster hot
+//! path"). (Custom harness: the offline vendor set has no criterion.)
+//!
+//! Besides timings, this emits `metric/binned_entries_{rect,exact}`
+//! rows; `python/bench_gate.py` enforces `exact <= rect` on every run
+//! (machine-independent — it compares counts, not times).
+//!
+//! `LUMINA_BENCH_SMOKE=1` shrinks the scenes for the CI bench job.
+
+use lumina::camera::{Intrinsics, Pose};
+use lumina::constants::TILE;
+use lumina::math::Vec3;
+use lumina::pipeline::project::project;
+use lumina::pipeline::raster::{rasterize, PartialRaster, RasterConfig};
+use lumina::pipeline::sort::{bin_and_sort, bin_and_sort_rect};
+use lumina::scene::synth::{synth_scene, SceneClass};
+use lumina::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::new("raster");
+    r.header();
+    let smoke = std::env::var("LUMINA_BENCH_SMOKE").is_ok();
+
+    let count = if smoke { 12_000 } else { 60_000 };
+    let side = if smoke { 128 } else { 256 };
+    let scene = synth_scene(SceneClass::SyntheticSmall, 42, count);
+    let pose = Pose::look_at(Vec3::new(0.0, 0.3, -2.3), Vec3::ZERO);
+    let intr = Intrinsics::with_fov(side, side, 0.87);
+    let projected = project(&scene, &pose, &intr, 0.2, 1000.0, 0.0);
+
+    r.bench("bin/rect", || bin_and_sort_rect(&projected, &intr, TILE, 0.0));
+    r.bench("bin/exact", || bin_and_sort(&projected, &intr, TILE, 0.0));
+    // The S² shared-sort shape: margin-inflated candidate rects.
+    r.bench("bin/exact+margin", || bin_and_sort(&projected, &intr, TILE, 16.0));
+
+    // Machine-independent workload counters for the bench gate: the
+    // exact test may only shrink the per-tile lists.
+    let rect = bin_and_sort_rect(&projected, &intr, TILE, 0.0);
+    let exact = bin_and_sort(&projected, &intr, TILE, 0.0);
+    r.metric("metric/binned_entries_rect", rect.total_entries() as u64);
+    r.metric("metric/binned_entries_exact", exact.total_entries() as u64);
+    r.metric("metric/bin_candidates", exact.rect_candidates() as u64);
+
+    let cfg = RasterConfig::default();
+    r.bench("rasterize/exact_bins", || {
+        rasterize(&projected, &exact, intr.width, intr.height, &cfg)
+    });
+    r.bench("rasterize/rect_bins", || {
+        rasterize(&projected, &rect, intr.width, intr.height, &cfg)
+    });
+    // Sub-stage dispatch overhead: the same frame in 4 chunked passes
+    // (what a depth-3 pipelined session runs).
+    r.bench("rasterize/4_chunks", || {
+        let mut acc = PartialRaster::new(&exact, intr.width, intr.height, &cfg);
+        let tiles = exact.tile_count();
+        let mut start = 0;
+        for i in 0..4 {
+            let end = tiles * (i + 1) / 4;
+            acc.render_tiles(&projected, &exact, start..end);
+            start = end;
+        }
+        acc.finish()
+    });
+
+    r.finish();
+}

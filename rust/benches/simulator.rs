@@ -33,7 +33,7 @@ fn main() {
         WarpAggregates::from_stats(&stats, intr.width, intr.height)
     });
 
-    let lists: Vec<usize> = bins.lists.iter().map(|l| l.len()).collect();
+    let lists: Vec<usize> = (0..bins.tile_count()).map(|t| bins.list(t).len()).collect();
     r.bench("tiles_from_stats/256px", || {
         tiles_from_stats(
             &lists, bins.tiles_x, bins.tiles_y, TILE, intr.width, intr.height,

@@ -64,10 +64,10 @@ fn main() -> anyhow::Result<()> {
             );
             let bins =
                 lumina::pipeline::sort::bin_and_sort(&p, &lumina_coord.intr, TILE, 0.0);
-            let tile = (0..bins.lists.len())
-                .max_by_key(|&t| bins.lists[t].len())
+            let tile = (0..bins.tile_count())
+                .max_by_key(|&t| bins.list(t).len())
                 .unwrap();
-            let list = &bins.lists[tile];
+            let list = bins.list(tile);
             if !list.is_empty() {
                 let (ox, oy) = bins.tile_origin(tile);
                 let means: Vec<[f32; 2]> =

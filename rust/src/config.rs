@@ -297,8 +297,14 @@ pub struct PoolConfig {
     /// Frame slots per session: 1 = synchronous stepping (the
     /// determinism baseline), 2 = double-buffered — frame N+1's frontend
     /// (projection + speculative sort) overlaps frame N's rasterization
-    /// and the pool schedules *stages* instead of whole sessions.
+    /// and the pool schedules *stages* instead of whole sessions, 3 =
+    /// chunk-interleaved — two frames in flight, their rasterization
+    /// dispatched at `raster_substages` tile-range granularity.
     pub pipeline_depth: usize,
+    /// Raster sub-stages each frame splits into under pipelining (the
+    /// `RasterChunk` granularity; meaningful at `pipeline_depth = 3`,
+    /// where it should be at least `pipeline_depth - 1`).
+    pub raster_substages: usize,
     /// Admission rung-pricing path (exact per-pixel vs O(tiles)
     /// aggregate).
     pub pricing: PricingMode,
@@ -328,6 +334,7 @@ impl Default for PoolConfig {
             epoch_frames: 6,
             reduced_fraction: 0.5,
             pipeline_depth: 1,
+            raster_substages: crate::pipeline::stage::DEFAULT_RASTER_SUBSTAGES,
             pricing: PricingMode::Exact,
             cache_scope: CacheScope::Private,
             sort_scope: SortScope::Private,
@@ -560,13 +567,20 @@ impl LuminaConfig {
         }
         if let Some(v) = root.get_path("pool.pipeline_depth") {
             let d = v.as_int().context("pool.pipeline_depth")?;
-            if !(1..=2).contains(&d) {
+            if !(1..=3).contains(&d) {
                 bail!(
-                    "pool.pipeline_depth must be 1 (synchronous) or 2 \
-                     (double-buffered), got {d}"
+                    "pool.pipeline_depth must be 1 (synchronous), 2 \
+                     (double-buffered), or 3 (chunk-interleaved), got {d}"
                 );
             }
             cfg.pool.pipeline_depth = d as usize;
+        }
+        if let Some(v) = root.get_path("pool.raster_substages") {
+            let s = v.as_int().context("pool.raster_substages")?;
+            if s < 1 {
+                bail!("pool.raster_substages must be >= 1, got {s}");
+            }
+            cfg.pool.raster_substages = s as usize;
         }
         if let Some(v) = root.get_path("pool.pricing") {
             cfg.pool.pricing =
@@ -626,6 +640,11 @@ impl LuminaConfig {
             &mut root,
             "pool.pipeline_depth",
             Value::Integer(self.pool.pipeline_depth as i64),
+        );
+        set(
+            &mut root,
+            "pool.raster_substages",
+            Value::Integer(self.pool.raster_substages as i64),
         );
         set(&mut root, "pool.pricing", Value::String(self.pool.pricing.label().into()));
         set(
@@ -785,13 +804,24 @@ mod tests {
         assert_eq!(c.pool.pricing, PricingMode::Exact);
         c.apply_override("pool.pipeline_depth=2").unwrap();
         assert_eq!(c.pool.pipeline_depth, 2);
+        c.apply_override("pool.pipeline_depth=3").unwrap();
+        assert_eq!(c.pool.pipeline_depth, 3);
+        assert_eq!(
+            c.pool.raster_substages,
+            crate::pipeline::stage::DEFAULT_RASTER_SUBSTAGES,
+            "sub-stage default"
+        );
+        c.apply_override("pool.raster_substages=6").unwrap();
+        assert_eq!(c.pool.raster_substages, 6);
         c.apply_override("pool.pricing=aggregate").unwrap();
         assert_eq!(c.pool.pricing, PricingMode::Aggregate);
         let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
-        assert_eq!(back.pool.pipeline_depth, 2);
+        assert_eq!(back.pool.pipeline_depth, 3);
+        assert_eq!(back.pool.raster_substages, 6);
         assert_eq!(back.pool.pricing, PricingMode::Aggregate);
         assert!(c.apply_override("pool.pipeline_depth=0").is_err());
-        assert!(c.apply_override("pool.pipeline_depth=3").is_err());
+        assert!(c.apply_override("pool.pipeline_depth=4").is_err());
+        assert!(c.apply_override("pool.raster_substages=0").is_err());
         assert!(c.apply_override("pool.pricing=bogus").is_err());
         for m in [PricingMode::Exact, PricingMode::Aggregate] {
             assert_eq!(PricingMode::parse(m.label()).unwrap(), m);

@@ -232,15 +232,27 @@ fn frontend_prices(
     tile_entries: usize,
 ) -> (f64, f64, f64, f64) {
     let (front_s, _) = frontend_cost.frontend_work_cost(&fw);
-    let (refresh_floor_s, _) = frontend_cost
-        .frontend_work_cost(&FrontendWork { sorted: false, sort_entries: 0, ..fw });
+    let (refresh_floor_s, _) = frontend_cost.frontend_work_cost(&FrontendWork {
+        sorted: false,
+        sort_entries: 0,
+        bin_candidates: 0,
+        ..fw
+    });
     // A frame that reused a sort measured none: estimate the sort a
     // private re-sort would run from the frozen tile-list total it
-    // rendered against.
+    // rendered against. The binning candidates of that re-sort are
+    // unknown; the frozen entry total is their lower bound (every
+    // surviving entry was a candidate), keeping the estimate
+    // conservative without inventing rect geometry.
     let sorted_front_s = if fw.sorted {
         front_s
     } else {
-        let sorted = FrontendWork { sorted: true, sort_entries: tile_entries, ..fw };
+        let sorted = FrontendWork {
+            sorted: true,
+            sort_entries: tile_entries,
+            bin_candidates: tile_entries,
+            ..fw
+        };
         frontend_cost.frontend_work_cost(&sorted).0
     };
     let broadcast_s = frontend_cost.shared_sort_broadcast_s(tile_entries);
@@ -362,9 +374,12 @@ impl AdmissionController {
     }
 
     /// Price frames for a `depth`-slot pipelined pool (clamped to the
-    /// supported 1..=2 range).
+    /// supported 1..=3 range). Depths 2 and 3 price identically — the
+    /// steady-state device time is `max(frontend, raster + overhead)`
+    /// either way; depth 3 only changes *scheduling* granularity
+    /// (raster sub-stages), not the per-frame work.
     pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
-        self.pipeline_depth = depth.clamp(1, 2);
+        self.pipeline_depth = depth.clamp(1, 3);
         self
     }
 
@@ -597,6 +612,7 @@ mod tests {
                 scene_gaussians: 10_000,
                 sorted: true,
                 sort_entries: 50_000,
+                bin_candidates: 60_000,
                 refreshed_gaussians: 0,
                 consumed: vec![100; side * side],
                 significant: vec![10; side * side],
@@ -839,6 +855,7 @@ mod tests {
         let mut unsorted = d.workload.clone();
         unsorted.sorted = false;
         unsorted.sort_entries = 0;
+        unsorted.bin_candidates = 0;
         let pu = price_stages(&unsorted, d.variant);
         assert_eq!(pu.front_s, pu.refresh_floor_s);
         // Aggregate path carries the same floors.
@@ -861,6 +878,7 @@ mod tests {
         d.sort_leader = false;
         d.workload.sorted = false;
         d.workload.sort_entries = 0;
+        d.workload.bin_candidates = 0;
         let p = price_stages(&d.workload, d.variant);
         assert_eq!(p.front_s, p.refresh_floor_s, "reuse frames measure no sort");
         assert!(
@@ -886,6 +904,7 @@ mod tests {
             let mut d = s2_demand(1.0);
             d.workload.sorted = false;
             d.workload.sort_entries = 0;
+            d.workload.bin_candidates = 0;
             d.sort_clustered = clustered;
             d.sort_sharers = 1;
             d.sort_leader = true;
@@ -922,6 +941,7 @@ mod tests {
             let mut d = s2_demand(priority);
             d.workload.sorted = false;
             d.workload.sort_entries = 0;
+            d.workload.bin_candidates = 0;
             d.sort_clustered = true;
             d.sort_sharers = sharers;
             d.sort_leader = leader;
@@ -955,6 +975,7 @@ mod tests {
             .map(|mut d| {
                 d.workload.sorted = true;
                 d.workload.sort_entries = 50_000;
+                d.workload.bin_candidates = 60_000;
                 d
             })
             .collect();

@@ -212,7 +212,7 @@ fn compose_raster(
     } else if cfg.variant == HardwareVariant::Ds2Gpu {
         Box::new(Ds2Raster::new())
     } else {
-        Box::new(PlainRaster)
+        Box::new(PlainRaster::new())
     };
     if tier == Tier::Half {
         Box::new(Ds2Raster::wrap(base))
@@ -267,7 +267,10 @@ impl Coordinator {
             Tier::Full,
             cache_hub.as_ref(),
         );
-        let pipeline = PipelinedSession::new(cfg.pool.pipeline_depth);
+        let pipeline = PipelinedSession::with_substages(
+            cfg.pool.pipeline_depth,
+            cfg.pool.raster_substages,
+        );
 
         Ok(Coordinator {
             cfg,

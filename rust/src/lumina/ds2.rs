@@ -67,7 +67,7 @@ pub struct Ds2Raster {
 impl Ds2Raster {
     /// The classic DS-2 baseline: plain rasterization + 2x upsample.
     pub fn new() -> Self {
-        Self::wrap(Box::new(PlainRaster))
+        Self::wrap(Box::new(PlainRaster::new()))
     }
 
     /// Compose the half-res + upsample mechanism around an existing

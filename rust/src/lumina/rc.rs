@@ -912,7 +912,7 @@ fn rasterize_cached_source(
     for ty in 0..bins.tiles_y {
         for tx in 0..bins.tiles_x {
             let tile = ty * bins.tiles_x + tx;
-            let splats = gather_tile(projected, &bins.lists[tile]);
+            let splats = gather_tile(projected, bins.list(tile));
             match source {
                 TileSource::Private(cache) => run_tile(
                     cache.bank_for_tile_mut(tx, ty),

@@ -49,6 +49,10 @@ pub struct S2FrameWork {
     pub projected_gaussians: usize,
     /// Tile-list entries produced by the speculative sort (0 when reused).
     pub sort_entries: usize,
+    /// Candidate (splat, tile) pairs the speculative sort's binning
+    /// stage intersection-tested (0 when reused) — see
+    /// [`TileBins::rect_candidates`].
+    pub bin_candidates: usize,
     /// Per-frame recompute work: Gaussians whose color/geometry were
     /// refreshed for the current pose.
     pub refreshed_gaussians: usize,
@@ -209,6 +213,7 @@ impl S2Scheduler {
             work.sorted = true;
             work.projected_gaussians = shared.projected.len();
             work.sort_entries = shared.bins.total_entries();
+            work.bin_candidates = shared.bins.rect_candidates();
             // A full-pipeline frame is one whose sort ran at the render
             // pose itself (nothing speculative about it): a cold start
             // — no pose history to extrapolate, so the predicted pose
@@ -255,7 +260,7 @@ impl S2Scheduler {
                 let tile = (y / ts) * frame.bins.tiles_x + x / ts;
                 let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
                 depths.clear();
-                for &idx in &frame.bins.lists[tile] {
+                for &idx in frame.bins.list(tile) {
                     let i = idx as usize;
                     let [mx, my] = p.means[i];
                     let dx = px - mx;
@@ -303,6 +308,7 @@ impl S2Scheduler {
 pub struct SortWork {
     pub projected_gaussians: usize,
     pub sort_entries: usize,
+    pub bin_candidates: usize,
 }
 
 impl SortWork {
@@ -311,6 +317,7 @@ impl SortWork {
         SortWork {
             projected_gaussians: sort.projected.len(),
             sort_entries: sort.bins.total_entries(),
+            bin_candidates: sort.bins.rect_candidates(),
         }
     }
 }
@@ -356,6 +363,7 @@ impl ClusteredSort {
                     work.sorted = true;
                     work.projected_gaussians = w.projected_gaussians;
                     work.sort_entries = w.sort_entries;
+                    work.bin_candidates = w.bin_candidates;
                 }
                 let (projected, bins, refreshed) = refresh_frame(&shared, scene, pose, intr);
                 work.refreshed_gaussians = refreshed;
@@ -380,6 +388,7 @@ impl ClusteredSort {
                     sorted: true,
                     projected_gaussians: shared.projected.len(),
                     sort_entries: shared.bins.total_entries(),
+                    bin_candidates: shared.bins.rect_candidates(),
                     refreshed_gaussians: 0,
                 };
                 let (projected, bins, refreshed) = refresh_frame(&shared, scene, pose, intr);

@@ -32,6 +32,7 @@ const VALUE_KEYS: &[&str] = &[
     "target-fps",
     "tiers",
     "pipeline-depth",
+    "raster-substages",
     "cache-scope",
     "sort-scope",
 ];
@@ -78,7 +79,10 @@ fn print_help() {
                                   full,reduced,half (serve cmd)\n\
            --pipeline-depth <d>   frame slots per session: 1 synchronous,\n\
                                   2 double-buffered — frame N+1's frontend\n\
-                                  overlaps frame N's raster (serve cmd)\n\
+                                  overlaps frame N's raster, 3 chunk-\n\
+                                  interleaved raster sub-stages (serve cmd)\n\
+           --raster-substages <n> tile-range chunks per frame at\n\
+                                  pipeline depth 3 (serve cmd)\n\
            --cache-scope <s>      radiance-cache ownership: private\n\
                                   (per-session) or shared (one pool-wide\n\
                                   snapshot/merge cache) (serve cmd)\n\
@@ -149,8 +153,13 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     }
     if let Some(d) = args.get("pipeline-depth") {
         let d: usize = d.parse().context("--pipeline-depth must be an integer")?;
-        // Route through the config validator (1..=2).
+        // Route through the config validator (1..=3).
         cfg.apply_override(&format!("pool.pipeline_depth={d}"))?;
+    }
+    if let Some(s) = args.get("raster-substages") {
+        let s: usize = s.parse().context("--raster-substages must be an integer")?;
+        // Route through the config validator (>= 1).
+        cfg.apply_override(&format!("pool.raster_substages={s}"))?;
     }
     if let Some(s) = args.get("cache-scope") {
         // Route through the config validator (private|shared).

@@ -22,4 +22,4 @@ pub use image::Image;
 pub use project::{project, ProjectedScene};
 pub use raster::{rasterize, RasterConfig, RasterOutput, RasterStats};
 pub use sort::{bin_and_sort, TileBins};
-pub use stage::{FrameWorkload, FrontendStage, PlainRaster, RasterBackend, RasterFrame};
+pub use stage::{FrameWorkload, FrontendStage, PlainRaster, RasterBackend, RasterChunk, RasterFrame};

@@ -7,6 +7,7 @@
 //! the 3-sigma cutoff radius used for tile intersection.
 
 use crate::camera::{Intrinsics, Pose};
+use crate::constants::ALPHA_MIN;
 use crate::math::Sym2;
 use crate::scene::sh::eval_color;
 use crate::scene::GaussianScene;
@@ -31,6 +32,10 @@ pub struct ProjectedScene {
     pub opacity: Vec<f32>,
     /// View-dependent RGB (SH evaluated at this pose).
     pub colors: Vec<[f32; 3]>,
+    /// Squared significance radius (see [`significance_radius_sq`]),
+    /// hoisted here so tile binning and every rasterizer read one
+    /// per-splat value instead of recomputing it per (splat, tile).
+    pub r2_sig: Vec<f32>,
 }
 
 impl ProjectedScene {
@@ -43,6 +48,26 @@ impl ProjectedScene {
     }
 }
 
+/// Squared significance radius of a projected Gaussian: alpha >= 1/255
+/// requires |d|^2 <= r2_sig, conservatively, from the conic's smallest
+/// eigenvalue (q(d) = a dx^2 + 2b dx dy + c dy^2 >= lambda_min |d|^2,
+/// and alpha >= ALPHA_MIN iff q <= 2 ln(opacity/ALPHA_MIN)). Negative
+/// (-1.0) when the splat can never be significant at any pixel — its
+/// opacity is already below 1/255. Pose-dependent through the conic, so
+/// [`reproject_geometry`] recomputes it alongside means/conics/depths.
+#[inline]
+pub fn significance_radius_sq(conic: &Sym2, opacity: f32) -> f32 {
+    let qmax = 2.0 * (opacity / ALPHA_MIN).ln();
+    let mid = 0.5 * (conic.a + conic.c);
+    let det = conic.a * conic.c - conic.b * conic.b;
+    let lambda_min = (mid - (mid * mid - det).max(0.0).sqrt()).max(1e-12);
+    if qmax <= 0.0 {
+        -1.0
+    } else {
+        qmax / lambda_min
+    }
+}
+
 /// Result of projecting a single Gaussian (pre-compaction).
 struct Splat {
     id: u32,
@@ -52,6 +77,7 @@ struct Splat {
     radius: f32,
     opacity: f32,
     color: [f32; 3],
+    r2_sig: f32,
 }
 
 /// Project `scene` under `pose`/`intr`. Gaussians outside the near/far
@@ -121,14 +147,16 @@ pub fn project(
                 return None;
             }
 
+            let opacity = scene.opacity[i];
             Some(Splat {
                 id: i as u32,
                 mean: [mx, my],
                 conic,
                 depth: z,
                 radius,
-                opacity: scene.opacity[i],
+                opacity,
                 color: eval_color(scene.pos[i], cam_center, &scene.sh[i]),
+                r2_sig: significance_radius_sq(&conic, opacity),
             })
         });
 
@@ -141,6 +169,7 @@ pub fn project(
     out.radii.reserve(visible);
     out.opacity.reserve(visible);
     out.colors.reserve(visible);
+    out.r2_sig.reserve(visible);
     for s in splats.into_iter().flatten() {
         out.ids.push(s.id);
         out.means.push(s.mean);
@@ -149,6 +178,7 @@ pub fn project(
         out.radii.push(s.radius);
         out.opacity.push(s.opacity);
         out.colors.push(s.color);
+        out.r2_sig.push(s.r2_sig);
     }
     out
 }
@@ -195,9 +225,11 @@ pub fn reproject_geometry(
     let means = &mut projected.means;
     let conics = &mut projected.conics;
     let depths = &mut projected.depths;
+    let r2_sigs = &mut projected.r2_sig;
+    let opacity = &projected.opacity;
     // Parallel over disjoint index blocks; each block owns its slice of
-    // the three arrays via raw split — simpler: compute into fresh vecs.
-    let results: Vec<([f32; 2], crate::math::Sym2, f32)> = par::par_map(n, |k| {
+    // the arrays via raw split — simpler: compute into fresh vecs.
+    let results: Vec<([f32; 2], crate::math::Sym2, f32, f32)> = par::par_map(n, |k| {
             let i = ids[k] as usize;
             let cam = w2c.mul_vec(scene.pos[i] - cam_center);
             let z = cam.z.max(1e-6);
@@ -222,12 +254,15 @@ pub fn reproject_geometry(
                 + j12 * (j11 * c[1][2] + j12 * c[2][2]);
             let cov2d = Sym2 { a: a + 0.3, b, c: d + 0.3 };
             let conic = cov2d.inverse().unwrap_or(Sym2 { a: 1.0, b: 0.0, c: 1.0 });
-            (mean, conic, depth)
+            // The significance radius follows the conic to the new pose
+            // (opacity — hence qmax — is pose-invariant).
+            (mean, conic, depth, significance_radius_sq(&conic, opacity[k]))
         });
-    for (k, (m, cn, d)) in results.into_iter().enumerate() {
+    for (k, (m, cn, d, r2)) in results.into_iter().enumerate() {
         means[k] = m;
         conics[k] = cn;
         depths[k] = d;
+        r2_sigs[k] = r2;
     }
     projected.ids = ids;
     debug_assert_eq!(projected.len(), n);
@@ -332,6 +367,31 @@ mod tests {
                 assert!((p.means[i][1] - full.means[j][1]).abs() < 1e-3);
                 assert!((p.depths[i] - full.depths[j]).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn significance_radius_tracks_opacity_and_pose() {
+        let scene = test_scene(7, 800);
+        let (pose, intr) = cam();
+        let mut p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        assert_eq!(p.r2_sig.len(), p.len());
+        use crate::constants::ALPHA_MIN;
+        for i in 0..p.len() {
+            // Negative exactly when the splat can never pass the 1/255
+            // alpha test; otherwise it matches the hoisted formula.
+            if p.opacity[i] <= ALPHA_MIN {
+                assert_eq!(p.r2_sig[i], -1.0);
+            } else {
+                assert_eq!(p.r2_sig[i], significance_radius_sq(&p.conics[i], p.opacity[i]));
+                assert!(p.r2_sig[i] > 0.0);
+            }
+        }
+        // Reprojection refreshes the radius with the new conics.
+        let pose2 = Pose::look_at(Vec3::new(0.3, 0.1, -3.0), Vec3::ZERO);
+        reproject_geometry(&mut p, &scene, &pose2, &intr);
+        for i in 0..p.len() {
+            assert_eq!(p.r2_sig[i], significance_radius_sq(&p.conics[i], p.opacity[i]));
         }
     }
 

@@ -125,7 +125,7 @@ pub struct RasterOutput {
 /// A tile-local copy of one projected Gaussian's raster state, gathered
 /// contiguously so the per-pixel loop streams sequentially instead of
 /// chasing `list` indices into the projected SoA (the #1 hot-path win of
-/// the perf pass; see EXPERIMENTS.md §Perf).
+/// the perf pass; see DESIGN.md §"Raster hot path").
 #[derive(Debug, Clone, Copy)]
 pub struct GatheredSplat {
     pub mean: [f32; 2],
@@ -139,6 +139,9 @@ pub struct GatheredSplat {
     /// |d|^2 <= r2_sig (conservative, from the conic's smallest
     /// eigenvalue). Negative when the splat can never be significant.
     /// Lets the hot loop reject most pixels without the exp().
+    /// Computed once per splat at projection time
+    /// ([`ProjectedScene::r2_sig`]) — the same value exact-intersection
+    /// binning culls whole (splat, tile) pairs with.
     pub r2_sig: f32,
 }
 
@@ -148,23 +151,15 @@ pub fn gather_tile(projected: &ProjectedScene, list: &[u32]) -> Vec<GatheredSpla
         .map(|&idx| {
             let i = idx as usize;
             let conic = projected.conics[i];
-            let opacity = projected.opacity[i];
-            // alpha >= ALPHA_MIN  <=>  q(d) <= 2 ln(opacity/ALPHA_MIN)
-            // where q(d) = a dx^2 + 2b dx dy + c dy^2 >= lambda_min |d|^2.
-            let qmax = 2.0 * (opacity / ALPHA_MIN).ln();
-            let mid = 0.5 * (conic.a + conic.c);
-            let det = conic.a * conic.c - conic.b * conic.b;
-            let lambda_min = (mid - (mid * mid - det).max(0.0).sqrt()).max(1e-12);
-            let r2_sig = if qmax <= 0.0 { -1.0 } else { qmax / lambda_min };
             GatheredSplat {
                 mean: projected.means[i],
                 conic_a: conic.a,
                 conic_b: conic.b,
                 conic_c: conic.c,
-                opacity,
+                opacity: projected.opacity[i],
                 color: projected.colors[i],
                 id: projected.ids[i],
-                r2_sig,
+                r2_sig: projected.r2_sig[i],
             }
         })
         .collect()
@@ -232,7 +227,9 @@ pub fn composite_pixel_gathered(
 
 /// Composite one pixel against a depth-sorted tile list.
 ///
-/// Returns (rgb, transmittance, iterated, significant, record).
+/// Returns (rgb, transmittance, iterated, significant, record). A thin
+/// gather-then-composite wrapper over [`composite_pixel_gathered`] so
+/// the skip/terminate alpha semantics live in exactly one place.
 #[inline]
 pub fn composite_pixel(
     projected: &ProjectedScene,
@@ -241,46 +238,153 @@ pub fn composite_pixel(
     py: f32,
     record_k: usize,
 ) -> ([f32; 3], f32, u32, u32, SigRecord) {
-    let mut c = [0.0f32; 3];
-    let mut t = 1.0f32;
-    let mut iterated = 0u32;
-    let mut significant = 0u32;
-    let mut rec = SigRecord::default();
-    for &idx in list {
-        let i = idx as usize;
-        iterated += 1;
-        let [mx, my] = projected.means[i];
-        let dx = px - mx;
-        let dy = py - my;
-        let conic = projected.conics[i];
-        let power = -0.5 * (conic.a * dx * dx + conic.c * dy * dy) - conic.b * dx * dy;
-        if power > 0.0 {
-            continue;
-        }
-        let alpha = (projected.opacity[i] * power.exp()).min(ALPHA_MAX);
-        if alpha < ALPHA_MIN {
-            continue;
-        }
-        significant += 1;
-        if (rec.len as usize) < record_k {
-            rec.push(projected.ids[i]);
-        }
-        let test_t = t * (1.0 - alpha);
-        if test_t < T_EPS {
-            break;
-        }
-        let w = alpha * t;
-        let color = projected.colors[i];
-        c[0] += w * color[0];
-        c[1] += w * color[1];
-        c[2] += w * color[2];
-        t = test_t;
-    }
-    (c, t, iterated, significant, rec)
+    composite_pixel_gathered(&gather_tile(projected, list), px, py, record_k)
 }
 
-/// Rasterize all tiles of `bins` into an image (parallel over tiles,
-/// with per-tile contiguous gathering — see `GatheredSplat`).
+/// One tile's rendered block (tile-local, row-major ts x ts).
+struct TileOut {
+    color: Vec<[f32; 3]>,
+    iterated: Vec<u32>,
+    significant: Vec<u32>,
+    recs: Vec<SigRecord>,
+}
+
+/// Incremental rasterizer behind the `RasterChunk` sub-stage seam:
+/// tiles are rendered range by range (each range parallel over its
+/// tiles), accumulated per tile, and assembled once at [`finish`].
+/// Every tile's block is a pure function of `(projected, bins, cfg)`
+/// and assembly is sequential in tile order, so the output is bitwise
+/// identical no matter how the tile range is chunked across sub-stages
+/// or threads.
+///
+/// [`finish`]: PartialRaster::finish
+pub struct PartialRaster {
+    width: usize,
+    height: usize,
+    tiles_x: usize,
+    tile_size: usize,
+    cfg: RasterConfig,
+    tiles: Vec<Option<TileOut>>,
+}
+
+impl PartialRaster {
+    pub fn new(bins: &TileBins, width: usize, height: usize, cfg: &RasterConfig) -> Self {
+        let mut tiles = Vec::with_capacity(bins.tile_count());
+        tiles.resize_with(bins.tile_count(), || None);
+        PartialRaster {
+            width,
+            height,
+            tiles_x: bins.tiles_x,
+            tile_size: bins.tile_size,
+            cfg: *cfg,
+            tiles,
+        }
+    }
+
+    /// Render one contiguous tile range (parallel over its tiles, with
+    /// per-tile contiguous gathering — see [`GatheredSplat`]).
+    pub fn render_tiles(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        range: std::ops::Range<usize>,
+    ) {
+        let ts = self.tile_size;
+        let (width, height) = (self.width, self.height);
+        let record_k = self.cfg.sig_record_k;
+        let want_stats = self.cfg.collect_stats;
+        let base = range.start;
+        let outs: Vec<TileOut> = par::par_map(range.len(), |j| {
+            let tile = base + j;
+            let splats = gather_tile(projected, bins.list(tile));
+            let (ox, oy) = bins.tile_origin(tile);
+            let mut out = TileOut {
+                color: vec![[0.0; 3]; ts * ts],
+                iterated: if want_stats { vec![0; ts * ts] } else { Vec::new() },
+                significant: if want_stats { vec![0; ts * ts] } else { Vec::new() },
+                recs: if record_k > 0 {
+                    vec![SigRecord::default(); ts * ts]
+                } else {
+                    Vec::new()
+                },
+            };
+            for ly in 0..ts {
+                let py = oy + ly as f32 + 0.5;
+                if oy as usize + ly >= height {
+                    break;
+                }
+                for lx in 0..ts {
+                    if ox as usize + lx >= width {
+                        break;
+                    }
+                    let px = ox + lx as f32 + 0.5;
+                    let (c, _t, it, sg, rec) =
+                        composite_pixel_gathered(&splats, px, py, record_k);
+                    let off = ly * ts + lx;
+                    out.color[off] = c;
+                    if want_stats {
+                        out.iterated[off] = it;
+                        out.significant[off] = sg;
+                    }
+                    if record_k > 0 {
+                        out.recs[off] = rec;
+                    }
+                }
+            }
+            out
+        });
+        for (j, out) in outs.into_iter().enumerate() {
+            self.tiles[base + j] = Some(out);
+        }
+    }
+
+    /// Assemble the framebuffer (sequential; ~1% of the render cost).
+    /// Tiles never rendered stay black/zero.
+    pub fn finish(self) -> RasterOutput {
+        let (width, height, ts) = (self.width, self.height, self.tile_size);
+        let n_px = width * height;
+        let mut image = Image::new(width, height);
+        let mut stats = self.cfg.collect_stats.then(|| RasterStats {
+            iterated: vec![0; n_px],
+            significant: vec![0; n_px],
+        });
+        let mut sig_records =
+            (self.cfg.sig_record_k > 0).then(|| vec![SigRecord::default(); n_px]);
+        for (tile, tout) in self.tiles.iter().enumerate() {
+            let Some(tout) = tout else {
+                continue;
+            };
+            let tx = tile % self.tiles_x;
+            let ty = tile / self.tiles_x;
+            for ly in 0..ts {
+                let y = ty * ts + ly;
+                if y >= height {
+                    break;
+                }
+                let row = y * width;
+                for lx in 0..ts {
+                    let x = tx * ts + lx;
+                    if x >= width {
+                        break;
+                    }
+                    let off = ly * ts + lx;
+                    image.data[row + x] = tout.color[off];
+                    if let Some(st) = stats.as_mut() {
+                        st.iterated[row + x] = tout.iterated[off];
+                        st.significant[row + x] = tout.significant[off];
+                    }
+                    if let Some(recs) = sig_records.as_mut() {
+                        recs[row + x] = tout.recs[off];
+                    }
+                }
+            }
+        }
+        RasterOutput { image, stats, sig_records }
+    }
+}
+
+/// Rasterize all tiles of `bins` into an image: the whole-frame
+/// convenience wrapper over [`PartialRaster`].
 pub fn rasterize(
     projected: &ProjectedScene,
     bins: &TileBins,
@@ -288,90 +392,9 @@ pub fn rasterize(
     height: usize,
     cfg: &RasterConfig,
 ) -> RasterOutput {
-    let ts = bins.tile_size;
-    let n_px = width * height;
-    let n_tiles = bins.tile_count();
-
-    /// One tile's rendered block (tile-local, row-major ts x ts).
-    struct TileOut {
-        color: Vec<[f32; 3]>,
-        iterated: Vec<u32>,
-        significant: Vec<u32>,
-        recs: Vec<SigRecord>,
-    }
-
-    let record_k = cfg.sig_record_k;
-    let want_stats = cfg.collect_stats;
-    let tile_results: Vec<TileOut> = par::par_map(n_tiles, |tile| {
-        let splats = gather_tile(projected, &bins.lists[tile]);
-        let (ox, oy) = bins.tile_origin(tile);
-        let mut out = TileOut {
-            color: vec![[0.0; 3]; ts * ts],
-            iterated: if want_stats { vec![0; ts * ts] } else { Vec::new() },
-            significant: if want_stats { vec![0; ts * ts] } else { Vec::new() },
-            recs: if record_k > 0 { vec![SigRecord::default(); ts * ts] } else { Vec::new() },
-        };
-        for ly in 0..ts {
-            let py = oy + ly as f32 + 0.5;
-            if oy as usize + ly >= height {
-                break;
-            }
-            for lx in 0..ts {
-                if ox as usize + lx >= width {
-                    break;
-                }
-                let px = ox + lx as f32 + 0.5;
-                let (c, _t, it, sg, rec) =
-                    composite_pixel_gathered(&splats, px, py, record_k);
-                let off = ly * ts + lx;
-                out.color[off] = c;
-                if want_stats {
-                    out.iterated[off] = it;
-                    out.significant[off] = sg;
-                }
-                if record_k > 0 {
-                    out.recs[off] = rec;
-                }
-            }
-        }
-        out
-    });
-
-    // Assemble the framebuffer (sequential; ~1% of the render cost).
-    let mut image = Image::new(width, height);
-    let mut stats = want_stats.then(|| RasterStats {
-        iterated: vec![0; n_px],
-        significant: vec![0; n_px],
-    });
-    let mut sig_records = (record_k > 0).then(|| vec![SigRecord::default(); n_px]);
-    for (tile, tout) in tile_results.iter().enumerate() {
-        let tx = tile % bins.tiles_x;
-        let ty = tile / bins.tiles_x;
-        for ly in 0..ts {
-            let y = ty * ts + ly;
-            if y >= height {
-                break;
-            }
-            let row = y * width;
-            for lx in 0..ts {
-                let x = tx * ts + lx;
-                if x >= width {
-                    break;
-                }
-                let off = ly * ts + lx;
-                image.data[row + x] = tout.color[off];
-                if let Some(st) = stats.as_mut() {
-                    st.iterated[row + x] = tout.iterated[off];
-                    st.significant[row + x] = tout.significant[off];
-                }
-                if let Some(recs) = sig_records.as_mut() {
-                    recs[row + x] = tout.recs[off];
-                }
-            }
-        }
-    }
-
-    RasterOutput { image, stats, sig_records }
+    let mut acc = PartialRaster::new(bins, width, height, cfg);
+    acc.render_tiles(projected, bins, 0..bins.tile_count());
+    acc.finish()
 }
 
 /// Per-pixel contribution profile for the paper's Fig. 11: the sorted
@@ -387,28 +410,22 @@ pub fn contribution_profile(
 ) -> Vec<Vec<f32>> {
     let ts = bins.tile_size;
     let mut profiles = Vec::new();
+    let mut gathered_tile = usize::MAX;
+    let mut splats: Vec<GatheredSplat> = Vec::new();
     for y in (0..height).step_by(stride) {
         for x in (0..width).step_by(stride) {
             let tile = (y / ts) * bins.tiles_x + x / ts;
-            let list = &bins.lists[tile];
+            if tile != gathered_tile {
+                splats = gather_tile(projected, bins.list(tile));
+                gathered_tile = tile;
+            }
             let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
             let mut weights = Vec::new();
             let mut t = 1.0f32;
-            for &idx in list {
-                let i = idx as usize;
-                let [mx, my] = projected.means[i];
-                let dx = px - mx;
-                let dy = py - my;
-                let conic = projected.conics[i];
-                let power =
-                    -0.5 * (conic.a * dx * dx + conic.c * dy * dy) - conic.b * dx * dy;
-                if power > 0.0 {
+            for s in &splats {
+                let Some(alpha) = splat_alpha(s, px, py) else {
                     continue;
-                }
-                let alpha = (projected.opacity[i] * power.exp()).min(ALPHA_MAX);
-                if alpha < ALPHA_MIN {
-                    continue;
-                }
+                };
                 let test_t = t * (1.0 - alpha);
                 if test_t < T_EPS {
                     break;
@@ -464,8 +481,11 @@ mod tests {
         assert_eq!(stats.iterated.len(), 128 * 128);
         assert!(stats.mean_iterated() > 1.0);
         // Significance sparsity: far fewer significant than iterated.
+        // (Exact-intersection binning already removed the entries that
+        // could never be significant anywhere in their tile, so this
+        // fraction sits higher than the paper's raw Fig. 4 ratio.)
         let frac = stats.significant_fraction();
-        assert!(frac > 0.0 && frac < 0.6, "significant fraction {frac}");
+        assert!(frac > 0.0 && frac < 0.75, "significant fraction {frac}");
         // significant <= iterated pointwise.
         for (s, i) in stats.significant.iter().zip(&stats.iterated) {
             assert!(s <= i);
@@ -496,12 +516,87 @@ mod tests {
             let tile = (y / 16) * bins.tiles_x + x / 16;
             let (c, _, _, _, _) = composite_pixel(
                 &p,
-                &bins.lists[tile],
+                bins.list(tile),
                 x as f32 + 0.5,
                 y as f32 + 0.5,
                 0,
             );
             assert_eq!(out.image.at(x, y), c);
+        }
+    }
+
+    #[test]
+    fn gathered_reject_matches_ungathered_reference() {
+        // The r2_sig fast reject must be semantically neutral: the
+        // gathered compositor agrees bitwise with a raw reference loop
+        // that evaluates every splat's full alpha math.
+        let (p, bins, _intr) = render_setup(2000);
+        for (x, y) in [(0usize, 0usize), (17, 42), (64, 64), (90, 127), (127, 127)] {
+            let tile = (y / 16) * bins.tiles_x + x / 16;
+            let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
+            let mut c = [0.0f32; 3];
+            let mut t = 1.0f32;
+            let mut significant = 0u32;
+            for &idx in bins.list(tile) {
+                let i = idx as usize;
+                let [mx, my] = p.means[i];
+                let dx = px - mx;
+                let dy = py - my;
+                let conic = p.conics[i];
+                let power =
+                    -0.5 * (conic.a * dx * dx + conic.c * dy * dy) - conic.b * dx * dy;
+                if power > 0.0 {
+                    continue;
+                }
+                let alpha = (p.opacity[i] * power.exp()).min(ALPHA_MAX);
+                if alpha < ALPHA_MIN {
+                    continue;
+                }
+                significant += 1;
+                let test_t = t * (1.0 - alpha);
+                if test_t < T_EPS {
+                    break;
+                }
+                let w = alpha * t;
+                let color = p.colors[i];
+                c[0] += w * color[0];
+                c[1] += w * color[1];
+                c[2] += w * color[2];
+                t = test_t;
+            }
+            let (gc, gt, _it, gsig, _rec) =
+                composite_pixel(&p, bins.list(tile), px, py, 0);
+            assert_eq!(gc, c, "color diverges at ({x},{y})");
+            assert_eq!(gt, t, "transmittance diverges at ({x},{y})");
+            assert_eq!(gsig, significant, "significant count diverges at ({x},{y})");
+        }
+    }
+
+    #[test]
+    fn partial_raster_chunked_matches_whole_frame() {
+        // Rendering in arbitrary tile-range sub-stages must be bitwise
+        // identical to the one-shot path (the RasterChunk determinism
+        // guarantee PipelinedSession depth 3 relies on).
+        let (p, bins, intr) = render_setup(2500);
+        let cfg = RasterConfig { collect_stats: true, sig_record_k: 3 };
+        let whole = rasterize(&p, &bins, intr.width, intr.height, &cfg);
+        for n_chunks in [2usize, 3, 7] {
+            let mut acc = PartialRaster::new(&bins, intr.width, intr.height, &cfg);
+            let n_tiles = bins.tile_count();
+            let per = n_tiles.div_ceil(n_chunks);
+            let mut lo = 0;
+            while lo < n_tiles {
+                let hi = (lo + per).min(n_tiles);
+                acc.render_tiles(&p, &bins, lo..hi);
+                lo = hi;
+            }
+            let out = acc.finish();
+            assert_eq!(out.image.data, whole.image.data, "{n_chunks} chunks");
+            assert_eq!(
+                out.stats.as_ref().unwrap().iterated,
+                whole.stats.as_ref().unwrap().iterated
+            );
+            assert_eq!(out.sig_records, whole.sig_records);
         }
     }
 

@@ -1,8 +1,27 @@
 //! Tile binning + per-tile depth sorting (paper Fig. 1, step 2).
 //!
-//! Every projected Gaussian is inserted into the lists of all tiles its
-//! 3-sigma footprint (optionally expanded by the S^2 tile margin) touches;
-//! each tile's list is then sorted front-to-back by depth. The per-tile
+//! Binning is *exact-intersection* (FlashGS-style): a projected Gaussian
+//! enters a tile's list only if the tile square intersects its
+//! significance circle — the radius within which the 1/255 alpha test
+//! can pass (`ProjectedScene::r2_sig`), inflated by the S^2 tile margin.
+//! Candidates come from the classic 3-sigma bounding-rect walk, so the
+//! exact lists are always a subset of the rect lists, and splats whose
+//! opacity already sits below 1/255 (negative `r2_sig`) are dropped
+//! outright. Culled (splat, tile) pairs contribute to no pixel — every
+//! pixel center in the tile sits even farther from the mean than the
+//! tile square does — so images are bitwise identical to rect binning
+//! while the per-tile lists (and everything priced off them) shrink.
+//! See DESIGN.md §"Raster hot path".
+//!
+//! The scatter is a two-pass prefix-sum: per-chunk per-tile counts, an
+//! exclusive scan into per-(chunk, tile) write segments, then parallel
+//! writes into one flat entry buffer. Chunks are ascending splat ranges
+//! and each tile's segments are laid out in chunk order, so the per-tile
+//! pre-sort order is exactly the serial insertion (ascending splat
+//! index) order — the stable depth sort, and therefore every image, is
+//! unchanged at any thread count.
+//!
+//! Each tile's list is then sorted front-to-back by depth. The per-tile
 //! order is exactly what the Sorted Splatting Table of Fig. 1 holds, and
 //! what S^2 shares across frames.
 
@@ -10,27 +29,59 @@ use super::project::ProjectedScene;
 use crate::camera::Intrinsics;
 use crate::util::par;
 
-/// Per-tile sorted Gaussian lists.
+/// Per-tile sorted Gaussian lists in one flat buffer.
 ///
-/// `lists[tile]` holds indices into the [`ProjectedScene`] arrays (NOT
-/// global Gaussian IDs — those are `projected.ids[index]`), sorted by
-/// ascending depth.
+/// [`TileBins::list`] yields tile `t`'s slice of indices into the
+/// [`ProjectedScene`] arrays (NOT global Gaussian IDs — those are
+/// `projected.ids[index]`), sorted by ascending depth.
 #[derive(Debug, Clone, Default)]
 pub struct TileBins {
     pub tiles_x: usize,
     pub tiles_y: usize,
     pub tile_size: usize,
-    pub lists: Vec<Vec<u32>>,
+    /// Flat entry buffer; tile `t` owns `entries[offsets[t]..offsets[t+1]]`.
+    entries: Vec<u32>,
+    /// Exclusive per-tile prefix offsets into `entries` (len tile_count+1).
+    offsets: Vec<usize>,
+    /// Candidate (splat, tile) pairs the bounding-rect walk examined —
+    /// the exact-intersection test count, and (in rect mode) the entry
+    /// count itself. This is the binning work term the cost models price.
+    rect_candidates: usize,
 }
 
 impl TileBins {
+    /// An empty grid (no entries) — the starting point for hand-built
+    /// bins in tests.
+    pub fn empty(tiles_x: usize, tiles_y: usize, tile_size: usize) -> Self {
+        TileBins {
+            tiles_x,
+            tiles_y,
+            tile_size,
+            entries: Vec::new(),
+            offsets: vec![0; tiles_x * tiles_y + 1],
+            rect_candidates: 0,
+        }
+    }
+
     pub fn tile_count(&self) -> usize {
         self.tiles_x * self.tiles_y
     }
 
+    /// Tile `tile`'s depth-sorted list of projected-scene indices.
+    #[inline]
+    pub fn list(&self, tile: usize) -> &[u32] {
+        &self.entries[self.offsets[tile]..self.offsets[tile + 1]]
+    }
+
     /// Total tile-Gaussian intersections (the Sorting workload size).
     pub fn total_entries(&self) -> usize {
-        self.lists.iter().map(|l| l.len()).sum()
+        self.entries.len()
+    }
+
+    /// Candidate (splat, tile) pairs examined by the binning pass (the
+    /// bounding-rect walk the exact test filters).
+    pub fn rect_candidates(&self) -> usize {
+        self.rect_candidates
     }
 
     /// Tile origin in pixels.
@@ -41,73 +92,234 @@ impl TileBins {
     }
 }
 
-/// Bin projected Gaussians into tiles and depth-sort each list.
+/// Bin projected Gaussians into tiles with exact-intersection culling
+/// and depth-sort each list.
 ///
 /// `margin_px` expands each Gaussian's footprint during binning — the
 /// tile-granularity realization of the S^2 expanded viewport: a sort
 /// computed at the predicted pose must still cover Gaussians that drift
-/// across tile borders within the sharing window (paper Fig. 8).
+/// across tile borders within the sharing window (paper Fig. 8). Both
+/// the rect candidate walk and the significance circle are inflated by
+/// the margin, so exact culling keeps exactly the covering discipline
+/// rect binning had.
 pub fn bin_and_sort(
     projected: &ProjectedScene,
     intr: &Intrinsics,
     tile_size: usize,
     margin_px: f32,
 ) -> TileBins {
-    let (tiles_x, tiles_y) = intr.tiles(tile_size);
-    let n_tiles = tiles_x * tiles_y;
+    bin_with_mode(projected, intr, tile_size, margin_px, true)
+}
 
-    // Pass 1 (parallel): per-Gaussian tile ranges.
-    let ranges: Vec<(u32, u32, u32, u32)> = par::par_map(projected.len(), |i| {
-            let [mx, my] = projected.means[i];
-            let r = projected.radii[i] + margin_px;
-            let x0 = ((mx - r) / tile_size as f32).floor().max(0.0) as u32;
-            let y0 = ((my - r) / tile_size as f32).floor().max(0.0) as u32;
-            let x1 = (((mx + r) / tile_size as f32).floor() as i64)
-                .clamp(-1, tiles_x as i64 - 1) as i64;
-            let y1 = (((my + r) / tile_size as f32).floor() as i64)
-                .clamp(-1, tiles_y as i64 - 1) as i64;
-            if x1 < x0 as i64 || y1 < y0 as i64 {
-                (1, 0, 1, 0) // empty range
-            } else {
-                (x0, x1 as u32, y0, y1 as u32)
-            }
-        });
+/// Bounding-rect-only binning (the pre-overhaul behavior): every tile
+/// the 3-sigma rect touches gets an entry. Retained as the reference
+/// side of the exact-culling equivalence property tests and the
+/// `metric/binned_entries_rect` bench row.
+pub fn bin_and_sort_rect(
+    projected: &ProjectedScene,
+    intr: &Intrinsics,
+    tile_size: usize,
+    margin_px: f32,
+) -> TileBins {
+    bin_with_mode(projected, intr, tile_size, margin_px, false)
+}
 
-    // Pass 2: scatter into per-tile lists (counting first to avoid
-    // reallocation).
-    let mut counts = vec![0usize; n_tiles];
-    for &(x0, x1, y0, y1) in &ranges {
-        if x1 < x0 || y1 < y0 {
-            continue;
+/// Splats per scatter chunk: the prefix-sum granule. Small enough that
+/// paper-scale scenes split across every core, large enough that the
+/// per-chunk tile-count rows stay cheap.
+const SCATTER_CHUNK: usize = 4096;
+
+/// One splat's binning candidate: inclusive tile rect + squared cull
+/// radius (`f32::INFINITY` in rect mode). `x1 < x0` encodes "no tiles".
+#[derive(Clone, Copy)]
+struct BinRange {
+    x0: u32,
+    x1: u32,
+    y0: u32,
+    y1: u32,
+    r2_cull: f32,
+}
+
+impl BinRange {
+    const EMPTY: BinRange = BinRange { x0: 1, x1: 0, y0: 1, y1: 0, r2_cull: 0.0 };
+
+    /// Tiles the bounding rect covers (candidate pairs examined).
+    fn rect_area(&self) -> usize {
+        if self.x1 < self.x0 || self.y1 < self.y0 {
+            0
+        } else {
+            (self.x1 - self.x0 + 1) as usize * (self.y1 - self.y0 + 1) as usize
         }
-        for ty in y0..=y1 {
-            for tx in x0..=x1 {
-                counts[ty as usize * tiles_x + tx as usize] += 1;
+    }
+}
+
+/// Conservative exact test: does the significance circle around `mean`
+/// (squared radius `r2_cull`) intersect tile `(tx, ty)`? Distances are
+/// measured to the closest point of the tile *square*; every pixel
+/// center inside the tile is at least 0.5 px farther, so a rejected
+/// pair cannot pass the per-pixel significance reject either.
+#[inline(always)]
+fn circle_hits_tile(mean: [f32; 2], tx: u32, ty: u32, ts: f32, r2_cull: f32) -> bool {
+    let x0 = tx as f32 * ts;
+    let y0 = ty as f32 * ts;
+    let dx = mean[0] - mean[0].clamp(x0, x0 + ts);
+    let dy = mean[1] - mean[1].clamp(y0, y0 + ts);
+    dx * dx + dy * dy <= r2_cull
+}
+
+/// Visit every covered tile of one candidate, in row-major order.
+#[inline]
+fn for_each_covered_tile(
+    rg: &BinRange,
+    mean: [f32; 2],
+    ts: f32,
+    tiles_x: usize,
+    mut f: impl FnMut(usize),
+) {
+    for ty in rg.y0..=rg.y1 {
+        for tx in rg.x0..=rg.x1 {
+            if circle_hits_tile(mean, tx, ty, ts, rg.r2_cull) {
+                f(ty as usize * tiles_x + tx as usize);
             }
         }
     }
-    let mut lists: Vec<Vec<u32>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
-    for (i, &(x0, x1, y0, y1)) in ranges.iter().enumerate() {
-        if x1 < x0 || y1 < y0 {
-            continue;
+}
+
+fn bin_with_mode(
+    projected: &ProjectedScene,
+    intr: &Intrinsics,
+    tile_size: usize,
+    margin_px: f32,
+    exact: bool,
+) -> TileBins {
+    let (tiles_x, tiles_y) = intr.tiles(tile_size);
+    let n_tiles = tiles_x * tiles_y;
+    let n = projected.len();
+    let ts = tile_size as f32;
+
+    // Pass 1 (parallel): per-Gaussian candidate rect + cull radius.
+    let ranges: Vec<BinRange> = par::par_map(n, |i| {
+        let r2_sig = projected.r2_sig[i];
+        if exact && r2_sig < 0.0 {
+            // Opacity below 1/255: insignificant at every pixel of every
+            // tile, at every pose (opacity is pose-invariant).
+            return BinRange::EMPTY;
         }
-        for ty in y0..=y1 {
-            for tx in x0..=x1 {
-                lists[ty as usize * tiles_x + tx as usize].push(i as u32);
+        let [mx, my] = projected.means[i];
+        let r = projected.radii[i] + margin_px;
+        let x0 = ((mx - r) / ts).floor().max(0.0) as u32;
+        let y0 = ((my - r) / ts).floor().max(0.0) as u32;
+        let x1 = (((mx + r) / ts).floor() as i64).clamp(-1, tiles_x as i64 - 1);
+        let y1 = (((my + r) / ts).floor() as i64).clamp(-1, tiles_y as i64 - 1);
+        if x1 < x0 as i64 || y1 < y0 as i64 {
+            BinRange::EMPTY
+        } else {
+            let r2_cull = if exact {
+                // Margin-inflated significance radius: the same drift
+                // allowance the rect walk gets, so S^2 shared sorts stay
+                // covering under pose drift.
+                let rc = r2_sig.max(0.0).sqrt() + margin_px;
+                rc * rc
+            } else {
+                f32::INFINITY
+            };
+            BinRange { x0, x1: x1 as u32, y0, y1: y1 as u32, r2_cull }
+        }
+    });
+    let rect_candidates: usize = ranges.iter().map(BinRange::rect_area).sum();
+
+    // Pass 2a (parallel): per-chunk per-tile entry counts.
+    let n_chunks = n.div_ceil(SCATTER_CHUNK).max(1);
+    let means = &projected.means;
+    let counts: Vec<Vec<u32>> = par::par_map(n_chunks, |ci| {
+        let mut c = vec![0u32; n_tiles];
+        let lo = ci * SCATTER_CHUNK;
+        let hi = (lo + SCATTER_CHUNK).min(n);
+        for i in lo..hi {
+            for_each_covered_tile(&ranges[i], means[i], ts, tiles_x, |t| c[t] += 1);
+        }
+        c
+    });
+
+    // Exclusive scans: per-tile base offsets into the flat buffer, and
+    // each chunk's starting write cursor per tile (tile base + counts of
+    // all earlier chunks). Tile segments ordered by chunk — i.e. by
+    // ascending splat index — reproduce serial insertion order exactly.
+    let mut offsets = vec![0usize; n_tiles + 1];
+    for t in 0..n_tiles {
+        let tile_total: usize = counts.iter().map(|c| c[t] as usize).sum();
+        offsets[t + 1] = offsets[t] + tile_total;
+    }
+    let mut starts: Vec<Vec<usize>> = Vec::with_capacity(n_chunks);
+    let mut cursor: Vec<usize> = offsets[..n_tiles].to_vec();
+    for c in &counts {
+        starts.push(cursor.clone());
+        for t in 0..n_tiles {
+            cursor[t] += c[t] as usize;
+        }
+    }
+
+    // Pass 2b (parallel): scatter. Each chunk owns disjoint per-tile
+    // segments of the flat buffer and walks its splats in ascending
+    // order, so every slot is written exactly once.
+    let total = offsets[n_tiles];
+    let mut entries = vec![0u32; total];
+    {
+        let ptr = SendPtr(entries.as_mut_ptr());
+        let ranges = &ranges;
+        let starts = &starts;
+        par::par_blocks(n_chunks, n_chunks, |ci, _range| {
+            let mut cur = starts[ci].clone();
+            let lo = ci * SCATTER_CHUNK;
+            let hi = (lo + SCATTER_CHUNK).min(n);
+            for i in lo..hi {
+                for_each_covered_tile(&ranges[i], means[i], ts, tiles_x, |t| {
+                    // SAFETY: the prefix sums give each (chunk, tile)
+                    // pair a disjoint segment sized by pass 2a, which
+                    // runs the identical covered-tile walk; the
+                    // par_blocks scope outlives all workers.
+                    unsafe {
+                        *ptr.get().add(cur[t]) = i as u32;
+                    }
+                    cur[t] += 1;
+                });
             }
-        }
+        });
     }
 
     // Pass 3 (parallel): per-tile depth sort, stable on f32 key bits so
     // equal depths keep insertion (scene) order like the CUDA radix sort.
-    par::par_chunks_mut(&mut lists, 8, |_ci, chunk| {
-        for list in chunk {
+    let mut slices: Vec<&mut [u32]> = Vec::with_capacity(n_tiles);
+    let mut rest: &mut [u32] = &mut entries;
+    for t in 0..n_tiles {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(offsets[t + 1] - offsets[t]);
+        slices.push(head);
+        rest = tail;
+    }
+    par::par_chunks_mut(&mut slices, 8, |_ci, chunk| {
+        for list in chunk.iter_mut() {
             list.sort_by_key(|&i| f32_sort_key(projected.depths[i as usize]));
         }
     });
+    drop(slices);
 
-    TileBins { tiles_x, tiles_y, tile_size, lists }
+    TileBins { tiles_x, tiles_y, tile_size, entries, offsets, rect_candidates }
 }
+
+/// Shared-pointer shim for the scatter pass (the `util::par` wrapper is
+/// private): worker threads write disjoint segments of the flat buffer.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut u32);
+
+impl SendPtr {
+    fn get(&self) -> *mut u32 {
+        self.0
+    }
+}
+// SAFETY: only dereferenced on disjoint per-(chunk, tile) segments (see
+// the scatter pass) within a thread::scope that outlives all uses.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// Order-preserving mapping from (positive) f32 depth to u32 radix key.
 #[inline]
@@ -168,8 +380,8 @@ mod tests {
         let (p, intr) = setup();
         let bins = bin_and_sort(&p, &intr, 16, 0.0);
         assert_eq!(bins.tile_count(), 64);
-        for list in &bins.lists {
-            for w in list.windows(2) {
+        for t in 0..bins.tile_count() {
+            for w in bins.list(t).windows(2) {
                 assert!(p.depths[w[0] as usize] <= p.depths[w[1] as usize]);
             }
         }
@@ -179,18 +391,90 @@ mod tests {
     fn every_gaussian_lands_in_a_covering_tile() {
         let (p, intr) = setup();
         let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        let rect = bin_and_sort_rect(&p, &intr, 16, 0.0);
         for (i, m) in p.means.iter().enumerate() {
             // A Gaussian whose center is inside the image must appear in
-            // the tile containing its center.
+            // the tile containing its center — the closest-point distance
+            // to that tile is zero, so exact culling keeps it unless the
+            // splat can never be significant (negative r2_sig), in which
+            // case it must appear in *no* tile.
             if m[0] >= 0.0 && m[0] < 128.0 && m[1] >= 0.0 && m[1] < 128.0 {
                 let tx = (m[0] / 16.0) as usize;
                 let ty = (m[1] / 16.0) as usize;
-                let list = &bins.lists[ty * bins.tiles_x + tx];
-                assert!(
-                    list.contains(&(i as u32)),
-                    "gaussian {i} center {m:?} missing from tile ({tx},{ty})"
-                );
+                let tile = ty * bins.tiles_x + tx;
+                if p.r2_sig[i] >= 0.0 {
+                    assert!(
+                        bins.list(tile).contains(&(i as u32)),
+                        "gaussian {i} center {m:?} missing from tile ({tx},{ty})"
+                    );
+                } else {
+                    for t in 0..bins.tile_count() {
+                        assert!(!bins.list(t).contains(&(i as u32)));
+                    }
+                }
+                // Rect binning keeps even never-significant splats.
+                assert!(rect.list(tile).contains(&(i as u32)));
             }
+        }
+    }
+
+    #[test]
+    fn exact_lists_are_ordered_subsets_of_rect_lists() {
+        let (p, intr) = setup();
+        for margin in [0.0f32, 8.0] {
+            let exact = bin_and_sort(&p, &intr, 16, margin);
+            let rect = bin_and_sort_rect(&p, &intr, 16, margin);
+            assert!(exact.total_entries() <= exact.rect_candidates());
+            assert!(exact.rect_candidates() <= rect.total_entries());
+            assert_eq!(rect.rect_candidates(), rect.total_entries());
+            for t in 0..exact.tile_count() {
+                // Subset *and* same relative order: filtering rect's
+                // list to exact's membership reproduces exact's list.
+                let e = exact.list(t);
+                let r = rect.list(t);
+                assert!(e.len() <= r.len());
+                let filtered: Vec<u32> =
+                    r.iter().copied().filter(|i| e.contains(i)).collect();
+                assert_eq!(e, &filtered[..], "tile {t} order diverges");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_scatter_matches_serial_reference() {
+        // Enough splats to span several scatter chunks.
+        let scene = test_scene(12, 12_000);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let bins = bin_and_sort_rect(&p, &intr, 16, 0.0);
+
+        // The pre-overhaul serial algorithm: index-major pushes, then a
+        // stable per-tile depth sort.
+        let (tiles_x, tiles_y) = intr.tiles(16);
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); tiles_x * tiles_y];
+        for i in 0..p.len() {
+            let [mx, my] = p.means[i];
+            let r = p.radii[i];
+            let x0 = ((mx - r) / 16.0).floor().max(0.0) as u32;
+            let y0 = ((my - r) / 16.0).floor().max(0.0) as u32;
+            let x1 = (((mx + r) / 16.0).floor() as i64).clamp(-1, tiles_x as i64 - 1);
+            let y1 = (((my + r) / 16.0).floor() as i64).clamp(-1, tiles_y as i64 - 1);
+            if x1 < x0 as i64 || y1 < y0 as i64 {
+                continue;
+            }
+            for ty in y0..=y1 as u32 {
+                for tx in x0..=x1 as u32 {
+                    lists[ty as usize * tiles_x + tx as usize].push(i as u32);
+                }
+            }
+        }
+        for list in lists.iter_mut() {
+            list.sort_by_key(|&i| f32_sort_key(p.depths[i as usize]));
+        }
+        assert!(p.len() > 2 * SCATTER_CHUNK, "scene too small to exercise chunking");
+        for t in 0..bins.tile_count() {
+            assert_eq!(bins.list(t), &lists[t][..], "tile {t}");
         }
     }
 
@@ -237,7 +521,7 @@ mod tests {
 
     #[test]
     fn tile_origin_math() {
-        let bins = TileBins { tiles_x: 4, tiles_y: 3, tile_size: 16, lists: vec![] };
+        let bins = TileBins::empty(4, 3, 16);
         assert_eq!(bins.tile_origin(0), (0.0, 0.0));
         assert_eq!(bins.tile_origin(5), (16.0, 16.0));
         assert_eq!(bins.tile_origin(11), (48.0, 32.0));

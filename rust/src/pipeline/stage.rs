@@ -26,14 +26,17 @@
 //!   [`FrameWorkload::aggregate`] collapses it into the O(tiles)
 //!   [`AggregateWorkload`] the admission controller's fast rung-pricing
 //!   path re-scales.
-//! * [`PipelinedSession`] — the double-buffered frame-slot state machine
-//!   for async frame pipelining: frame N+1's frontend runs concurrently
-//!   with frame N's rasterization on a split thread budget, bitwise
-//!   invisible in the output.
+//! * [`PipelinedSession`] — the frame-queue state machine for async
+//!   frame pipelining: frame N+1's frontend runs concurrently with
+//!   queued frames' rasterization on a split thread budget, bitwise
+//!   invisible in the output. At depth 3 rasterization is interleaved
+//!   at [`RasterChunk`] (tile-range) granularity so two frames' raster
+//!   work can straddle one dispatch.
 //!
 //! The coordinator composes these as trait objects; no stage knows which
 //! hardware variant is being modeled.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::camera::{Intrinsics, Pose};
@@ -42,7 +45,7 @@ use crate::lumina::rc::{CacheDelta, CacheSnapshot, CacheStats};
 use crate::lumina::s2::{S2Scheduler, SortView};
 use crate::pipeline::image::Image;
 use crate::pipeline::project::{project, ProjectedScene};
-use crate::pipeline::raster::{rasterize, RasterConfig, RasterStats};
+use crate::pipeline::raster::{rasterize, PartialRaster, RasterConfig, RasterStats};
 use crate::pipeline::sort::{bin_and_sort, TileBins};
 use crate::scene::GaussianScene;
 use crate::util::par;
@@ -74,6 +77,12 @@ pub struct FrameWorkload {
     pub sorted: bool,
     /// Tile-list entries produced by sorting (0 when `!sorted`).
     pub sort_entries: usize,
+    /// Candidate (splat, tile) pairs the binning rect walk examined
+    /// before exact-intersection culling (0 when `!sorted` — S²-shared
+    /// frames reuse the leader's bins without re-testing). The frontend
+    /// cost models price the per-candidate intersection tests from
+    /// this; `sort_entries` only counts the survivors.
+    pub bin_candidates: usize,
     /// Gaussians whose SH color / screen geometry were re-evaluated for
     /// the current pose (the per-frame S² refresh; 0 without S²).
     pub refreshed_gaussians: usize,
@@ -123,10 +132,11 @@ impl FrameWorkload {
             tile_size: bins.tile_size,
             tiles_x: bins.tiles_x,
             tiles_y: bins.tiles_y,
-            tile_list_lens: bins.lists.iter().map(|l| l.len()).collect(),
+            tile_list_lens: (0..bins.tile_count()).map(|t| bins.list(t).len()).collect(),
             scene_gaussians,
             sorted: frontend.sorted,
             sort_entries: frontend.sort_entries,
+            bin_candidates: frontend.bin_candidates,
             refreshed_gaussians: frontend.refreshed_gaussians,
             consumed: raster.consumed,
             significant: raster.significant,
@@ -149,6 +159,7 @@ impl FrameWorkload {
             scene_gaussians: self.scene_gaussians,
             sorted: self.sorted,
             sort_entries: self.sort_entries,
+            bin_candidates: self.bin_candidates,
             refreshed_gaussians: self.refreshed_gaussians,
         }
     }
@@ -194,6 +205,7 @@ impl FrameWorkload {
             scene_gaussians: w.scene_gaussians,
             sorted: w.sorted,
             sort_entries: w.sort_entries,
+            bin_candidates: w.bin_candidates,
             refreshed_gaussians: w.refreshed_gaussians,
             cache_shared: w.cache_shared,
             swap_bytes: w.swap_bytes,
@@ -295,6 +307,7 @@ impl FrameWorkload {
     fn scale_gaussian_load(&mut self, f: f64) {
         self.scene_gaussians = scale_round(self.scene_gaussians, f);
         self.sort_entries = scale_round(self.sort_entries, f);
+        self.bin_candidates = scale_round(self.bin_candidates, f);
         self.refreshed_gaussians = scale_round(self.refreshed_gaussians, f);
         for l in self.tile_list_lens.iter_mut() {
             *l = scale_round(*l, f);
@@ -326,6 +339,7 @@ impl FrameWorkload {
         self.tiles_x = new_w.div_ceil(self.tile_size.max(1));
         self.tiles_y = new_h.div_ceil(self.tile_size.max(1));
         self.sort_entries = scale_round(self.sort_entries, entry_scale);
+        self.bin_candidates = scale_round(self.bin_candidates, entry_scale);
         // Tile lists: preserve the scaled total, spread uniformly — the
         // admission estimate does not track spatial distribution.
         let total: usize = self.tile_list_lens.iter().sum();
@@ -389,6 +403,9 @@ pub struct FrontendWork {
     pub scene_gaussians: usize,
     pub sorted: bool,
     pub sort_entries: usize,
+    /// Candidate (splat, tile) pairs the binning stage intersection-tested
+    /// (0 when `!sorted`).
+    pub bin_candidates: usize,
     pub refreshed_gaussians: usize,
 }
 
@@ -438,6 +455,9 @@ pub struct AggregateWorkload {
     pub scene_gaussians: usize,
     pub sorted: bool,
     pub sort_entries: usize,
+    /// Candidate (splat, tile) pairs the binning stage intersection-tested
+    /// (0 when `!sorted`), mirrored from the per-pixel record.
+    pub bin_candidates: usize,
     pub refreshed_gaussians: usize,
     /// Shared-cache scope flag, mirrored from the per-pixel record so
     /// both pricing paths charge the same contention.
@@ -453,6 +473,7 @@ impl AggregateWorkload {
             scene_gaussians: self.scene_gaussians,
             sorted: self.sorted,
             sort_entries: self.sort_entries,
+            bin_candidates: self.bin_candidates,
             refreshed_gaussians: self.refreshed_gaussians,
         }
     }
@@ -514,6 +535,7 @@ impl AggregateWorkload {
     fn scale_gaussian_load(&mut self, f: f64) {
         self.scene_gaussians = scale_round(self.scene_gaussians, f);
         self.sort_entries = scale_round(self.sort_entries, f);
+        self.bin_candidates = scale_round(self.bin_candidates, f);
         self.refreshed_gaussians = scale_round(self.refreshed_gaussians, f);
         for t in self.tiles.iter_mut() {
             t.list_len = scale_round(t.list_len, f);
@@ -597,6 +619,7 @@ impl AggregateWorkload {
             scene_gaussians: self.scene_gaussians,
             sorted: self.sorted,
             sort_entries: scale_round(self.sort_entries, entry_scale),
+            bin_candidates: scale_round(self.bin_candidates, entry_scale),
             refreshed_gaussians: self.refreshed_gaussians,
             cache_shared: self.cache_shared,
             swap_bytes: self.swap_bytes,
@@ -616,6 +639,9 @@ pub struct FrontendOutput {
     pub sorted: bool,
     /// Tile-list entries sorted (0 when reused).
     pub sort_entries: usize,
+    /// Candidate (splat, tile) pairs the binning stage intersection-tested
+    /// (0 when reused) — see [`TileBins::rect_candidates`].
+    pub bin_candidates: usize,
     /// Gaussians refreshed for the current pose (S² only).
     pub refreshed_gaussians: usize,
 }
@@ -697,6 +723,7 @@ impl FrontendStage {
                     bins: f.bins,
                     sorted: f.work.sorted,
                     sort_entries: f.work.sort_entries,
+                    bin_candidates: f.work.bin_candidates,
                     refreshed_gaussians: f.work.refreshed_gaussians,
                 }
             }
@@ -704,11 +731,13 @@ impl FrontendStage {
                 let projected = project(scene, pose, intr, *near, *far, 0.0);
                 let bins = bin_and_sort(&projected, intr, *tile_size, 0.0);
                 let sort_entries = bins.total_entries();
+                let bin_candidates = bins.rect_candidates();
                 FrontendOutput {
                     projected,
                     bins,
                     sorted: true,
                     sort_entries,
+                    bin_candidates,
                     refreshed_gaussians: 0,
                 }
             }
@@ -739,6 +768,54 @@ pub struct RasterFrame {
     pub work: RasterWork,
 }
 
+/// Default number of [`RasterChunk`] sub-stages a frame's rasterization
+/// is split into under pipelining (`pool.raster_substages`). Should be
+/// at least `pipeline_depth - 1` so each dispatch has a sub-frame unit
+/// of raster work to interleave.
+pub const DEFAULT_RASTER_SUBSTAGES: usize = 4;
+
+/// One deterministic sub-stage of a frame's rasterization: a contiguous
+/// row-major tile range. The schedule-granularity seam for
+/// `pipeline_depth > 2`: [`PipelinedSession`] dispatches chunks instead
+/// of whole frames, so one frame's raster work can straddle two
+/// dispatches while later frontends run.
+#[derive(Debug, Clone)]
+pub struct RasterChunk {
+    /// Sub-stage index within the frame (0-based).
+    pub index: usize,
+    /// Total sub-stages the frame was split into.
+    pub count: usize,
+    /// The tiles (row-major indices into the frame's [`TileBins`]) this
+    /// sub-stage rasterizes.
+    pub tiles: std::ops::Range<usize>,
+}
+
+impl RasterChunk {
+    /// Whether this is the frame's final sub-stage — the one whose
+    /// [`RasterBackend::render_chunk`] call yields the frame.
+    pub fn is_last(&self) -> bool {
+        self.index + 1 == self.count
+    }
+
+    /// Split `tile_count` tiles into at most `substages` contiguous
+    /// near-equal ranges covering every tile exactly once. Always
+    /// returns at least one chunk so the frame-yielding `is_last` call
+    /// happens even for degenerate grids.
+    pub fn plan(tile_count: usize, substages: usize) -> Vec<RasterChunk> {
+        let count = substages.max(1).min(tile_count.max(1));
+        let base = tile_count / count;
+        let rem = tile_count % count;
+        let mut chunks = Vec::with_capacity(count);
+        let mut start = 0;
+        for index in 0..count {
+            let len = base + usize::from(index < rem);
+            chunks.push(RasterChunk { index, count, tiles: start..start + len });
+            start += len;
+        }
+        chunks
+    }
+}
+
 /// The rasterization stage behind one seam: plain, radiance-cached, or
 /// DS-2 — the coordinator neither knows nor cares which.
 pub trait RasterBackend: Send {
@@ -753,6 +830,27 @@ pub trait RasterBackend: Send {
         width: usize,
         height: usize,
     ) -> RasterFrame;
+
+    /// Rasterize one sub-stage of a frame. Chunks of a frame arrive in
+    /// order (`0..count`) with the same `projected`/`bins`, and the
+    /// `is_last` call returns the finished frame. The default keeps
+    /// stateless backends correct by deferring the whole frame to the
+    /// last chunk — bitwise identical, just without sub-frame overlap;
+    /// backends that can accumulate (see [`PlainRaster`]) override it.
+    fn render_chunk(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+        chunk: &RasterChunk,
+    ) -> Option<RasterFrame> {
+        if chunk.is_last() {
+            Some(self.render(projected, bins, width, height))
+        } else {
+            None
+        }
+    }
 
     /// Post-process the framebuffer into the session's output resolution
     /// (identity for everything but DS-2's 2x upsample).
@@ -775,23 +873,25 @@ pub trait RasterBackend: Send {
     fn install_cache_snapshot(&mut self, _snapshot: Arc<CacheSnapshot>, _sharers: usize) {}
 }
 
-/// Exact 3DGS rasterization (no cache).
-pub struct PlainRaster;
+/// Exact 3DGS rasterization (no cache). Holds the partially rasterized
+/// frame between [`RasterBackend::render_chunk`] calls so sub-stage
+/// dispatch does real incremental work instead of deferring to the last
+/// chunk.
+#[derive(Default)]
+pub struct PlainRaster {
+    partial: Option<PartialRaster>,
+}
 
-impl RasterBackend for PlainRaster {
-    fn label(&self) -> &'static str {
-        "plain"
+impl PlainRaster {
+    pub fn new() -> Self {
+        PlainRaster::default()
     }
 
-    fn render(
-        &mut self,
-        projected: &ProjectedScene,
-        bins: &TileBins,
-        width: usize,
-        height: usize,
-    ) -> RasterFrame {
-        let cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
-        let out = rasterize(projected, bins, width, height, &cfg);
+    fn raster_config() -> RasterConfig {
+        RasterConfig { collect_stats: true, sig_record_k: 0 }
+    }
+
+    fn frame_from(out: crate::pipeline::raster::RasterOutput, width: usize, height: usize) -> RasterFrame {
         let stats = out.stats.expect("stats requested");
         RasterFrame {
             image: out.image,
@@ -806,6 +906,47 @@ impl RasterBackend for PlainRaster {
                 cache_shared: false,
                 swap_bytes: 0,
             },
+        }
+    }
+}
+
+impl RasterBackend for PlainRaster {
+    fn label(&self) -> &'static str {
+        "plain"
+    }
+
+    fn render(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+    ) -> RasterFrame {
+        self.partial = None;
+        let out = rasterize(projected, bins, width, height, &Self::raster_config());
+        Self::frame_from(out, width, height)
+    }
+
+    fn render_chunk(
+        &mut self,
+        projected: &ProjectedScene,
+        bins: &TileBins,
+        width: usize,
+        height: usize,
+        chunk: &RasterChunk,
+    ) -> Option<RasterFrame> {
+        if chunk.index == 0 {
+            self.partial = None;
+        }
+        let acc = self
+            .partial
+            .get_or_insert_with(|| PartialRaster::new(bins, width, height, &Self::raster_config()));
+        acc.render_tiles(projected, bins, chunk.tiles.clone());
+        if chunk.is_last() {
+            let out = self.partial.take().expect("partial frame present").finish();
+            Some(Self::frame_from(out, width, height))
+        } else {
+            None
         }
     }
 }
@@ -842,50 +983,95 @@ pub struct CompletedFrame {
     pub raster: RasterFrame,
 }
 
-/// The double-buffered frame-slot state machine: the unit of
-/// stage-level scheduling.
+/// A queued frame: frontend done, rasterization split into
+/// [`RasterChunk`]s and partially dispatched.
+struct InFlightFrame {
+    frame: PendingFrame,
+    chunks: Vec<RasterChunk>,
+    /// Next chunk index to dispatch (chunks run strictly in order).
+    next_chunk: usize,
+}
+
+impl InFlightFrame {
+    /// Chunks to dispatch per advance so the frame's raster finishes
+    /// within `cap` (= depth - 1) dispatches of being fed.
+    fn burst(&self, cap: usize) -> usize {
+        self.chunks.len().div_ceil(cap.max(1)).max(1)
+    }
+}
+
+/// The pipelined frame-queue state machine: the unit of stage-level
+/// scheduling.
 ///
-/// At depth 2 a session holds one frame *in flight* — its frontend
-/// (projection + S² speculative sort) has run, its rasterization has
-/// not — so each [`Self::advance`] dispatch runs frame N+1's frontend
-/// concurrently with frame N's rasterization on a split thread budget.
-/// The two stages touch disjoint state (the frontend owns the S² shared
-/// sort, the raster backend owns the radiance cache), and each
-/// session's frontends and rasters stay strictly frame-ordered, so the
-/// overlap is bitwise invisible in the output: depth 2 produces exactly
-/// the frames depth 1 does, at any thread count (`tests/sessions.rs`).
+/// A session holds up to `depth - 1` frames *in flight* — their
+/// frontends (projection + S² speculative sort) have run, their
+/// rasterization has not finished — and each [`Self::advance`] dispatch
+/// runs the next frame's frontend concurrently with queued frames'
+/// raster sub-stages ([`RasterChunk`]s) on a split thread budget.
 ///
-/// Depth 1 keeps today's synchronous semantics — a fed frame completes
-/// in the same dispatch — and is the determinism baseline.
+/// * Depth 1 is synchronous: a fed frame completes in the same
+///   dispatch — the determinism baseline.
+/// * Depth 2 is the classic double buffer: one frame in flight, its
+///   whole raster overlapping the next frontend.
+/// * Depth 3 holds two frames in flight and interleaves their raster
+///   work at chunk granularity: each dispatch finishes the head's
+///   remaining chunks and starts a burst of the second frame's, so a
+///   frame's rasterization straddles two dispatches. Meaningful only
+///   when `raster_substages >= depth - 1`; fewer sub-stages degenerate
+///   to depth-2 scheduling.
+///
+/// Raster chunks only ever run for frames fed on *earlier* dispatches
+/// (their frontends are complete), frames rasterize strictly in feed
+/// order, and chunks run in order within a frame — so the overlap is
+/// bitwise invisible in the output: any depth produces exactly the
+/// frames depth 1 does, at any thread count (`tests/sessions.rs`).
 pub struct PipelinedSession {
     depth: usize,
-    slot: Option<PendingFrame>,
+    substages: usize,
+    queue: VecDeque<InFlightFrame>,
 }
 
 impl PipelinedSession {
-    /// `depth` is clamped to the supported 1 (synchronous) ..= 2
-    /// (double-buffered) range.
+    /// `depth` is clamped to the supported 1 (synchronous) ..= 3
+    /// (chunk-interleaved) range; sub-stage count defaults to
+    /// [`DEFAULT_RASTER_SUBSTAGES`].
     pub fn new(depth: usize) -> Self {
-        PipelinedSession { depth: depth.clamp(1, 2), slot: None }
+        Self::with_substages(depth, DEFAULT_RASTER_SUBSTAGES)
+    }
+
+    /// As [`Self::new`] with an explicit raster sub-stage count
+    /// (`pool.raster_substages`; clamped to >= 1).
+    pub fn with_substages(depth: usize, substages: usize) -> Self {
+        PipelinedSession {
+            depth: depth.clamp(1, 3),
+            substages: substages.max(1),
+            queue: VecDeque::new(),
+        }
     }
 
     pub fn depth(&self) -> usize {
         self.depth
     }
 
-    /// Frames whose frontend ran but whose raster has not (0 or 1).
+    /// Raster sub-stages each frame is split into.
+    pub fn substages(&self) -> usize {
+        self.substages
+    }
+
+    /// Frames whose frontend ran but whose raster has not finished
+    /// (0 ..= depth - 1).
     pub fn in_flight(&self) -> usize {
-        usize::from(self.slot.is_some())
+        self.queue.len()
     }
 
     /// One dispatch of the state machine: feed `next`'s frontend (when
-    /// given) while rasterizing the in-flight frame (when one exists),
+    /// given) while dispatching queued frames' raster chunks,
     /// overlapping the two on a split thread budget when both are
     /// ready. Returns the frame that completed — `None` on a priming
     /// dispatch that only starts a frontend, or when idle.
     ///
-    /// `width`/`height` are the pipeline resolution the pending frame
-    /// rasterizes at; callers must not change it while a frame is in
+    /// `width`/`height` are the pipeline resolution the queued frames
+    /// rasterize at; callers must not change it while frames are in
     /// flight (drain first — see `Coordinator::set_tier`).
     pub fn advance(
         &mut self,
@@ -908,89 +1094,125 @@ impl PipelinedSession {
                 raster: rf,
             });
         }
-        let pending = self.slot.take();
-        match (next, pending) {
-            (None, None) => None,
-            (Some(n), None) => {
-                // Priming: start the frontend, nothing to rasterize yet.
-                let fo = frontend.run(n.scene, n.pose, n.intr);
-                self.slot = Some(PendingFrame {
-                    frame: n.frame,
-                    scene_gaussians: n.scene.len(),
-                    frontend: fo,
-                });
-                None
+        if next.is_none() && self.queue.is_empty() {
+            return None;
+        }
+        let cap = self.depth - 1;
+        // Chunk plan for this dispatch, fixed before any stage runs.
+        // Only the head may finish (at most one completion per
+        // dispatch); a trailing frame's burst is capped one chunk short
+        // so its frame-yielding call waits until it is the head.
+        let mut plan: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
+        if let Some(head) = self.queue.front() {
+            let end = if next.is_none() || self.queue.len() >= cap {
+                // Drain, or the queue is full and must yield a slot:
+                // finish the head.
+                head.chunks.len()
+            } else {
+                (head.next_chunk + head.burst(cap)).min(head.chunks.len())
+            };
+            if end > head.next_chunk {
+                plan.push((0, head.next_chunk..end));
             }
-            (None, Some(p)) => {
-                // Drain: rasterize the in-flight frame alone.
-                let rf = raster.render(&p.frontend.projected, &p.frontend.bins, width, height);
-                Some(CompletedFrame {
-                    frame: p.frame,
-                    scene_gaussians: p.scene_gaussians,
-                    frontend: p.frontend,
-                    raster: rf,
-                })
-            }
-            (Some(n), Some(p)) => {
-                // Steady state: frame N+1's frontend overlaps frame N's
-                // rasterization.
-                let (rf, fo) = run_overlapped(frontend, raster, &n, &p, width, height);
-                self.slot = Some(PendingFrame {
-                    frame: n.frame,
-                    scene_gaussians: n.scene.len(),
-                    frontend: fo,
-                });
-                Some(CompletedFrame {
-                    frame: p.frame,
-                    scene_gaussians: p.scene_gaussians,
-                    frontend: p.frontend,
-                    raster: rf,
-                })
+            if next.is_some() && self.queue.len() >= cap && self.queue.len() >= 2 {
+                let q1 = &self.queue[1];
+                let end = (q1.next_chunk + q1.burst(cap)).min(q1.chunks.len() - 1);
+                if end > q1.next_chunk {
+                    plan.push((1, q1.next_chunk..end));
+                }
             }
         }
+        let (rf, fo) =
+            run_dispatch(frontend, raster, next.as_ref(), &self.queue, &plan, width, height);
+        for (qi, r) in &plan {
+            self.queue[*qi].next_chunk = r.end;
+        }
+        let completed = rf.map(|rf| {
+            let head = self.queue.pop_front().expect("raster output implies a head frame");
+            debug_assert_eq!(head.next_chunk, head.chunks.len());
+            CompletedFrame {
+                frame: head.frame.frame,
+                scene_gaussians: head.frame.scene_gaussians,
+                frontend: head.frame.frontend,
+                raster: rf,
+            }
+        });
+        if let (Some(n), Some(fo)) = (next, fo) {
+            let chunks = RasterChunk::plan(fo.bins.tile_count(), self.substages);
+            self.queue.push_back(InFlightFrame {
+                frame: PendingFrame {
+                    frame: n.frame,
+                    scene_gaussians: n.scene.len(),
+                    frontend: fo,
+                },
+                chunks,
+                next_chunk: 0,
+            });
+        }
+        completed
     }
 }
 
-/// Run the pending frame's raster stage and the next frame's frontend
-/// stage, concurrently when the thread budget allows. The stages are
-/// independent (disjoint mutable state, no dataflow between them), so
-/// concurrent and sequential execution produce identical results — the
-/// budget only decides wall-clock time.
-fn run_overlapped(
+/// Run this dispatch's raster chunk plan and (when fed) the next
+/// frame's frontend stage, concurrently when the thread budget allows.
+/// The stages are independent (disjoint mutable state, no dataflow
+/// between them — the plan only covers frames whose frontends already
+/// ran), so concurrent and sequential execution produce identical
+/// results; the budget only decides wall-clock time. Returns the
+/// finished head frame when the plan reached its last chunk, and the
+/// frontend output when `next` was fed.
+fn run_dispatch(
     frontend: &mut FrontendStage,
     raster: &mut dyn RasterBackend,
-    next: &NextFrameInput<'_>,
-    pending: &PendingFrame,
+    next: Option<&NextFrameInput<'_>>,
+    queue: &VecDeque<InFlightFrame>,
+    plan: &[(usize, std::ops::Range<usize>)],
     width: usize,
     height: usize,
-) -> (RasterFrame, FrontendOutput) {
+) -> (Option<RasterFrame>, Option<FrontendOutput>) {
+    let run_plan = |raster: &mut dyn RasterBackend| {
+        let mut out = None;
+        for (qi, chunks) in plan {
+            let fe = &queue[*qi].frame.frontend;
+            for ci in chunks.clone() {
+                let chunk = &queue[*qi].chunks[ci];
+                if let Some(rf) =
+                    raster.render_chunk(&fe.projected, &fe.bins, width, height, chunk)
+                {
+                    out = Some(rf);
+                }
+            }
+        }
+        out
+    };
+    let Some(n) = next else {
+        return (run_plan(raster), None);
+    };
     let total = par::num_threads();
-    if total < 2 {
-        // A single worker gains nothing from two OS threads.
-        let p = &pending.frontend;
-        let rf = raster.render(&p.projected, &p.bins, width, height);
-        let fo = frontend.run(next.scene, next.pose, next.intr);
-        return (rf, fo);
+    if total < 2 || plan.is_empty() {
+        // A single worker gains nothing from two OS threads; an empty
+        // plan has nothing to overlap with.
+        let rf = run_plan(raster);
+        let fo = frontend.run(n.scene, n.pose, n.intr);
+        return (rf, Some(fo));
     }
     // Stage-level dispatch: the raster stage (typically the heavier) takes
     // the front share of the split budget, the frontend the rest; each
     // stage thread installs its share thread-locally so the nested
     // `par_*` calls cannot oversubscribe the machine.
     let (raster_share, frontend_share) = par::split_pair(total);
-    let projected = &pending.frontend.projected;
-    let bins = &pending.frontend.bins;
     std::thread::scope(|scope| {
-        let rh = scope.spawn(move || {
+        let rh = scope.spawn(|| {
             let _budget = par::local_budget_guard(raster_share);
-            raster.render(projected, bins, width, height)
+            run_plan(raster)
         });
         let fh = scope.spawn(move || {
             let _budget = par::local_budget_guard(frontend_share);
-            frontend.run(next.scene, next.pose, next.intr)
+            frontend.run(n.scene, n.pose, n.intr)
         });
         let rf = rh.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
         let fo = fh.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
-        (rf, fo)
+        (rf, Some(fo))
     })
 }
 
@@ -1041,7 +1263,7 @@ mod tests {
         let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
         let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
         let fo = fe.run(&scene, &pose, &intr);
-        let mut raster = PlainRaster;
+        let mut raster = PlainRaster::new();
         let frame = raster.render(&fo.projected, &fo.bins, intr.width, intr.height);
         let w = FrameWorkload::from_stages(0, scene.len(), &fo, frame.work);
 
@@ -1092,7 +1314,7 @@ mod tests {
 
         // Reference: synchronous.
         let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
-        let mut raster = PlainRaster;
+        let mut raster = PlainRaster::new();
         let mut reference = Vec::new();
         for pose in &poses {
             let fo = fe.run(&scene, pose, &intr);
@@ -1102,7 +1324,7 @@ mod tests {
 
         // Pipelined: feed all poses, then drain.
         let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
-        let mut raster = PlainRaster;
+        let mut raster = PlainRaster::new();
         let mut pipe = PipelinedSession::new(2);
         assert_eq!(pipe.depth(), 2);
         let mut got = Vec::new();
@@ -1141,15 +1363,90 @@ mod tests {
         let intr = Intrinsics::with_fov(128, 128, 0.9);
         let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
         let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
-        let mut raster = PlainRaster;
+        let mut raster = PlainRaster::new();
         let mut pipe = PipelinedSession::new(1);
         let next = NextFrameInput { frame: 0, scene: &scene, pose: &pose, intr: &intr };
         let done = pipe.advance(&mut fe, &mut raster, Some(next), intr.width, intr.height);
         assert!(done.is_some(), "depth 1 completes the fed frame immediately");
         assert_eq!(pipe.in_flight(), 0);
-        // Depths outside 1..=2 clamp.
+        // Depths outside 1..=3 clamp.
         assert_eq!(PipelinedSession::new(0).depth(), 1);
-        assert_eq!(PipelinedSession::new(7).depth(), 2);
+        assert_eq!(PipelinedSession::new(7).depth(), 3);
+    }
+
+    #[test]
+    fn depth_three_session_interleaves_chunks_and_matches_synchronous() {
+        // Depth-3 chunk interleaving must produce exactly the frames of
+        // back-to-back stepping, two dispatches behind, with raster
+        // work genuinely split across dispatches.
+        let scene = test_scene(9, 3000);
+        let intr = Intrinsics::with_fov(128, 128, 0.9);
+        let poses: Vec<Pose> = (0..5)
+            .map(|i| {
+                Pose::look_at(Vec3::new(0.1 * i as f32, 0.0, -4.0), Vec3::ZERO)
+            })
+            .collect();
+
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let mut raster = PlainRaster::new();
+        let mut reference = Vec::new();
+        for pose in &poses {
+            let fo = fe.run(&scene, pose, &intr);
+            let rf = raster.render(&fo.projected, &fo.bins, intr.width, intr.height);
+            reference.push((rf.image.data.clone(), rf.work.consumed.clone()));
+        }
+
+        let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
+        let mut raster = PlainRaster::new();
+        let mut pipe = PipelinedSession::with_substages(3, 4);
+        assert_eq!(pipe.depth(), 3);
+        assert_eq!(pipe.substages(), 4);
+        let mut got = Vec::new();
+        for (i, pose) in poses.iter().enumerate() {
+            let next = NextFrameInput { frame: i, scene: &scene, pose, intr: &intr };
+            let done =
+                pipe.advance(&mut fe, &mut raster, Some(next), intr.width, intr.height);
+            if i < 2 {
+                assert!(done.is_none(), "dispatch {i} completes nothing while priming");
+            }
+            if let Some(d) = done {
+                assert_eq!(d.frame, i - 2, "completion is two dispatches behind");
+                got.push((d.raster.image.data, d.raster.work.consumed));
+            }
+        }
+        assert_eq!(pipe.in_flight(), 2);
+        while pipe.in_flight() > 0 {
+            let d = pipe
+                .advance(&mut fe, &mut raster, None, intr.width, intr.height)
+                .expect("drain completes the head frame");
+            got.push((d.raster.image.data, d.raster.work.consumed));
+        }
+        assert!(pipe
+            .advance(&mut fe, &mut raster, None, intr.width, intr.height)
+            .is_none());
+        assert_eq!(got.len(), reference.len());
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(g.0, r.0, "frame {i} image diverged");
+            assert_eq!(g.1, r.1, "frame {i} stats diverged");
+        }
+    }
+
+    #[test]
+    fn raster_chunk_plan_covers_tiles_exactly_once() {
+        for (tiles, sub) in [(64, 4), (64, 3), (7, 4), (1, 4), (0, 4), (5, 1), (12, 12)] {
+            let plan = RasterChunk::plan(tiles, sub);
+            assert!(!plan.is_empty());
+            assert!(plan.len() <= sub.max(1));
+            assert!(plan.last().unwrap().is_last());
+            let mut next = 0usize;
+            for (i, c) in plan.iter().enumerate() {
+                assert_eq!(c.index, i);
+                assert_eq!(c.count, plan.len());
+                assert_eq!(c.tiles.start, next, "tiles {tiles} sub {sub} contiguous");
+                next = c.tiles.end;
+            }
+            assert_eq!(next, tiles, "tiles {tiles} sub {sub} covers all tiles");
+        }
     }
 
     #[test]
@@ -1170,6 +1467,7 @@ mod tests {
             scene_gaussians: 10_000,
             sorted: true,
             sort_entries: 50_000,
+            bin_candidates: 60_000,
             refreshed_gaussians: 0,
             consumed: vec![100; side * side],
             significant: vec![10; side * side],
@@ -1192,6 +1490,7 @@ mod tests {
             assert_eq!((agg.tiles_x, agg.tiles_y), (exact.tiles_x, exact.tiles_y));
             assert_eq!(agg.scene_gaussians, exact.scene_gaussians);
             assert_eq!(agg.sort_entries, exact.sort_entries);
+            assert_eq!(agg.bin_candidates, exact.bin_candidates);
             assert_eq!(
                 agg.tiles.iter().map(|t| t.list_len).sum::<usize>(),
                 exact.tile_list_lens.iter().sum::<usize>(),
@@ -1220,7 +1519,7 @@ mod tests {
         let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
         let mut fe = FrontendStage::plain(0.2, 100.0, TILE);
         let fo = fe.run(&scene, &pose, &intr);
-        let mut raster = PlainRaster;
+        let mut raster = PlainRaster::new();
         let frame = raster.render(&fo.projected, &fo.bins, intr.width, intr.height);
         let w = FrameWorkload::from_stages(0, scene.len(), &fo, frame.work);
         assert_eq!(w.pixels(), 128 * 128);

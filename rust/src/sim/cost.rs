@@ -112,9 +112,18 @@ const S2_REFRESH_PROJECTION_FRACTION: f64 = 0.35;
 /// data is much cheaper than producing it, but not free.
 const SORT_BROADCAST_FRACTION: f64 = 0.15;
 
-/// Shared frontend pricing shape: `sorted`-gated projection + sorting
-/// plus the per-frame S² refresh, parameterized by the unit's two time
-/// primitives so GPU and CCU/GSU cannot drift apart.
+/// Exact-intersection tile binning tests every rect-candidate
+/// (splat, tile) pair before admitting it to the sort (see
+/// `pipeline/sort.rs`): a closest-point distance check, much lighter
+/// than a sort entry's key build + merge traffic. Charged as a fraction
+/// of the unit's sorting-time primitive over the *candidate* count, so
+/// the exact test's cost — and the entry shrinkage it buys downstream —
+/// both show up in the sims.
+const BIN_TEST_SORT_FRACTION: f64 = 0.12;
+
+/// Shared frontend pricing shape: `sorted`-gated projection + binning +
+/// sorting plus the per-frame S² refresh, parameterized by the unit's
+/// two time primitives so GPU and CCU/GSU cannot drift apart.
 fn frontend_time_s(
     fw: &FrontendWork,
     proj_time_s: impl Fn(usize) -> f64,
@@ -122,9 +131,11 @@ fn frontend_time_s(
 ) -> f64 {
     // Projection frustum-culls the whole scene, not just survivors.
     let proj = if fw.sorted { proj_time_s(fw.scene_gaussians) } else { 0.0 };
+    let bin =
+        if fw.sorted { BIN_TEST_SORT_FRACTION * sort_time_s(fw.bin_candidates) } else { 0.0 };
     let sort = if fw.sorted { sort_time_s(fw.sort_entries) } else { 0.0 };
     let refresh = S2_REFRESH_PROJECTION_FRACTION * proj_time_s(fw.refreshed_gaussians);
-    proj + sort + refresh
+    proj + bin + sort + refresh
 }
 
 impl FrontendCostModel for GpuModel {
@@ -340,6 +351,7 @@ mod tests {
             scene_gaussians: 10_000,
             sorted: true,
             sort_entries: 50_000,
+            bin_candidates: 60_000,
             refreshed_gaussians: 0,
             consumed: vec![100; side * side],
             significant: vec![10; side * side],
@@ -370,6 +382,7 @@ mod tests {
         let mut w = workload(128 * 128);
         w.sorted = false;
         w.sort_entries = 0;
+        w.bin_candidates = 0;
         let (t, _) = gpu.frontend_cost(&w);
         assert_eq!(t, 0.0, "no refresh and no sort => zero frontend time");
         w.refreshed_gaussians = 5000;
@@ -485,6 +498,28 @@ mod tests {
         let b = gs.shared_sort_broadcast_s(entries);
         assert!(b > 0.0);
         assert!(b < gs.gsu_time_s(entries));
+    }
+
+    #[test]
+    fn binning_candidates_priced_but_cheaper_than_sorting_them() {
+        // The exact-intersection test costs per candidate on sorted
+        // frames — but strictly less than sorting the candidate set
+        // would, or culling could never pay. Shape holds on both
+        // frontend units via the shared pricing helper.
+        let gpu = GpuModel::xavier_volta();
+        let w = workload(128 * 128);
+        let (base, _) = gpu.frontend_cost(&w);
+        let mut more = w.clone();
+        more.bin_candidates *= 2;
+        let (t_more, _) = gpu.frontend_cost(&more);
+        assert!(t_more > base, "more candidates must cost more");
+        let d = t_more - base;
+        assert!(d < gpu.sorting_time_s(w.bin_candidates), "test {d} cheaper than sorting");
+        let gs = GsCoreModel::published();
+        let (base, _) = gs.frontend_work_cost(&w.frontend_work());
+        let (t_more, _) = gs.frontend_work_cost(&more.frontend_work());
+        assert!(t_more > base);
+        assert!(t_more - base < gs.gsu_time_s(w.bin_candidates));
     }
 
     #[test]

@@ -7,7 +7,9 @@ use lumina::lumina::rc::RadianceCache;
 use lumina::math::Vec3;
 use lumina::pipeline::project::project;
 use lumina::pipeline::raster::{composite_pixel, rasterize, RasterConfig};
-use lumina::pipeline::sort::{bin_and_sort, f32_sort_key, order_change_fraction};
+use lumina::pipeline::sort::{
+    bin_and_sort, bin_and_sort_rect, f32_sort_key, order_change_fraction,
+};
 use lumina::scene::synth::{synth_scene, SceneClass};
 use lumina::util::prng::Pcg32;
 use lumina::util::testing::property;
@@ -43,7 +45,7 @@ fn prop_transmittance_in_unit_interval() {
             let tile = (y / TILE) * bins.tiles_x + x / TILE;
             let (c, t, it, sig, _) = composite_pixel(
                 &p,
-                &bins.lists[tile],
+                bins.list(tile),
                 x as f32 + 0.5,
                 y as f32 + 0.5,
                 0,
@@ -154,6 +156,49 @@ fn prop_projection_culls_consistently() {
         for id in &tight.ids {
             assert!(loose_ids.contains(id), "margin {margin} dropped id {id}");
         }
+    });
+}
+
+#[test]
+fn prop_exact_binning_matches_rect_bitwise() {
+    // Exact circle-vs-tile binning may only drop (splat, tile) pairs
+    // whose significance disc misses every pixel center of the tile, so
+    // across tile sizes, margins (0 and > 0), and non-square images the
+    // rasterized frame is bitwise identical to rect binning while the
+    // per-tile entry counts never grow.
+    property(8, |rng| {
+        let scene = synth_scene(SceneClass::SyntheticSmall, rng.next_u64(), 700);
+        let eye = Vec3::new(
+            rng.range_f32(-0.8, 0.8),
+            rng.range_f32(-0.4, 0.4),
+            rng.range_f32(-4.5, -3.0),
+        );
+        let pose = Pose::look_at(eye, Vec3::ZERO);
+        let (w, h) = if rng.below(2) == 0 { (80, 48) } else { (48, 80) };
+        let intr = Intrinsics::with_fov(w, h, 0.9);
+        let margin = if rng.below(2) == 0 { 0.0 } else { rng.range_f32(1.0, 24.0) };
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, margin);
+        let tile_size = [8, TILE, 32][rng.below(3)];
+        let exact = bin_and_sort(&p, &intr, tile_size, margin);
+        let rect = bin_and_sort_rect(&p, &intr, tile_size, margin);
+        assert_eq!(exact.tile_count(), rect.tile_count());
+        assert!(exact.total_entries() <= rect.total_entries());
+        // Exact mode skips never-significant splats before the rect
+        // walk, so its candidate count can only be smaller.
+        assert!(exact.rect_candidates() <= rect.rect_candidates());
+        for tile in 0..exact.tile_count() {
+            assert!(
+                exact.list(tile).len() <= rect.list(tile).len(),
+                "tile {tile} grew under exact binning (margin {margin})"
+            );
+        }
+        let cfg = RasterConfig::default();
+        let out_exact = rasterize(&p, &exact, w, h, &cfg);
+        let out_rect = rasterize(&p, &rect, w, h, &cfg);
+        assert_eq!(
+            out_exact.image.data, out_rect.image.data,
+            "exact binning changed the image (tile {tile_size}, margin {margin})"
+        );
     });
 }
 

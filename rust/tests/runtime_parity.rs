@@ -37,10 +37,10 @@ fn raster_tile_matches_native_compositor() {
     let bins = bin_and_sort(&p, &intr, TILE, 0.0);
 
     // Pick the densest few tiles.
-    let mut order: Vec<usize> = (0..bins.lists.len()).collect();
-    order.sort_by_key(|&t| std::cmp::Reverse(bins.lists[t].len()));
+    let mut order: Vec<usize> = (0..bins.tile_count()).collect();
+    order.sort_by_key(|&t| std::cmp::Reverse(bins.list(t).len()));
     for &tile in order.iter().take(4) {
-        let list = &bins.lists[tile];
+        let list = bins.list(tile);
         if list.is_empty() {
             continue;
         }
@@ -120,10 +120,10 @@ fn alpha_front_matches_native_alpha() {
     let intr = Intrinsics::with_fov(64, 64, 0.9);
     let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
     let bins = bin_and_sort(&p, &intr, TILE, 0.0);
-    let tile = (0..bins.lists.len())
-        .max_by_key(|&t| bins.lists[t].len())
+    let tile = (0..bins.tile_count())
+        .max_by_key(|&t| bins.list(t).len())
         .unwrap();
-    let list: Vec<u32> = bins.lists[tile].iter().take(100).copied().collect();
+    let list: Vec<u32> = bins.list(tile).iter().take(100).copied().collect();
     let (ox, oy) = bins.tile_origin(tile);
     let means: Vec<[f32; 2]> = list.iter().map(|&i| p.means[i as usize]).collect();
     let conics: Vec<[f32; 3]> = list

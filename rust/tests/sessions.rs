@@ -98,6 +98,41 @@ fn pipelined_pool_bitwise_identical_to_synchronous_across_thread_counts() {
 }
 
 #[test]
+fn depth_three_pool_bitwise_identical_to_synchronous_across_thread_counts() {
+    // Depth-3 chunk interleaving — two frames in flight, their raster
+    // dispatched at RasterChunk granularity — must also be invisible:
+    // bitwise equal to the depth-1 baseline at every thread count, for
+    // both even and uneven sub-stage splits of the 16-tile frame.
+    let run = |depth: usize, substages: usize, threads: usize| -> PoolReport {
+        par::set_num_threads(threads);
+        let mut cfg = small_cfg(HardwareVariant::Lumina);
+        cfg.pool.pipeline_depth = depth;
+        cfg.pool.raster_substages = substages;
+        let r = SessionPool::new(cfg, 3).unwrap().run().unwrap();
+        par::set_num_threads(0);
+        r
+    };
+    let reference = run(1, 4, 1);
+    for threads in [1usize, 2, 4] {
+        let depth3 = run(3, 4, threads);
+        assert_eq!(depth3.pipeline_depth, 3);
+        assert_eq!(
+            reference.sessions, depth3.sessions,
+            "depth 3 @ {threads} threads diverged from the synchronous baseline"
+        );
+    }
+    // Uneven split (16 tiles over 7 chunks) and the degenerate
+    // single-chunk plan (depth 3 falls back to depth-2 scheduling).
+    for substages in [7usize, 1] {
+        let odd = run(3, substages, 4);
+        assert_eq!(
+            reference.sessions, odd.sessions,
+            "depth 3 with {substages} sub-stages diverged"
+        );
+    }
+}
+
+#[test]
 fn mid_run_set_tier_drains_in_flight_slot() {
     // Reference: synchronous session, tier swapped after two frames.
     let mut cfg = small_cfg(HardwareVariant::Lumina);
@@ -136,6 +171,52 @@ fn mid_run_set_tier_drains_in_flight_slot() {
     }
     let tiers: Vec<&str> = got.iter().map(|f| f.report.tier).collect();
     assert_eq!(tiers, vec!["full", "full", "half", "half"]);
+}
+
+#[test]
+fn mid_run_set_tier_drains_depth_three_queue() {
+    // Reference: synchronous session, tier swapped after three frames
+    // (at depth 3 the swap lands with frames 1 and 2 mid-flight, so
+    // they must drain under the old tier).
+    let mut cfg = small_cfg(HardwareVariant::Lumina);
+    cfg.pool.pipeline_depth = 1;
+    let mut reference = Coordinator::new(cfg.clone()).unwrap();
+    let mut want = Vec::new();
+    for _ in 0..3 {
+        want.push(reference.step().unwrap());
+    }
+    reference.set_tier(Tier::Half).unwrap();
+    while reference.remaining() > 0 {
+        want.push(reference.step().unwrap());
+    }
+
+    // Depth 3: two priming dispatches, then frame 0 completes while
+    // frame 1 is half-rastered and frame 2 just fed. The swap drains
+    // both queued frames — including the mid-chunk one — under the old
+    // tier; no frame may be lost, reordered, or re-rendered.
+    cfg.pool.pipeline_depth = 3;
+    cfg.pool.raster_substages = 4;
+    let mut c = Coordinator::new(cfg).unwrap();
+    let mut got = Vec::new();
+    assert!(c.step_pipelined().unwrap().is_none(), "priming dispatch");
+    assert!(c.step_pipelined().unwrap().is_none(), "second priming dispatch");
+    got.push(c.step_pipelined().unwrap().expect("frame 0 completes"));
+    assert_eq!(c.in_flight(), 2, "frames 1 and 2 are mid-flight");
+    c.set_tier(Tier::Half).unwrap();
+    assert_eq!(c.in_flight(), 2, "drained frames 1 and 2 await pickup");
+    while got.len() < want.len() {
+        if let Some(f) = c.step_pipelined().unwrap() {
+            got.push(f);
+        }
+    }
+    assert_eq!(c.remaining(), 0);
+    assert_eq!(c.in_flight(), 0);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.report, w.report, "frame {i} report diverged");
+        assert_eq!(g.image.data, w.image.data, "frame {i} image diverged");
+    }
+    let tiers: Vec<&str> = got.iter().map(|f| f.report.tier).collect();
+    assert_eq!(tiers, vec!["full", "full", "full", "half"]);
 }
 
 #[test]
