@@ -1,0 +1,6 @@
+fn main() {
+    // `tests/loom.rs` is gated on the custom `--cfg loom` (set by the CI
+    // analysis job); declare it so `unexpected_cfgs` stays deny-clean in
+    // normal builds.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
+}

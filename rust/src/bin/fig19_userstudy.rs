@@ -1,4 +1,4 @@
-//! Fig. 19 — user study (SIMULATED; see DESIGN.md §6).
+//! Fig. 19 — user study (SIMULATED; see DESIGN.md §8).
 //!
 //! The paper ran a 30-participant 2IFC study: 73% noticed no difference
 //! between Lumina and baseline 3DGS; of those who did, preference split

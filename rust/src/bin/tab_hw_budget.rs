@@ -63,7 +63,7 @@ fn main() {
         "~40 B"
     );
     // Area: the paper's 1.05 mm^2 at 12 nm for 64 NRUs + SRAMs. We carry
-    // the published figure (no RTL in this reproduction; DESIGN.md §6).
+    // the published figure (no RTL in this reproduction; DESIGN.md §8).
     println!(
         "{:<34} {:>14} {:>14}",
         "area (published, 12 nm)", "1.05 mm^2", "1.05 mm^2"

@@ -1,6 +1,6 @@
 //! Camera substrate: intrinsics, SE(3) poses, and motion trajectories.
 //!
-//! Trajectories substitute for the paper's capture data (DESIGN.md §6):
+//! Trajectories substitute for the paper's capture data (DESIGN.md §8):
 //! a smooth VR head-motion model (~25 deg/s average rotation at 90 FPS,
 //! matching the paper's Synthetic-NeRF VR simulation) and a slower,
 //! noisier 30 FPS walk standing in for the Tanks&Temples video clips.

@@ -1,6 +1,6 @@
 //! Camera-motion trajectory synthesis.
 //!
-//! Substitutes for the paper's pose sources (DESIGN.md §6):
+//! Substitutes for the paper's pose sources (DESIGN.md §8):
 //! * `vr_head_motion` — the paper simulates "a typical VR scenario with
 //!   the average head rotation of 25 degrees [per second] at 90 FPS" for
 //!   Synthetic-NeRF scenes.

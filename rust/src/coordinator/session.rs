@@ -478,6 +478,7 @@ impl SessionPool {
     /// the boundary is where cache deltas merge and cluster sorts
     /// re-publish; fully private pools run straight through.
     pub fn run(&mut self) -> Result<PoolReport> {
+        // detlint: allow(wall-clock) -- report-only wall time for PoolReport; never read back into frame math
         let start = Instant::now();
         let mut epochs = Vec::new();
         // (`with_scene` guarantees a non-empty pool; the emptiness
@@ -530,6 +531,7 @@ impl SessionPool {
     pub fn serve(&mut self, ctrl: &AdmissionController) -> Result<PoolReport> {
         anyhow::ensure!(!self.sessions.is_empty(), "cannot serve an empty pool");
         let epoch = self.sessions[0].cfg.pool.epoch_frames.max(1);
+        // detlint: allow(wall-clock) -- report-only wall time for PoolReport; never read back into frame math
         let start = Instant::now();
 
         // Probe: render (without consuming) one frame per session so
@@ -734,6 +736,7 @@ impl SessionPool {
             }
         }
         if !work.is_empty() {
+            // detlint: allow(thread-count) -- scheduling site: sizes outer workers and splits the thread budget; rendered values never depend on it
             let total = par::num_threads();
             // Stage-level scheduling: a depth-d session dispatches up to
             // d stages concurrently (frame N+1's frontend alongside

@@ -1,6 +1,6 @@
 //! Shared support for the per-figure experiment harnesses
 //! (`rust/src/bin/figNN_*.rs`): standard workloads, variant execution,
-//! and table formatting. See DESIGN.md §5 for the experiment index.
+//! and table formatting. See DESIGN.md §7 for the experiment index.
 
 use anyhow::Result;
 

@@ -24,6 +24,18 @@
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Determinism-audit lint floor (DESIGN.md §"Determinism audit"). The
+// unsafe surface is small and concentrated in `util::par` and the sort
+// scatter; these keep it that way:
+// - `unsafe_op_in_unsafe_fn`: an `unsafe fn` body gets no blanket
+//   license — every operation needs its own `unsafe` block (and so its
+//   own `// SAFETY:` comment under detlint R3).
+// - `unused_unsafe`: a stale block would carry a stale SAFETY argument.
+// - `non_ascii_idents`: keeps detlint's byte-offset lexing exact.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_unsafe)]
+#![deny(non_ascii_idents)]
+
 pub mod camera;
 pub mod config;
 pub mod constants;

@@ -28,7 +28,7 @@
 //! ([`CacheHub::merge_in_order`]), so shared-scope output is bitwise
 //! identical at any thread count and pipeline depth.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::constants::{
@@ -354,7 +354,9 @@ fn set_bit(b: &mut u8, bit: u8, value: bool) {
 /// key under which shared-scope sessions pool their snapshots — two
 /// sessions share if and only if their render passes bin the same tile
 /// grid with the same k (tiers change the grid, hence the geometry).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` (derived lexicographically) gives multi-geometry merges a
+/// canonical publish order — see [`CacheHub::merge_in_order`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheGeometry {
     pub tiles_x: usize,
     pub tiles_y: usize,
@@ -734,7 +736,14 @@ impl CacheHub {
     /// epochs charge no snapshot swap.
     pub fn merge_in_order(&self, deltas: Vec<CacheDelta>) {
         let mut map = self.snapshots.lock().expect("cache hub poisoned");
-        let mut dirty: HashMap<CacheGeometry, (GroupedRadianceCache, u64)> = HashMap::new();
+        // BTreeMap, not HashMap: publication below iterates this map, and
+        // the publish order must be a function of the deltas alone (hash
+        // iteration order is seeded per-process). Today publish order is
+        // not value-observable — geometries are independent keys — but
+        // keeping it canonical (ascending CacheGeometry) means log
+        // readers, future cross-geometry accounting, and the detlint R1
+        // rule never have to reason about it.
+        let mut dirty: BTreeMap<CacheGeometry, (GroupedRadianceCache, u64)> = BTreeMap::new();
         for d in deltas {
             if d.log.is_empty() {
                 continue;
@@ -1503,7 +1512,7 @@ mod tests {
         // Quality: overall PSNR stays high, and the *median* hit-pixel
         // color error reproduces the paper's Fig. 12 claim (average color
         // difference ~0.5-1.0 out of 255 for k=5). The tail is heavier
-        // than in trained scenes (DESIGN.md §6: synthetic statistics),
+        // than in trained scenes (DESIGN.md §8: synthetic statistics),
         // which is what cache-aware fine-tuning addresses.
         let exact = rasterize(&p2, &b2, intr.width, intr.height, &RasterConfig::default());
         let psnr = crate::metrics::psnr(&exact.image, &out.image);
@@ -1862,6 +1871,62 @@ mod tests {
         let before = hub.snapshot_for(g);
         hub.merge_in_order(vec![CacheDelta::new(g)]);
         assert!(Arc::ptr_eq(&before, &hub.snapshot_for(g)));
+    }
+
+    #[test]
+    fn multi_geometry_merge_publishes_deterministically() {
+        // Pins the publish contract behind the dirty-map BTreeMap swap:
+        // a merge touching several geometries at once must produce
+        // snapshots that are a pure function of the delta sequence —
+        // identical across repeated merges into fresh hubs — with
+        // last-session-wins within each geometry and untouched
+        // geometries keeping their exact Arc.
+        let ga = geom(4, 5);
+        let gb = geom(8, 5);
+        let gc = geom(2, 5); // never dirtied
+        let ids = [8u32, 16, 24, 32, 40];
+        let mk_delta = |g: CacheGeometry, value: [f32; 3]| {
+            let mut d = CacheDelta::new(g);
+            let group = d.overlay.group_for_tile(0, 0) as u32;
+            let frozen = GroupedRadianceCache::new(g.tiles_x, g.tiles_y, g.k);
+            let mut bank = SharedBank {
+                frozen: frozen.bank_for_tile(0, 0),
+                overlay: d.overlay.bank_for_tile_mut(0, 0),
+                log: &mut d.log,
+                last_in_set: &mut d.last_in_set,
+                stats: &mut d.stats,
+                group,
+            };
+            bank.store(&ids, value);
+            d
+        };
+        // Interleave geometries so the dirty map sees gb before ga is
+        // finished — publish order must still be canonical.
+        let run = || {
+            let hub = CacheHub::new();
+            let untouched = hub.snapshot_for(gc);
+            hub.merge_in_order(vec![
+                mk_delta(ga, [0.1; 3]),
+                mk_delta(gb, [0.4; 3]),
+                mk_delta(ga, [0.9; 3]),
+            ]);
+            assert!(
+                Arc::ptr_eq(&untouched, &hub.snapshot_for(gc)),
+                "untouched geometry must keep its Arc"
+            );
+            assert_eq!(hub.snapshot_for(gc).epoch(), 0);
+            (hub.snapshot_for(ga), hub.snapshot_for(gb))
+        };
+        let (a1, b1) = run();
+        let (a2, b2) = run();
+        assert_eq!(a1.epoch(), 1);
+        assert_eq!(b1.epoch(), 1);
+        assert_eq!(a1.lookup(0, 0, &ids), Some([0.9; 3]), "last session wins");
+        assert_eq!(b1.lookup(0, 0, &ids), Some([0.4; 3]));
+        assert!(a1.cache.state_eq(&a2.cache), "merge must be a pure function of deltas");
+        assert!(b1.cache.state_eq(&b2.cache));
+        assert_eq!(a1.epoch(), a2.epoch());
+        assert_eq!(b1.epoch(), b2.epoch());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! LPIPS in the paper uses a pretrained VGG; no pretrained network is
 //! available at build time, so `lpips_proxy` is a multi-scale
-//! gradient-magnitude perceptual distance (DESIGN.md §6): it responds to
+//! gradient-magnitude perceptual distance (DESIGN.md §8): it responds to
 //! the same artifact classes the paper's LPIPS flags (tile-edge seams,
 //! large-Gaussian smears) and is monotone in perceptual severity, but its
 //! absolute values are not comparable to VGG-LPIPS.

@@ -465,6 +465,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn renders_nonempty_image() {
         let (p, bins, intr) = render_setup(3000);
         let out = rasterize(&p, &bins, intr.width, intr.height, &RasterConfig::default());
@@ -473,6 +474,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn stats_collected_and_sane() {
         let (p, bins, intr) = render_setup(3000);
         let cfg = RasterConfig { collect_stats: true, sig_record_k: 0 };
@@ -493,6 +495,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn sig_records_match_stats() {
         let (p, bins, intr) = render_setup(2000);
         let cfg = RasterConfig { collect_stats: true, sig_record_k: 5 };
@@ -509,6 +512,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn pixel_compositor_matches_rasterize() {
         let (p, bins, intr) = render_setup(1500);
         let out = rasterize(&p, &bins, intr.width, intr.height, &RasterConfig::default());
@@ -526,6 +530,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn gathered_reject_matches_ungathered_reference() {
         // The r2_sig fast reject must be semantically neutral: the
         // gathered compositor agrees bitwise with a raw reference loop
@@ -573,6 +578,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn partial_raster_chunked_matches_whole_frame() {
         // Rendering in arbitrary tile-range sub-stages must be bitwise
         // identical to the one-shot path (the RasterChunk determinism
@@ -601,6 +607,44 @@ mod tests {
     }
 
     #[test]
+    fn tiny_scene_chunked_compositing_matches_whole_frame() {
+        // Miri-sized cousin of `partial_raster_chunked_matches_whole_frame`:
+        // small enough to run interpreted, still driving the parallel
+        // tile map, the compositor, and the PartialRaster accumulator
+        // over multiple sub-stage splits.
+        let scene = test_scene(23, 160);
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let intr = Intrinsics::with_fov(32, 32, 0.9);
+        let p = project(&scene, &pose, &intr, 0.2, 100.0, 0.0);
+        let bins = bin_and_sort(&p, &intr, 16, 0.0);
+        let cfg = RasterConfig { collect_stats: true, sig_record_k: 3 };
+        let whole = rasterize(&p, &bins, intr.width, intr.height, &cfg);
+        let lit = whole.image.data.iter().filter(|p| p[0] + p[1] + p[2] > 0.01).count();
+        assert!(lit > 0, "degenerate scene");
+        for n_chunks in [2usize, 3] {
+            let mut acc = PartialRaster::new(&bins, intr.width, intr.height, &cfg);
+            let n_tiles = bins.tile_count();
+            let per = n_tiles.div_ceil(n_chunks);
+            let mut lo = 0;
+            while lo < n_tiles {
+                let hi = (lo + per).min(n_tiles);
+                acc.render_tiles(&p, &bins, lo..hi);
+                lo = hi;
+            }
+            let out = acc.finish();
+            assert_eq!(out.image.data, whole.image.data, "{n_chunks} chunks");
+            assert_eq!(out.sig_records, whole.sig_records);
+        }
+        // Spot-check the pixel compositor against the full pass.
+        for (x, y) in [(5usize, 7usize), (16, 16), (31, 20)] {
+            let tile = (y / 16) * bins.tiles_x + x / 16;
+            let (c, _, _, _, _) =
+                composite_pixel(&p, bins.list(tile), x as f32 + 0.5, y as f32 + 0.5, 0);
+            assert_eq!(whole.image.at(x, y), c);
+        }
+    }
+
+    #[test]
     fn empty_projection_renders_black() {
         let p = ProjectedScene::default();
         let intr = Intrinsics::with_fov(64, 64, 0.9);
@@ -610,6 +654,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn contribution_profile_normalized_descending() {
         let (p, bins, intr) = render_setup(3000);
         let profiles = contribution_profile(&p, &bins, intr.width, intr.height, 16);
@@ -624,6 +669,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "full-frame render is too slow interpreted")]
     fn non_square_image() {
         let scene = test_scene(22, 1000);
         let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);

@@ -1188,6 +1188,7 @@ fn run_dispatch(
     let Some(n) = next else {
         return (run_plan(raster), None);
     };
+    // detlint: allow(thread-count) -- scheduling site: picks serial vs overlapped stage dispatch and splits the budget; stage outputs are identical either way
     let total = par::num_threads();
     if total < 2 || plan.is_empty() {
         // A single worker gains nothing from two OS threads; an empty

@@ -3,7 +3,7 @@
 //! The paper evaluates on trained 3DGS checkpoints of Synthetic-NeRF,
 //! Tanks&Temples, DeepBlending, and MipNeRF-360. We have no checkpoints,
 //! but every Lumina mechanism keys off *statistics* of those scenes, not
-//! their semantic content (DESIGN.md §6):
+//! their semantic content (DESIGN.md §8):
 //!
 //! * Gaussian count per scene class (Fig. 2a: <1M synthetic, up to >6M U360),
 //! * a log-normal scale distribution with a heavy tail of large splats,

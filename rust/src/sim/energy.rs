@@ -5,7 +5,7 @@
 //!
 //! All values are *component-level* constants, exactly the granularity the
 //! paper's own simulator uses — we start from the same published numbers
-//! rather than re-running synthesis (DESIGN.md §6).
+//! rather than re-running synthesis (DESIGN.md §8).
 
 /// Energy constants for the accelerator datapath + memories.
 #[derive(Debug, Clone, Copy)]

@@ -1,5 +1,5 @@
 //! Mobile Volta GPU cost model (the paper's measurement baseline,
-//! substituted per DESIGN.md §6 by an analytical + trace-driven SIMT
+//! substituted per DESIGN.md §8 by an analytical + trace-driven SIMT
 //! model calibrated to the paper's published anchors: 5-66 FPS across
 //! scene classes, a ~10/23/67 projection/sorting/rasterization split,
 //! and ~69% masked threads during rasterization).
@@ -42,7 +42,7 @@ pub struct GpuModel {
 }
 
 impl GpuModel {
-    /// Calibrated to the paper's published anchors (DESIGN.md §6):
+    /// Calibrated to the paper's published anchors (DESIGN.md §8):
     /// at paper-scale workloads (~1000 Gaussians iterated/pixel, ~10%
     /// significant, 800x800, ~3M sort entries) this lands at ~10 FPS
     /// with a 10/23/67 projection/sorting/rasterization split and ~69%

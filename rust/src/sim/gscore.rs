@@ -6,7 +6,7 @@
 //! decoupling — its blending lanes stall on insignificant Gaussians the
 //! same way GPU warps do, which is why the paper's baseline-hardware
 //! comparison (Fig. 25) favors LuminCore 9.6x vs GSCore 3.2x over the
-//! GPU. We model GSCore from its published anchors (DESIGN.md §6):
+//! GPU. We model GSCore from its published anchors (DESIGN.md §8):
 //! dedicated-unit throughputs for CCU/GSU and a rasterizer whose
 //! end-to-end effect lands at ~3.2x the GPU baseline on paper-scale
 //! workloads.

@@ -2,7 +2,7 @@
 //!
 //! The build image is fully offline; its vendored crate set covers only
 //! the `xla` closure + `anyhow`. Everything else a framework of this
-//! shape normally pulls in is implemented here (DESIGN.md §6):
+//! shape normally pulls in is implemented here (DESIGN.md §8):
 //!
 //! * [`prng`]    — deterministic PCG32 PRNG (replaces `rand`/`rand_chacha`)
 //! * [`par`]     — scoped-thread data parallelism (replaces `rayon`)

@@ -121,7 +121,7 @@ where
         // Dynamic claiming: one item at a time (items are expensive and
         // imbalanced, e.g. image tiles).
         let next = AtomicUsize::new(0);
-        let ptr = SendPtr(out.as_mut_ptr());
+        let ptr = SendPtr::new(out.as_mut_ptr());
         std::thread::scope(|scope| {
             for _ in 0..threads {
                 let next = &next;
@@ -132,8 +132,12 @@ where
                     if i >= n {
                         break;
                     }
-                    // SAFETY: each index claimed exactly once; disjoint
-                    // writes; scope outlives workers.
+                    // SAFETY: `fetch_add` hands each index `i < n` to
+                    // exactly one worker, so no two workers ever write
+                    // the same slot; `out` was resized to `n` slots
+                    // before the scope, so `add(i)` stays in bounds; and
+                    // the scope's borrow of `out` keeps the allocation
+                    // alive until every worker joins.
                     unsafe { *ptr.get().add(i) = Some(f(i)) };
                 });
             }
@@ -175,7 +179,7 @@ where
     let chunks: Vec<(usize, usize)> = (0..n_chunks)
         .map(|i| (i * chunk_size, ((i + 1) * chunk_size).min(data.len())))
         .collect();
-    let ptr = SendPtr(data.as_mut_ptr());
+    let ptr = SendPtr::new(data.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..num_threads().min(n_chunks) {
             let next = &next;
@@ -188,11 +192,14 @@ where
                     break;
                 }
                 let (lo, hi) = chunks[i];
-                // SAFETY: chunks are disjoint ranges of the slice; each is
-                // claimed by exactly one worker via the atomic counter, and
-                // the scope outlives all workers.
-                let slice =
-                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
+                let base = ptr.get();
+                // SAFETY: the `chunks` ranges tile `0..data.len()`
+                // without overlap (`[i*cs, min((i+1)*cs, len))`), and
+                // `fetch_add` hands each range to exactly one worker, so
+                // the reconstituted sub-slices are pairwise disjoint and
+                // in bounds; the scope's borrow of `data` keeps the
+                // allocation alive until every worker joins.
+                let slice = unsafe { std::slice::from_raw_parts_mut(base.add(lo), hi - lo) };
                 f(i, slice);
             });
         }
@@ -227,7 +234,17 @@ where
     });
 }
 
-struct SendPtr<T>(*mut T);
+/// Raw-pointer wrapper that crosses `thread::scope` closure boundaries.
+///
+/// This is the one sanctioned way for the crate's parallel writers (the
+/// claim loops above, the scatter pass in `pipeline::sort`) to share a
+/// base pointer across workers. Every user must uphold the contract in
+/// the `Send`/`Sync` impls below: all dereferences go through
+/// `base.add(k)` for index sets proven pairwise disjoint *before* the
+/// workers start (atomic claim counters or exclusive prefix sums), and
+/// only inside a `thread::scope` whose borrow keeps the allocation
+/// alive until every worker joins.
+pub(crate) struct SendPtr<T>(*mut T);
 
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
@@ -237,26 +254,60 @@ impl<T> Clone for SendPtr<T> {
 impl<T> Copy for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
+    /// Wrap a base pointer for cross-worker sharing (see the type-level
+    /// contract).
+    pub(crate) fn new(ptr: *mut T) -> Self {
+        SendPtr(ptr)
+    }
+
     /// Accessor (method receiver forces whole-struct closure capture, so
     /// the `Send` impl on the wrapper applies rather than the raw field).
-    fn get(&self) -> *mut T {
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }
-// SAFETY: the pointer is only dereferenced on disjoint ranges (see
-// par_chunks_mut) within a thread::scope that outlives all uses.
+// SAFETY: sending the wrapper only moves the pointer *value* to another
+// worker. Dereferences stay sound because every user writes through
+// disjoint index sets — par_map's atomic counter hands each index to
+// exactly one claimant, par_chunks_mut's precomputed (lo, hi) ranges
+// never overlap, and the sort scatter's exclusive prefix sums give each
+// (chunk, tile) pair its own segment — and the enclosing thread::scope
+// borrows the underlying buffer, so it outlives every worker. `T: Send`
+// is required because the pointee is handed to another thread.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: `&SendPtr` only exposes the pointer value via `get()`; shared
+// references to the wrapper enable no aliased *writes* by themselves.
+// Mutation soundness rests on the same disjoint-index discipline as the
+// `Send` impl — two workers holding copies never dereference the same
+// offset.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // Sizes shrink under miri (interpreted execution is ~1000x slower)
+    // while still crossing the dynamic-claim / static-split boundary at
+    // 4096 and exercising multi-chunk claiming.
+    const MAP_N: usize = if cfg!(miri) { 4200 } else { 10_000 };
+    const CHUNKS_N: usize = if cfg!(miri) { 4100 } else { 100_000 };
+    const BLOCKS_N: usize = if cfg!(miri) { 600 } else { 5000 };
+
     #[test]
     fn par_map_matches_serial() {
-        let got = par_map(10_000, |i| i * i);
+        let got = par_map(MAP_N, |i| i * i);
         for (i, v) in got.iter().enumerate() {
             assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_dynamic_claim_path_matches_serial() {
+        // n < 4096 takes the atomic-claim raw-slot path regardless of
+        // the miri scaling above.
+        let got = par_map(1500, |i| i * 3 + 1);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, i * 3 + 1);
         }
     }
 
@@ -268,7 +319,7 @@ mod tests {
 
     #[test]
     fn par_chunks_mut_writes_all() {
-        let mut data = vec![0u32; 100_000];
+        let mut data = vec![0u32; CHUNKS_N];
         par_chunks_mut(&mut data, 1024, |ci, chunk| {
             for (j, v) in chunk.iter_mut().enumerate() {
                 *v = (ci * 1024 + j) as u32;
@@ -353,8 +404,8 @@ mod tests {
     #[test]
     fn par_blocks_covers_range() {
         let hits: Vec<std::sync::atomic::AtomicU32> =
-            (0..5000).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
-        par_blocks(5000, 16, |_b, range| {
+            (0..BLOCKS_N).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        par_blocks(BLOCKS_N, 16, |_b, range| {
             for i in range {
                 hits[i].fetch_add(1, Ordering::Relaxed);
             }

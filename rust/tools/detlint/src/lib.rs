@@ -1,0 +1,911 @@
+//! detlint — the Lumina workspace's determinism static-analysis pass.
+//!
+//! Every seam the crate ships — thread-count-invariant rendering, the
+//! epoch snapshot/merge cache, clustered sorting, the parallel scatter —
+//! rests on one invariant: output is bitwise identical regardless of
+//! thread count, scope, or pipeline depth. The dynamic 1/2/4-thread
+//! comparison tests check that invariant on the inputs they run; this
+//! pass checks for the *sources* of nondeterminism they cannot prove
+//! absent, as four codebase-specific rules:
+//!
+//! * **R1 `hash-order-iter`** — no order-dependent iteration over
+//!   `HashMap`/`HashSet` (`iter`, `keys`, `values`, `drain`, `retain`,
+//!   `into_iter`, `for .. in map`, ...) in the render-path modules
+//!   (`pipeline/`, `lumina/`, `coordinator/`, `scene/`). Hash iteration
+//!   order is seeded per-process; anything it feeds diverges run to run.
+//!   Probe-only maps (`get`/`insert`/`entry`) are fine and unflagged.
+//! * **R2 `wall-clock`** — no `Instant::now` / `SystemTime` reads
+//!   outside `util/bench.rs`; a frame-math path that reads the clock is
+//!   timing-dependent by construction. Measurement sites that only
+//!   *report* (never feed results back into rendering) carry an
+//!   explicit annotation.
+//! * **R3 `missing-safety`** — every `unsafe` block, `unsafe impl`, and
+//!   `unsafe fn` carries a `// SAFETY:` comment stating the argument it
+//!   relies on (for this crate: always a disjoint-writes argument).
+//! * **R4 `thread-count`** — no `par::num_threads()` (or
+//!   `available_parallelism`) reads outside `util/par.rs`, so render
+//!   math cannot branch on worker count. Scheduling sites that only
+//!   split budgets are annotated.
+//!
+//! **Suppression contract:** a violation is silenced only by an
+//! adjacent comment of the form
+//! `detlint: allow(<rule>[, <rule>...]) -- <justification>` on the same
+//! line or in the contiguous comment block immediately above. The
+//! justification text is mandatory; a malformed or unjustified
+//! annotation is itself a violation (`bad-annotation`), and unknown
+//! rule names are rejected. `#[cfg(test)]` modules are exempt from
+//! R1/R2/R4 (determinism tests legitimately read clocks and thread
+//! counts); R3 applies everywhere.
+//!
+//! The scanner is lexical, not an AST walk: it strips comments and
+//! string/char literals with a small state machine, tracks
+//! `#[cfg(test)]` regions by brace depth, and resolves hash-typed
+//! identifiers from same-file declarations. That is deliberately the
+//! right weight: the rules need *type* information to be exact, which
+//! no syntax-only AST has either — and the failure mode of a lexical
+//! false positive is an annotated suppression with a written
+//! justification, which is exactly the audit trail the pass exists to
+//! create. Fixtures under `tests/fixtures/` pin one seeded violation
+//! per rule plus a clean tree, and the self-test asserts `rust/src`
+//! scans clean.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// R1: order-dependent iteration over a hash collection in a
+/// render-path module.
+pub const RULE_HASH_ITER: &str = "hash-order-iter";
+/// R2: wall-clock read outside `util/bench.rs`.
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+/// R3: `unsafe` site without a `// SAFETY:` comment.
+pub const RULE_MISSING_SAFETY: &str = "missing-safety";
+/// R4: worker-count read outside `util/par.rs`.
+pub const RULE_THREAD_COUNT: &str = "thread-count";
+/// A malformed or unjustified `detlint: allow(..)` annotation.
+pub const RULE_BAD_ANNOTATION: &str = "bad-annotation";
+
+/// The suppressible rules (`bad-annotation` cannot be allowed away).
+pub const RULES: [&str; 4] =
+    [RULE_HASH_ITER, RULE_WALL_CLOCK, RULE_MISSING_SAFETY, RULE_THREAD_COUNT];
+
+/// Directories (as path components) whose files are on the render path
+/// and therefore in scope for R1.
+const RENDER_PATH_DIRS: [&str; 4] = ["pipeline", "lumina", "coordinator", "scene"];
+
+/// Iteration methods whose order observes hash layout.
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// One rule violation at a file:line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    /// 1-indexed.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One source line after literal/comment stripping.
+#[derive(Debug, Default, Clone)]
+struct Line {
+    /// Code with comments and string/char-literal contents blanked and
+    /// non-ASCII replaced by spaces (identifiers are ASCII-only in this
+    /// workspace; `lib.rs` denies `non_ascii_idents`).
+    code: String,
+    /// Concatenated comment text of the line.
+    comment: String,
+}
+
+fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// `r"..."` / `r#"..."#` / `br".."` opener at `i`: (prefix length
+/// including the opening quote, hash count).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j - i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Distinguish a char literal from a lifetime at a `'`.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Split `source` into per-line code/comment with literals blanked.
+fn strip(source: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Chr,
+    }
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((len, hashes)) = raw_str_open(&chars, i) {
+                        st = St::RawStr(hashes);
+                        cur.code.push(' ');
+                        i += len;
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                        st = St::Str;
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' && is_char_literal(&chars, i) {
+                    st = St::Chr;
+                    cur.code.push(' ');
+                    i += 1;
+                } else {
+                    cur.code.push(if c.is_ascii() { c } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth <= 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let h = hashes as usize;
+                    let closed = (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        st = St::Code;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            St::Chr => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Mark the line ranges of `#[cfg(test)]`-gated items (brace-tracked).
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let code = &lines[i].code;
+        if code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test") {
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < lines.len() {
+                for ch in lines[j].code.chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                mask[j] = true;
+                if opened && depth <= 0 {
+                    break;
+                }
+                if !opened && j >= i + 5 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Byte offsets of standalone-word occurrences of `word` in `s`.
+fn word_positions(s: &str, word: &str) -> Vec<usize> {
+    let sb = s.as_bytes();
+    let wlen = word.len();
+    let mut out = Vec::new();
+    if wlen == 0 || sb.len() < wlen {
+        return out;
+    }
+    let mut start = 0usize;
+    while let Some(rel) = s[start..].find(word) {
+        let p = start + rel;
+        let before_ok = p == 0 || !is_word_byte(sb[p - 1]);
+        let after_ok = p + wlen >= sb.len() || !is_word_byte(sb[p + wlen]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        start = p + 1;
+    }
+    out
+}
+
+/// Comments attached to line `idx`: its own trailing comment plus the
+/// contiguous comment-only block immediately above (blank lines and
+/// code lines both end the block).
+fn attached_comments<'a>(lines: &'a [Line], idx: usize) -> Vec<&'a str> {
+    let mut out = Vec::new();
+    if !lines[idx].comment.trim().is_empty() {
+        out.push(lines[idx].comment.as_str());
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.code.trim().is_empty() && !l.comment.trim().is_empty() {
+            out.push(l.comment.as_str());
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// A parsed `detlint: allow(...)` annotation.
+struct AllowSpec {
+    rules: Vec<String>,
+    justified: bool,
+}
+
+/// Parse the annotation in a comment, if any. `Some(Err(..))` is a
+/// malformed annotation (reported as `bad-annotation`).
+fn parse_allow(comment: &str) -> Option<Result<AllowSpec, String>> {
+    let pos = comment.find("detlint:")?;
+    let rest = comment[pos + "detlint:".len()..].trim_start();
+    let body = match rest.strip_prefix("allow(") {
+        Some(b) => b,
+        None => return Some(Err("expected `allow(<rule>, ...)` after `detlint:`".to_string())),
+    };
+    let close = match body.find(')') {
+        Some(c) => c,
+        None => return Some(Err("unclosed `allow(` annotation".to_string())),
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(Err("`allow()` names no rules".to_string()));
+    }
+    for r in &rules {
+        if !RULES.contains(&r.as_str()) {
+            return Some(Err(format!("unknown rule `{r}` (known: {})", RULES.join(", "))));
+        }
+    }
+    let tail = body[close + 1..].trim_start();
+    let justified = match tail.strip_prefix("--") {
+        Some(j) => !j.trim().is_empty(),
+        None => false,
+    };
+    Some(Ok(AllowSpec { rules, justified }))
+}
+
+/// Is `rule` suppressed at line `idx` by a justified annotation?
+fn allowed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    attached_comments(lines, idx).iter().any(|c| match parse_allow(c) {
+        Some(Ok(spec)) => spec.justified && spec.rules.iter().any(|r| r == rule),
+        _ => false,
+    })
+}
+
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    attached_comments(lines, idx).iter().any(|c| c.contains("SAFETY:"))
+}
+
+fn in_render_path(rel: &str) -> bool {
+    RENDER_PATH_DIRS.iter().any(|d| {
+        rel.starts_with(&format!("{d}/")) || rel.contains(&format!("/{d}/"))
+    })
+}
+
+/// The identifier declared as `name: ..Hash..` left of a hash-type
+/// occurrence at `hash_pos` (fields, fn params). Backward scan for a
+/// single `:` (skipping `::`), bounded by statement punctuation.
+fn decl_ident_before(code: &str, hash_pos: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut i = hash_pos;
+    while i > 0 {
+        i -= 1;
+        match b[i] {
+            b';' | b'{' | b'}' | b'=' | b'(' | b',' => return None,
+            b':' => {
+                if i > 0 && b[i - 1] == b':' {
+                    i -= 1;
+                    continue;
+                }
+                let mut j = i;
+                while j > 0 && b[j - 1] == b' ' {
+                    j -= 1;
+                }
+                let mut k = j;
+                while k > 0 && is_word_byte(b[k - 1]) {
+                    k -= 1;
+                }
+                if k < j {
+                    return Some(code[k..j].to_string());
+                }
+                return None;
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Identifiers declared with a `HashMap`/`HashSet` type anywhere in the
+/// file (let bindings, struct fields, fn params).
+fn hash_idents(lines: &[Line]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut push = |n: String, names: &mut Vec<String>| {
+        if !n.is_empty() && !names.contains(&n) {
+            names.push(n);
+        }
+    };
+    for l in lines {
+        let code = &l.code;
+        let mut positions = word_positions(code, "HashMap");
+        positions.extend(word_positions(code, "HashSet"));
+        if positions.is_empty() {
+            continue;
+        }
+        let t = code.trim_start();
+        if let Some(rest) = t.strip_prefix("let ") {
+            let rest = rest.trim_start();
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+            let name: String =
+                rest.chars().take_while(|c| c.is_ascii() && is_word_byte(*c as u8)).collect();
+            push(name, &mut names);
+        }
+        for &p in &positions {
+            if let Some(name) = decl_ident_before(code, p) {
+                push(name, &mut names);
+            }
+        }
+    }
+    names
+}
+
+fn violation(rel: &str, idx: usize, rule: &'static str, message: String) -> Violation {
+    Violation { file: rel.to_string(), line: idx + 1, rule, message }
+}
+
+/// R1: hash-order iteration in render-path modules.
+fn rule_hash_iter(rel: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Violation>) {
+    if !in_render_path(rel) {
+        return;
+    }
+    let idents = hash_idents(lines);
+    if idents.is_empty() {
+        return;
+    }
+    for (idx, l) in lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        for name in &idents {
+            for p in word_positions(&l.code, name) {
+                let rest = l.code[p + name.len()..].trim_start();
+                if let Some(m) = rest.strip_prefix('.') {
+                    let meth: String = m
+                        .trim_start()
+                        .chars()
+                        .take_while(|c| c.is_ascii() && is_word_byte(*c as u8))
+                        .collect();
+                    if ITER_METHODS.contains(&meth.as_str())
+                        && !allowed(lines, idx, RULE_HASH_ITER)
+                    {
+                        out.push(violation(
+                            rel,
+                            idx,
+                            RULE_HASH_ITER,
+                            format!(
+                                "`{name}.{meth}()` iterates a hash collection in a \
+                                 render-path module; hash order is nondeterministic — \
+                                 use a BTreeMap/sorted-key walk or annotate why the \
+                                 order cannot be observed"
+                            ),
+                        ));
+                    }
+                }
+            }
+            // `for .. in map` / `for .. in &map` consume the collection
+            // without a method call.
+            if let Some(fp) = word_positions(&l.code, "for").first() {
+                let tail = &l.code[*fp..];
+                if let Some(inp) = word_positions(tail, "in").first() {
+                    let expr = tail[inp + 2..].trim();
+                    let expr = expr.split('{').next().unwrap_or("").trim();
+                    let expr = expr.strip_prefix("&mut ").unwrap_or(expr);
+                    let expr = expr.strip_prefix('&').unwrap_or(expr);
+                    if expr == name && !allowed(lines, idx, RULE_HASH_ITER) {
+                        out.push(violation(
+                            rel,
+                            idx,
+                            RULE_HASH_ITER,
+                            format!(
+                                "`for .. in {name}` iterates a hash collection in a \
+                                 render-path module; hash order is nondeterministic — \
+                                 use a BTreeMap/sorted-key walk or annotate why the \
+                                 order cannot be observed"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// R2: wall-clock reads outside `util/bench.rs`.
+fn rule_wall_clock(rel: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Violation>) {
+    if rel == "util/bench.rs" || rel.ends_with("/util/bench.rs") {
+        return;
+    }
+    for (idx, l) in lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now", "SystemTime::UNIX_EPOCH"] {
+            let hit = l.code.match_indices(pat).any(|(p, _)| {
+                let b = l.code.as_bytes();
+                let before_ok = p == 0 || !is_word_byte(b[p - 1]);
+                let after = p + pat.len();
+                let after_ok = after >= b.len() || !is_word_byte(b[after]);
+                before_ok && after_ok
+            });
+            if hit && !allowed(lines, idx, RULE_WALL_CLOCK) {
+                out.push(violation(
+                    rel,
+                    idx,
+                    RULE_WALL_CLOCK,
+                    format!(
+                        "`{pat}` outside util/bench.rs: wall-clock reads make frame \
+                         math timing-dependent — move the measurement behind the \
+                         bench runner or annotate the measurement site"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// R3: `unsafe` sites without a `// SAFETY:` comment.
+fn rule_missing_safety(rel: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (idx, l) in lines.iter().enumerate() {
+        for p in word_positions(&l.code, "unsafe") {
+            let rest = l.code[p + "unsafe".len()..].trim_start();
+            let kind = if rest.starts_with("impl") {
+                Some("unsafe impl")
+            } else if rest.starts_with("fn") {
+                Some("unsafe fn")
+            } else if rest.starts_with('{') || rest.is_empty() {
+                Some("unsafe block")
+            } else {
+                None
+            };
+            if let Some(kind) = kind {
+                if !has_safety_comment(lines, idx) && !allowed(lines, idx, RULE_MISSING_SAFETY) {
+                    out.push(violation(
+                        rel,
+                        idx,
+                        RULE_MISSING_SAFETY,
+                        format!(
+                            "{kind} without a `// SAFETY:` comment stating the \
+                             disjointness/validity argument it relies on"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// R4: worker-count reads outside `util/par.rs`.
+fn rule_thread_count(rel: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Violation>) {
+    if rel == "util/par.rs" || rel.ends_with("/util/par.rs") {
+        return;
+    }
+    for (idx, l) in lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        for call in ["num_threads", "available_parallelism"] {
+            let hit = word_positions(&l.code, call)
+                .iter()
+                .any(|&p| l.code[p + call.len()..].trim_start().starts_with('('));
+            if hit && !allowed(lines, idx, RULE_THREAD_COUNT) {
+                out.push(violation(
+                    rel,
+                    idx,
+                    RULE_THREAD_COUNT,
+                    format!(
+                        "`{call}()` outside util/par.rs: render math must not branch \
+                         on worker count — restrict reads to scheduling sites and \
+                         annotate them"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Scan one file's source. `rel` is the path relative to the scan root
+/// (used for rule scoping and reporting).
+pub fn scan_file(rel: &str, source: &str) -> Vec<Violation> {
+    let lines = strip(source);
+    let mask = test_mask(&lines);
+    let mut out = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        if !l.comment.contains("detlint:") {
+            continue;
+        }
+        match parse_allow(&l.comment) {
+            Some(Err(msg)) => out.push(violation(rel, idx, RULE_BAD_ANNOTATION, msg)),
+            Some(Ok(spec)) if !spec.justified => out.push(violation(
+                rel,
+                idx,
+                RULE_BAD_ANNOTATION,
+                "suppression lacks a `-- <justification>`".to_string(),
+            )),
+            _ => {}
+        }
+    }
+    rule_hash_iter(rel, &lines, &mask, &mut out);
+    rule_wall_clock(rel, &lines, &mask, &mut out);
+    rule_missing_safety(rel, &lines, &mut out);
+    rule_thread_count(rel, &lines, &mask, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out.dedup();
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if dir.is_file() {
+        if dir.extension().is_some_and(|e| e == "rs") {
+            out.push(dir.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` (or `root` itself if a file), in
+/// sorted path order — the report itself is deterministic.
+pub fn scan_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/")
+            .trim_start_matches('/')
+            .to_string();
+        let src = fs::read_to_string(f)?;
+        out.extend(scan_file(&rel, &src));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strip_blanks_comments_and_strings() {
+        let src = "let a = \"Instant::now\"; // Instant::now\nlet b = 1; /* x */ let c = 2;\n";
+        let got = codes(src);
+        assert!(!got[0].contains("Instant"), "{got:?}");
+        assert_eq!(strip(src)[0].comment.trim(), "Instant::now");
+        assert!(got[1].contains("let b = 1;") && got[1].contains("let c = 2;"));
+    }
+
+    #[test]
+    fn strip_handles_char_literals_and_lifetimes() {
+        let got = codes("fn f<'a>(x: &'a str) -> char { '\\n' }\nlet q = 'y';\n");
+        assert!(got[0].contains("<'a>"), "lifetime kept as code: {got:?}");
+        assert!(!got[1].contains('y'), "char literal blanked: {got:?}");
+    }
+
+    #[test]
+    fn strip_handles_raw_strings() {
+        let got = codes("let p = r#\"unsafe { \"quoted\" }\"#;\nlet n = 3;\n");
+        assert!(!got[0].contains("unsafe"), "{got:?}");
+        assert!(got[1].contains("let n = 3;"));
+    }
+
+    #[test]
+    fn strip_handles_nested_block_comments() {
+        let got = codes("/* outer /* inner */ still comment */ let x = 1;\n");
+        assert!(got[0].contains("let x = 1;"), "{got:?}");
+        assert!(!got[0].contains("inner"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let lines = strip(src);
+        let mask = test_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn allow_annotation_requires_justification_and_known_rule() {
+        let ok = parse_allow(" detlint: allow(wall-clock) -- measurement only").unwrap().unwrap();
+        assert!(ok.justified && ok.rules == vec!["wall-clock".to_string()]);
+        let unjust = parse_allow(" detlint: allow(wall-clock)").unwrap().unwrap();
+        assert!(!unjust.justified);
+        assert!(parse_allow(" detlint: allow(no-such-rule) -- x").unwrap().is_err());
+        assert!(parse_allow(" plain comment").is_none());
+    }
+
+    #[test]
+    fn hash_idents_found_from_let_field_and_param() {
+        let lines = strip(
+            "struct S { snapshots: Mutex<HashMap<K, V>> }\n\
+             fn f(pos: &HashMap<u32, usize>) {\n\
+                 let mut dirty: HashMap<K, V> = HashMap::new();\n\
+                 let table = HashSet::new();\n\
+             }\n",
+        );
+        let names = hash_idents(&lines);
+        for n in ["snapshots", "pos", "dirty", "table"] {
+            assert!(names.iter().any(|x| x == n), "missing {n} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn r1_flags_iteration_not_probes() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &mut HashMap<u32, u32>) -> u32 {\n\
+                       let a = m.get(&1).copied().unwrap_or(0);\n\
+                       let b: u32 = m.values().sum();\n\
+                       let mut c = 0;\n\
+                       for (_k, v) in m.iter() {\n\
+                           c += v;\n\
+                       }\n\
+                       a + b + c\n\
+                   }\n";
+        let v = scan_file("pipeline/x.rs", src);
+        let r1: Vec<_> = v.iter().filter(|x| x.rule == RULE_HASH_ITER).collect();
+        assert_eq!(r1.len(), 2, "{v:?}");
+        assert_eq!(r1[0].line, 4);
+        assert_eq!(r1[1].line, 6);
+        // Out of the render path the same code is fine.
+        assert!(scan_file("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_flags_for_in_consumption() {
+        let src = "fn g() {\n\
+                       let mut dirty: HashMap<u32, u32> = HashMap::new();\n\
+                       dirty.insert(1, 2);\n\
+                       for (k, v) in dirty {\n\
+                           drop((k, v));\n\
+                       }\n\
+                   }\n";
+        let v = scan_file("lumina/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn r2_flags_clock_and_accepts_annotation() {
+        let src = "fn t() -> f64 {\n\
+                       let t0 = Instant::now();\n\
+                       t0.elapsed().as_secs_f64()\n\
+                   }\n";
+        let v = scan_file("coordinator/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_WALL_CLOCK);
+        let annotated = "fn t() -> f64 {\n\
+                // detlint: allow(wall-clock) -- reported only, never read back\n\
+                let t0 = Instant::now();\n\
+                t0.elapsed().as_secs_f64()\n\
+            }\n";
+        assert!(scan_file("coordinator/x.rs", annotated).is_empty());
+        assert!(scan_file("util/bench.rs", src).is_empty(), "bench runner is exempt");
+    }
+
+    #[test]
+    fn r3_requires_per_site_safety_comments() {
+        let src = "unsafe impl Send for P {}\nunsafe impl Sync for P {}\n";
+        let v = scan_file("util/x.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        // A shared comment covers only the first impl; each site needs
+        // its own adjacent SAFETY block.
+        let half = "// SAFETY: disjoint writes\nunsafe impl Send for P {}\nunsafe impl Sync for P {}\n";
+        let v = scan_file("util/x.rs", half);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+        let full = "// SAFETY: disjoint writes\nunsafe impl Send for P {}\n\
+                    // SAFETY: get() only exposes the pointer value\nunsafe impl Sync for P {}\n";
+        assert!(scan_file("util/x.rs", full).is_empty());
+    }
+
+    #[test]
+    fn r3_covers_blocks_and_same_line_comment() {
+        let src = "fn f(p: *mut u32) {\n    unsafe { *p = 1 };\n}\n";
+        let v = scan_file("util/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        let ok = "fn f(p: *mut u32) {\n    unsafe { *p = 1 }; // SAFETY: caller owns p\n}\n";
+        assert!(scan_file("util/x.rs", ok).is_empty());
+        let above = "fn f(p: *mut u32) {\n    // SAFETY: caller owns p\n    unsafe {\n        *p = 1;\n    }\n}\n";
+        assert!(scan_file("util/x.rs", above).is_empty());
+    }
+
+    #[test]
+    fn r4_flags_thread_count_reads_outside_par() {
+        let src = "fn s() -> usize {\n    par::num_threads() * 2\n}\n";
+        let v = scan_file("pipeline/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_THREAD_COUNT);
+        assert!(scan_file("util/par.rs", src).is_empty(), "par.rs owns the count");
+        // `set_num_threads` is a write, not a read.
+        assert!(scan_file("pipeline/x.rs", "fn s() { par::set_num_threads(2); }\n").is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_r1_r2_r4_but_not_r3() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() {\n\
+                           let t0 = Instant::now();\n\
+                           let n = par::num_threads();\n\
+                           unsafe { core::hint::unreachable_unchecked() };\n\
+                           drop((t0, n));\n\
+                       }\n\
+                   }\n";
+        let v = scan_file("pipeline/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_MISSING_SAFETY);
+    }
+
+    #[test]
+    fn unjustified_or_unknown_annotations_are_violations() {
+        let src = "fn t() -> f64 {\n\
+                // detlint: allow(wall-clock)\n\
+                let t0 = Instant::now();\n\
+                t0.elapsed().as_secs_f64()\n\
+            }\n";
+        let v = scan_file("coordinator/x.rs", src);
+        assert_eq!(v.len(), 2, "unjustified allow suppresses nothing: {v:?}");
+        assert!(v.iter().any(|x| x.rule == RULE_BAD_ANNOTATION));
+        assert!(v.iter().any(|x| x.rule == RULE_WALL_CLOCK));
+        let unknown = "// detlint: allow(hash-ordering) -- typo'd rule name\nfn t() {}\n";
+        let v = scan_file("util/x.rs", unknown);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_BAD_ANNOTATION);
+    }
+}

@@ -1,0 +1,30 @@
+//! detlint CLI: scan one or more roots (default `src`, i.e. the main
+//! crate when run from `rust/`), print violations, exit non-zero if any.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<String> = if args.is_empty() { vec!["src".to_string()] } else { args };
+    let mut violations = Vec::new();
+    for root in &roots {
+        match detlint::scan_tree(Path::new(root)) {
+            Ok(v) => violations.extend(v),
+            Err(e) => {
+                eprintln!("detlint: cannot scan `{root}`: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        eprintln!("detlint: clean ({} root(s))", roots.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,60 @@
+//! Clean fixture: every pattern detlint accepts, in one render-path file.
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Hub {
+    snapshots: HashMap<u32, u64>,
+}
+
+impl Hub {
+    pub fn lookup(&self, k: u32) -> u64 {
+        // Probe-only hash access is deterministic.
+        self.snapshots.get(&k).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&self, dirty: BTreeMap<u32, u64>) -> Vec<u64> {
+        // BTreeMap iterates in key order: deterministic, unflagged.
+        dirty.into_iter().map(|(_, e)| e).collect()
+    }
+
+    pub fn drain_sorted(&mut self) -> Vec<(u32, u64)> {
+        // detlint: allow(hash-order-iter) -- drained pairs are sorted by key before use
+        let mut v: Vec<(u32, u64)> = self.snapshots.drain().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+pub struct Cursor(*mut f32);
+
+// SAFETY: Cursor is only constructed over segments proven disjoint by
+// the exclusive prefix-sum; no two holders alias.
+unsafe impl Send for Cursor {}
+
+pub fn scatter(c: &Cursor, v: f32) {
+    // SAFETY: the caller's segment claim makes this write exclusive.
+    unsafe {
+        *c.0 = v;
+    }
+}
+
+pub fn report_elapsed() -> f64 {
+    // detlint: allow(wall-clock) -- report-only timing, printed and discarded
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn pool_size() -> usize {
+    // detlint: allow(thread-count) -- scheduling only: sizes the worker pool, never frame math
+    par::num_threads()
+}
+
+#[cfg(test)]
+mod tests {
+    // Test modules may read clocks and thread counts freely.
+    #[test]
+    fn timing_in_tests_is_exempt() {
+        let t0 = std::time::Instant::now();
+        let n = par::num_threads();
+        assert!(t0.elapsed().as_secs() < 60 || n > 0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Seeded R1 fixture: order-dependent hash iteration on the render path.
+use std::collections::HashMap;
+
+pub fn merge(dirty: HashMap<u32, u64>, out: &mut Vec<u64>) {
+    // Violation: `.iter()` observes hash order.
+    for (_geom, epoch) in dirty.iter() {
+        out.push(*epoch);
+    }
+}
+
+pub fn publish(mut dirty: HashMap<u32, u64>) -> Vec<u32> {
+    // Violation: `.keys()` observes hash order.
+    let ks: Vec<u32> = dirty.keys().copied().collect();
+    // Violation: bare `for .. in map` consumes in hash order.
+    for (k, _v) in dirty {
+        let _ = k;
+    }
+    ks
+}
+
+pub fn probe_is_fine(dirty: &HashMap<u32, u64>) -> u64 {
+    // Probes don't observe order: unflagged.
+    dirty.get(&7).copied().unwrap_or(0)
+}

@@ -1,0 +1,14 @@
+//! Seeded R2 fixture: wall-clock read outside util/bench.rs.
+use std::time::Instant;
+
+pub fn frame_budget_ms() -> f64 {
+    // Violation: clock read in frame math, no annotation.
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+pub fn annotated_report_site() -> f64 {
+    // detlint: allow(wall-clock) -- report-only measurement, value never feeds frame math
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

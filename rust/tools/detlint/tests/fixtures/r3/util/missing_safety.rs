@@ -1,0 +1,21 @@
+//! Seeded R3 fixture: unsafe sites without SAFETY comments.
+
+pub struct RawSlot(pub *mut u32);
+
+// Violation: unsafe impl with no SAFETY comment.
+unsafe impl Send for RawSlot {}
+
+pub fn write(slot: &RawSlot, v: u32) {
+    // Violation: unsafe block with no SAFETY comment.
+    unsafe {
+        *slot.0 = v;
+    }
+}
+
+pub fn write_documented(slot: &RawSlot, v: u32) {
+    // SAFETY: caller guarantees slot.0 points at a live, exclusively
+    // owned u32 for the duration of the call.
+    unsafe {
+        *slot.0 = v;
+    }
+}

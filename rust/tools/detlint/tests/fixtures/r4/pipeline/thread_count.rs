@@ -1,0 +1,11 @@
+//! Seeded R4 fixture: worker-count read outside util/par.rs.
+
+pub fn tile_batch(total: usize) -> usize {
+    // Violation: render math branching on worker count.
+    total / par::num_threads().max(1)
+}
+
+pub fn set_is_fine() {
+    // A write is configuration, not a read: unflagged.
+    par::set_num_threads(2);
+}

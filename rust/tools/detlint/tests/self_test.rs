@@ -1,0 +1,115 @@
+//! detlint self-tests: each seeded fixture trips exactly its rule (and
+//! the binary exits non-zero on it), the clean fixture and the real
+//! `rust/src` tree scan clean, and annotated suppressions hold.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use detlint::{
+    scan_tree, Violation, RULE_HASH_ITER, RULE_MISSING_SAFETY, RULE_THREAD_COUNT, RULE_WALL_CLOCK,
+};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn scan_fixture(name: &str) -> Vec<Violation> {
+    scan_tree(&fixture(name)).expect("fixture tree scans")
+}
+
+fn render(vs: &[Violation]) -> String {
+    vs.iter().map(|v| format!("  {v}\n")).collect()
+}
+
+#[test]
+fn r1_fixture_trips_hash_order_iter_only() {
+    let vs = scan_fixture("r1");
+    assert!(!vs.is_empty(), "r1 fixture must trip");
+    assert!(
+        vs.iter().all(|v| v.rule == RULE_HASH_ITER),
+        "unexpected rules:\n{}",
+        render(&vs)
+    );
+    let lines: Vec<usize> = vs.iter().map(|v| v.line).collect();
+    assert_eq!(lines, vec![6, 13, 15], "seeded sites:\n{}", render(&vs));
+}
+
+#[test]
+fn r2_fixture_trips_wall_clock_only() {
+    let vs = scan_fixture("r2");
+    assert_eq!(vs.len(), 1, "one unannotated clock read:\n{}", render(&vs));
+    assert_eq!(vs[0].rule, RULE_WALL_CLOCK);
+    assert_eq!(vs[0].line, 6);
+}
+
+#[test]
+fn r3_fixture_trips_missing_safety_only() {
+    let vs = scan_fixture("r3");
+    assert_eq!(vs.len(), 2, "impl + block both lack SAFETY:\n{}", render(&vs));
+    assert!(vs.iter().all(|v| v.rule == RULE_MISSING_SAFETY));
+    assert_eq!(vs[0].line, 6, "unsafe impl site");
+    assert_eq!(vs[1].line, 10, "unsafe block site");
+}
+
+#[test]
+fn r4_fixture_trips_thread_count_only() {
+    let vs = scan_fixture("r4");
+    assert_eq!(vs.len(), 1, "one worker-count read:\n{}", render(&vs));
+    assert_eq!(vs[0].rule, RULE_THREAD_COUNT);
+    assert_eq!(vs[0].line, 5);
+}
+
+#[test]
+fn clean_fixture_scans_clean() {
+    let vs = scan_fixture("clean");
+    assert!(vs.is_empty(), "clean fixture must not trip:\n{}", render(&vs));
+}
+
+#[test]
+fn binary_exits_nonzero_on_each_seeded_fixture() {
+    for name in ["r1", "r2", "r3", "r4"] {
+        let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
+            .arg(fixture(name))
+            .output()
+            .expect("run detlint");
+        assert_eq!(
+            out.status.code(),
+            Some(1),
+            "fixture {name}: stdout:\n{}stderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+#[test]
+fn binary_exits_zero_on_clean_fixture() {
+    let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
+        .arg(fixture("clean"))
+        .output()
+        .expect("run detlint");
+    assert!(
+        out.status.success(),
+        "stdout:\n{}stderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn binary_exits_two_on_missing_root() {
+    let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
+        .arg(fixture("no-such-dir"))
+        .output()
+        .expect("run detlint");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+/// The acceptance criterion: the real crate scans clean, meaning every
+/// remaining suppression in `rust/src` carries a written justification.
+#[test]
+fn rust_src_scans_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let vs = scan_tree(&src).expect("rust/src scans");
+    assert!(vs.is_empty(), "rust/src must be detlint-clean:\n{}", render(&vs));
+}
