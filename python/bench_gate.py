@@ -45,7 +45,18 @@ invariants.  Currently:
   `metric/binned_entries_rect` exist, exact-intersection tile binning
   must emit at most as many (splat, tile) entries as the bounding-rect
   reference on the same projected scene — the exact test only culls,
-  it never adds pairs.
+  it never adds pairs;
+* whenever both `metric/loadtest_refusals_run1` and
+  `metric/loadtest_refusals_run2` exist (`lumina loadtest --smoke` runs
+  the flash-crowd scenario twice at one seed), the admission-refusal
+  counts must match exactly — churn and refusals are seeded, so any
+  drift is a determinism regression;
+* whenever both `metric/loadtest_broadcast_p99_clustered_ns` and
+  `metric/loadtest_broadcast_p99_private_ns` exist, the clustered sort
+  scope's p99 simulated frame latency on the spectator-broadcast
+  scenario must not exceed the private scope's — on an identical pose
+  stream one leader sort amortizes across the pool, so the latency
+  tail can only shrink.
 """
 
 import argparse
@@ -171,6 +182,41 @@ def gate(baseline_path, fresh_path, tolerance):
                 f"exact binning emitted {exact_entries} entries vs "
                 f"{rect_entries} rect — exact-intersection culling "
                 f"regressed")
+
+    # Same-run loadtest determinism invariant: the smoke pass runs the
+    # flash-crowd scenario twice at one seed; seeded churn + admission
+    # must refuse exactly the same viewers both times.
+    r1 = fresh_by.get("metric/loadtest_refusals_run1")
+    r2 = fresh_by.get("metric/loadtest_refusals_run2")
+    if r1 is not None and r2 is not None:
+        refusals1 = r1["median_ns"]
+        refusals2 = r2["median_ns"]
+        verdict = "ok" if refusals1 == refusals2 else "REGRESSION"
+        print(f"  loadtest refusals: run1 {refusals1} vs run2 {refusals2}  "
+              f"{verdict}")
+        if refusals1 != refusals2:
+            failures.append(
+                f"flash-crowd refusal counts diverged between same-seed "
+                f"runs ({refusals1} vs {refusals2}) — loadtest churn lost "
+                f"determinism")
+
+    # Same-run loadtest SLO invariant: on the spectator broadcast (every
+    # viewer replays one pose stream) the clustered sort scope amortizes
+    # a single leader sort, so its p99 latency tail must not exceed the
+    # private scope's.
+    pc = fresh_by.get("metric/loadtest_broadcast_p99_clustered_ns")
+    pp = fresh_by.get("metric/loadtest_broadcast_p99_private_ns")
+    if pc is not None and pp is not None:
+        clustered_p99 = pc["median_ns"]
+        private_p99 = pp["median_ns"]
+        verdict = "ok" if clustered_p99 <= private_p99 else "REGRESSION"
+        print(f"  broadcast p99 latency: clustered {clustered_p99} ns vs "
+              f"private {private_p99} ns  {verdict}")
+        if clustered_p99 > private_p99:
+            failures.append(
+                f"clustered-scope broadcast p99 {clustered_p99} ns exceeds "
+                f"private-scope {private_p99} ns — pool-clustered sort "
+                f"sharing regressed the latency tail")
 
     if failures:
         print(f"\nbench gate FAILED ({len(failures)}):", file=sys.stderr)

@@ -121,6 +121,51 @@ def test_exact_binning_invariant(tmp_path):
     assert bench_gate.gate(base, partial, 0.15) == 0
 
 
+def test_loadtest_refusal_determinism_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [], label="loadtest")
+    # Same-seed flash-crowd runs must refuse identically.
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/loadtest_refusals_run1", 4),
+                 entry("metric/loadtest_refusals_run2", 5)],
+                label="loadtest")
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/loadtest_refusals_run1", 4),
+                entry("metric/loadtest_refusals_run2", 4)],
+               label="loadtest")
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    # One metric alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/loadtest_refusals_run1", 4)],
+                    label="loadtest")
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
+def test_loadtest_broadcast_p99_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [], label="loadtest")
+    # Clustered-scope p99 on the broadcast may not exceed private-scope.
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/loadtest_broadcast_p99_clustered_ns", 9000),
+                 entry("metric/loadtest_broadcast_p99_private_ns", 7000)],
+                label="loadtest")
+    eq = write(tmp_path / "eq.json",
+               [entry("metric/loadtest_broadcast_p99_clustered_ns", 7000),
+                entry("metric/loadtest_broadcast_p99_private_ns", 7000)],
+               label="loadtest")
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/loadtest_broadcast_p99_clustered_ns", 5000),
+                entry("metric/loadtest_broadcast_p99_private_ns", 7000)],
+               label="loadtest")
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, eq, 0.15) == 0
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    # One metric alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/loadtest_broadcast_p99_private_ns", 7000)],
+                    label="loadtest")
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
 def test_update_promotes_fresh_file(tmp_path):
     fresh = write(tmp_path / "fresh.json", [entry("pool/1", 1000)])
     base = tmp_path / "base.json"

@@ -35,7 +35,11 @@ fn main() {
         let cfg = cfg.clone();
         let scene = scene.clone();
         r.bench(&format!("session_pool/{n}x4frames"), move || {
-            let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
+            let mut pool = SessionPool::builder(cfg.clone())
+                .sessions(n)
+                .scene(scene.clone())
+                .build()
+                .unwrap();
             pool.run().unwrap()
         });
     }
@@ -44,7 +48,11 @@ fn main() {
     // full-tier sessions forces a mixed ladder on larger pools (this is
     // the capacity-managed path: probe -> plan -> epoch re-plans).
     let full_cost = {
-        let mut probe = SessionPool::with_scene(cfg.clone(), scene.clone(), 1).unwrap();
+        let mut probe = SessionPool::builder(cfg.clone())
+            .sessions(1)
+            .scene(scene.clone())
+            .build()
+            .unwrap();
         let demands = probe.probe_demands().unwrap();
         price_workload(&demands[0].workload, cfg.variant)
     };
@@ -61,9 +69,41 @@ fn main() {
                 cfg.pool.reduced_fraction,
             )
             .unwrap();
-            let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), n).unwrap();
+            let mut pool = SessionPool::builder(cfg.clone())
+                .sessions(n)
+                .scene(scene.clone())
+                .build()
+                .unwrap();
             pool.serve(&ctrl).unwrap()
         });
+    }
+
+    // End-of-run SLOs straight off the PoolReport accessors: p99
+    // simulated frame latency and demotion rate for the 8-session
+    // tiered pool. Both derive from the deterministic cost model, so
+    // the rows are machine-independent.
+    let p99_name = "metric/tiered_pool8_p99_us";
+    let dem_name = "metric/tiered_pool8_demotion_ppm";
+    if r.enabled(p99_name) || r.enabled(dem_name) {
+        let target = (1.0 - ADMISSION_HEADROOM) / (0.75 * 8.0 * full_cost);
+        let ctrl = AdmissionController::new(
+            target,
+            vec![Tier::Full, Tier::Reduced, Tier::Half],
+            cfg.pool.reduced_fraction,
+        )
+        .unwrap();
+        let mut pool = SessionPool::builder(cfg.clone())
+            .sessions(8)
+            .scene(scene.clone())
+            .build()
+            .unwrap();
+        let report = pool.serve(&ctrl).unwrap();
+        if r.enabled(p99_name) {
+            r.metric(p99_name, (report.latency_percentile(99.0) * 1e6).round() as u64);
+        }
+        if r.enabled(dem_name) {
+            r.metric(dem_name, (report.demotion_rate() * 1e6).round() as u64);
+        }
     }
 
     // Cross-session radiance caching: convergent viewers served against
@@ -86,14 +126,22 @@ fn main() {
         let bench_cfg = run_cfg.clone();
         let bench_scene = scene.clone();
         r.bench(&format!("cache_scope_{}/3x4frames_convergent", scope.label()), move || {
-            SessionPool::convergent_with_scene(bench_cfg.clone(), bench_scene.clone(), 3, stagger)
+            SessionPool::builder(bench_cfg.clone())
+                .sessions(3)
+                .stagger(stagger)
+                .scene(bench_scene.clone())
+                .build()
                 .unwrap()
                 .run()
                 .unwrap()
         });
         let metric_name = format!("metric/hitrate_{}_ppm", scope.label());
         if r.enabled(&metric_name) {
-            let report = SessionPool::convergent_with_scene(run_cfg, scene.clone(), 3, stagger)
+            let report = SessionPool::builder(run_cfg)
+                .sessions(3)
+                .stagger(stagger)
+                .scene(scene.clone())
+                .build()
                 .unwrap()
                 .run()
                 .unwrap();
@@ -122,18 +170,25 @@ fn main() {
         let bench_cfg = run_cfg.clone();
         let bench_scene = scene.clone();
         r.bench(&format!("sort_scope_{}/3x4frames_convergent", scope.label()), move || {
-            SessionPool::convergent_with_scene(bench_cfg.clone(), bench_scene.clone(), 3, stagger)
+            SessionPool::builder(bench_cfg.clone())
+                .sessions(3)
+                .stagger(stagger)
+                .scene(bench_scene.clone())
+                .build()
                 .unwrap()
                 .run()
                 .unwrap()
         });
         let metric_name = format!("metric/leader_sorts_{}", scope.label());
         if r.enabled(&metric_name) {
-            let report =
-                SessionPool::convergent_with_scene(run_cfg, scene.clone(), 3, stagger)
-                    .unwrap()
-                    .run()
-                    .unwrap();
+            let report = SessionPool::builder(run_cfg)
+                .sessions(3)
+                .stagger(stagger)
+                .scene(scene.clone())
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
             r.metric(&metric_name, report.sorted_frames() as u64);
         }
     }
@@ -143,7 +198,10 @@ fn main() {
         div_cfg.pool.cluster_radius = 0.01;
         let scene = scene.clone();
         r.bench("sort_scope_clustered/3x4frames_divergent", move || {
-            SessionPool::with_scene(div_cfg.clone(), scene.clone(), 3)
+            SessionPool::builder(div_cfg.clone())
+                .sessions(3)
+                .scene(scene.clone())
+                .build()
                 .unwrap()
                 .run()
                 .unwrap()
@@ -169,7 +227,11 @@ fn main() {
         cfg.pool.pipeline_depth = depth;
         let scene = fscene.clone();
         r.bench(&format!("pool_depth{depth}/2x4frames"), move || {
-            let mut pool = SessionPool::with_scene(cfg.clone(), scene.clone(), 2).unwrap();
+            let mut pool = SessionPool::builder(cfg.clone())
+                .sessions(2)
+                .scene(scene.clone())
+                .build()
+                .unwrap();
             pool.run().unwrap()
         });
     }

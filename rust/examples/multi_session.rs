@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     cfg.variant = HardwareVariant::Lumina;
 
     for n in [1usize, 2, 4, 8] {
-        let mut pool = SessionPool::new(cfg.clone(), n)?;
+        let mut pool = SessionPool::builder(cfg.clone()).sessions(n).build()?;
         let report = pool.run()?;
         println!("{}", report.summary());
         if n == 4 {

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     // Size the target from a one-session probe: the device budget fits
     // about 2.5 full-tier viewers, so every additional admission must
     // come from tiering.
-    let mut probe = SessionPool::new(cfg.clone(), 1)?;
+    let mut probe = SessionPool::builder(cfg.clone()).build()?;
     let demands = probe.probe_demands()?;
     let full_cost = price_workload(&demands[0].workload, cfg.variant);
     let target = (1.0 - ADMISSION_HEADROOM) / (2.5 * full_cost);
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         let ctrl = AdmissionController::new(target, ladder, cfg.pool.reduced_fraction)?;
         let mut admitted = 0;
         for n in 1..=16 {
-            let mut pool = SessionPool::new(cfg.clone(), n)?;
+            let mut pool = SessionPool::builder(cfg.clone()).sessions(n).build()?;
             match pool.probe_demands().and_then(|d| ctrl.plan(&d)) {
                 Ok(_) => admitted = n,
                 Err(e) => {
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     // target held end to end.
     let ctrl =
         AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)?;
-    let mut pool = SessionPool::new(cfg.clone(), tiered_max)?;
+    let mut pool = SessionPool::builder(cfg.clone()).sessions(tiered_max).build()?;
     let report = pool.serve(&ctrl)?;
     println!();
     for (i, r) in report.sessions.iter().enumerate() {

@@ -8,6 +8,13 @@
 //!   with COLMAP poses: slower, larger translation, mild jitter.
 //! * `rapid_rotation` — the pathological case of Sec. 8 (fast head spin)
 //!   used by failure-injection tests.
+//! * `teleport` — dwell-and-jump inspection: instant relocations whose
+//!   heading change (>= 1 rad) exceeds any realistic
+//!   `pool.cluster_radius`, defeating both S² temporal coherence and
+//!   pool-clustered sort sharing at every jump.
+//! * `jittery_head_tracking` — the VR walk as a real tracker reports
+//!   it: a smooth base path carrying per-frame zero-mean rotational
+//!   tremor (the workload-harness pose family for head-mounted churn).
 
 use super::Pose;
 use crate::math::{Quat, Vec3};
@@ -23,6 +30,14 @@ pub enum TrajectoryKind {
     Walkthrough,
     /// Pathological rapid rotation (>200 deg/s bursts), Sec. 8.
     RapidRotation,
+    /// 30 FPS dwell-and-jump inspection: slow pans punctuated by
+    /// instant relocations with >= 1 rad heading changes — larger than
+    /// any realistic `pool.cluster_radius`, so every jump breaks sort
+    /// clusters and S² coherence.
+    Teleport,
+    /// 90 FPS VR head motion with per-frame rotational tremor — the
+    /// pose stream a real head tracker reports.
+    JitteryHeadTracking,
 }
 
 impl TrajectoryKind {
@@ -32,6 +47,8 @@ impl TrajectoryKind {
             TrajectoryKind::VrHeadMotion => 90.0,
             TrajectoryKind::Walkthrough => 30.0,
             TrajectoryKind::RapidRotation => 90.0,
+            TrajectoryKind::Teleport => 30.0,
+            TrajectoryKind::JitteryHeadTracking => 90.0,
         }
     }
 }
@@ -153,6 +170,57 @@ pub fn generate(kind: TrajectoryKind, seed: u64, frames: usize, extent: f32) -> 
                 poses.push(Pose::new(base, rot.mul(look.rotation).normalized()));
             }
         }
+        TrajectoryKind::Teleport => {
+            // Dwell-and-jump: `hop`-frame segments of slow pan on the
+            // orbit, then an instant relocation with a heading change
+            // drawn from [1, pi) rad — always beyond the default
+            // cluster radius (0.35 rad), so a jump never lands a
+            // session back in its old sort cluster.
+            let hop = 12usize;
+            let pan = 4f32.to_radians() * dt;
+            let mut theta = rng.f32() * std::f32::consts::TAU;
+            for i in 0..frames {
+                if i > 0 && i % hop == 0 {
+                    let sign = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                    theta += sign * rng.range_f32(1.0, std::f32::consts::PI);
+                } else if i > 0 {
+                    theta += pan;
+                }
+                let eye = Vec3::new(
+                    radius * theta.sin(),
+                    extent * 0.25,
+                    -radius * theta.cos(),
+                );
+                poses.push(Pose::look_at(eye, Vec3::new(0.0, extent * 0.1, 0.0)));
+            }
+        }
+        TrajectoryKind::JitteryHeadTracking => {
+            // Smooth ~20 deg/s yaw walk carrying independent per-frame
+            // tremor (~0.25 deg sigma): each delta stays far inside the
+            // S^2 kill switch, but the measured angular velocity sits
+            // well above the clean VR path.
+            let base = Vec3::new(0.0, extent * 0.2, -radius);
+            let mut yaw = 0.0f32;
+            let mut pitch = 0.0f32;
+            for i in 0..frames {
+                yaw += 20f32.to_radians() * dt;
+                pitch = (pitch + (rng.f32() - 0.5) * 0.02 * dt * 60.0).clamp(-0.3, 0.3);
+                let jitter_yaw = rng.gauss() * 0.25f32.to_radians();
+                let jitter_pitch = rng.gauss() * 0.18f32.to_radians();
+                let sway = Vec3::new(
+                    (i as f32 * 0.031).sin() * extent * 0.015,
+                    (i as f32 * 0.043).sin() * extent * 0.01,
+                    0.0,
+                );
+                let rot = Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), yaw + jitter_yaw)
+                    .mul(Quat::from_axis_angle(
+                        Vec3::new(1.0, 0.0, 0.0),
+                        pitch + jitter_pitch,
+                    ));
+                let look = Pose::look_at(base + sway, Vec3::ZERO);
+                poses.push(Pose::new(base + sway, rot.mul(look.rotation).normalized()));
+            }
+        }
     }
     Trajectory { kind, fps, poses }
 }
@@ -190,6 +258,34 @@ mod tests {
     fn rapid_rotation_is_fast() {
         let t = generate(TrajectoryKind::RapidRotation, 3, 300, 1.3);
         assert!(t.mean_angular_velocity_deg() > 80.0);
+    }
+
+    #[test]
+    fn teleport_jumps_exceed_cluster_radius_between_coherent_dwells() {
+        let t = generate(TrajectoryKind::Teleport, 6, 120, 1.3);
+        let deltas: Vec<f32> =
+            t.poses.windows(2).map(|w| w[0].angular_distance(&w[1])).collect();
+        let max = deltas.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 0.9, "teleport jump {max} rad must exceed any cluster radius");
+        // Dwell frames dominate and stay coherent (S^2-friendly pans).
+        let coherent = deltas.iter().filter(|&&d| d < 0.05).count();
+        assert!(coherent * 2 > deltas.len(), "dwells must dominate: {coherent}/{}", deltas.len());
+    }
+
+    #[test]
+    fn jittery_head_tracking_is_rougher_than_clean_vr() {
+        let smooth = generate(TrajectoryKind::VrHeadMotion, 11, 600, 1.3);
+        let jittery = generate(TrajectoryKind::JitteryHeadTracking, 11, 600, 1.3);
+        assert!(
+            jittery.mean_angular_velocity_deg() > smooth.mean_angular_velocity_deg() + 5.0,
+            "tremor must raise measured angular velocity: jittery {} vs smooth {}",
+            jittery.mean_angular_velocity_deg(),
+            smooth.mean_angular_velocity_deg()
+        );
+        // Each tremor delta stays far inside the S^2 kill switch.
+        for w in jittery.poses.windows(2) {
+            assert!(w[0].angular_distance(&w[1]).to_degrees() < 5.0);
+        }
     }
 
     #[test]

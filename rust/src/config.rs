@@ -367,6 +367,8 @@ fn trajectory_name(t: TrajectoryKind) -> &'static str {
         TrajectoryKind::VrHeadMotion => "vr-head-motion",
         TrajectoryKind::Walkthrough => "walkthrough",
         TrajectoryKind::RapidRotation => "rapid-rotation",
+        TrajectoryKind::Teleport => "teleport",
+        TrajectoryKind::JitteryHeadTracking => "jittery-head-tracking",
     }
 }
 
@@ -375,6 +377,8 @@ fn parse_trajectory(s: &str) -> Result<TrajectoryKind> {
         "vr-head-motion" => TrajectoryKind::VrHeadMotion,
         "walkthrough" => TrajectoryKind::Walkthrough,
         "rapid-rotation" => TrajectoryKind::RapidRotation,
+        "teleport" => TrajectoryKind::Teleport,
+        "jittery-head-tracking" => TrajectoryKind::JitteryHeadTracking,
         other => bail!("unknown trajectory kind: {other}"),
     })
 }
@@ -748,6 +752,19 @@ mod tests {
         assert_eq!(c.s2.sharing_window, 6);
         assert_eq!(c.camera.width, 256);
         assert_eq!(c.gaussian_count(), 300_000);
+    }
+
+    #[test]
+    fn workload_trajectories_roundtrip() {
+        for kind in [TrajectoryKind::Teleport, TrajectoryKind::JitteryHeadTracking] {
+            let mut c = LuminaConfig::quick_test();
+            c.camera.trajectory = kind;
+            let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+            assert_eq!(back.camera.trajectory, kind);
+        }
+        assert!(parse_trajectory("teleport").is_ok());
+        assert!(parse_trajectory("jittery-head-tracking").is_ok());
+        assert!(parse_trajectory("orbit-of-nowhere").is_err());
     }
 
     #[test]

@@ -55,7 +55,7 @@ use crate::sim::lumincore::LuminCoreSim;
 
 pub use admission::{AdmissionController, SessionDemand, TierPlan};
 pub use report::{FrameReport, RunReport};
-pub use session::{PoolReport, SessionPool};
+pub use session::{PoolBuilder, PoolReport, SessionPool};
 
 /// The LuminSys coordinator: one viewer session's frame loop.
 pub struct Coordinator {
@@ -90,6 +90,12 @@ pub struct Coordinator {
     /// Admission priority: higher keeps quality longer under pressure
     /// (pools default this to first-admitted-highest).
     pub priority: f64,
+    /// Stable pool-wide identity, assigned monotonically at build /
+    /// [`SessionPool::admit`] time and never reused: session *indices*
+    /// shift when a viewer is retired mid-run, so churn-aware reporting
+    /// (the workload harness) keys per-session results by this instead.
+    /// 0 for a standalone coordinator.
+    pub session_id: u64,
     /// Pool-shared cache hub (shared scope only): the raster backend
     /// renders against the hub's snapshot for its geometry, and tier
     /// rebuilds re-attach through it — invalidating only this session's
@@ -289,6 +295,7 @@ impl Coordinator {
             lod_scene: None,
             last_workload: None,
             priority: 0.0,
+            session_id: 0,
             cache_hub,
             #[cfg(test)]
             fail_at_frame: None,

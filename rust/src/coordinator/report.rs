@@ -55,6 +55,31 @@ impl FrameReport {
     }
 }
 
+/// Quality rank of a serving tier label: lower is better. Unknown
+/// labels rank worst, so a malformed tier can only ever read as a
+/// demotion, never mask one.
+pub(crate) fn tier_rank(tier: &str) -> u8 {
+    match tier {
+        "full" => 0,
+        "reduced" => 1,
+        "half" => 2,
+        _ => 3,
+    }
+}
+
+/// Nearest-rank percentile (`p` in 0..=100) over frame latencies.
+/// Sorts with `total_cmp`, so the answer is deterministic for any
+/// input order — callers feed frames in session/epoch order and get
+/// the same bits at any thread count. 0 for an empty set.
+pub(crate) fn latency_percentile_s(times: &mut Vec<f64>, p: f64) -> f64 {
+    if times.is_empty() {
+        return 0.0;
+    }
+    times.sort_by(f64::total_cmp);
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * times.len() as f64).ceil() as usize;
+    times[rank.saturating_sub(1).min(times.len() - 1)]
+}
+
 /// A whole run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
@@ -125,6 +150,23 @@ impl RunReport {
             }
         }
         seq
+    }
+
+    /// Nearest-rank latency percentile over this session's frame times
+    /// (`p` in 0..=100); the pool-wide version is
+    /// [`crate::coordinator::PoolReport::latency_percentile`].
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut times: Vec<f64> = self.frames.iter().map(|f| f.time_s).collect();
+        latency_percentile_s(&mut times, p)
+    }
+
+    /// Tier demotions observed across consecutive frames (transitions
+    /// to a lower-quality tier; promotions do not count).
+    pub fn demotions(&self) -> usize {
+        self.frames
+            .windows(2)
+            .filter(|w| tier_rank(w[1].tier) > tier_rank(w[0].tier))
+            .count()
     }
 
     /// Mean PSNR over frames that measured quality.
@@ -206,5 +248,32 @@ mod tests {
         assert_eq!(r.mean_time_s(), 0.0);
         assert_eq!(r.fps(), 0.0);
         assert_eq!(r.mean_psnr(), None);
+        assert_eq!(r.latency_percentile(99.0), 0.0);
+        assert_eq!(r.demotions(), 0);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let mut r = RunReport::new("pct");
+        for t in [0.03, 0.01, 0.02, 0.04] {
+            r.push(frame(t, 0.0));
+        }
+        assert_eq!(r.latency_percentile(50.0), 0.02);
+        assert_eq!(r.latency_percentile(99.0), 0.04);
+        assert_eq!(r.latency_percentile(0.0), 0.01);
+        assert_eq!(r.latency_percentile(100.0), 0.04);
+    }
+
+    #[test]
+    fn demotions_count_downgrades_only() {
+        let mut r = RunReport::new("tiers");
+        for tier in ["full", "reduced", "reduced", "half", "full", "reduced"] {
+            let mut f = frame(0.01, 0.0);
+            f.tier = tier;
+            r.push(f);
+        }
+        // full->reduced, reduced->half, full->reduced; the half->full
+        // promotion does not count.
+        assert_eq!(r.demotions(), 3);
     }
 }

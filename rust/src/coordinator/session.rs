@@ -52,6 +52,42 @@ use crate::scene::GaussianScene;
 use crate::util::par;
 
 /// A pool of independent viewer sessions over one shared scene.
+///
+/// # Lifecycle
+///
+/// A session moves through a small state machine, every transition of
+/// which happens on the coordination thread at an epoch boundary (frame
+/// slots drained), so churn can never race rendering:
+///
+/// ```text
+///   PoolBuilder::build ──> attached ──run_epoch/serve──> serving
+///        (id assigned)        ^  |                          |
+///                             |  `──────── retire ──> drained+detached
+///   admit (plan Ok) ──────────'
+///   admit (plan Err) ──> refused  (pool untouched, refusal counted)
+/// ```
+///
+/// * **Build** — [`SessionPool::builder`] constructs N sessions over
+///   one shared scene, wires the shared-cache / clustered-sort hubs the
+///   config scopes ask for, and assigns each viewer a stable
+///   [`Coordinator::session_id`] (monotonic, never reused).
+/// * **Admit** — [`Self::admit`] prices a probed joiner alongside the
+///   active sessions; on refusal the pool is byte-identical to one that
+///   never saw the joiner (the refusal is only *counted*). On success
+///   the joiner gets the next `session_id` and the warm-handoff tier
+///   plan is applied pool-wide.
+/// * **Retire** — [`Self::retire`] is the symmetric departure path:
+///   the session's pipelined slots are drained under its current tier
+///   (the completed frames are returned to the caller — they were real
+///   served frames), its un-merged shared-cache delta leaves with it
+///   (only epoch-boundary merges ever publish writes), and the hubs
+///   re-sync so sharer counts and cluster membership match the
+///   remaining sessions. Remaining sessions keep their relative order,
+///   so the session-index-ordered cache merge stays deterministic;
+///   reports key churned viewers by `session_id`, which never shifts.
+/// * **Serve** — [`Self::serve`] (or [`Self::run_epoch`] +
+///   [`Self::replan`] for callers that interleave churn) renders
+///   epochs, re-planning tiers between them.
 pub struct SessionPool {
     sessions: Vec<Coordinator>,
     /// Lazily cut reduced-Gaussian subsample, shared by every session
@@ -82,6 +118,14 @@ pub struct SessionPool {
     /// observed hit rate admission pricing consumes (shared scope), and
     /// the warm-handoff rate for viewers admitted mid-run.
     served: CacheStats,
+    /// Next [`Coordinator::session_id`] to hand out — monotonic, never
+    /// reused, so churn-aware reports keep a stable per-viewer key even
+    /// as `retire` shifts session *indices*.
+    next_id: u64,
+    /// Cumulative refused admissions: initial [`Self::serve`] refusals
+    /// plus mid-run [`Self::admit`] refusals. Surfaces on
+    /// [`PoolReport::refusals`] — the loadtest SLO counter.
+    refused: usize,
 }
 
 /// Aggregated result of running every session to completion.
@@ -95,6 +139,11 @@ pub struct PoolReport {
     /// whether [`Self::pool_fps`] charges full frame latency or the
     /// overlapped `max(frontend, raster)` device time per frame.
     pub pipeline_depth: usize,
+    /// Refused admissions accumulated by the pool *so far* (initial
+    /// `serve` refusals + mid-run `admit` refusals) — cumulative over
+    /// the pool's lifetime, not scoped to the run that produced this
+    /// report.
+    pub refusals: usize,
 }
 
 impl PoolReport {
@@ -179,6 +228,38 @@ impl PoolReport {
         self.cache_stats().hit_rate()
     }
 
+    /// Nearest-rank latency percentile (`p` in 0..=100) over every
+    /// frame's end-to-end `time_s`, pool-wide — the SLO quantity
+    /// ("p99 frame latency across all viewers"). Deterministic for any
+    /// thread count: frames are collected in session/epoch order and
+    /// sorted with `total_cmp`. 0 for an empty pool.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut times: Vec<f64> = self
+            .sessions
+            .iter()
+            .flat_map(|r| &r.frames)
+            .map(|f| f.time_s)
+            .collect();
+        crate::coordinator::report::latency_percentile_s(&mut times, p)
+    }
+
+    /// Total tier demotions across sessions (consecutive-frame
+    /// transitions to a lower-quality tier; promotions do not count).
+    pub fn demotions(&self) -> usize {
+        self.sessions.iter().map(|r| r.demotions()).sum()
+    }
+
+    /// Demotions per served frame (0 when no frames were served) — the
+    /// "how often did quality drop" SLO rate.
+    pub fn demotion_rate(&self) -> f64 {
+        let total = self.total_frames();
+        if total == 0 {
+            0.0
+        } else {
+            self.demotions() as f64 / total as f64
+        }
+    }
+
     /// One-line throughput summary. Heterogeneous trajectories (tiered
     /// pools, mixed configs) report the min-max frame-count range
     /// rather than pretending every session matched the first.
@@ -200,9 +281,24 @@ impl PoolReport {
         } else {
             String::new()
         };
+        let slo = if self.total_frames() > 0 {
+            format!(
+                " | p50/p95/p99 {:.3}/{:.3}/{:.3} ms",
+                self.latency_percentile(50.0) * 1e3,
+                self.latency_percentile(95.0) * 1e3,
+                self.latency_percentile(99.0) * 1e3
+            )
+        } else {
+            String::new()
+        };
+        let refused = if self.refusals > 0 {
+            format!(" | {} refused", self.refusals)
+        } else {
+            String::new()
+        };
         format!(
             "pool: {} sessions x {} frames | aggregate {:.1} sim-fps ({:.1}/session) | \
-             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s{}",
+             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s{}{}{}",
             self.sessions.len(),
             frames,
             self.aggregate_fps(),
@@ -210,18 +306,163 @@ impl PoolReport {
             self.pool_fps(),
             self.host_fps(),
             self.wall_s,
-            hit
+            hit,
+            slo,
+            refused
         )
     }
 }
 
+/// Staged construction of a [`SessionPool`] — the one front door that
+/// replaced the pool's four historical constructors. Defaults build a
+/// single-session pool with a per-viewer camera seed (base + i) and
+/// divergent trajectories; opt into convergence ([`Self::stagger`]), a
+/// pre-built scene ([`Self::scene`]), or a heterogeneous device mix
+/// ([`Self::device_mix`]).
+///
+/// ```no_run
+/// # use lumina::config::LuminaConfig;
+/// # use lumina::coordinator::SessionPool;
+/// # fn main() -> anyhow::Result<()> {
+/// let pool = SessionPool::builder(LuminaConfig::quick_test())
+///     .sessions(4)
+///     .stagger(2)
+///     .build()?;
+/// # let _ = pool; Ok(())
+/// # }
+/// ```
+pub struct PoolBuilder {
+    base: LuminaConfig,
+    n: usize,
+    stagger: Option<usize>,
+    scene: Option<Arc<GaussianScene>>,
+    device_mix: Vec<crate::config::HardwareVariant>,
+}
+
+impl PoolBuilder {
+    /// Number of sessions (default 1; must stay >= 1).
+    pub fn sessions(mut self, n: usize) -> Self {
+        self.n = n;
+        self
+    }
+
+    /// Converge every viewer onto session 0's camera path, viewer `i`
+    /// trailing viewer `i-1` by `k` frames, each serving
+    /// `base.camera.frames` frames of its window — the cross-view
+    /// redundancy workload the shared cache scope targets (trailing
+    /// viewers revisit poses the pool has already cached). `k = 0` is
+    /// the *spectator broadcast*: every viewer replays the identical
+    /// pose stream, clustered sorting's best case.
+    pub fn stagger(mut self, k: usize) -> Self {
+        self.stagger = Some(k);
+        self
+    }
+
+    /// Share an already-built scene instead of building one from the
+    /// config (scene reuse across pools, benches).
+    pub fn scene(mut self, scene: Arc<GaussianScene>) -> Self {
+        self.scene = Some(scene);
+        self
+    }
+
+    /// Heterogeneous device mix: session `i` simulates
+    /// `mix[i % mix.len()]` instead of the base config's variant —
+    /// GPU, LuminCore, and GSCore cost models serving from one pool.
+    /// Empty (the default) keeps every session on `base.variant`.
+    pub fn device_mix(mut self, mix: Vec<crate::config::HardwareVariant>) -> Self {
+        self.device_mix = mix;
+        self
+    }
+
+    /// Build the pool. Admission priority defaults to
+    /// first-admitted-highest (session 0 is the last demoted); stable
+    /// `session_id`s are assigned 0..n. Cluster sorts are deliberately
+    /// NOT published at construction — the first `run_epoch` publishes
+    /// lazily against the poses it actually renders.
+    pub fn build(self) -> Result<SessionPool> {
+        let PoolBuilder { base, n, stagger, scene, device_mix } = self;
+        anyhow::ensure!(n > 0, "a pool needs at least one session");
+        let scene = match scene {
+            Some(s) => s,
+            None => SessionPool::built_scene(&base)?,
+        };
+        let frames = base.camera.frames;
+        let mut base = base;
+        if let Some(k) = stagger {
+            // Generate one long path on session 0 so every window below
+            // is a slice of the same trajectory.
+            base.camera.frames = frames + k * n.saturating_sub(1);
+        }
+        let variant_at = |i: usize| {
+            if device_mix.is_empty() {
+                base.variant
+            } else {
+                device_mix[i % device_mix.len()]
+            }
+        };
+        // Hubs exist when the scope is enabled and *any* session's
+        // variant can use them; sessions whose variant lacks the
+        // mechanism simply never produce a cache geometry / sort
+        // candidate, so mixed pools degrade per-session.
+        let cache_hub = (base.pool.cache_scope == CacheScope::Shared
+            && (0..n).any(|i| variant_at(i).uses_rc()))
+        .then(|| Arc::new(CacheHub::new()));
+        let sort_hub = (base.pool.sort_scope == SortScope::Clustered
+            && (0..n).any(|i| variant_at(i).uses_s2()))
+        .then(|| SortHub::new(base.pool.cluster_radius as f32));
+        let sessions = (0..n)
+            .map(|i| {
+                let mut cfg = base.clone();
+                cfg.camera.seed = base.camera.seed.wrapping_add(i as u64);
+                cfg.variant = variant_at(i);
+                let mut coord =
+                    Coordinator::with_scene_in_pool(cfg, scene.clone(), cache_hub.clone())?;
+                if sort_hub.is_some() {
+                    coord.set_sort_clustered(true);
+                }
+                coord.priority = (n - i) as f64;
+                coord.session_id = i as u64;
+                Ok(coord)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut pool = SessionPool {
+            sessions,
+            reduced: None,
+            cache_hub,
+            sort_hub,
+            sort_published: Vec::new(),
+            served: CacheStats::default(),
+            next_id: n as u64,
+            refused: 0,
+        };
+        if let Some(k) = stagger {
+            let full = pool.sessions[0].trajectory.clone();
+            for (i, c) in pool.sessions.iter_mut().enumerate() {
+                let mut t = full.clone();
+                t.poses = t.poses[i * k..i * k + frames].to_vec();
+                c.trajectory = t;
+            }
+        }
+        // Shared scope: set sharer counts (each view attached with its
+        // own full-reload charge; the install below is snapshot-ptr
+        // idempotent). A no-op for private pools.
+        pool.sync_shared_cache();
+        Ok(pool)
+    }
+}
+
 impl SessionPool {
+    /// Start building a pool from a base config — see [`PoolBuilder`].
+    pub fn builder(base: LuminaConfig) -> PoolBuilder {
+        PoolBuilder { base, n: 1, stagger: None, scene: None, device_mix: Vec::new() }
+    }
+
     /// Build `n` sessions from a base config. The scene is built once
     /// and shared; each session gets a distinct camera seed (base + i)
     /// so the viewers follow different trajectories.
+    #[deprecated(since = "0.8.0", note = "use `SessionPool::builder(cfg).sessions(n).build()`")]
     pub fn new(base: LuminaConfig, n: usize) -> Result<Self> {
-        let scene = Self::built_scene(&base)?;
-        Self::with_scene(base, scene, n)
+        Self::builder(base).sessions(n).build()
     }
 
     /// The scene a config describes (loaded or synthesized), ready to
@@ -234,85 +475,41 @@ impl SessionPool {
         }))
     }
 
-    /// Build `n` viewers converging on one camera path, staggered by
-    /// `stagger` frames: every session replays session 0's generated
-    /// trajectory, viewer `i` trailing viewer `i+1` by `stagger`
-    /// frames, each serving `base.camera.frames` frames of its window.
-    /// The cross-view-redundancy workload the shared cache scope
-    /// targets (after each epoch merge the trailing viewers revisit
-    /// poses the pool has already cached) — shared by the benches and
-    /// the determinism/hit-rate tests so they measure one workload.
+    /// Build `n` viewers converging on one camera path — see
+    /// [`PoolBuilder::stagger`].
+    #[deprecated(
+        since = "0.8.0",
+        note = "use `SessionPool::builder(cfg).sessions(n).stagger(k).build()`"
+    )]
     pub fn convergent(base: LuminaConfig, n: usize, stagger: usize) -> Result<Self> {
-        let scene = Self::built_scene(&base)?;
-        Self::convergent_with_scene(base, scene, n, stagger)
+        Self::builder(base).sessions(n).stagger(stagger).build()
     }
 
-    /// [`Self::convergent`] over an already-built shared scene.
+    /// [`PoolBuilder::stagger`] over an already-built shared scene.
+    #[deprecated(
+        since = "0.8.0",
+        note = "use `SessionPool::builder(cfg).sessions(n).stagger(k).scene(s).build()`"
+    )]
     pub fn convergent_with_scene(
         base: LuminaConfig,
         scene: Arc<GaussianScene>,
         n: usize,
         stagger: usize,
     ) -> Result<Self> {
-        let frames = base.camera.frames;
-        let mut gen_cfg = base;
-        gen_cfg.camera.frames = frames + stagger * n.saturating_sub(1);
-        let mut pool = Self::with_scene(gen_cfg, scene, n)?;
-        let full = pool.sessions[0].trajectory.clone();
-        for (i, c) in pool.sessions.iter_mut().enumerate() {
-            let mut t = full.clone();
-            t.poses = t.poses[i * stagger..i * stagger + frames].to_vec();
-            c.trajectory = t;
-        }
-        Ok(pool)
+        Self::builder(base).sessions(n).stagger(stagger).scene(scene).build()
     }
 
-    /// Build `n` sessions over an already-built shared scene. Admission
-    /// priority defaults to first-admitted-highest (session 0 is the
-    /// last demoted).
+    /// Build `n` sessions over an already-built shared scene.
+    #[deprecated(
+        since = "0.8.0",
+        note = "use `SessionPool::builder(cfg).sessions(n).scene(s).build()`"
+    )]
     pub fn with_scene(
         base: LuminaConfig,
         scene: Arc<GaussianScene>,
         n: usize,
     ) -> Result<Self> {
-        anyhow::ensure!(n > 0, "a pool needs at least one session");
-        let cache_hub = (base.pool.cache_scope == CacheScope::Shared
-            && base.variant.uses_rc())
-        .then(|| Arc::new(CacheHub::new()));
-        let sort_hub = (base.pool.sort_scope == SortScope::Clustered
-            && base.variant.uses_s2())
-        .then(|| SortHub::new(base.pool.cluster_radius as f32));
-        let sessions = (0..n)
-            .map(|i| {
-                let mut cfg = base.clone();
-                cfg.camera.seed = base.camera.seed.wrapping_add(i as u64);
-                let mut coord =
-                    Coordinator::with_scene_in_pool(cfg, scene.clone(), cache_hub.clone())?;
-                if sort_hub.is_some() {
-                    coord.set_sort_clustered(true);
-                }
-                coord.priority = (n - i) as f64;
-                Ok(coord)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let mut pool = SessionPool {
-            sessions,
-            reduced: None,
-            cache_hub,
-            sort_hub,
-            sort_published: Vec::new(),
-            served: CacheStats::default(),
-        };
-        // Shared scope: set sharer counts (each view attached with its
-        // own full-reload charge; the install below is snapshot-ptr
-        // idempotent). A no-op for private pools. Cluster sorts are
-        // deliberately NOT published here: callers (the convergent
-        // builders, tests) may still rewrite trajectories, and a
-        // construction-time sort would be a throwaway — the first
-        // `run_epoch` publishes lazily against the poses it actually
-        // renders.
-        pool.sync_shared_cache();
-        Ok(pool)
+        Self::builder(base).sessions(n).scene(scene).build()
     }
 
     /// Number of sessions.
@@ -551,6 +748,7 @@ impl SessionPool {
                     let current: Vec<Tier> =
                         active.iter().map(|&i| self.sessions[i].tier()).collect();
                     self.apply_tiers_at(&active, &current, true)?;
+                    self.refused += 1;
                     return Err(refusal);
                 }
             }
@@ -694,8 +892,15 @@ impl SessionPool {
         let rate = self.pool_hit_rate();
         let (active, mut demands) = self.active_demands(rate)?;
         demands.push(Self::demand_for(&joiner, rate)?);
-        // A refusal drops the joiner here and touches nothing else.
-        let plan = ctrl.plan(&demands)?;
+        // A refusal drops the joiner here and touches nothing else
+        // (except the refusal counter the loadtest SLOs report).
+        let plan = match ctrl.plan(&demands) {
+            Ok(p) => p,
+            Err(refusal) => {
+                self.refused += 1;
+                return Err(refusal);
+            }
+        };
         let (existing, joined) = plan.tiers.split_at(active.len());
         let tier = joined[0];
         let reduced =
@@ -703,12 +908,76 @@ impl SessionPool {
         // Forced rebuild: wipe the probe's stage-state side effects so
         // the admitted session serves pristine frames.
         joiner.set_tier_with(tier, reduced, true)?;
+        joiner.session_id = self.next_id;
+        self.next_id += 1;
         let idx = self.sessions.len();
         self.sessions.push(joiner);
         // Applies the re-planned tiers and re-syncs shared cache
         // snapshots (sharer counts grew) and cluster sorts.
         self.apply_tiers_at(&active, existing, false)?;
         Ok(idx)
+    }
+
+    /// Retire session `i` — the departure path symmetric with
+    /// [`Self::admit`]. The session's pipelined frame slots are drained
+    /// under its current tier (those frames were already dispatched, so
+    /// they complete and are returned), its un-merged shared-cache
+    /// delta leaves with it — only epoch-boundary merges publish
+    /// writes, so a departing viewer cannot perturb the pool's cache
+    /// contents — and the shared-cache sharer counts and sort-cluster
+    /// membership re-sync over the remaining sessions, whose relative
+    /// order (and therefore the index-ordered epoch merge) is
+    /// unchanged. Call at an epoch boundary for bitwise-reproducible
+    /// churn; retiring the last session leaves a valid empty pool.
+    pub fn retire(&mut self, i: usize) -> Result<Vec<FrameReport>> {
+        anyhow::ensure!(i < self.sessions.len(), "no session {i}");
+        let mut departing = self.sessions.remove(i);
+        let mut drained = Vec::new();
+        while departing.in_flight() > 0 {
+            match departing.drain_one()? {
+                Some(f) => {
+                    self.served.merge(&f.report.cache);
+                    drained.push(f.report);
+                }
+                None => break,
+            }
+        }
+        // Discard the delta rather than merging it: mid-epoch inserts
+        // are invisible to other sessions until the boundary merge, and
+        // a viewer that leaves before the boundary must stay invisible
+        // — otherwise retire timing inside an epoch would change the
+        // pool's cache bits.
+        let _ = departing.take_cache_delta();
+        self.sync_shared_cache();
+        self.sync_shared_sorts();
+        Ok(drained)
+    }
+
+    /// Re-plan serving tiers over the still-active sessions without
+    /// rendering an epoch: probe sessions that have no measured
+    /// workload yet (fresh pools, new joiners), price everyone, and
+    /// apply the plan — falling back to each session's floor tier when
+    /// even the bottom mix misses the target (admitted viewers are
+    /// never kicked). The churn driver's building block: interleave
+    /// [`Self::admit`]/[`Self::retire`]/[`Self::run_epoch`] and call
+    /// this at the boundaries [`Self::serve`] would have re-planned at.
+    pub fn replan(&mut self, ctrl: &AdmissionController, force_rebuild: bool) -> Result<()> {
+        let (active, demands) = self.probe_active_demands()?;
+        if active.is_empty() {
+            return Ok(());
+        }
+        match ctrl.plan(&demands) {
+            Ok(plan) => self.apply_tiers_at(&active, &plan.tiers, force_rebuild),
+            Err(_) => {
+                let floors = ctrl.floor_tiers(&demands);
+                self.apply_tiers_at(&active, &floors, force_rebuild)
+            }
+        }
+    }
+
+    /// Cumulative refused admissions (see [`PoolReport::refusals`]).
+    pub fn refusals(&self) -> usize {
+        self.refused
     }
 
     /// Step every session up to `cap` frames (or to the end of its
@@ -806,7 +1075,7 @@ impl SessionPool {
             .map(|c| c.pipeline_depth())
             .max()
             .unwrap_or(1);
-        PoolReport { sessions, wall_s, pipeline_depth }
+        PoolReport { sessions, wall_s, pipeline_depth, refusals: self.refused }
     }
 }
 
@@ -860,7 +1129,7 @@ mod tests {
     #[test]
     fn erroring_session_restores_thread_budget_and_pool() {
         let before = par::num_threads();
-        let mut pool = SessionPool::new(small_cfg(), 3).unwrap();
+        let mut pool = SessionPool::builder(small_cfg()).sessions(3).build().unwrap();
         pool.sessions[1].fail_at_frame = Some(2);
         let err = pool.run();
         assert!(err.is_err(), "injected failure must surface");
@@ -882,7 +1151,7 @@ mod tests {
     fn panicking_session_restores_thread_budget() {
         let before = par::num_threads();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut pool = SessionPool::new(small_cfg(), 2).unwrap();
+            let mut pool = SessionPool::builder(small_cfg()).sessions(2).build().unwrap();
             pool.sessions[0].panic_at_frame = Some(1);
             let _ = pool.run();
         }));
@@ -896,7 +1165,7 @@ mod tests {
 
     #[test]
     fn pool_priorities_default_first_admitted_highest() {
-        let pool = SessionPool::new(small_cfg(), 3).unwrap();
+        let pool = SessionPool::builder(small_cfg()).sessions(3).build().unwrap();
         let p: Vec<f64> = pool.sessions().iter().map(|c| c.priority).collect();
         assert!(p[0] > p[1] && p[1] > p[2]);
     }
@@ -905,7 +1174,7 @@ mod tests {
     fn serve_excludes_finished_sessions_from_replanning() {
         let mut cfg = small_cfg();
         cfg.pool.epoch_frames = 2;
-        let mut pool = SessionPool::new(cfg.clone(), 3).unwrap();
+        let mut pool = SessionPool::builder(cfg.clone()).sessions(3).build().unwrap();
         // Session 2 finishes after a single frame; later epochs re-plan
         // over the two live sessions only.
         pool.sessions[2].trajectory.poses.truncate(1);
@@ -923,12 +1192,79 @@ mod tests {
 
     #[test]
     fn heterogeneous_summary_reports_range() {
-        let mut pool = SessionPool::new(small_cfg(), 2).unwrap();
+        let mut pool = SessionPool::builder(small_cfg()).sessions(2).build().unwrap();
         // Make the trajectories heterogeneous: truncate session 1.
         pool.sessions[1].trajectory.poses.truncate(2);
         let report = pool.run().unwrap();
         let s = report.summary();
         assert!(s.contains("2 sessions"), "summary: {s}");
         assert!(s.contains("2-4 frames"), "summary must not lie about counts: {s}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn builder_is_bitwise_identical_to_deprecated_shims() {
+        // The shims delegate to the builder, but this pins the *builder*
+        // against the historical constructor semantics: same seeds, same
+        // priorities, same staggered-window rewrite, same rendered bits.
+        let mut a = SessionPool::new(small_cfg(), 2).unwrap();
+        let mut b = SessionPool::builder(small_cfg()).sessions(2).build().unwrap();
+        assert_eq!(a.run().unwrap().sessions, b.run().unwrap().sessions);
+
+        let mut c = SessionPool::convergent(small_cfg(), 3, 2).unwrap();
+        let mut d =
+            SessionPool::builder(small_cfg()).sessions(3).stagger(2).build().unwrap();
+        assert_eq!(c.run().unwrap().sessions, d.run().unwrap().sessions);
+    }
+
+    #[test]
+    fn builder_assigns_stable_session_ids() {
+        let pool = SessionPool::builder(small_cfg()).sessions(3).build().unwrap();
+        let ids: Vec<u64> = pool.sessions().iter().map(|c| c.session_id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn device_mix_round_robins_variants() {
+        let mix = vec![HardwareVariant::Gpu, HardwareVariant::GsCore];
+        let pool = SessionPool::builder(small_cfg())
+            .sessions(3)
+            .device_mix(mix)
+            .build()
+            .unwrap();
+        let labels: Vec<&str> =
+            pool.sessions().iter().map(|c| c.cfg.variant.label()).collect();
+        assert_eq!(labels, vec!["GPU", "GSCore", "GPU"]);
+    }
+
+    #[test]
+    fn retire_shifts_indices_but_not_ids() {
+        let mut pool = SessionPool::builder(small_cfg()).sessions(3).build().unwrap();
+        let drained = pool.retire(1).unwrap();
+        assert!(drained.is_empty(), "synchronous sessions have no in-flight frames");
+        assert_eq!(pool.len(), 2);
+        let ids: Vec<u64> = pool.sessions().iter().map(|c| c.session_id).collect();
+        assert_eq!(ids, vec![0, 2], "identity survives the index shift");
+        // The remaining pool still runs to completion.
+        let report = pool.run().unwrap();
+        assert_eq!(report.sessions.len(), 2);
+        assert!(report.sessions.iter().all(|r| r.frames.len() == 4));
+        // Retiring everyone leaves a valid empty pool.
+        pool.retire(1).unwrap();
+        pool.retire(0).unwrap();
+        assert!(pool.is_empty());
+        assert!(pool.retire(0).is_err(), "no session left to retire");
+        assert_eq!(pool.run().unwrap().total_frames(), 0);
+    }
+
+    #[test]
+    fn empty_pool_report_slos_are_zero() {
+        let mut pool = SessionPool::builder(small_cfg()).sessions(1).build().unwrap();
+        pool.retire(0).unwrap();
+        let report = pool.run().unwrap();
+        assert_eq!(report.latency_percentile(99.0), 0.0);
+        assert_eq!(report.demotions(), 0);
+        assert_eq!(report.demotion_rate(), 0.0);
+        assert_eq!(report.refusals, 0);
     }
 }

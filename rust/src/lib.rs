@@ -9,8 +9,9 @@
 //!   ([`lumina::s2`] Sorting-Sharing and [`lumina::rc`] Radiance Caching),
 //!   the cycle-accurate [`sim`] of the LuminCore accelerator plus GPU /
 //!   GSCore cost models behind the [`sim::cost`] trait seams, quality
-//!   [`metrics`], the frame-loop [`coordinator`], and multi-viewer
-//!   serving via [`coordinator::SessionPool`].
+//!   [`metrics`], the frame-loop [`coordinator`], multi-viewer
+//!   serving via [`coordinator::SessionPool`], and the population-scale
+//!   loadtest harness ([`workload`]).
 //! * **Layer 2** — `python/compile/model.py`: the JAX compute graph,
 //!   AOT-lowered to HLO-text artifacts at build time.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the
@@ -49,3 +50,4 @@ pub mod runtime;
 pub mod scene;
 pub mod sim;
 pub mod util;
+pub mod workload;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   render    render a trajectory under one hardware variant
 //!   serve     run N concurrent viewer sessions over one shared scene
+//!   loadtest  population-scale churn scenarios with SLO reporting
 //!   compare   run every paper variant on one config (Fig. 22 style)
 //!   quality   per-frame quality vs the exact pipeline (Fig. 20 style)
 //!   gen-scene synthesize a scene and write it as LGSC (CI caches this)
@@ -35,6 +36,9 @@ const VALUE_KEYS: &[&str] = &[
     "raster-substages",
     "cache-scope",
     "sort-scope",
+    "scenario",
+    "seed",
+    "epochs",
 ];
 
 fn main() -> Result<()> {
@@ -43,6 +47,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("render") => cmd_render(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadtest") => cmd_loadtest(&args),
         Some("compare") => cmd_compare(&args),
         Some("quality") => cmd_quality(&args),
         Some("gen-scene") => cmd_gen_scene(&args),
@@ -62,7 +67,7 @@ fn print_help() {
     eprintln!(
         "lumina — real-time mobile neural rendering (paper reproduction)\n\
          \n\
-         USAGE: lumina <render|compare|quality|runtime|info> [flags]\n\
+         USAGE: lumina <render|serve|loadtest|compare|quality|runtime|info> [flags]\n\
          \n\
          FLAGS:\n\
            --config <file.toml>   load a run configuration\n\
@@ -90,6 +95,17 @@ fn print_help() {
                                   (per-session windows) or clustered (one\n\
                                   pool-wide sort per pose cluster per\n\
                                   epoch) (serve cmd)\n\
+           --scenario <name>      loadtest scenario: poisson_churn,\n\
+                                  diurnal_ramp, flash_crowd,\n\
+                                  spectator_broadcast, teleport_stress;\n\
+                                  prints the SLO report as JSON\n\
+           --seed <n>             loadtest churn/pose seed (default 7)\n\
+           --epochs <n>           override the scenario's epoch count\n\
+           --smoke                loadtest CI pair: flash_crowd twice\n\
+                                  (byte-identical reports enforced) plus\n\
+                                  spectator_broadcast under clustered and\n\
+                                  private sort scopes; emits metric/ rows\n\
+                                  to $LUMINA_BENCH_JSON\n\
            --artifacts <dir>      AOT artifact directory (runtime cmd)"
     );
 }
@@ -183,7 +199,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         cfg.pool.sort_scope.label()
     );
     let admission = cfg.pool.target_fps > 0.0;
-    let mut pool = SessionPool::new(cfg.clone(), n)?;
+    let mut pool = SessionPool::builder(cfg.clone()).sessions(n).build()?;
     let report = if admission {
         let ctrl = AdmissionController::from_config(&cfg)?;
         println!(
@@ -206,6 +222,139 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             cfg.pool.target_fps,
             if report.pool_fps() >= cfg.pool.target_fps { "target held" } else { "TARGET MISSED" }
         );
+    }
+    Ok(())
+}
+
+fn cmd_loadtest(args: &cli::Args) -> Result<()> {
+    use lumina::workload::{run_loadtest, LoadtestOptions, Scenario};
+    let base = load_config(args)?;
+    let seed = args.try_parsed::<u64>("seed")?.unwrap_or(7);
+    let epochs = args.try_parsed::<usize>("epochs")?;
+    let smoke = args.has_flag("smoke") || std::env::var("LUMINA_BENCH_SMOKE").is_ok();
+    // `load_config` already applied --set to `base`, but the scenario
+    // preset re-binds pose family / scopes / variant on top of it; the
+    // specs are threaded through again so user overrides win over the
+    // preset too (applying a key=value override twice is idempotent).
+    let overrides: Vec<String> = args.get_all("set").to_vec();
+    match args.get("scenario") {
+        Some(name) => {
+            let scenario = Scenario::parse(name)?;
+            let opts = LoadtestOptions { scenario, seed, epochs, smoke, overrides };
+            let report = run_loadtest(base, &opts)?;
+            let json = report.to_json();
+            eprintln!(
+                "{}: {} frames over {} epochs | p50/p95/p99 {}/{}/{} ns | {} refused | {} demotions",
+                report.scenario,
+                report.total_frames,
+                report.epochs.len(),
+                report.p50_ns,
+                report.p95_ns,
+                report.p99_ns,
+                report.refusals,
+                report.demotions,
+            );
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, &json)
+                    .with_context(|| format!("writing loadtest report to {path}"))?;
+                eprintln!("wrote {path}");
+            }
+            // stdout carries exactly the report bytes: the determinism
+            // contract is `lumina loadtest ... | sha256sum`-able.
+            println!("{json}");
+            Ok(())
+        }
+        None if smoke => loadtest_smoke(base, seed, epochs, &overrides),
+        None => {
+            let names: Vec<&str> = Scenario::all().iter().map(|s| s.name()).collect();
+            anyhow::bail!(
+                "loadtest needs --scenario <name> (or --smoke for the CI pair); \
+                 scenarios: {}",
+                names.join(", ")
+            )
+        }
+    }
+}
+
+/// The CI smoke pair behind `lumina loadtest --smoke`:
+///
+/// 1. `flash_crowd` twice at the same seed — the two reports must be
+///    byte-identical (churn + admission refusals are deterministic);
+/// 2. `spectator_broadcast` under clustered then private sort scope —
+///    the clustered-scope p99 must not exceed the private-scope p99
+///    (bench_gate enforces both invariants from the metric/ rows).
+///
+/// Rows are written through [`lumina::util::bench::results_json`]
+/// directly rather than via `bench::Runner`, whose positional-arg
+/// filter would swallow the `loadtest` subcommand word.
+fn loadtest_smoke(
+    base: LuminaConfig,
+    seed: u64,
+    epochs: Option<usize>,
+    overrides: &[String],
+) -> Result<()> {
+    use lumina::util::bench::{results_json, Measurement};
+    use lumina::workload::{run_loadtest, LoadtestOptions, Scenario};
+    use std::time::Duration;
+    let opts = |scenario: Scenario, extra: &[&str]| LoadtestOptions {
+        scenario,
+        seed,
+        epochs,
+        smoke: true,
+        overrides: overrides
+            .iter()
+            .cloned()
+            .chain(extra.iter().map(|s| s.to_string()))
+            .collect(),
+    };
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut metric = |rows: &mut Vec<Measurement>, name: &str, value: u64| {
+        let d = Duration::from_nanos(value);
+        eprintln!("{name:<44} {value:>12}");
+        rows.push(Measurement {
+            name: name.to_string(),
+            iters: 1,
+            min: d,
+            median: d,
+            mean: d,
+        });
+    };
+
+    let flash1 = run_loadtest(base.clone(), &opts(Scenario::FlashCrowd, &[]))?;
+    let flash2 = run_loadtest(base.clone(), &opts(Scenario::FlashCrowd, &[]))?;
+    anyhow::ensure!(
+        flash1.to_json() == flash2.to_json(),
+        "flash_crowd loadtest reports diverged at seed {seed}: determinism regression"
+    );
+    eprintln!(
+        "flash_crowd x2 @ seed {seed}: byte-identical | {} frames | {} refused | {} demotions",
+        flash1.total_frames, flash1.refusals, flash1.demotions
+    );
+    metric(&mut rows, "metric/loadtest_refusals_run1", flash1.refusals as u64);
+    metric(&mut rows, "metric/loadtest_refusals_run2", flash2.refusals as u64);
+    metric(&mut rows, "metric/loadtest_flash_p99_ns", flash1.p99_ns);
+
+    let clustered = run_loadtest(
+        base.clone(),
+        &opts(Scenario::SpectatorBroadcast, &["pool.sort_scope=clustered"]),
+    )?;
+    let private = run_loadtest(
+        base,
+        &opts(Scenario::SpectatorBroadcast, &["pool.sort_scope=private"]),
+    )?;
+    eprintln!(
+        "spectator_broadcast: clustered p99 {} ns ({} sorts) vs private p99 {} ns ({} sorts)",
+        clustered.p99_ns, clustered.sorted_frames, private.p99_ns, private.sorted_frames
+    );
+    metric(&mut rows, "metric/loadtest_broadcast_p99_clustered_ns", clustered.p99_ns);
+    metric(&mut rows, "metric/loadtest_broadcast_p99_private_ns", private.p99_ns);
+    metric(&mut rows, "metric/loadtest_broadcast_sorted_clustered", clustered.sorted_frames as u64);
+    metric(&mut rows, "metric/loadtest_broadcast_sorted_private", private.sorted_frames as u64);
+
+    if let Ok(path) = std::env::var("LUMINA_BENCH_JSON") {
+        std::fs::write(&path, results_json("loadtest", &rows))
+            .with_context(|| format!("writing bench rows to {path}"))?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

@@ -63,6 +63,19 @@ impl Args {
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Parse `--key` as `T`, erroring on a malformed value instead of
+    /// silently falling back to a default (`--seed banana` should fail
+    /// loudly, not quietly run seed 0). `Ok(None)` when absent.
+    pub fn try_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("invalid --{key} value: {v:?}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +109,14 @@ mod tests {
         let a = parse(&argv(&["x", "--n", "12"]), &["n"]);
         assert_eq!(a.get_parsed("n", 5usize), 12);
         assert_eq!(a.get_parsed("missing", 5usize), 5);
+    }
+
+    #[test]
+    fn try_parsed_rejects_malformed_values() {
+        let a = parse(&argv(&["x", "--seed", "7", "--epochs", "banana"]), &["seed", "epochs"]);
+        assert_eq!(a.try_parsed::<u64>("seed").unwrap(), Some(7));
+        assert_eq!(a.try_parsed::<u64>("missing").unwrap(), None);
+        let err = a.try_parsed::<usize>("epochs").unwrap_err().to_string();
+        assert!(err.contains("--epochs"), "error names the key: {err}");
     }
 }

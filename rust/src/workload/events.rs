@@ -1,0 +1,164 @@
+//! Seeded, epoch-synchronous arrival/departure processes.
+//!
+//! Churn is sampled once per epoch boundary from a dedicated
+//! [`Pcg32`] stream — no wall clock, no OS entropy — so the event
+//! sequence is a pure function of `(process, seed, epoch history)` and
+//! the loadtest's determinism argument reduces to the pool's own.
+
+use crate::util::prng::Pcg32;
+
+/// How many viewers arrive and depart at one epoch boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvents {
+    pub arrivals: usize,
+    pub departures: usize,
+}
+
+/// A seeded arrival/departure process, sampled at epoch boundaries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnProcess {
+    /// Memoryless churn: Poisson(`arrivals_per_epoch`) arrivals; each
+    /// active viewer independently departs with `departure_prob`.
+    Poisson { arrivals_per_epoch: f64, departure_prob: f32 },
+    /// A half-sine "day" curve: arrivals ramp from zero to
+    /// `peak_arrivals_per_epoch` mid-period and back. Departures stay
+    /// memoryless, so the population lags the ramp like real sessions
+    /// outliving their arrival hour.
+    DiurnalRamp {
+        peak_arrivals_per_epoch: f64,
+        period_epochs: usize,
+        departure_prob: f32,
+    },
+    /// Background Poisson arrivals plus a one-epoch spike of
+    /// `spike_arrivals` extra viewers at `spike_epoch` — the admission
+    /// controller's refusal path under load.
+    FlashCrowd {
+        base_arrivals_per_epoch: f64,
+        spike_epoch: usize,
+        spike_arrivals: usize,
+        departure_prob: f32,
+    },
+}
+
+impl ChurnProcess {
+    /// Sample the events for the boundary entering `epoch`, given
+    /// `active` currently-attached viewers. Draws a deterministic
+    /// number of variates per call *given the inputs*, so identical
+    /// histories replay identical event sequences.
+    pub fn events_at(&self, epoch: usize, active: usize, rng: &mut Pcg32) -> ChurnEvents {
+        let (lambda, extra, departure_prob) = match *self {
+            ChurnProcess::Poisson { arrivals_per_epoch, departure_prob } => {
+                (arrivals_per_epoch, 0, departure_prob)
+            }
+            ChurnProcess::DiurnalRamp {
+                peak_arrivals_per_epoch,
+                period_epochs,
+                departure_prob,
+            } => {
+                let period = period_epochs.max(1);
+                let phase = (epoch % period) as f64 / period as f64;
+                let lambda =
+                    peak_arrivals_per_epoch * (std::f64::consts::PI * phase).sin().max(0.0);
+                (lambda, 0, departure_prob)
+            }
+            ChurnProcess::FlashCrowd {
+                base_arrivals_per_epoch,
+                spike_epoch,
+                spike_arrivals,
+                departure_prob,
+            } => {
+                let extra = if epoch == spike_epoch { spike_arrivals } else { 0 };
+                (base_arrivals_per_epoch, extra, departure_prob)
+            }
+        };
+        let arrivals = poisson(lambda, rng) + extra;
+        let departures = (0..active).filter(|_| rng.chance(departure_prob)).count();
+        ChurnEvents { arrivals, departures }
+    }
+}
+
+/// Knuth's product-of-uniforms Poisson sampler, capped at 64 (a runaway
+/// lambda must not stall an epoch boundary).
+fn poisson(lambda: f64, rng: &mut Pcg32) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let limit = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f64();
+        if p <= limit || k >= 64 {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_identical_event_sequences() {
+        let proc = ChurnProcess::Poisson { arrivals_per_epoch: 1.5, departure_prob: 0.2 };
+        let run = || {
+            let mut rng = Pcg32::new(9, 0x10AD);
+            (0..16).map(|e| proc.events_at(e, 5, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn poisson_mean_tracks_lambda() {
+        let mut rng = Pcg32::new(3, 1);
+        let n = 4000;
+        let total: usize = (0..n).map(|_| poisson(2.0, &mut rng)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 2.0).abs() < 0.15, "poisson mean drifted: {mean}");
+    }
+
+    #[test]
+    fn flash_crowd_spikes_once() {
+        let proc = ChurnProcess::FlashCrowd {
+            base_arrivals_per_epoch: 0.0,
+            spike_epoch: 3,
+            spike_arrivals: 8,
+            departure_prob: 0.0,
+        };
+        let mut rng = Pcg32::new(1, 1);
+        for e in 0..6 {
+            let ev = proc.events_at(e, 4, &mut rng);
+            assert_eq!(ev.arrivals, if e == 3 { 8 } else { 0 });
+            assert_eq!(ev.departures, 0);
+        }
+    }
+
+    #[test]
+    fn diurnal_ramp_is_zero_at_period_start_and_peaks_mid_period() {
+        let proc = ChurnProcess::DiurnalRamp {
+            peak_arrivals_per_epoch: 6.0,
+            period_epochs: 8,
+            departure_prob: 0.0,
+        };
+        // Phase 0 has lambda 0: no arrivals regardless of the stream.
+        let mut rng = Pcg32::new(2, 2);
+        assert_eq!(proc.events_at(0, 3, &mut rng).arrivals, 0);
+        assert_eq!(proc.events_at(8, 3, &mut rng).arrivals, 0);
+        // Mid-period arrivals average near the peak.
+        let mut rng = Pcg32::new(2, 3);
+        let total: usize = (0..500).map(|_| proc.events_at(4, 0, &mut rng).arrivals).sum();
+        let mean = total as f64 / 500.0;
+        assert!((mean - 6.0).abs() < 0.6, "mid-period mean drifted: {mean}");
+    }
+
+    #[test]
+    fn departures_never_exceed_active() {
+        let proc = ChurnProcess::Poisson { arrivals_per_epoch: 0.0, departure_prob: 1.0 };
+        let mut rng = Pcg32::new(4, 4);
+        let ev = proc.events_at(0, 7, &mut rng);
+        assert_eq!(ev.departures, 7);
+        let ev = proc.events_at(1, 0, &mut rng);
+        assert_eq!(ev.departures, 0);
+    }
+}

@@ -1,0 +1,471 @@
+//! The loadtest driver: interleave seeded churn, pool epochs, and
+//! admission re-planning, and emit a byte-stable SLO report.
+//!
+//! # Determinism
+//!
+//! A loadtest is a pure function of `(scenario spec, seed)`:
+//!
+//! * churn events come from a dedicated [`Pcg32`] stream
+//!   ([`LOADTEST_STREAM`]) sampled serially on the coordination thread;
+//! * every pool-state input to a churn decision (session count, session
+//!   ids, refusal counts) is itself thread-count invariant;
+//! * rendered frames are bitwise thread-count and pipeline-depth
+//!   invariant (the pool's core guarantee), and every latency is
+//!   reported in integer nanoseconds, so the JSON never touches float
+//!   formatting of accumulated values.
+//!
+//! `tests/loadtest.rs` pins the result: same seed, byte-identical JSON
+//! at 1/2/4 threads.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use super::scenario::{Scenario, ScenarioSpec};
+use crate::config::LuminaConfig;
+use crate::coordinator::admission::{price_workload, AdmissionController, ADMISSION_HEADROOM};
+use crate::coordinator::report::{tier_rank, FrameReport};
+use crate::coordinator::SessionPool;
+use crate::util::prng::Pcg32;
+
+/// Dedicated PRNG stream for churn sampling — disjoint from the camera
+/// stream by construction, so workload randomness can never perturb
+/// trajectories (or vice versa).
+pub const LOADTEST_STREAM: u64 = 0x10AD_7E57;
+
+/// Parsed `lumina loadtest` options.
+#[derive(Debug, Clone)]
+pub struct LoadtestOptions {
+    pub scenario: Scenario,
+    /// Seeds both the camera base and the churn stream.
+    pub seed: u64,
+    /// Override the scenario's epoch count.
+    pub epochs: Option<usize>,
+    /// CI smoke mode: tiny scene, low resolution, few epochs.
+    pub smoke: bool,
+    /// `--set key=value` config overrides, applied over the scenario's
+    /// bound config (e.g. `pool.sort_scope=private`).
+    pub overrides: Vec<String>,
+}
+
+/// Per-epoch SLO row: population, churn outcome, and nearest-rank
+/// latency percentiles over the epoch's frames (integer ns).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EpochSlo {
+    pub epoch: usize,
+    /// Attached sessions after this boundary's churn.
+    pub sessions: usize,
+    /// Frames served this epoch (drained frames of departing viewers
+    /// count here — they were real served frames).
+    pub frames: usize,
+    pub arrivals: usize,
+    pub departures: usize,
+    /// Admissions refused at this boundary.
+    pub refused: usize,
+    /// Tier demotions observed across this epoch's frames.
+    pub demotions: usize,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// End-of-run per-session row, keyed by the stable
+/// [`crate::coordinator::Coordinator::session_id`] (indices shift under
+/// churn; ids never do).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionSlo {
+    pub id: u64,
+    pub frames: usize,
+    /// Frames that executed a speculative sort.
+    pub sorted: usize,
+    pub demotions: usize,
+    pub p99_ns: u64,
+}
+
+/// The loadtest's result: per-epoch and end-of-run SLOs. All counters
+/// are integers, so [`Self::to_json`] is byte-stable across platforms,
+/// thread counts, and repeat runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadtestReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub epoch_frames: usize,
+    pub epochs: Vec<EpochSlo>,
+    pub sessions: Vec<SessionSlo>,
+    pub total_frames: usize,
+    pub sorted_frames: usize,
+    /// Admissions the controller refused over the whole run.
+    pub refusals: usize,
+    pub demotions: usize,
+    /// Demotions per million served frames (integer arithmetic).
+    pub demotion_rate_ppm: u64,
+    /// Viewers ever attached (initial + admitted joiners).
+    pub admitted: usize,
+    /// Viewers retired by departures.
+    pub retired: usize,
+    /// Arrivals dropped at `max_sessions` before reaching admission.
+    pub dropped_at_cap: usize,
+    pub peak_sessions: usize,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl LoadtestReport {
+    /// Hand-rolled JSON — integers and fixed key order only, so two
+    /// identical runs produce identical bytes (the CLI's contract).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"scenario\":\"{}\",\"seed\":{},\"epoch_frames\":{},\"epochs\":[",
+            self.scenario, self.seed, self.epoch_frames
+        );
+        for (i, e) in self.epochs.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"epoch\":{},\"sessions\":{},\"frames\":{},\"arrivals\":{},\
+                 \"departures\":{},\"refused\":{},\"demotions\":{},\"p50_ns\":{},\
+                 \"p95_ns\":{},\"p99_ns\":{}}}",
+                e.epoch,
+                e.sessions,
+                e.frames,
+                e.arrivals,
+                e.departures,
+                e.refused,
+                e.demotions,
+                e.p50_ns,
+                e.p95_ns,
+                e.p99_ns
+            );
+        }
+        s.push_str("],\"sessions\":[");
+        for (i, v) in self.sessions.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"id\":{},\"frames\":{},\"sorted\":{},\"demotions\":{},\"p99_ns\":{}}}",
+                v.id, v.frames, v.sorted, v.demotions, v.p99_ns
+            );
+        }
+        let _ = write!(
+            s,
+            "],\"total_frames\":{},\"sorted_frames\":{},\"refusals\":{},\"demotions\":{},\
+             \"demotion_rate_ppm\":{},\"admitted\":{},\"retired\":{},\"dropped_at_cap\":{},\
+             \"peak_sessions\":{},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{}}}",
+            self.total_frames,
+            self.sorted_frames,
+            self.refusals,
+            self.demotions,
+            self.demotion_rate_ppm,
+            self.admitted,
+            self.retired,
+            self.dropped_at_cap,
+            self.peak_sessions,
+            self.p50_ns,
+            self.p95_ns,
+            self.p99_ns
+        );
+        s
+    }
+}
+
+/// Run a named scenario over a base config (the CLI entry point).
+pub fn run_loadtest(base: LuminaConfig, opts: &LoadtestOptions) -> Result<LoadtestReport> {
+    let mut spec = opts.scenario.spec(base);
+    if opts.smoke {
+        spec.shrink_for_smoke();
+    }
+    if let Some(e) = opts.epochs {
+        spec.epochs = e.max(1);
+    }
+    for o in &opts.overrides {
+        spec.cfg.apply_override(o)?;
+    }
+    run_spec(opts.scenario.name(), spec, opts.seed)
+}
+
+/// Run a fully-bound spec (tests craft specs directly, e.g. with a
+/// deliberately impossible capacity to force refusals).
+pub fn run_spec(scenario: &str, mut spec: ScenarioSpec, seed: u64) -> Result<LoadtestReport> {
+    let ef = spec.cfg.pool.epoch_frames.max(1);
+    spec.cfg.camera.seed = seed;
+    spec.cfg.camera.frames = spec.epochs * ef;
+
+    let mut builder =
+        SessionPool::builder(spec.cfg.clone()).sessions(spec.initial_sessions.max(1));
+    if spec.broadcast {
+        builder = builder.stagger(0);
+    }
+    if !spec.device_mix.is_empty() {
+        builder = builder.device_mix(spec.device_mix.clone());
+    }
+    let mut pool = builder.build()?;
+
+    // Size the admission FPS target from a probe-priced full-tier
+    // frame: `capacity_sessions` of them exactly fill the budget.
+    // Derived rather than hardcoded, so a scenario keeps its meaning
+    // ("holds N viewers") across scene sizes and smoke shrinks.
+    let probe = pool.sessions_mut()[0].probe_workload()?;
+    let price = price_workload(&probe, pool.sessions()[0].cfg.variant).max(1e-12);
+    let mut ctrl_cfg = spec.cfg.clone();
+    ctrl_cfg.pool.target_fps =
+        (1.0 - ADMISSION_HEADROOM) / (spec.capacity_sessions.max(0.01) * price);
+    let ctrl = AdmissionController::from_config(&ctrl_cfg)?;
+    // Initial plan with a forced rebuild: probes every session and
+    // wipes the probes' stage-state side effects, so served frames
+    // start pristine (and every session has a priced workload before
+    // the first boundary's churn).
+    pool.replan(&ctrl, true)?;
+
+    let mut rng = Pcg32::new(seed, LOADTEST_STREAM);
+    let mut by_id: BTreeMap<u64, SessionAgg> = BTreeMap::new();
+    let mut all_ns: Vec<u64> = Vec::new();
+    let mut epochs_out = Vec::new();
+    let mut admitted = spec.initial_sessions.max(1);
+    let mut retired = 0usize;
+    let mut dropped_at_cap = 0usize;
+    let mut peak_sessions = pool.len();
+
+    for epoch in 0..spec.epochs {
+        let mut epoch_ns: Vec<u64> = Vec::new();
+        let mut epoch_demotions = 0usize;
+        let mut arrivals = 0usize;
+        let mut departures = 0usize;
+        let refused_before = pool.refusals();
+
+        // Epoch-synchronous churn: departures first (freeing capacity
+        // the arrivals may claim), then arrivals through admission.
+        if let Some(churn) = spec.churn {
+            let ev = churn.events_at(epoch, pool.len(), &mut rng);
+            for _ in 0..ev.departures {
+                if pool.len() <= 1 {
+                    break; // admission prices joiners against a live pool
+                }
+                let idx = rng.below(pool.len());
+                let id = pool.sessions()[idx].session_id;
+                for f in pool.retire(idx)? {
+                    epoch_ns.push(latency_ns(&f));
+                    epoch_demotions += record(&mut by_id, &mut all_ns, id, &f);
+                }
+                departures += 1;
+                retired += 1;
+            }
+            for _ in 0..ev.arrivals {
+                if pool.len() >= spec.max_sessions {
+                    dropped_at_cap += 1;
+                    continue;
+                }
+                let mut jc = spec.cfg.clone();
+                // Joiners serve to the end of the run, entering on a
+                // fresh camera stream (broadcast pools excepted —
+                // their spec has no churn).
+                jc.camera.frames = (spec.epochs - epoch) * ef;
+                jc.camera.seed = seed.wrapping_add(10_000 + admitted as u64);
+                if !spec.device_mix.is_empty() {
+                    jc.variant = spec.device_mix[admitted % spec.device_mix.len()];
+                }
+                match pool.admit(jc, &ctrl) {
+                    Ok(_) => {
+                        admitted += 1;
+                        arrivals += 1;
+                    }
+                    // A refusal is an expected outcome (the pool's
+                    // counter records it); anything else is a bug.
+                    Err(e) if format!("{e:#}").contains("admission refused") => {}
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        peak_sessions = peak_sessions.max(pool.len());
+
+        let frames = pool.run_epoch(ef)?;
+        let ids: Vec<u64> = pool.sessions().iter().map(|c| c.session_id).collect();
+        for (i, fs) in frames.iter().enumerate() {
+            for f in fs {
+                epoch_ns.push(latency_ns(f));
+                epoch_demotions += record(&mut by_id, &mut all_ns, ids[i], f);
+            }
+        }
+
+        epochs_out.push(EpochSlo {
+            epoch,
+            sessions: pool.len(),
+            frames: epoch_ns.len(),
+            arrivals,
+            departures,
+            refused: pool.refusals() - refused_before,
+            demotions: epoch_demotions,
+            p50_ns: percentile_ns(&mut epoch_ns, 50.0),
+            p95_ns: percentile_ns(&mut epoch_ns, 95.0),
+            p99_ns: percentile_ns(&mut epoch_ns, 99.0),
+        });
+        if epoch + 1 < spec.epochs {
+            pool.replan(&ctrl, false)?;
+        }
+    }
+
+    let total_frames = all_ns.len();
+    let sorted_frames: usize = by_id.values().map(|a| a.sorted).sum();
+    let demotions: usize = by_id.values().map(|a| a.demotions).sum();
+    let sessions: Vec<SessionSlo> = by_id
+        .iter()
+        .map(|(&id, a)| {
+            let mut ns = a.lat_ns.clone();
+            SessionSlo {
+                id,
+                frames: a.frames,
+                sorted: a.sorted,
+                demotions: a.demotions,
+                p99_ns: percentile_ns(&mut ns, 99.0),
+            }
+        })
+        .collect();
+    Ok(LoadtestReport {
+        scenario: scenario.to_string(),
+        seed,
+        epoch_frames: ef,
+        epochs: epochs_out,
+        sessions,
+        total_frames,
+        sorted_frames,
+        refusals: pool.refusals(),
+        demotions,
+        demotion_rate_ppm: if total_frames == 0 {
+            0
+        } else {
+            demotions as u64 * 1_000_000 / total_frames as u64
+        },
+        admitted,
+        retired,
+        dropped_at_cap,
+        peak_sessions,
+        p50_ns: percentile_ns(&mut all_ns.clone(), 50.0),
+        p95_ns: percentile_ns(&mut all_ns.clone(), 95.0),
+        p99_ns: percentile_ns(&mut all_ns, 99.0),
+    })
+}
+
+/// Per-session accumulator, keyed by stable session id.
+#[derive(Debug, Default)]
+struct SessionAgg {
+    frames: usize,
+    sorted: usize,
+    demotions: usize,
+    last_rank: Option<u8>,
+    lat_ns: Vec<u64>,
+}
+
+/// Frame latency as integer nanoseconds — the report's unit, chosen so
+/// byte comparison never depends on float formatting.
+fn latency_ns(f: &FrameReport) -> u64 {
+    (f.time_s * 1e9).round() as u64
+}
+
+/// Fold one frame into its session's aggregate; returns 1 when the
+/// frame is a tier demotion relative to the session's previous frame.
+fn record(
+    by_id: &mut BTreeMap<u64, SessionAgg>,
+    all_ns: &mut Vec<u64>,
+    id: u64,
+    f: &FrameReport,
+) -> usize {
+    let ns = latency_ns(f);
+    all_ns.push(ns);
+    let agg = by_id.entry(id).or_default();
+    agg.frames += 1;
+    agg.lat_ns.push(ns);
+    if f.sorted_this_frame {
+        agg.sorted += 1;
+    }
+    let rank = tier_rank(f.tier);
+    let demoted = matches!(agg.last_rank, Some(prev) if rank > prev);
+    agg.last_rank = Some(rank);
+    if demoted {
+        agg.demotions += 1;
+        1
+    } else {
+        0
+    }
+}
+
+/// Nearest-rank percentile over integer latencies (0 for an empty set).
+fn percentile_ns(v: &mut Vec<u64>, p: f64) -> u64 {
+    if v.is_empty() {
+        return 0;
+    }
+    v.sort_unstable();
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.saturating_sub(1).min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> LuminaConfig {
+        let mut c = LuminaConfig::quick_test();
+        c.scene.count = 2500;
+        c.camera.width = 32;
+        c.camera.height = 32;
+        c.pool.epoch_frames = 2;
+        c
+    }
+
+    fn opts(scenario: Scenario, seed: u64) -> LoadtestOptions {
+        LoadtestOptions { scenario, seed, epochs: Some(2), smoke: true, overrides: Vec::new() }
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_and_seed_matters() {
+        let a = run_loadtest(tiny_base(), &opts(Scenario::PoissonChurn, 11)).unwrap();
+        let b = run_loadtest(tiny_base(), &opts(Scenario::PoissonChurn, 11)).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+        let c = run_loadtest(tiny_base(), &opts(Scenario::PoissonChurn, 12)).unwrap();
+        assert_ne!(a.to_json(), c.to_json(), "seed must steer the run");
+    }
+
+    #[test]
+    fn overrides_apply_and_bad_overrides_fail() {
+        let mut o = opts(Scenario::SpectatorBroadcast, 5);
+        o.overrides = vec!["pool.sort_scope=private".to_string()];
+        let r = run_loadtest(tiny_base(), &o).unwrap();
+        assert!(r.total_frames > 0);
+        let mut bad = opts(Scenario::SpectatorBroadcast, 5);
+        bad.overrides = vec!["pool.nonsense=1".to_string()];
+        assert!(run_loadtest(tiny_base(), &bad).is_err());
+    }
+
+    #[test]
+    fn impossible_capacity_counts_refusals() {
+        let mut spec = Scenario::FlashCrowd.spec(tiny_base());
+        spec.shrink_for_smoke();
+        spec.epochs = 3;
+        // Even one floor-tier session overflows this budget, so every
+        // spike admission must be refused.
+        spec.capacity_sessions = 0.05;
+        let r = run_spec("flash_crowd", spec, 7).unwrap();
+        assert!(r.refusals > 0, "saturated pool must refuse: {}", r.to_json());
+        let per_epoch: usize = r.epochs.iter().map(|e| e.refused).sum();
+        assert_eq!(r.refusals, per_epoch, "epoch rows must account for every refusal");
+    }
+
+    #[test]
+    fn report_json_shape_is_consistent() {
+        let r = run_loadtest(tiny_base(), &opts(Scenario::TeleportStress, 3)).unwrap();
+        let json = r.to_json();
+        assert_eq!(json.matches("\"epoch\":").count(), r.epochs.len());
+        assert_eq!(json.matches("\"id\":").count(), r.sessions.len());
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        let frames_by_session: usize = r.sessions.iter().map(|s| s.frames).sum();
+        assert_eq!(frames_by_session, r.total_frames);
+        assert!(r.p50_ns <= r.p95_ns && r.p95_ns <= r.p99_ns);
+        assert!(r.sorted_frames > 0, "teleports must force sorts");
+    }
+}

@@ -1,0 +1,30 @@
+//! Population-scale workload harness: seeded viewer churn, adversarial
+//! pose families, heterogeneous device mixes, and SLO reporting over a
+//! [`crate::coordinator::SessionPool`].
+//!
+//! The benches serve a handful of viewers on smooth paths and report
+//! mean pool FPS; production questions are "what p99 frame latency do
+//! *churning* viewers see during a flash crowd, and when does admission
+//! start refusing?". This module answers them reproducibly:
+//!
+//! * [`events`] — arrival/departure processes (Poisson churn, diurnal
+//!   ramp, flash crowd). Events are **epoch-synchronous**: they fire
+//!   only at epoch boundaries, driven by [`crate::util::prng::Pcg32`]
+//!   and never by the wall clock, so a loadtest is a pure function of
+//!   `(scenario, seed)`.
+//! * [`scenario`] — named scenario presets binding a pose family
+//!   (walkthrough, teleport, jittery head-tracking, shared-spectator
+//!   broadcast), a device mix, a churn process, and a capacity target.
+//! * [`loadtest`] — the driver: builds the pool, derives an admission
+//!   controller from a probe-priced capacity target, interleaves
+//!   churn / epochs / re-planning, and emits a [`loadtest::LoadtestReport`]
+//!   whose JSON is byte-identical across runs and thread counts
+//!   (`tests/loadtest.rs` pins 1/2/4 threads).
+
+pub mod events;
+pub mod loadtest;
+pub mod scenario;
+
+pub use events::{ChurnEvents, ChurnProcess};
+pub use loadtest::{run_loadtest, EpochSlo, LoadtestOptions, LoadtestReport, LOADTEST_STREAM};
+pub use scenario::{Scenario, ScenarioSpec};

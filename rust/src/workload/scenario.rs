@@ -1,0 +1,244 @@
+//! Named loadtest scenarios: a pose family, a churn process, a device
+//! mix, and a capacity target, bound into one reproducible preset.
+
+use anyhow::{bail, Result};
+
+use super::events::ChurnProcess;
+use crate::camera::trajectory::TrajectoryKind;
+use crate::config::{CacheScope, HardwareVariant, LuminaConfig, SortScope};
+
+/// The named scenarios `lumina loadtest --scenario <name>` accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Memoryless churn over VR viewers with shared cache + clustered
+    /// sort scopes — the steady-state serving mix.
+    PoissonChurn,
+    /// Walkthrough viewers arriving on a half-sine "day" curve.
+    DiurnalRamp,
+    /// A one-epoch arrival spike against a deliberately tight capacity
+    /// target, over a heterogeneous GPU/Lumina/GSCore device mix — the
+    /// admission-refusal workload.
+    FlashCrowd,
+    /// Every viewer replays the identical pose stream (stagger 0):
+    /// clustered sorting's best case — one leader sorts, everyone
+    /// reuses.
+    SpectatorBroadcast,
+    /// Dwell-and-jump viewers whose teleports exceed any realistic
+    /// `pool.cluster_radius` — clustered sorting's worst case.
+    TeleportStress,
+}
+
+impl Scenario {
+    /// All scenarios, in CLI listing order.
+    pub fn all() -> [Scenario; 5] {
+        [
+            Scenario::PoissonChurn,
+            Scenario::DiurnalRamp,
+            Scenario::FlashCrowd,
+            Scenario::SpectatorBroadcast,
+            Scenario::TeleportStress,
+        ]
+    }
+
+    /// Snake-case CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::PoissonChurn => "poisson_churn",
+            Scenario::DiurnalRamp => "diurnal_ramp",
+            Scenario::FlashCrowd => "flash_crowd",
+            Scenario::SpectatorBroadcast => "spectator_broadcast",
+            Scenario::TeleportStress => "teleport_stress",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        for sc in Self::all() {
+            if sc.name() == s {
+                return Ok(sc);
+            }
+        }
+        let names: Vec<&str> = Self::all().iter().map(|s| s.name()).collect();
+        bail!("unknown scenario: {s} (expected one of: {})", names.join(", "))
+    }
+
+    /// Bind this scenario's preset over a base config. The preset owns
+    /// the pose family, scopes, device mix, churn process, and capacity
+    /// target; scene/resolution/epoch knobs stay the caller's
+    /// (`--set` overrides apply on top of the returned spec's `cfg`).
+    pub fn spec(self, base: LuminaConfig) -> ScenarioSpec {
+        let mut cfg = base;
+        cfg.variant = HardwareVariant::Lumina;
+        cfg.pool.cache_scope = CacheScope::Shared;
+        cfg.pool.sort_scope = SortScope::Clustered;
+        match self {
+            Scenario::PoissonChurn => {
+                cfg.camera.trajectory = TrajectoryKind::JitteryHeadTracking;
+                ScenarioSpec {
+                    cfg,
+                    epochs: 8,
+                    initial_sessions: 4,
+                    max_sessions: 12,
+                    churn: Some(ChurnProcess::Poisson {
+                        arrivals_per_epoch: 1.0,
+                        departure_prob: 0.15,
+                    }),
+                    broadcast: false,
+                    device_mix: Vec::new(),
+                    capacity_sessions: 6.0,
+                }
+            }
+            Scenario::DiurnalRamp => {
+                cfg.camera.trajectory = TrajectoryKind::Walkthrough;
+                ScenarioSpec {
+                    cfg,
+                    epochs: 10,
+                    initial_sessions: 2,
+                    max_sessions: 16,
+                    churn: Some(ChurnProcess::DiurnalRamp {
+                        peak_arrivals_per_epoch: 2.0,
+                        period_epochs: 10,
+                        departure_prob: 0.2,
+                    }),
+                    broadcast: false,
+                    device_mix: Vec::new(),
+                    capacity_sessions: 8.0,
+                }
+            }
+            Scenario::FlashCrowd => {
+                cfg.camera.trajectory = TrajectoryKind::VrHeadMotion;
+                ScenarioSpec {
+                    cfg,
+                    epochs: 8,
+                    initial_sessions: 3,
+                    max_sessions: 24,
+                    churn: Some(ChurnProcess::FlashCrowd {
+                        base_arrivals_per_epoch: 0.5,
+                        spike_epoch: 2,
+                        spike_arrivals: 12,
+                        departure_prob: 0.1,
+                    }),
+                    broadcast: false,
+                    // GPU and GSCore sessions skip the hubs they lack;
+                    // the pool stays heterogeneous per session.
+                    device_mix: vec![
+                        HardwareVariant::Lumina,
+                        HardwareVariant::Gpu,
+                        HardwareVariant::GsCore,
+                    ],
+                    // Tight on purpose — even the floor-tier mix stops
+                    // fitting partway through the spike, so the refusal
+                    // path is exercised on every run.
+                    capacity_sessions: 2.0,
+                }
+            }
+            Scenario::SpectatorBroadcast => {
+                cfg.camera.trajectory = TrajectoryKind::VrHeadMotion;
+                ScenarioSpec {
+                    cfg,
+                    // Population large relative to the epoch count so
+                    // the handful of leader boundary sorts sits above
+                    // the p99 rank: clustered-scope p99 then measures a
+                    // *reuse* frame while private-scope p99 (one sort
+                    // per sharing window per viewer) measures a sort.
+                    epochs: 4,
+                    initial_sessions: 24,
+                    max_sessions: 24,
+                    churn: None,
+                    broadcast: true,
+                    device_mix: Vec::new(),
+                    // Generous: the clustered-vs-private p99 comparison
+                    // must measure sorting, not demotion churn.
+                    capacity_sessions: 64.0,
+                }
+            }
+            Scenario::TeleportStress => {
+                cfg.camera.trajectory = TrajectoryKind::Teleport;
+                ScenarioSpec {
+                    cfg,
+                    epochs: 6,
+                    initial_sessions: 6,
+                    max_sessions: 6,
+                    churn: None,
+                    broadcast: false,
+                    device_mix: Vec::new(),
+                    capacity_sessions: 12.0,
+                }
+            }
+        }
+    }
+}
+
+/// A fully-bound loadtest scenario — what [`super::loadtest::run_loadtest`]
+/// executes.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Base session config (pose family and scopes pre-bound).
+    pub cfg: LuminaConfig,
+    /// Epochs to serve; each is `cfg.pool.epoch_frames` frames.
+    pub epochs: usize,
+    /// Viewers attached before the first epoch.
+    pub initial_sessions: usize,
+    /// Hard cap on attached viewers (arrivals beyond it are dropped
+    /// before pricing — they never reach the admission controller).
+    pub max_sessions: usize,
+    /// Arrival/departure process (`None` = fixed population).
+    pub churn: Option<ChurnProcess>,
+    /// Stagger-0 convergence: every viewer replays session 0's poses.
+    pub broadcast: bool,
+    /// Round-robin per-session hardware variants (empty = homogeneous).
+    pub device_mix: Vec<HardwareVariant>,
+    /// Capacity target in full-tier sessions: the driver sizes the
+    /// admission FPS target so this many probe-priced full-tier
+    /// sessions exactly fill the budget.
+    pub capacity_sessions: f64,
+}
+
+impl ScenarioSpec {
+    /// Shrink for CI smoke runs: small synthetic scene, low resolution,
+    /// few epochs — seconds instead of minutes, same code paths.
+    pub fn shrink_for_smoke(&mut self) {
+        self.cfg.scene.count = self.cfg.scene.count.min(4000);
+        self.cfg.camera.width = self.cfg.camera.width.min(48);
+        self.cfg.camera.height = self.cfg.camera.height.min(48);
+        self.epochs = self.epochs.min(4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for sc in Scenario::all() {
+            assert_eq!(Scenario::parse(sc.name()).unwrap(), sc);
+        }
+        let err = Scenario::parse("rush_hour").unwrap_err().to_string();
+        assert!(err.contains("flash_crowd"), "error lists valid names: {err}");
+    }
+
+    #[test]
+    fn flash_crowd_spec_is_heterogeneous_and_tight() {
+        let spec = Scenario::FlashCrowd.spec(LuminaConfig::quick_test());
+        assert_eq!(spec.device_mix.len(), 3);
+        assert!(spec.capacity_sessions < spec.max_sessions as f64);
+        assert!(matches!(spec.churn, Some(ChurnProcess::FlashCrowd { .. })));
+    }
+
+    #[test]
+    fn broadcast_spec_replays_one_path() {
+        let spec = Scenario::SpectatorBroadcast.spec(LuminaConfig::quick_test());
+        assert!(spec.broadcast);
+        assert!(spec.churn.is_none());
+    }
+
+    #[test]
+    fn smoke_shrink_caps_cost_knobs() {
+        let mut spec = Scenario::DiurnalRamp.spec(LuminaConfig::quick_test());
+        spec.shrink_for_smoke();
+        assert!(spec.cfg.scene.count <= 4000);
+        assert!(spec.cfg.camera.width <= 48 && spec.cfg.camera.height <= 48);
+        assert!(spec.epochs <= 4);
+    }
+}

@@ -30,7 +30,7 @@ fn small_cfg(variant: HardwareVariant) -> LuminaConfig {
 
 /// Modeled per-frame cost of one full-tier session under `cfg`.
 fn full_frame_cost(cfg: &LuminaConfig) -> f64 {
-    let mut pool = SessionPool::new(cfg.clone(), 1).unwrap();
+    let mut pool = SessionPool::builder(cfg.clone()).build().unwrap();
     let demands = pool.probe_demands().unwrap();
     price_workload(&demands[0].workload, cfg.variant)
 }
@@ -40,7 +40,8 @@ fn tiered_pool_bitwise_deterministic_across_thread_counts() {
     let _lock = lock();
     let run = |threads: usize| -> PoolReport {
         par::set_num_threads(threads);
-        let mut pool = SessionPool::new(small_cfg(HardwareVariant::Lumina), 3).unwrap();
+        let mut pool =
+            SessionPool::builder(small_cfg(HardwareVariant::Lumina)).sessions(3).build().unwrap();
         pool.set_session_tier(0, Tier::Full).unwrap();
         pool.set_session_tier(1, Tier::Reduced).unwrap();
         pool.set_session_tier(2, Tier::Half).unwrap();
@@ -69,7 +70,8 @@ fn mid_run_tier_swap_sequence_deterministic() {
     let sequence = [Tier::Full, Tier::Half, Tier::Reduced, Tier::Full];
     let run = |threads: usize| {
         par::set_num_threads(threads);
-        let mut pool = SessionPool::new(small_cfg(HardwareVariant::Lumina), 2).unwrap();
+        let mut pool =
+            SessionPool::builder(small_cfg(HardwareVariant::Lumina)).sessions(2).build().unwrap();
         let mut frames: Vec<Vec<lumina::coordinator::FrameReport>> = vec![Vec::new(); 2];
         for &tier in sequence.iter() {
             for i in 0..pool.len() {
@@ -102,7 +104,7 @@ fn admission_serving_bitwise_deterministic() {
         let ctrl =
             AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
                 .unwrap();
-        let mut pool = SessionPool::new(cfg.clone(), 3).unwrap();
+        let mut pool = SessionPool::builder(cfg.clone()).sessions(3).build().unwrap();
         let r = pool.serve(&ctrl).unwrap();
         par::set_num_threads(0);
         r
@@ -138,7 +140,7 @@ fn pipelined_aggregate_serving_bitwise_deterministic() {
                 .unwrap()
                 .with_pipeline_depth(2)
                 .with_pricing(PricingMode::Aggregate);
-        let mut pool = SessionPool::new(cfg.clone(), 3).unwrap();
+        let mut pool = SessionPool::builder(cfg.clone()).sessions(3).build().unwrap();
         let r = pool.serve(&ctrl).unwrap();
         par::set_num_threads(0);
         r
@@ -160,7 +162,7 @@ fn pipelined_aggregate_serving_bitwise_deterministic() {
             .unwrap();
     let mut sync_cfg = cfg.clone();
     sync_cfg.pool.pipeline_depth = 1;
-    let mut sync_pool = SessionPool::new(sync_cfg, 3).unwrap();
+    let mut sync_pool = SessionPool::builder(sync_cfg).sessions(3).build().unwrap();
     let sync_report = sync_pool.serve(&sync_ctrl).unwrap();
     let demoted = |r: &PoolReport| {
         r.sessions
@@ -191,7 +193,7 @@ fn admission_holds_target_and_admits_more_than_full_res() {
     let max_admitted = |ctrl: &AdmissionController| -> usize {
         let mut admitted = 0;
         for n in 1..=8 {
-            let mut pool = SessionPool::new(cfg.clone(), n).unwrap();
+            let mut pool = SessionPool::builder(cfg.clone()).sessions(n).build().unwrap();
             match pool.probe_demands().and_then(|d| ctrl.plan(&d)) {
                 Ok(_) => admitted = n,
                 Err(_) => break,
@@ -210,7 +212,7 @@ fn admission_holds_target_and_admits_more_than_full_res() {
 
     // The tiered pool at its maximum admission actually sustains the
     // target (conservative estimates + headroom absorb estimator error).
-    let mut pool = SessionPool::new(cfg.clone(), tiered_max).unwrap();
+    let mut pool = SessionPool::builder(cfg.clone()).sessions(tiered_max).build().unwrap();
     let report = pool.serve(&tiered).unwrap();
     assert_eq!(report.total_frames(), tiered_max * 6);
     assert!(
@@ -221,7 +223,7 @@ fn admission_holds_target_and_admits_more_than_full_res() {
     );
 
     // One more viewer is refused with a clear error.
-    let mut pool = SessionPool::new(cfg.clone(), tiered_max + 1).unwrap();
+    let mut pool = SessionPool::builder(cfg.clone()).sessions(tiered_max + 1).build().unwrap();
     let err = pool.serve(&tiered).unwrap_err();
     assert!(
         format!("{err}").contains("admission refused"),
@@ -230,6 +232,11 @@ fn admission_holds_target_and_admits_more_than_full_res() {
     // And the refusal left no probe residue: the un-admitted pool runs
     // byte-identically to one that never attempted serving.
     let refused_run = pool.run().unwrap();
-    let fresh_run = SessionPool::new(cfg.clone(), tiered_max + 1).unwrap().run().unwrap();
+    let fresh_run = SessionPool::builder(cfg.clone())
+        .sessions(tiered_max + 1)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     assert_eq!(refused_run.sessions, fresh_run.sessions);
 }

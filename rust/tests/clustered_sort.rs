@@ -38,7 +38,7 @@ fn clustered_cfg() -> LuminaConfig {
 }
 
 fn convergent_pool(cfg: &LuminaConfig, n: usize, stagger: usize) -> SessionPool {
-    SessionPool::convergent(cfg.clone(), n, stagger).unwrap()
+    SessionPool::builder(cfg.clone()).sessions(n).stagger(stagger).build().unwrap()
 }
 
 #[test]

@@ -1,0 +1,139 @@
+//! Workload-harness integration: loadtest reports must be byte-stable
+//! across worker-thread counts, `SessionPool::retire` must drain
+//! pipelined slots cleanly under the shared cache/sort scopes, and
+//! teleport pose streams must break sort-cluster membership.
+
+use lumina::camera::trajectory::TrajectoryKind;
+use lumina::config::{HardwareVariant, LuminaConfig};
+use lumina::coordinator::SessionPool;
+use lumina::util::par;
+use lumina::workload::{run_loadtest, LoadtestOptions, Scenario};
+
+/// Tests that flip the global thread count serialize on this lock so
+/// they cannot race each other inside one test binary.
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_base() -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 2500;
+    c.camera.width = 32;
+    c.camera.height = 32;
+    c.pool.epoch_frames = 2;
+    c
+}
+
+#[test]
+fn loadtest_reports_byte_identical_across_thread_counts() {
+    let _lock = lock();
+    // The acceptance contract: the same (scenario, seed) must serialize
+    // to the same bytes whether the pool renders on 1, 2, or 4 worker
+    // threads — churn, admission refusals, demotions, and every
+    // latency percentile included.
+    for scenario in [Scenario::FlashCrowd, Scenario::PoissonChurn] {
+        let opts = LoadtestOptions {
+            scenario,
+            seed: 7,
+            epochs: Some(3),
+            smoke: true,
+            overrides: Vec::new(),
+        };
+        let run = |threads: usize| {
+            par::set_num_threads(threads);
+            let r = run_loadtest(tiny_base(), &opts).unwrap();
+            par::set_num_threads(0);
+            r.to_json()
+        };
+        let reference = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                reference,
+                run(threads),
+                "{} loadtest diverged at {threads} threads",
+                scenario.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn retire_drains_pipelined_slots_under_shared_scopes() {
+    let _lock = lock();
+    // A viewer departs mid-epoch with a frame in flight, while both
+    // pool-wide hubs (shared cache, clustered sort) hold state for it.
+    // retire() must hand back the drained frame, detach the session
+    // from both hubs, and leave the remaining pool serving
+    // deterministically.
+    let mut cfg = tiny_base();
+    cfg.variant = HardwareVariant::Lumina;
+    cfg.camera.frames = 6;
+    cfg.apply_override("pool.cache_scope=shared").unwrap();
+    cfg.apply_override("pool.sort_scope=clustered").unwrap();
+    cfg.apply_override("pool.pipeline_depth=2").unwrap();
+    let run = |threads: usize| {
+        par::set_num_threads(threads);
+        let mut pool =
+            SessionPool::builder(cfg.clone()).sessions(3).stagger(2).build().unwrap();
+        // One epoch first, so the shared cache has merged deltas and the
+        // sort hub has published clusters that include the departer.
+        let warm = pool.run_epoch(2).unwrap();
+        assert_eq!(warm.len(), 3);
+        // Mid-epoch: prime the departing session's pipeline so a frame
+        // is genuinely in flight when retire lands.
+        assert!(
+            pool.sessions_mut()[1].step_pipelined().unwrap().is_none(),
+            "priming dispatch completes no frame"
+        );
+        assert_eq!(pool.sessions_mut()[1].in_flight(), 1);
+        let drained = pool.retire(1).unwrap();
+        assert_eq!(drained.len(), 1, "the in-flight frame drains on retire");
+        assert_eq!(pool.len(), 2);
+        let ids: Vec<u64> = pool.sessions().iter().map(|c| c.session_id).collect();
+        assert_eq!(ids, vec![0, 2], "indices shift, stable ids do not");
+        // The survivors keep serving through the re-synced hubs.
+        let after = pool.run_epoch(2).unwrap();
+        assert_eq!(after.len(), 2);
+        par::set_num_threads(0);
+        (drained, warm, after)
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial, parallel, "retire sequence is thread-count dependent");
+}
+
+#[test]
+fn teleport_poses_break_sort_clusters() {
+    // Staggered convergent viewers at the default cluster radius
+    // (0.35 rad): a smooth VR path keeps all three in one cluster (one
+    // leader sort per epoch), while the teleport path's >= 1 rad jumps
+    // sweep through the stagger windows and split the cluster at the
+    // boundaries that straddle a jump — so the pool-wide speculative
+    // sort count must strictly rise.
+    let mut cfg = tiny_base();
+    cfg.variant = HardwareVariant::S2Gpu;
+    cfg.camera.frames = 12; // global path 16 frames: the jump at frame 12 lands in-window
+    cfg.s2.sharing_window = 2;
+    cfg.apply_override("pool.sort_scope=clustered").unwrap();
+    assert_eq!(cfg.pool.cluster_radius, 0.35, "test assumes the default radius");
+    let sorts = |kind: TrajectoryKind| {
+        let mut c = cfg.clone();
+        c.camera.trajectory = kind;
+        let report = SessionPool::builder(c)
+            .sessions(3)
+            .stagger(2)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        report.sorted_frames()
+    };
+    let smooth = sorts(TrajectoryKind::VrHeadMotion);
+    let teleport = sorts(TrajectoryKind::Teleport);
+    assert!(
+        teleport > smooth,
+        "teleport jumps must break cluster membership: {teleport} sorts vs {smooth} on the smooth path"
+    );
+}

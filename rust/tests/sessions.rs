@@ -17,7 +17,7 @@ fn small_cfg(variant: HardwareVariant) -> LuminaConfig {
 }
 
 fn run_pool(variant: HardwareVariant, n: usize) -> PoolReport {
-    SessionPool::new(small_cfg(variant), n).unwrap().run().unwrap()
+    SessionPool::builder(small_cfg(variant)).sessions(n).build().unwrap().run().unwrap()
 }
 
 #[test]
@@ -40,7 +40,7 @@ fn pool_serves_four_sessions_and_aggregates() {
 
 #[test]
 fn pool_reuses_one_scene_allocation() {
-    let pool = SessionPool::new(small_cfg(HardwareVariant::Gpu), 3).unwrap();
+    let pool = SessionPool::builder(small_cfg(HardwareVariant::Gpu)).sessions(3).build().unwrap();
     let scenes: Vec<_> = pool.sessions().iter().map(|c| c.scene.clone()).collect();
     for w in scenes.windows(2) {
         assert!(std::sync::Arc::ptr_eq(&w[0], &w[1]), "sessions must share the scene");
@@ -73,7 +73,7 @@ fn pipelined_pool_bitwise_identical_to_synchronous_across_thread_counts() {
         par::set_num_threads(threads);
         let mut cfg = small_cfg(HardwareVariant::Lumina);
         cfg.pool.pipeline_depth = depth;
-        let r = SessionPool::new(cfg, 3).unwrap().run().unwrap();
+        let r = SessionPool::builder(cfg).sessions(3).build().unwrap().run().unwrap();
         par::set_num_threads(0);
         r
     };
@@ -108,7 +108,7 @@ fn depth_three_pool_bitwise_identical_to_synchronous_across_thread_counts() {
         let mut cfg = small_cfg(HardwareVariant::Lumina);
         cfg.pool.pipeline_depth = depth;
         cfg.pool.raster_substages = substages;
-        let r = SessionPool::new(cfg, 3).unwrap().run().unwrap();
+        let r = SessionPool::builder(cfg).sessions(3).build().unwrap().run().unwrap();
         par::set_num_threads(0);
         r
     };

@@ -43,10 +43,10 @@ fn shared_cfg() -> LuminaConfig {
 /// merge the trailing viewers revisit poses the pool has already
 /// cached. Private per-session caches cannot serve these hits; the
 /// shared snapshot can — the workload the tentpole targets. Thin
-/// wrapper over the shared [`SessionPool::convergent`] builder so the
-/// benches and these tests measure one workload.
+/// wrapper over the staggered [`lumina::coordinator::PoolBuilder`]
+/// configuration so the benches and these tests measure one workload.
 fn convergent_pool(cfg: &LuminaConfig, n: usize, stagger: usize) -> SessionPool {
-    SessionPool::convergent(cfg.clone(), n, stagger).unwrap()
+    SessionPool::builder(cfg.clone()).sessions(n).stagger(stagger).build().unwrap()
 }
 
 #[test]
@@ -257,7 +257,7 @@ fn shared_pool_serves_under_admission_control() {
     // with re-planning, and the run stays thread-count deterministic.
     let cfg = shared_cfg();
     let cost = {
-        let mut probe = SessionPool::new(cfg.clone(), 1).unwrap();
+        let mut probe = SessionPool::builder(cfg.clone()).build().unwrap();
         let demands = probe.probe_demands().unwrap();
         price_workload(&demands[0].workload, cfg.variant)
     };
