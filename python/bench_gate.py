@@ -56,7 +56,21 @@ invariants.  Currently:
   scope's p99 simulated frame latency on the spectator-broadcast
   scenario must not exceed the private scope's — on an identical pose
   stream one leader sort amortizes across the pool, so the latency
-  tail can only shrink.
+  tail can only shrink;
+* whenever both `metric/steal_idle_worker_frames` and
+  `metric/session_idle_worker_frames` exist, the work-stealing
+  scheduler's occupancy model must show at most as many idle
+  worker-frames as the per-session scheduler (the pool-wide task bag
+  can only improve packing).  On the `sessions` bench file the check
+  is STRICT (<): its straggler pool is heterogeneous by construction
+  ([4,4,4,4,1,1,1,1] completions per epoch), so stealing must show a
+  real win there, not a wash;
+* whenever both `metric/loadtest_refusals_session` and
+  `metric/loadtest_refusals_stealing` exist (and likewise the
+  `_demotions_` pair), the counts must match exactly — the scheduler
+  moves stage work between threads, it never changes what the
+  admission controller sees, so any divergence means the stealing
+  path leaked into serving semantics.
 """
 
 import argparse
@@ -217,6 +231,46 @@ def gate(baseline_path, fresh_path, tolerance):
                 f"clustered-scope broadcast p99 {clustered_p99} ns exceeds "
                 f"private-scope {private_p99} ns — pool-clustered sort "
                 f"sharing regressed the latency tail")
+
+    # Same-run scheduler-occupancy invariant: the pool-wide stealing
+    # bag never packs worse than per-session chunking, and on the
+    # sessions bench's deliberately heterogeneous straggler pool it
+    # must pack strictly better.
+    si = fresh_by.get("metric/steal_idle_worker_frames")
+    se = fresh_by.get("metric/session_idle_worker_frames")
+    if si is not None and se is not None:
+        steal_idle = si["median_ns"]
+        session_idle = se["median_ns"]
+        strict = fresh.get("label") == "sessions"
+        ok = (steal_idle < session_idle if strict
+              else steal_idle <= session_idle)
+        verdict = "ok" if ok else "REGRESSION"
+        rel = "<" if strict else "<="
+        print(f"  scheduler idle worker-frames: stealing {steal_idle} "
+              f"{rel} session {session_idle}  {verdict}")
+        if not ok:
+            failures.append(
+                f"stealing scheduler left {steal_idle} idle worker-frames "
+                f"vs {session_idle} for per-session chunking "
+                f"(required {rel}) — pool-wide work stealing regressed")
+
+    # Same-run scheduler-semantics invariant: both schedulers drain at
+    # the same epoch boundaries, so the admission controller must
+    # refuse and demote identically under either.
+    for what in ("refusals", "demotions"):
+        a = fresh_by.get(f"metric/loadtest_{what}_session")
+        b = fresh_by.get(f"metric/loadtest_{what}_stealing")
+        if a is None or b is None:
+            continue
+        va, vb = a["median_ns"], b["median_ns"]
+        verdict = "ok" if va == vb else "REGRESSION"
+        print(f"  scheduler {what}: session {va} vs stealing {vb}  "
+              f"{verdict}")
+        if va != vb:
+            failures.append(
+                f"flash-crowd {what} diverged across schedulers "
+                f"({va} session vs {vb} stealing) — the stealing "
+                f"scheduler changed admission-visible behavior")
 
     if failures:
         print(f"\nbench gate FAILED ({len(failures)}):", file=sys.stderr)

@@ -166,6 +166,71 @@ def test_loadtest_broadcast_p99_invariant(tmp_path):
     assert bench_gate.gate(base, partial, 0.15) == 0
 
 
+def test_steal_idle_invariant_strict_on_sessions_bench(tmp_path):
+    base = write(tmp_path / "base.json", [])
+    # On the sessions bench file the straggler pool is heterogeneous
+    # by construction, so stealing must be strictly better.
+    eq = write(tmp_path / "eq.json",
+               [entry("metric/steal_idle_worker_frames", 12),
+                entry("metric/session_idle_worker_frames", 12)])
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/steal_idle_worker_frames", 13),
+                 entry("metric/session_idle_worker_frames", 12)])
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/steal_idle_worker_frames", 0),
+                entry("metric/session_idle_worker_frames", 12)])
+    assert bench_gate.gate(base, eq, 0.15) == 1
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    # One metric alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/steal_idle_worker_frames", 12)])
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
+def test_steal_idle_invariant_non_strict_on_loadtest(tmp_path):
+    base = write(tmp_path / "base.json", [], label="loadtest")
+    # Loadtest epochs may be homogeneous (every live session serves the
+    # full epoch), where the two schedulers legitimately tie.
+    eq = write(tmp_path / "eq.json",
+               [entry("metric/steal_idle_worker_frames", 12),
+                entry("metric/session_idle_worker_frames", 12)],
+               label="loadtest")
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/steal_idle_worker_frames", 13),
+                 entry("metric/session_idle_worker_frames", 12)],
+                label="loadtest")
+    assert bench_gate.gate(base, eq, 0.15) == 0
+    assert bench_gate.gate(base, bad, 0.15) == 1
+
+
+def test_scheduler_admission_parity_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [], label="loadtest")
+    # Refusal and demotion counts must match exactly across schedulers.
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/loadtest_refusals_session", 4),
+                entry("metric/loadtest_refusals_stealing", 4),
+                entry("metric/loadtest_demotions_session", 2),
+                entry("metric/loadtest_demotions_stealing", 2)],
+               label="loadtest")
+    bad_refusals = write(tmp_path / "bad_refusals.json",
+                         [entry("metric/loadtest_refusals_session", 4),
+                          entry("metric/loadtest_refusals_stealing", 5)],
+                         label="loadtest")
+    bad_demotions = write(tmp_path / "bad_demotions.json",
+                          [entry("metric/loadtest_demotions_session", 2),
+                           entry("metric/loadtest_demotions_stealing", 0)],
+                          label="loadtest")
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    assert bench_gate.gate(base, bad_refusals, 0.15) == 1
+    assert bench_gate.gate(base, bad_demotions, 0.15) == 1
+    # One side alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/loadtest_refusals_session", 4)],
+                    label="loadtest")
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
 def test_update_promotes_fresh_file(tmp_path):
     fresh = write(tmp_path / "fresh.json", [entry("pool/1", 1000)])
     base = tmp_path / "base.json"

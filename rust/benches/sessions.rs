@@ -9,9 +9,9 @@
 
 use std::sync::Arc;
 
-use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, SortScope, Tier};
+use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, SchedulerMode, SortScope, Tier};
 use lumina::coordinator::admission::{price_workload, ADMISSION_HEADROOM};
-use lumina::coordinator::{AdmissionController, SessionPool};
+use lumina::coordinator::{steal, AdmissionController, SessionPool};
 use lumina::scene::synth::synth_scene;
 use lumina::util::bench::Runner;
 
@@ -234,6 +234,74 @@ fn main() {
                 .unwrap();
             pool.run().unwrap()
         });
+    }
+
+    // Pool-wide work stealing on a deliberately heterogeneous
+    // "straggler" pool: four 4-frame sessions plus four 1-frame
+    // stragglers — the post-spike shape of a flash crowd after most
+    // late joiners are refused. One 4-frame epoch drains the whole
+    // pool, so the per-session completion counts are [4,4,4,4,1,1,1,1]
+    // by construction. Timing rows compare wall time per scheduler;
+    // the metric rows export the machine-independent occupancy model
+    // (idle worker-frames at the fixed MODEL_WORKERS budget, plus the
+    // epoch critical path) for the bench gate's strict
+    // stealing < session invariant — per-session chunking strands
+    // workers behind the 4-frame sessions while the stragglers' lanes
+    // sit empty; the pool-wide bag keeps every worker fed.
+    let mut wcfg = cfg.clone();
+    wcfg.camera.width = 48;
+    wcfg.camera.height = 48;
+    wcfg.pool.pipeline_depth = 2;
+    wcfg.pool.epoch_frames = 4;
+    let straggler_pool = |scheduler: SchedulerMode| {
+        let mut run_cfg = wcfg.clone();
+        run_cfg.pool.scheduler = scheduler;
+        let mut pool = SessionPool::builder(run_cfg)
+            .sessions(8)
+            .scene(scene.clone())
+            .build()
+            .unwrap();
+        for coord in &mut pool.sessions_mut()[4..] {
+            coord.trajectory.poses.truncate(1);
+        }
+        pool
+    };
+    for scheduler in [SchedulerMode::Session, SchedulerMode::Stealing] {
+        let make = &straggler_pool;
+        r.bench(&format!("steal_sched_{}/8xstraggler", scheduler.label()), move || {
+            let mut pool = make(scheduler);
+            let mut reports = Vec::new();
+            while pool.sessions().iter().any(|c| c.remaining() > 0 || c.in_flight() > 0)
+            {
+                reports.push(pool.run_epoch(4).unwrap());
+            }
+            reports
+        });
+    }
+    let steal_metrics = [
+        "metric/steal_idle_worker_frames",
+        "metric/session_idle_worker_frames",
+        "metric/steal_epoch_critical_path",
+    ];
+    if steal_metrics.iter().any(|n| r.enabled(n)) {
+        let mut pool = straggler_pool(SchedulerMode::Stealing);
+        let (mut steal_idle, mut session_idle, mut critical) = (0u64, 0u64, 0u64);
+        while pool.sessions().iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
+            let frames = pool.run_epoch(4).unwrap();
+            let counts: Vec<usize> = frames.iter().map(|v| v.len()).collect();
+            steal_idle += steal::idle_worker_frames_stealing(&counts, steal::MODEL_WORKERS);
+            session_idle += steal::idle_worker_frames_session(&counts, steal::MODEL_WORKERS);
+            critical += steal::epoch_critical_path_frames(&counts);
+        }
+        if r.enabled(steal_metrics[0]) {
+            r.metric(steal_metrics[0], steal_idle);
+        }
+        if r.enabled(steal_metrics[1]) {
+            r.metric(steal_metrics[1], session_idle);
+        }
+        if r.enabled(steal_metrics[2]) {
+            r.metric(steal_metrics[2], critical);
+        }
     }
 
     r.finish();

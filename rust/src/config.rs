@@ -252,6 +252,40 @@ impl SortScope {
     }
 }
 
+/// How a pool's epoch work is distributed across worker threads (the
+/// scheduling seam of `coordinator::steal`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Per-session outer workers: sessions are partitioned across the
+    /// thread budget and each worker drives its slice serially — the
+    /// pre-stealing behavior, bit-for-bit.
+    Session,
+    /// Pool-wide deterministic work stealing: every session's dispatch
+    /// expands into stage tasks (frontend step, raster plan) claimed by
+    /// a fixed worker pool in static task-ID priority order, so an idle
+    /// worker runs another session's stage instead of waiting. Output
+    /// is bitwise identical to `session` — results merge in (session
+    /// index, frame, chunk) order, never completion order.
+    Stealing,
+}
+
+impl SchedulerMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedulerMode::Session => "session",
+            SchedulerMode::Stealing => "stealing",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "session" => SchedulerMode::Session,
+            "stealing" => SchedulerMode::Stealing,
+            other => bail!("unknown scheduler mode: {other} (expected session|stealing)"),
+        })
+    }
+}
+
 /// How the admission controller prices tier-ladder rungs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PricingMode {
@@ -324,6 +358,11 @@ pub struct PoolConfig {
     /// Maximum angular distance (radians) between two sessions'
     /// predicted sort poses for them to share one cluster sort.
     pub cluster_radius: f64,
+    /// Epoch scheduling policy: `session` (per-session outer workers,
+    /// the pre-stealing behavior) or `stealing` (pool-wide
+    /// deterministic stage-task claiming — idle workers run other
+    /// sessions' stages). Both produce bitwise-identical output.
+    pub scheduler: SchedulerMode,
 }
 
 impl Default for PoolConfig {
@@ -339,6 +378,7 @@ impl Default for PoolConfig {
             cache_scope: CacheScope::Private,
             sort_scope: SortScope::Private,
             cluster_radius: 0.35,
+            scheduler: SchedulerMode::Session,
         }
     }
 }
@@ -605,6 +645,10 @@ impl LuminaConfig {
             }
             cfg.pool.cluster_radius = r;
         }
+        if let Some(v) = root.get_path("pool.scheduler") {
+            cfg.pool.scheduler =
+                SchedulerMode::parse(v.as_str().context("pool.scheduler must be a string")?)?;
+        }
         Ok(cfg)
     }
 
@@ -662,6 +706,11 @@ impl LuminaConfig {
             Value::String(self.pool.sort_scope.label().into()),
         );
         set(&mut root, "pool.cluster_radius", Value::Float(self.pool.cluster_radius));
+        set(
+            &mut root,
+            "pool.scheduler",
+            Value::String(self.pool.scheduler.label().into()),
+        );
         minitoml::serialize(&root)
     }
 
@@ -876,6 +925,20 @@ mod tests {
         assert!(c.apply_override("pool.cluster_radius=-1").is_err());
         for s in [SortScope::Private, SortScope::Clustered] {
             assert_eq!(SortScope::parse(s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn scheduler_mode_roundtrips_and_validates() {
+        let mut c = LuminaConfig::quick_test();
+        assert_eq!(c.pool.scheduler, SchedulerMode::Session, "session by default");
+        c.apply_override("pool.scheduler=stealing").unwrap();
+        assert_eq!(c.pool.scheduler, SchedulerMode::Stealing);
+        let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.pool.scheduler, SchedulerMode::Stealing);
+        assert!(c.apply_override("pool.scheduler=bogus").is_err());
+        for s in [SchedulerMode::Session, SchedulerMode::Stealing] {
+            assert_eq!(SchedulerMode::parse(s.label()).unwrap(), s);
         }
     }
 

@@ -19,7 +19,11 @@
 //! per-frame device time is `max(frontend, raster + overhead)` rather
 //! than the sum — the controller must price with the same arithmetic
 //! ([`price_workload_at_depth`]) or it would refuse viewers the
-//! pipelined device actually holds.
+//! pipelined device actually holds. Because every epoch boundary drains
+//! the frame slots, the planner additionally charges the epoch's
+//! un-overlapped fill/drain share — `max + min/epoch_frames` per frame
+//! ([`combine_stage_times_epoch`]) — the critical path of the epoch's
+//! task graph rather than its steady-state interior.
 //!
 //! Rung pricing has two paths: the exact one re-grids the per-pixel
 //! record at every ladder rung (O(pixels) per rung), and the
@@ -164,6 +168,37 @@ pub fn price_workload(w: &FrameWorkload, variant: HardwareVariant) -> f64 {
 pub(crate) fn combine_stage_times(front_s: f64, raster_s: f64, depth: usize) -> f64 {
     if depth >= 2 {
         front_s.max(raster_s)
+    } else {
+        front_s + raster_s
+    }
+}
+
+/// [`combine_stage_times`] plus the pipeline's fill/drain cost, spread
+/// over an `epoch_frames`-frame epoch. Stage overlap only exists
+/// *between* consecutive frames, and every epoch boundary drains the
+/// frame slots (`SessionPool::run_epoch`), so an `e`-frame epoch pays
+/// the un-overlapped fill (the first frame's lone frontend) and drain
+/// (the last frame's lone raster) in full: total device time is
+/// `front + (e-1)*max(front, raster) + raster = e*max + min`, i.e.
+/// `max + min/e` per frame. Steady-state [`combine_stage_times`] is the
+/// `e -> inf` limit; this charges the fill/drain gap the planner used
+/// to ignore, so short epochs can no longer admit mixes whose boundary
+/// overhead the device cannot actually hold. At `e = 1` it degenerates
+/// to the synchronous sum — a one-frame epoch has no overlap at all.
+///
+/// Epoch pricing is deliberately *scheduler-independent*: both the
+/// per-session and the stealing scheduler (`pool.scheduler`) drain at
+/// the same epoch boundaries, so plans — and refusal/demotion counts —
+/// are identical across schedulers (`python/bench_gate.py` enforces
+/// this on every bench run).
+pub(crate) fn combine_stage_times_epoch(
+    front_s: f64,
+    raster_s: f64,
+    depth: usize,
+    epoch_frames: usize,
+) -> f64 {
+    if depth >= 2 {
+        front_s.max(raster_s) + front_s.min(raster_s) / epoch_frames.max(1) as f64
     } else {
         front_s + raster_s
     }
@@ -344,8 +379,9 @@ pub struct AdmissionController {
     /// Exact per-pixel rung pricing vs the O(tiles) aggregate path.
     pricing: PricingMode,
     /// Frames per pool epoch — the amortization window for clustered
-    /// sessions' per-epoch sorts. Defaults to 1 (the whole sort charged
-    /// per frame, the conservative end).
+    /// sessions' per-epoch sorts *and* for the pipeline's fill/drain
+    /// cost ([`combine_stage_times_epoch`]). Defaults to 1 (sort and
+    /// fill/drain charged in full per frame, the conservative end).
     epoch_frames: usize,
 }
 
@@ -389,8 +425,8 @@ impl AdmissionController {
         self
     }
 
-    /// Amortize clustered sessions' per-epoch sorts over `epoch_frames`
-    /// frames (clamped to >= 1).
+    /// Amortize clustered sessions' per-epoch sorts and the pipeline's
+    /// fill/drain cost over `epoch_frames` frames (clamped to >= 1).
     pub fn with_epoch_frames(mut self, epoch_frames: usize) -> Self {
         self.epoch_frames = epoch_frames.max(1);
         self
@@ -517,10 +553,15 @@ impl AdmissionController {
                     } else {
                         p.front_s
                     };
-                    let price = combine_stage_times(
+                    // Critical-path epoch pricing: steady-state overlap
+                    // plus the epoch's fill/drain share, so the planner
+                    // charges exactly the device time an epoch-drained
+                    // pipeline occupies (either scheduler).
+                    let price = combine_stage_times_epoch(
                         front_s,
                         p.discounted_raster_s(hit_discount),
                         self.pipeline_depth,
+                        self.epoch_frames,
                     );
                     (t, price)
                 })
@@ -737,7 +778,9 @@ mod tests {
         let one = price_workload(&demand(128 * 128, 0.0).workload, HardwareVariant::Gpu);
         // Budget fits ~2.5 sum-priced sessions: synchronous pricing must
         // demote someone, overlapped pricing holds all three at full
-        // (the frontend share is well above the ~17% break-even).
+        // (the frontend share is well above the ~17% break-even). A
+        // long epoch keeps the fill/drain share negligible, so this
+        // pins the steady-state overlap win.
         let target = (1.0 - ADMISSION_HEADROOM) / (2.5 * one);
         let demands = vec![demand(128 * 128, 3.0), demand(128 * 128, 2.0), demand(128 * 128, 1.0)];
         let sync = AdmissionController::new(target, ladder(), 0.5).unwrap();
@@ -746,10 +789,70 @@ mod tests {
         assert!(plan.tiers.iter().any(|&t| t != Tier::Full));
         let piped = AdmissionController::new(target, ladder(), 0.5)
             .unwrap()
-            .with_pipeline_depth(2);
+            .with_pipeline_depth(2)
+            .with_epoch_frames(1024);
         assert_eq!(piped.pipeline_depth(), 2);
         let plan = piped.plan(&demands).unwrap();
         assert_eq!(plan.tiers, vec![Tier::Full; 3], "pipelined device holds all three");
+    }
+
+    #[test]
+    fn epoch_pricing_charges_the_fill_drain_gap() {
+        // Per-frame epoch price: sum at e = 1 (no overlap in a
+        // one-frame epoch), monotonically down toward the steady-state
+        // max as the epoch lengthens, never below it.
+        let (f, r) = (0.3, 0.7);
+        let sum = combine_stage_times(f, r, 1);
+        let max = combine_stage_times(f, r, 2);
+        assert_eq!(combine_stage_times_epoch(f, r, 2, 1), sum);
+        let mut last = f64::INFINITY;
+        for e in [1, 2, 4, 8, 1024] {
+            let p = combine_stage_times_epoch(f, r, 2, e);
+            assert!(p <= last, "per-frame price must fall as the epoch grows");
+            assert!(p >= max, "fill/drain can only add to the steady-state price");
+            // Critical-path identity: e frames occupy e*max + min.
+            assert!((p * e as f64 - (max * e as f64 + f.min(r))).abs() < 1e-12);
+            last = p;
+        }
+        // Depth 1 has no overlap to fill or drain: epoch-independent.
+        assert_eq!(combine_stage_times_epoch(f, r, 1, 7), sum);
+        // Zero-guard: e = 0 clamps to 1 rather than dividing by zero.
+        assert_eq!(combine_stage_times_epoch(f, r, 2, 0), sum);
+    }
+
+    #[test]
+    fn pipelined_controller_refuses_short_epoch_fill_drain_overload() {
+        // A budget sitting between the steady-state price and the
+        // 2-frame-epoch price: the old planner (steady-state max) would
+        // admit all three at full, but a pool draining every 2 frames
+        // pays the fill/drain gap and must demote. Separates the two
+        // models with the same demands.
+        let d = demand(128 * 128, 0.0);
+        let p = price_stages(&d.workload, d.variant);
+        let steady = combine_stage_times(p.front_s, p.raster_s, 2);
+        let short = combine_stage_times_epoch(p.front_s, p.raster_s, 2, 2);
+        assert!(short > steady);
+        let budget = 3.0 * (steady + short) / 2.0;
+        let target = (1.0 - ADMISSION_HEADROOM) / budget;
+        let demands = vec![demand(128 * 128, 3.0), demand(128 * 128, 2.0), demand(128 * 128, 1.0)];
+        let long = AdmissionController::new(target, ladder(), 0.5)
+            .unwrap()
+            .with_pipeline_depth(2)
+            .with_epoch_frames(1 << 20);
+        assert_eq!(
+            long.plan(&demands).unwrap().tiers,
+            vec![Tier::Full; 3],
+            "steady-state pricing holds all three at full"
+        );
+        let short_epochs = AdmissionController::new(target, ladder(), 0.5)
+            .unwrap()
+            .with_pipeline_depth(2)
+            .with_epoch_frames(2);
+        let plan = short_epochs.plan(&demands).unwrap();
+        assert!(
+            plan.tiers.iter().any(|&t| t != Tier::Full),
+            "2-frame epochs pay fill/drain; the same budget cannot hold all three at full"
+        );
     }
 
     #[test]

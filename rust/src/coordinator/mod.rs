@@ -23,6 +23,7 @@
 pub mod admission;
 pub mod report;
 pub mod session;
+pub mod steal;
 
 use std::collections::VecDeque;
 use std::sync::Arc;

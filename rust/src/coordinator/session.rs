@@ -40,10 +40,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{CacheScope, LuminaConfig, SortScope, Tier};
+use crate::config::{CacheScope, LuminaConfig, SchedulerMode, SortScope, Tier};
 use crate::coordinator::admission::{AdmissionController, SessionDemand};
 use crate::coordinator::report::FrameReport;
-use crate::coordinator::{Coordinator, RunReport};
+use crate::coordinator::steal;
+use crate::coordinator::{Coordinator, FrameResult, RunReport};
 use crate::lumina::rc::{CacheDelta, CacheGeometry, CacheHub, CacheStats};
 use crate::camera::Pose;
 use crate::lumina::s2::{SharedSort, SortCandidate, SortGeometry, SortHub};
@@ -457,14 +458,6 @@ impl SessionPool {
         PoolBuilder { base, n: 1, stagger: None, scene: None, device_mix: Vec::new() }
     }
 
-    /// Build `n` sessions from a base config. The scene is built once
-    /// and shared; each session gets a distinct camera seed (base + i)
-    /// so the viewers follow different trajectories.
-    #[deprecated(since = "0.8.0", note = "use `SessionPool::builder(cfg).sessions(n).build()`")]
-    pub fn new(base: LuminaConfig, n: usize) -> Result<Self> {
-        Self::builder(base).sessions(n).build()
-    }
-
     /// The scene a config describes (loaded or synthesized), ready to
     /// share across sessions.
     fn built_scene(base: &LuminaConfig) -> Result<Arc<GaussianScene>> {
@@ -473,43 +466,6 @@ impl SessionPool {
                 .with_context(|| format!("loading scene {p}"))?,
             None => synth_scene(base.scene.class, base.scene.seed, base.gaussian_count()),
         }))
-    }
-
-    /// Build `n` viewers converging on one camera path — see
-    /// [`PoolBuilder::stagger`].
-    #[deprecated(
-        since = "0.8.0",
-        note = "use `SessionPool::builder(cfg).sessions(n).stagger(k).build()`"
-    )]
-    pub fn convergent(base: LuminaConfig, n: usize, stagger: usize) -> Result<Self> {
-        Self::builder(base).sessions(n).stagger(stagger).build()
-    }
-
-    /// [`PoolBuilder::stagger`] over an already-built shared scene.
-    #[deprecated(
-        since = "0.8.0",
-        note = "use `SessionPool::builder(cfg).sessions(n).stagger(k).scene(s).build()`"
-    )]
-    pub fn convergent_with_scene(
-        base: LuminaConfig,
-        scene: Arc<GaussianScene>,
-        n: usize,
-        stagger: usize,
-    ) -> Result<Self> {
-        Self::builder(base).sessions(n).stagger(stagger).scene(scene).build()
-    }
-
-    /// Build `n` sessions over an already-built shared scene.
-    #[deprecated(
-        since = "0.8.0",
-        note = "use `SessionPool::builder(cfg).sessions(n).scene(s).build()`"
-    )]
-    pub fn with_scene(
-        base: LuminaConfig,
-        scene: Arc<GaussianScene>,
-        n: usize,
-    ) -> Result<Self> {
-        Self::builder(base).sessions(n).scene(scene).build()
     }
 
     /// Number of sessions.
@@ -712,6 +668,26 @@ impl SessionPool {
         for frames in &out {
             for f in frames {
                 self.served.merge(&f.cache);
+            }
+        }
+        self.merge_cache_epoch();
+        self.sync_shared_sorts();
+        Ok(out)
+    }
+
+    /// [`run_epoch`](Self::run_epoch), but returning full
+    /// [`FrameResult`]s — rendered images included — per session.
+    /// Scheduler-parity tests use this to compare pixels; production
+    /// paths should prefer `run_epoch`, which drops images per frame
+    /// instead of holding an epoch's worth.
+    pub fn run_epoch_results(&mut self, frames: usize) -> Result<Vec<Vec<FrameResult>>> {
+        if self.sort_published.is_empty() {
+            self.sync_shared_sorts();
+        }
+        let out = self.run_parallel_with(Some(frames.max(1)), |f: FrameResult| f)?;
+        for frames in &out {
+            for f in frames {
+                self.served.merge(&f.report.cache);
             }
         }
         self.merge_cache_epoch();
@@ -991,11 +967,37 @@ impl SessionPool {
     /// share is installed thread-locally via an RAII guard. Results are
     /// thread-count invariant, so the split affects throughput only.
     fn run_parallel(&mut self, cap: Option<usize>) -> Result<Vec<Vec<FrameReport>>> {
+        // Map inside the workers so epoch images are dropped per frame;
+        // only `run_epoch_results` (parity tests) retains them.
+        self.run_parallel_with(cap, |f: FrameResult| f.report)
+    }
+
+    /// Engine behind [`run_parallel`](Self::run_parallel): steps every
+    /// live session up to `cap` frames under the configured scheduler
+    /// and maps each completed [`FrameResult`] through `map` at the
+    /// point of delivery (so callers that only need reports never hold
+    /// a whole epoch of images).
+    ///
+    /// `pool.scheduler = "session"` keeps whole sessions on outer
+    /// workers; `"stealing"` hands all live sessions to the pool-wide
+    /// task-graph scheduler ([`steal::run_sessions`]) where idle
+    /// workers claim other sessions' stage tasks. Both produce bitwise
+    /// identical frames (`tests/stealing.rs`).
+    fn run_parallel_with<T: Send>(
+        &mut self,
+        cap: Option<usize>,
+        map: impl Fn(FrameResult) -> T + Sync,
+    ) -> Result<Vec<Vec<T>>> {
         let n = self.sessions.len();
+        let mode = self
+            .sessions
+            .first()
+            .map(|c| c.cfg.pool.scheduler)
+            .unwrap_or(SchedulerMode::Session);
         // Only sessions with frames left occupy workers — in the tail
         // epochs of a heterogeneous pool the whole budget goes to the
         // sessions still rendering instead of idling on finished ones.
-        let mut work: Vec<(usize, Coordinator, Option<Result<Vec<FrameReport>>>)> = Vec::new();
+        let mut work: Vec<(usize, Coordinator, Option<Result<Vec<T>>>)> = Vec::new();
         let mut idle: Vec<(usize, Coordinator)> = Vec::new();
         for (i, c) in std::mem::take(&mut self.sessions).into_iter().enumerate() {
             if c.remaining() > 0 || c.in_flight() > 0 {
@@ -1004,36 +1006,50 @@ impl SessionPool {
                 idle.push((i, c));
             }
         }
-        if !work.is_empty() {
-            // detlint: allow(thread-count) -- scheduling site: sizes outer workers and splits the thread budget; rendered values never depend on it
-            let total = par::num_threads();
-            // Stage-level scheduling: a depth-d session dispatches up to
-            // d stages concurrently (frame N+1's frontend alongside
-            // frame N's raster), so size the outer worker count by
-            // *stage slots* rather than whole sessions — fewer outer
-            // workers, each holding the >= depth threads its session's
-            // concurrent stages can actually occupy.
-            let depth =
-                work.iter().map(|(_, c, _)| c.pipeline_depth()).max().unwrap_or(1).max(1);
-            let outer = (total / depth).clamp(1, work.len());
-            let chunk = work.len().div_ceil(outer);
-            let n_workers = work.len().div_ceil(chunk);
-            let budgets = par::split_budget(total, n_workers);
-            std::thread::scope(|scope| {
-                for (t, slice) in work.chunks_mut(chunk).enumerate() {
-                    let inner = budgets[t];
-                    scope.spawn(move || {
-                        let _budget = par::local_budget_guard(inner);
-                        for (_, coord, slot) in slice.iter_mut() {
-                            *slot = Some(step_session(coord, cap));
-                        }
-                    });
+        match mode {
+            SchedulerMode::Session if !work.is_empty() => {
+                // detlint: allow(thread-count) -- scheduling site: sizes outer workers and splits the thread budget; rendered values never depend on it
+                let total = par::num_threads();
+                // Stage-level scheduling: a depth-d session dispatches up to
+                // d stages concurrently (frame N+1's frontend alongside
+                // frame N's raster), so size the outer worker count by
+                // *stage slots* rather than whole sessions — fewer outer
+                // workers, each holding the >= depth threads its session's
+                // concurrent stages can actually occupy.
+                let depth =
+                    work.iter().map(|(_, c, _)| c.pipeline_depth()).max().unwrap_or(1).max(1);
+                let outer = (total / depth).clamp(1, work.len());
+                let chunk = work.len().div_ceil(outer);
+                let n_workers = work.len().div_ceil(chunk);
+                let budgets = par::split_budget(total, n_workers);
+                let map = &map;
+                std::thread::scope(|scope| {
+                    for (t, slice) in work.chunks_mut(chunk).enumerate() {
+                        let inner = budgets[t];
+                        scope.spawn(move || {
+                            let _budget = par::local_budget_guard(inner);
+                            for (_, coord, slot) in slice.iter_mut() {
+                                *slot = Some(step_session(coord, cap, map));
+                            }
+                        });
+                    }
+                });
+            }
+            SchedulerMode::Stealing if !work.is_empty() => {
+                let outs = steal::run_sessions(
+                    work.iter_mut().map(|(_, c, _)| c).collect(),
+                    cap,
+                    &map,
+                );
+                for ((_, _, slot), out) in work.iter_mut().zip(outs) {
+                    *slot = Some(out);
                 }
-            });
+            }
+            _ => {}
         }
         // Restore every session (original order) before surfacing any
         // error so the pool stays intact even when one session fails.
-        let mut slots: Vec<Option<(Coordinator, Result<Vec<FrameReport>>)>> =
+        let mut slots: Vec<Option<(Coordinator, Result<Vec<T>>)>> =
             (0..n).map(|_| None).collect();
         for (i, c, s) in work {
             slots[i] = Some((c, s.expect("session executed")));
@@ -1088,12 +1104,16 @@ impl SessionPool {
 /// covered, so every epoch boundary (where the pool re-plans tiers) sees
 /// empty frame slots and the admission controller prices the same
 /// final-frame workload a synchronous pool would.
-fn step_session(coord: &mut Coordinator, cap: Option<usize>) -> Result<Vec<FrameReport>> {
+fn step_session<T, M: Fn(FrameResult) -> T>(
+    coord: &mut Coordinator,
+    cap: Option<usize>,
+    map: &M,
+) -> Result<Vec<T>> {
     let limit = cap.unwrap_or(usize::MAX);
     let mut frames = Vec::new();
     if coord.pipeline_depth() <= 1 {
         while coord.remaining() > 0 && frames.len() < limit {
-            frames.push(coord.step()?.report);
+            frames.push(map(coord.step()?));
         }
         return Ok(frames);
     }
@@ -1102,7 +1122,7 @@ fn step_session(coord: &mut Coordinator, cap: Option<usize>) -> Result<Vec<Frame
         let feed = frames.len() + coord.in_flight() < target && coord.remaining() > 0;
         let done = if feed { coord.step_pipelined()? } else { coord.drain_one()? };
         if let Some(f) = done {
-            frames.push(f.report);
+            frames.push(map(f));
         } else if !feed && coord.in_flight() == 0 {
             // Defensive: nothing in flight and nothing to feed.
             break;
@@ -1202,19 +1222,33 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn builder_is_bitwise_identical_to_deprecated_shims() {
-        // The shims delegate to the builder, but this pins the *builder*
-        // against the historical constructor semantics: same seeds, same
-        // priorities, same staggered-window rewrite, same rendered bits.
-        let mut a = SessionPool::new(small_cfg(), 2).unwrap();
-        let mut b = SessionPool::builder(small_cfg()).sessions(2).build().unwrap();
-        assert_eq!(a.run().unwrap().sessions, b.run().unwrap().sessions);
+    fn builder_pins_historical_constructor_semantics() {
+        // The removed `new`/`convergent` shims delegated straight to the
+        // builder; this pins the builder against their documented
+        // semantics so the migration stays behavior-preserving: distinct
+        // camera seeds (base + i), descending priorities, and the
+        // staggered-window rewrite (session i+1 starts `stagger` poses
+        // behind session i on session 0's long path).
+        let base_seed = small_cfg().camera.seed;
+        let pool = SessionPool::builder(small_cfg()).sessions(2).build().unwrap();
+        let seeds: Vec<u64> =
+            pool.sessions().iter().map(|c| c.cfg.camera.seed).collect();
+        assert_eq!(seeds, vec![base_seed, base_seed + 1]);
+        let prios: Vec<f64> = pool.sessions().iter().map(|c| c.priority).collect();
+        assert_eq!(prios, vec![2.0, 1.0]);
 
-        let mut c = SessionPool::convergent(small_cfg(), 3, 2).unwrap();
-        let mut d =
+        let pool =
             SessionPool::builder(small_cfg()).sessions(3).stagger(2).build().unwrap();
-        assert_eq!(c.run().unwrap().sessions, d.run().unwrap().sessions);
+        let t: Vec<Vec<Pose>> = pool
+            .sessions()
+            .iter()
+            .map(|c| c.trajectory.poses.clone())
+            .collect();
+        let frames = small_cfg().camera.frames;
+        assert!(t.iter().all(|p| p.len() == frames));
+        // Overlap: session i's tail re-walks session i+1's head.
+        assert_eq!(t[0][2..4], t[1][0..2]);
+        assert_eq!(t[1][2..4], t[2][0..2]);
     }
 
     #[test]

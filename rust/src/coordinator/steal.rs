@@ -1,0 +1,637 @@
+//! Deterministic pool-wide work-stealing stage scheduler
+//! (`pool.scheduler = "stealing"`).
+//!
+//! [`run_sessions`] replaces the per-session outer-worker split of
+//! `SessionPool::run_epoch`: instead of pinning each worker to a
+//! contiguous slice of sessions, the epoch unrolls into *rounds* of
+//! independent stage tasks — per live session, one frame-granular step
+//! (depth 1) or a frontend step and/or a [`DispatchPlan`] of raster
+//! chunks (depth >= 2) — and a fixed worker pool claims tasks through
+//! the same atomic claim/write publication pattern as `util::par`'s
+//! dynamic-claim loops ([`par::TaskClaimer`]). An idle worker claims
+//! the lowest-ID ready task regardless of which session owns it, so a
+//! straggler session (a cluster leader paying the shared sort, the slow
+//! end of a heterogeneous device mix) is swarmed by the whole pool
+//! instead of serializing its lone worker while the rest idle.
+//!
+//! # Determinism argument
+//!
+//! Output is bitwise identical to the per-session scheduler — and
+//! across 1/2/4 worker threads — because nothing a task *computes*
+//! depends on who runs it or when:
+//!
+//! 1. **The round's task graph is fixed before any worker starts.**
+//!    [`SessionRun::prepare`] replays `step_session`'s feed/drain
+//!    sequencing per session on the coordination thread, so the set of
+//!    ready tasks (and every task's inputs: the consumed pose, the
+//!    chunk ranges) derives purely from session state, never from
+//!    timing.
+//! 2. **Stage outputs are thread-budget invariant** (pinned by
+//!    `tests/sessions.rs`), so which worker claims a task, and how many
+//!    threads its nested `par_*` calls see, affect wall-clock only.
+//! 3. **Results merge in task-ID order, never completion order.** Each
+//!    task writes its own pre-allocated slot ([`TaskSlots`]); after the
+//!    scope joins, the coordination thread commits slots in (session
+//!    index, stage) order through
+//!    [`PipelinedSession::apply_dispatch`], exactly where the
+//!    per-session scheduler would have.
+//!
+//! The module also hosts the *occupancy model* the benches and the
+//! loadtest harness emit ([`idle_worker_frames_session`] /
+//! [`idle_worker_frames_stealing`] /
+//! [`epoch_critical_path_frames`]): a machine-independent account of
+//! worker idleness at a nominal [`MODEL_WORKERS`]-worker pool, so the
+//! bench gate can assert the scheduling win without trusting host
+//! timing.
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::camera::{Intrinsics, Pose};
+use crate::coordinator::{Coordinator, FrameResult};
+use crate::pipeline::stage::{DispatchPlan, FeedMeta, FrontendOutput, RasterFrame};
+use crate::scene::GaussianScene;
+use crate::util::par;
+
+/// Nominal worker count the occupancy model evaluates at. A fixed
+/// constant — deliberately not the host's thread count — so the
+/// idle-frame metrics the bench gate compares are identical on every
+/// machine and at every `LUMINA_THREADS`.
+pub const MODEL_WORKERS: usize = 4;
+
+/// A frame fed this round: the inputs `Coordinator::step_pipelined`
+/// would hand the frontend stage, captured by value (`Arc` scene, pose
+/// and intrinsics copies) so the stage can run on any worker while the
+/// coordination thread holds no borrow of the session.
+struct FeedInput {
+    frame: usize,
+    scene: Arc<GaussianScene>,
+    pose: Pose,
+    intr: Intrinsics,
+}
+
+/// One pipelined session's stage work for the current round: the raster
+/// ready-set fixed by `PipelinedSession::plan_dispatch` plus the
+/// optional frontend feed, at the session's current pipeline
+/// resolution.
+struct RoundWork {
+    plan: DispatchPlan,
+    feed: Option<FeedInput>,
+    width: usize,
+    height: usize,
+}
+
+/// What a session contributes to the current round.
+enum Round {
+    /// Depth-1 synchronous step: both stages run as one frame-granular
+    /// task (`Coordinator::step`), stolen whole.
+    Step,
+    /// Depth >= 2 stage dispatch: up to two independent tasks (raster
+    /// plan, frontend feed).
+    Dispatch(RoundWork),
+}
+
+/// One stage task in the round's static priority order.
+enum Task {
+    /// Whole synchronous step of session `s`.
+    Step { s: usize },
+    /// Session `s`'s raster-chunk plan.
+    Raster { s: usize },
+    /// Session `s`'s next-frame frontend.
+    Frontend { s: usize },
+}
+
+/// A task's output, written into its claimed slot.
+enum TaskOut {
+    Step(Result<FrameResult>),
+    Raster(Option<RasterFrame>),
+    Frontend(FrontendOutput),
+}
+
+/// Per-task output slots shared with the claiming workers — the write
+/// half of the claim/write publication pattern (see
+/// [`par::TaskClaimer`]).
+struct TaskSlots(Vec<UnsafeCell<Option<TaskOut>>>);
+
+// SAFETY: slot `i` is written exactly once, by the single worker whose
+// `TaskClaimer::next` returned `i` (the fetch_add hands each ID to
+// exactly one claimant), and the coordination thread reads the slots
+// only after the enclosing `thread::scope` has joined every worker —
+// the same disjoint-claim + join-publication discipline as
+// `par::SendPtr`'s users.
+unsafe impl Sync for TaskSlots {}
+
+/// One session's replay of `step_session`'s sequencing, plus its
+/// in-order result buffer. The per-slot buffers' merge order is fixed
+/// by session index and frame order — never by task completion order.
+/// `T` is the caller's per-frame projection of [`FrameResult`] (the
+/// report alone for production epochs, the full result for parity
+/// tests), applied at delivery so images drop as early as the
+/// per-session scheduler drops them.
+struct SessionRun<'c, T> {
+    coord: &'c mut Coordinator,
+    frames: Vec<T>,
+    limit: usize,
+    /// Epoch completion target, fixed once at entry exactly as
+    /// `step_session` fixes it (pipelined sessions only).
+    target: usize,
+    /// Depth-1 synchronous stepping (no stage-level decomposition).
+    sync: bool,
+    done: bool,
+    error: Option<anyhow::Error>,
+}
+
+impl<'c, T> SessionRun<'c, T> {
+    fn new(coord: &'c mut Coordinator, cap: Option<usize>) -> Self {
+        let limit = cap.unwrap_or(usize::MAX);
+        let sync = coord.pipeline_depth() <= 1;
+        let target = if sync { 0 } else { limit.min(coord.remaining() + coord.in_flight()) };
+        SessionRun { coord, frames: Vec::new(), limit, target, sync, done: false, error: None }
+    }
+
+    /// Advance this session's state machine to its next stage round:
+    /// deliver zero-work frames (tier-swap leftovers in `drained`)
+    /// inline, consume the next pose when this round feeds, and return
+    /// the round's stage work — or `None` when the session finished its
+    /// epoch. Mirrors `step_session` exactly; see the module docs for
+    /// why the equivalence holds.
+    fn prepare(&mut self, map: &impl Fn(FrameResult) -> T) -> Option<Round> {
+        if self.done {
+            return None;
+        }
+        if self.sync {
+            loop {
+                if self.coord.remaining() == 0 || self.frames.len() >= self.limit {
+                    self.done = true;
+                    return None;
+                }
+                // `Coordinator::step` delivers drained leftovers before
+                // consuming a pose; popping them here is the same
+                // delivery, minus a task round-trip for zero stage work.
+                if let Some(f) = self.coord.drained.pop_front() {
+                    self.frames.push(map(f));
+                    continue;
+                }
+                return Some(Round::Step);
+            }
+        }
+        loop {
+            if self.frames.len() >= self.target {
+                self.done = true;
+                return None;
+            }
+            // Both `step_pipelined` and `drain_one` deliver drained
+            // leftovers before any stage work; a pop leaves the feed
+            // condition below unchanged (`frames + in_flight` is
+            // invariant under it), so inlining the delivery preserves
+            // `step_session`'s decision sequence.
+            if let Some(f) = self.coord.drained.pop_front() {
+                self.frames.push(map(f));
+                continue;
+            }
+            let feed = self.frames.len() + self.coord.in_flight() < self.target
+                && self.coord.remaining() > 0;
+            if !feed && self.coord.in_flight() == 0 {
+                // `step_session`'s defensive break: nothing in flight
+                // and nothing left to feed.
+                self.done = true;
+                return None;
+            }
+            let fed = if feed {
+                let idx = self.coord.frame_idx;
+                #[cfg(test)]
+                {
+                    if self.coord.fail_at_frame == Some(idx) {
+                        self.error =
+                            Some(anyhow::anyhow!("injected session failure at frame {idx}"));
+                        self.done = true;
+                        return None;
+                    }
+                    if self.coord.panic_at_frame == Some(idx) {
+                        panic!("injected session panic at frame {idx}");
+                    }
+                }
+                let pose = self.coord.trajectory.poses[idx];
+                self.coord.frame_idx += 1;
+                let scene = match &self.coord.lod_scene {
+                    Some(s) => s.clone(),
+                    None => self.coord.scene.clone(),
+                };
+                Some(FeedInput { frame: idx, scene, pose, intr: self.coord.render_intr })
+            } else {
+                None
+            };
+            let plan = self.coord.pipeline.plan_dispatch(fed.is_some());
+            return Some(Round::Dispatch(RoundWork {
+                plan,
+                feed: fed,
+                width: self.coord.render_intr.width,
+                height: self.coord.render_intr.height,
+            }));
+        }
+    }
+
+    /// Commit this session's round on the coordination thread: advance
+    /// chunk cursors, pop/complete the finished frame, enqueue the fed
+    /// frontend output — in exactly the order `PipelinedSession::
+    /// advance` would have applied under the per-session scheduler.
+    fn commit(
+        &mut self,
+        round: Round,
+        rf: Option<RasterFrame>,
+        fo: Option<FrontendOutput>,
+        map: &impl Fn(FrameResult) -> T,
+    ) {
+        match round {
+            Round::Step => unreachable!("sync rounds commit through their step result"),
+            Round::Dispatch(work) => {
+                let fed = work.feed.map(|fi| {
+                    (
+                        FeedMeta { frame: fi.frame, scene_gaussians: fi.scene.len() },
+                        fo.expect("feeding round ran a frontend task"),
+                    )
+                });
+                if let Some(d) = self.coord.pipeline.apply_dispatch(&work.plan, rf, fed) {
+                    let f = self.coord.complete_frame(d);
+                    self.frames.push(map(f));
+                }
+            }
+        }
+    }
+}
+
+/// Run one epoch of `coords` (up to `cap` completed frames per session,
+/// whole trajectories when `None`) under the pool-wide stealing
+/// scheduler. Returns each session's completed frames in session order
+/// — bitwise identical to the per-session scheduler's output at any
+/// thread count.
+pub(crate) fn run_sessions<T>(
+    coords: Vec<&mut Coordinator>,
+    cap: Option<usize>,
+    map: impl Fn(FrameResult) -> T,
+) -> Vec<Result<Vec<T>>> {
+    let mut runs: Vec<SessionRun<T>> =
+        coords.into_iter().map(|c| SessionRun::new(c, cap)).collect();
+    loop {
+        // Prep (serial, session-index order): fix the round's task
+        // graph before any worker starts.
+        let mut rounds: Vec<Option<Round>> =
+            runs.iter_mut().map(|r| r.prepare(&map)).collect();
+        // Static priority order over task IDs: session index ascending,
+        // raster before frontend within a session (the heavier stage
+        // first packs the claim sequence better; the order is fixed
+        // per round either way).
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut ids: Vec<(Option<usize>, Option<usize>)> = vec![(None, None); runs.len()];
+        for (s, round) in rounds.iter().enumerate() {
+            match round {
+                None => {}
+                Some(Round::Step) => {
+                    ids[s].0 = Some(tasks.len());
+                    tasks.push(Task::Step { s });
+                }
+                Some(Round::Dispatch(work)) => {
+                    if !work.plan.is_empty() {
+                        ids[s].0 = Some(tasks.len());
+                        tasks.push(Task::Raster { s });
+                    }
+                    if work.feed.is_some() {
+                        ids[s].1 = Some(tasks.len());
+                        tasks.push(Task::Frontend { s });
+                    }
+                }
+            }
+        }
+        if tasks.is_empty() {
+            // `prepare` returns work for every unfinished session (and
+            // a feeding round always has at least a frontend task), so
+            // an empty round means every session is done.
+            break;
+        }
+        let slots = run_round(&tasks, &mut runs, &rounds);
+        // Commit (serial, session-index order): merge task results in
+        // ID order, never completion order.
+        let mut outs: Vec<Option<TaskOut>> =
+            slots.0.into_iter().map(UnsafeCell::into_inner).collect();
+        for (s, run) in runs.iter_mut().enumerate() {
+            let Some(round) = rounds[s].take() else { continue };
+            if matches!(round, Round::Step) {
+                let Some(TaskOut::Step(res)) = outs[ids[s].0.unwrap()].take() else {
+                    unreachable!("step task wrote a step result")
+                };
+                match res {
+                    Ok(f) => run.frames.push(map(f)),
+                    Err(e) => {
+                        run.error = Some(e);
+                        run.done = true;
+                    }
+                }
+                continue;
+            }
+            let rf = ids[s].0.and_then(|i| match outs[i].take() {
+                Some(TaskOut::Raster(rf)) => rf,
+                _ => unreachable!("raster task wrote a raster result"),
+            });
+            let fo = ids[s].1.map(|i| match outs[i].take() {
+                Some(TaskOut::Frontend(fo)) => fo,
+                _ => unreachable!("frontend task wrote a frontend result"),
+            });
+            run.commit(round, rf, fo, &map);
+        }
+    }
+    runs.into_iter()
+        .map(|r| match r.error {
+            Some(e) => Err(e),
+            None => Ok(r.frames),
+        })
+        .collect()
+}
+
+/// Execute one round's tasks on the claiming worker pool and return the
+/// filled slots. Claim order is the tasks' static priority order; slot
+/// writes publish to the caller via the scope join.
+fn run_round<T>(
+    tasks: &[Task],
+    runs: &mut [SessionRun<T>],
+    rounds: &[Option<Round>],
+) -> TaskSlots {
+    let slots =
+        TaskSlots((0..tasks.len()).map(|_| UnsafeCell::new(None)).collect());
+    // Raw session pointers for the workers. No `&mut Coordinator` is
+    // live while workers run: tasks project disjoint fields through
+    // `addr_of_mut!` (see `run_task`), and the coordination thread does
+    // not touch the sessions again until the scope has joined.
+    let ptrs: Vec<par::SendPtr<Coordinator>> = runs
+        .iter_mut()
+        .map(|r| par::SendPtr::new(std::ptr::from_mut(&mut *r.coord)))
+        .collect();
+    // detlint: allow(thread-count) -- scheduling site: sizes the claiming worker pool and its budget shares; task outputs are thread-budget invariant, so rendered values never depend on it
+    let total = par::num_threads();
+    let workers = total.min(tasks.len()).max(1);
+    if workers <= 1 {
+        // One worker claims everything: run the priority order inline.
+        for (i, t) in tasks.iter().enumerate() {
+            let out = run_task(t, &ptrs, rounds);
+            // SAFETY: single-threaded — no concurrent access to any slot.
+            unsafe { *slots.0[i].get() = Some(out) };
+        }
+        return slots;
+    }
+    let shares = par::split_budget(total, workers);
+    let claimer = par::TaskClaimer::new(tasks.len());
+    std::thread::scope(|scope| {
+        for &share in shares.iter().take(workers) {
+            let claimer = &claimer;
+            let slots = &slots;
+            let ptrs = &ptrs;
+            scope.spawn(move || {
+                let _budget = par::local_budget_guard(share);
+                while let Some(i) = claimer.next() {
+                    let out = run_task(&tasks[i], ptrs, rounds);
+                    // SAFETY: task `i` was claimed by exactly this
+                    // worker (TaskClaimer hands each ID out once), so no
+                    // other thread writes slot `i`; the coordination
+                    // thread reads it only after the scope joins.
+                    unsafe { *slots.0[i].get() = Some(out) };
+                }
+            });
+        }
+    });
+    slots
+}
+
+/// Run one claimed task. Tasks touch their session through raw
+/// field projections so that the two stage tasks a pipelined session
+/// contributes in one round never materialize aliasing `&mut
+/// Coordinator` borrows.
+fn run_task(task: &Task, ptrs: &[par::SendPtr<Coordinator>], rounds: &[Option<Round>]) -> TaskOut {
+    let dispatch = |s: usize| match &rounds[s] {
+        Some(Round::Dispatch(work)) => work,
+        _ => unreachable!("stage task implies a dispatch round"),
+    };
+    match *task {
+        Task::Step { s } => {
+            // SAFETY: a depth-1 session contributes exactly one task per
+            // round, so this worker holds the only live access to
+            // session `s` for the scope's duration; the coordination
+            // thread re-borrows it only after every worker joins.
+            let coord = unsafe { &mut *ptrs[s].get() };
+            TaskOut::Step(coord.step())
+        }
+        Task::Raster { s } => {
+            let work = dispatch(s);
+            // SAFETY: disjoint-field projection. This task mutates only
+            // `raster` and reads `pipeline`; the only other task that
+            // can touch session `s` this round is its Frontend task,
+            // which mutates only `frontend`. `addr_of_mut!` projects
+            // the fields without materializing a `&mut Coordinator`,
+            // so the workers' borrows are per-field and never alias;
+            // the pointee outlives the scope (the coordination thread's
+            // `SessionRun` borrow spans it).
+            let raster = unsafe { &mut *std::ptr::addr_of_mut!((*ptrs[s].get()).raster) };
+            // SAFETY: shared read of `pipeline` — no task writes it;
+            // cursors move only in the post-join commit.
+            let pipe = unsafe { &*std::ptr::addr_of!((*ptrs[s].get()).pipeline) };
+            TaskOut::Raster(pipe.run_plan(raster.as_mut(), &work.plan, work.width, work.height))
+        }
+        Task::Frontend { s } => {
+            let work = dispatch(s);
+            let fi = work.feed.as_ref().expect("frontend task implies a feed");
+            // SAFETY: disjoint-field projection, mirroring Raster above:
+            // this task mutates only `frontend`, which no other task in
+            // the round touches.
+            let fe = unsafe { &mut *std::ptr::addr_of_mut!((*ptrs[s].get()).frontend) };
+            TaskOut::Frontend(fe.run(&fi.scene, &fi.pose, &fi.intr))
+        }
+    }
+}
+
+/// Idle worker-frames the **per-session** scheduler spends on one epoch
+/// with the given per-session completed-frame counts: live sessions are
+/// chunked contiguously onto `workers` outer workers (mirroring
+/// `run_parallel`'s split), the epoch's wall is the most-loaded
+/// worker's frame total, and every worker-frame not rendering is idle.
+/// Finished sessions (0 frames) occupy no worker, as in the real
+/// scheduler's work/idle split. Frame counts weight every frame
+/// equally, so the model is machine-independent.
+pub fn idle_worker_frames_session(frames_per_session: &[usize], workers: usize) -> u64 {
+    let live: Vec<usize> =
+        frames_per_session.iter().copied().filter(|&f| f > 0).collect();
+    let total: usize = live.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let workers = workers.max(1);
+    let chunk = live.len().div_ceil(workers.min(live.len()));
+    let wall = live.chunks(chunk).map(|c| c.iter().sum::<usize>()).max().unwrap_or(0);
+    (workers * wall - total) as u64
+}
+
+/// Idle worker-frames the **stealing** scheduler spends on the same
+/// epoch: any idle worker picks up any session's next frame, so the
+/// wall is the work-conservation bound `ceil(total / workers)` — unless
+/// one session's frame chain (frames within a session are strictly
+/// sequential) is itself the critical path. Always <= the per-session
+/// model; strictly less whenever contiguous chunking leaves a worker
+/// loaded beyond both bounds.
+pub fn idle_worker_frames_stealing(frames_per_session: &[usize], workers: usize) -> u64 {
+    let live: Vec<usize> =
+        frames_per_session.iter().copied().filter(|&f| f > 0).collect();
+    let total: usize = live.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let workers = workers.max(1);
+    let critical = live.iter().copied().max().unwrap_or(0);
+    let wall = critical.max(total.div_ceil(workers));
+    (workers * wall - total) as u64
+}
+
+/// Critical path of one epoch's task graph, in frames: the longest
+/// single-session frame chain — the floor no scheduler can beat, and
+/// what the stealing scheduler's wall converges to once workers stop
+/// idling.
+pub fn epoch_critical_path_frames(frames_per_session: &[usize]) -> u64 {
+    frames_per_session.iter().copied().max().unwrap_or(0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareVariant, LuminaConfig};
+
+    fn tiny_cfg(depth: usize) -> LuminaConfig {
+        let mut c = LuminaConfig::quick_test();
+        c.scene.count = if cfg!(miri) { 200 } else { 2000 };
+        c.camera.width = 32;
+        c.camera.height = 32;
+        c.camera.frames = if cfg!(miri) { 3 } else { 5 };
+        c.variant = HardwareVariant::Gpu;
+        c.pool.pipeline_depth = depth;
+        c
+    }
+
+    fn build(depth: usize, n: usize) -> Vec<Coordinator> {
+        (0..n)
+            .map(|i| {
+                let mut cfg = tiny_cfg(depth);
+                cfg.camera.seed = cfg.camera.seed.wrapping_add(i as u64);
+                Coordinator::new(cfg).unwrap()
+            })
+            .collect()
+    }
+
+    /// Reference sequencing: `step_session`'s loop, inlined.
+    fn step_reference(coord: &mut Coordinator, cap: Option<usize>) -> Vec<FrameResult> {
+        let limit = cap.unwrap_or(usize::MAX);
+        let mut frames = Vec::new();
+        if coord.pipeline_depth() <= 1 {
+            while coord.remaining() > 0 && frames.len() < limit {
+                frames.push(coord.step().unwrap());
+            }
+            return frames;
+        }
+        let target = limit.min(coord.remaining() + coord.in_flight());
+        while frames.len() < target {
+            let feed = frames.len() + coord.in_flight() < target && coord.remaining() > 0;
+            let done =
+                if feed { coord.step_pipelined().unwrap() } else { coord.drain_one().unwrap() };
+            if let Some(f) = done {
+                frames.push(f);
+            } else if !feed && coord.in_flight() == 0 {
+                break;
+            }
+        }
+        frames
+    }
+
+    #[test]
+    fn stealing_matches_session_sequencing_bitwise() {
+        for depth in [1, 2, 3] {
+            let mut expect = build(depth, 2);
+            let mut got = build(depth, 2);
+            // Two epochs — a capped one (exercising the feed/drain
+            // boundary mid-trajectory) and the remainder.
+            for cap in [Some(2), None] {
+                let want: Vec<Vec<FrameResult>> =
+                    expect.iter_mut().map(|c| step_reference(c, cap)).collect();
+                let out = run_sessions(got.iter_mut().collect(), cap, |f| f);
+                for (s, (w, g)) in want.iter().zip(&out).enumerate() {
+                    let g = g.as_ref().unwrap();
+                    assert_eq!(w.len(), g.len(), "depth {depth} session {s} frame count");
+                    for (a, b) in w.iter().zip(g) {
+                        assert_eq!(a.report, b.report, "depth {depth} session {s}");
+                        assert_eq!(
+                            a.image.data, b.image.data,
+                            "depth {depth} session {s} image bits"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_is_thread_budget_invariant() {
+        let run_at = |budget: usize| {
+            let _g = par::local_budget_guard(budget);
+            let mut coords = build(2, 2);
+            run_sessions(coords.iter_mut().collect(), None, |f| f)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect::<Vec<_>>()
+        };
+        let one = run_at(1);
+        let four = run_at(4);
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.report, y.report);
+                assert_eq!(x.image.data, y.image.data);
+            }
+        }
+    }
+
+    #[test]
+    fn occupancy_model_pins_and_invariant() {
+        // Balanced pool: neither scheduler idles.
+        assert_eq!(idle_worker_frames_session(&[2, 2, 2, 2], 4), 0);
+        assert_eq!(idle_worker_frames_stealing(&[2, 2, 2, 2], 4), 0);
+        // Heterogeneous counts with imbalanced contiguous chunks: the
+        // per-session split strands 12 worker-frames, stealing none.
+        assert_eq!(idle_worker_frames_session(&[4, 4, 4, 4, 1, 1, 1, 1], 4), 12);
+        assert_eq!(idle_worker_frames_stealing(&[4, 4, 4, 4, 1, 1, 1, 1], 4), 0);
+        // One dominant chain: the critical path binds both equally.
+        assert_eq!(idle_worker_frames_session(&[6, 1, 1, 1], 4), 15);
+        assert_eq!(idle_worker_frames_stealing(&[6, 1, 1, 1], 4), 15);
+        // Finished sessions occupy no worker.
+        assert_eq!(idle_worker_frames_session(&[0, 0, 3], 4), 9);
+        assert_eq!(idle_worker_frames_stealing(&[0, 0, 3], 4), 9);
+        // Empty epochs are free.
+        assert_eq!(idle_worker_frames_session(&[], 4), 0);
+        assert_eq!(idle_worker_frames_stealing(&[0, 0], 4), 0);
+        // Critical path.
+        assert_eq!(epoch_critical_path_frames(&[3, 5, 2]), 5);
+        assert_eq!(epoch_critical_path_frames(&[]), 0);
+        // Invariant: stealing never idles more than the session split.
+        let cases: [&[usize]; 6] = [
+            &[2, 2, 2, 2],
+            &[4, 4, 4, 4, 1, 1, 1, 1],
+            &[6, 1, 1, 1],
+            &[5, 3, 2, 2, 1],
+            &[1],
+            &[7, 7, 1, 1, 1, 1, 1],
+        ];
+        for counts in cases {
+            for workers in [1, 2, 4, 8] {
+                assert!(
+                    idle_worker_frames_stealing(counts, workers)
+                        <= idle_worker_frames_session(counts, workers),
+                    "{counts:?} @ {workers}"
+                );
+            }
+        }
+    }
+}

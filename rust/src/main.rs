@@ -36,6 +36,7 @@ const VALUE_KEYS: &[&str] = &[
     "raster-substages",
     "cache-scope",
     "sort-scope",
+    "scheduler",
     "scenario",
     "seed",
     "epochs",
@@ -95,6 +96,11 @@ fn print_help() {
                                   (per-session windows) or clustered (one\n\
                                   pool-wide sort per pose cluster per\n\
                                   epoch) (serve cmd)\n\
+           --scheduler <s>        pool stage scheduler: session (each\n\
+                                  worker owns whole sessions) or stealing\n\
+                                  (idle workers claim other sessions'\n\
+                                  stage tasks; bitwise-identical output)\n\
+                                  (serve + loadtest cmds)\n\
            --scenario <name>      loadtest scenario: poisson_churn,\n\
                                   diurnal_ramp, flash_crowd,\n\
                                   spectator_broadcast, teleport_stress;\n\
@@ -185,10 +191,14 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         // Route through the config validator (private|clustered).
         cfg.apply_override(&format!("pool.sort_scope={s}"))?;
     }
+    if let Some(s) = args.get("scheduler") {
+        // Route through the config validator (session|stealing).
+        cfg.apply_override(&format!("pool.scheduler={s}"))?;
+    }
     let n: usize = args.get_parsed("sessions", 4);
     println!(
         "serving {n} sessions | variant={} | scene={} Gaussians | {} frames each @ {}x{} \
-         | pipeline depth {} | cache scope {} | sort scope {}",
+         | pipeline depth {} | cache scope {} | sort scope {} | scheduler {}",
         cfg.variant.label(),
         cfg.gaussian_count(),
         cfg.camera.frames,
@@ -196,7 +206,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         cfg.camera.height,
         cfg.pool.pipeline_depth,
         cfg.pool.cache_scope.label(),
-        cfg.pool.sort_scope.label()
+        cfg.pool.sort_scope.label(),
+        cfg.pool.scheduler.label()
     );
     let admission = cfg.pool.target_fps > 0.0;
     let mut pool = SessionPool::builder(cfg.clone()).sessions(n).build()?;
@@ -236,7 +247,12 @@ fn cmd_loadtest(args: &cli::Args) -> Result<()> {
     // preset re-binds pose family / scopes / variant on top of it; the
     // specs are threaded through again so user overrides win over the
     // preset too (applying a key=value override twice is idempotent).
-    let overrides: Vec<String> = args.get_all("set").to_vec();
+    let mut overrides: Vec<String> = args.get_all("set").to_vec();
+    if let Some(s) = args.get("scheduler") {
+        // Threaded as an override so it survives the scenario preset,
+        // and validated by the config parser (session|stealing).
+        overrides.push(format!("pool.scheduler={s}"));
+    }
     match args.get("scenario") {
         Some(name) => {
             let scenario = Scenario::parse(name)?;
@@ -326,13 +342,44 @@ fn loadtest_smoke(
         flash1.to_json() == flash2.to_json(),
         "flash_crowd loadtest reports diverged at seed {seed}: determinism regression"
     );
+    // Same scenario under the pool-wide stealing scheduler: every SLO
+    // byte must match the per-session run (schedulers may only move
+    // work between workers, never change what is rendered or planned).
+    let flash_steal =
+        run_loadtest(base.clone(), &opts(Scenario::FlashCrowd, &["pool.scheduler=stealing"]))?;
+    anyhow::ensure!(
+        flash1.to_json() == flash_steal.to_json(),
+        "flash_crowd loadtest report changed under pool.scheduler=stealing at seed {seed}: \
+         scheduler parity regression"
+    );
     eprintln!(
-        "flash_crowd x2 @ seed {seed}: byte-identical | {} frames | {} refused | {} demotions",
+        "flash_crowd x2 @ seed {seed}: byte-identical | stealing parity OK | {} frames | \
+         {} refused | {} demotions",
         flash1.total_frames, flash1.refusals, flash1.demotions
     );
     metric(&mut rows, "metric/loadtest_refusals_run1", flash1.refusals as u64);
     metric(&mut rows, "metric/loadtest_refusals_run2", flash2.refusals as u64);
     metric(&mut rows, "metric/loadtest_flash_p99_ns", flash1.p99_ns);
+    // Per-scheduler refusal/demotion rows for the bench gate's parity
+    // invariant, plus the occupancy model's idle/critical-path sums
+    // (identical fields on both reports — the model is an epoch-shape
+    // function, so emitting each scheduler's own view keeps the gate
+    // honest).
+    metric(&mut rows, "metric/loadtest_refusals_session", flash1.refusals as u64);
+    metric(&mut rows, "metric/loadtest_refusals_stealing", flash_steal.refusals as u64);
+    metric(&mut rows, "metric/loadtest_demotions_session", flash1.demotions as u64);
+    metric(&mut rows, "metric/loadtest_demotions_stealing", flash_steal.demotions as u64);
+    metric(&mut rows, "metric/steal_idle_worker_frames", flash_steal.steal_idle_worker_frames);
+    metric(
+        &mut rows,
+        "metric/session_idle_worker_frames",
+        flash1.session_idle_worker_frames,
+    );
+    metric(
+        &mut rows,
+        "metric/steal_epoch_critical_path",
+        flash_steal.steal_epoch_critical_path_frames,
+    );
 
     let clustered = run_loadtest(
         base.clone(),

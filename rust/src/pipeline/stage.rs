@@ -983,6 +983,40 @@ pub struct CompletedFrame {
     pub raster: RasterFrame,
 }
 
+/// Feed-time metadata for a frame entering the queue via
+/// [`PipelinedSession::apply_dispatch`] — the borrow-free subset of
+/// [`NextFrameInput`] an external scheduler can hold across a dispatch
+/// while the frontend output is produced elsewhere.
+#[derive(Debug, Clone, Copy)]
+pub struct FeedMeta {
+    pub frame: usize,
+    /// Scene size captured at feed time (the reduced tier's subsample,
+    /// not the shared scene).
+    pub scene_gaussians: usize,
+}
+
+/// One dispatch's raster ready-set: the (queue index, chunk range)
+/// pairs [`PipelinedSession::plan_dispatch`] fixed before any stage
+/// runs. Ranges execute strictly in order ([`PipelinedSession::
+/// run_plan`]); the plan is pure data, so a scheduler can compute it
+/// under exclusive access and execute it later on any worker.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchPlan {
+    ranges: Vec<(usize, std::ops::Range<usize>)>,
+}
+
+impl DispatchPlan {
+    /// No raster work this dispatch (priming feed or idle).
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Total raster chunks the plan dispatches.
+    pub fn chunk_count(&self) -> usize {
+        self.ranges.iter().map(|(_, r)| r.len()).sum()
+    }
+}
+
 /// A queued frame: frontend done, rasterization split into
 /// [`RasterChunk`]s and partially dispatched.
 struct InFlightFrame {
@@ -1097,14 +1131,41 @@ impl PipelinedSession {
         if next.is_none() && self.queue.is_empty() {
             return None;
         }
+        let plan = self.plan_dispatch(next.is_some());
+        let (rf, fo) = run_dispatch(frontend, raster, next.as_ref(), self, &plan, width, height);
+        let fed = match (next, fo) {
+            (Some(n), Some(fo)) => Some((
+                FeedMeta {
+                    frame: n.frame,
+                    scene_gaussians: n.scene.len(),
+                },
+                fo,
+            )),
+            _ => None,
+        };
+        self.apply_dispatch(&plan, rf, fed)
+    }
+
+    /// Compute this dispatch's raster ready-set, fixed before any stage
+    /// runs. `feeding` says whether a next frame's frontend will run
+    /// alongside (it shapes burst sizing exactly as [`Self::advance`]'s
+    /// `next.is_some()` does). Pure: does not mutate the queue —
+    /// a scheduler computes the plan under exclusive access, runs it
+    /// (and the frontend) on any workers, then commits with
+    /// [`Self::apply_dispatch`].
+    ///
+    /// Only the head may finish (at most one completion per dispatch);
+    /// a trailing frame's burst is capped one chunk short so its
+    /// frame-yielding call waits until it is the head. Depth 1 never
+    /// queues frames, so its plan is always empty.
+    pub fn plan_dispatch(&self, feeding: bool) -> DispatchPlan {
+        let mut plan = DispatchPlan::default();
+        if self.depth <= 1 {
+            return plan;
+        }
         let cap = self.depth - 1;
-        // Chunk plan for this dispatch, fixed before any stage runs.
-        // Only the head may finish (at most one completion per
-        // dispatch); a trailing frame's burst is capped one chunk short
-        // so its frame-yielding call waits until it is the head.
-        let mut plan: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
         if let Some(head) = self.queue.front() {
-            let end = if next.is_none() || self.queue.len() >= cap {
+            let end = if !feeding || self.queue.len() >= cap {
                 // Drain, or the queue is full and must yield a slot:
                 // finish the head.
                 head.chunks.len()
@@ -1112,22 +1173,60 @@ impl PipelinedSession {
                 (head.next_chunk + head.burst(cap)).min(head.chunks.len())
             };
             if end > head.next_chunk {
-                plan.push((0, head.next_chunk..end));
+                plan.ranges.push((0, head.next_chunk..end));
             }
-            if next.is_some() && self.queue.len() >= cap && self.queue.len() >= 2 {
+            if feeding && self.queue.len() >= cap && self.queue.len() >= 2 {
                 let q1 = &self.queue[1];
                 let end = (q1.next_chunk + q1.burst(cap)).min(q1.chunks.len() - 1);
                 if end > q1.next_chunk {
-                    plan.push((1, q1.next_chunk..end));
+                    plan.ranges.push((1, q1.next_chunk..end));
                 }
             }
         }
-        let (rf, fo) =
-            run_dispatch(frontend, raster, next.as_ref(), &self.queue, &plan, width, height);
-        for (qi, r) in &plan {
+        plan
+    }
+
+    /// Execute a plan's raster chunks strictly in order on `raster`.
+    /// Read-only on the queue (chunk cursors move in
+    /// [`Self::apply_dispatch`]), so the raster stage can run while the
+    /// owning session's frontend runs elsewhere. Returns the head
+    /// frame's finished raster when the plan reached its last chunk.
+    pub fn run_plan(
+        &self,
+        raster: &mut dyn RasterBackend,
+        plan: &DispatchPlan,
+        width: usize,
+        height: usize,
+    ) -> Option<RasterFrame> {
+        let mut out = None;
+        for (qi, chunks) in &plan.ranges {
+            let fe = &self.queue[*qi].frame.frontend;
+            for ci in chunks.clone() {
+                let chunk = &self.queue[*qi].chunks[ci];
+                if let Some(rf) =
+                    raster.render_chunk(&fe.projected, &fe.bins, width, height, chunk)
+                {
+                    out = Some(rf);
+                }
+            }
+        }
+        out
+    }
+
+    /// Commit a dispatch: advance chunk cursors past `plan`, pop the
+    /// head when its raster finished (`raster_out`), and enqueue the
+    /// frontend output of a frame fed this dispatch. Returns the
+    /// completed frame, exactly as [`Self::advance`] does.
+    pub fn apply_dispatch(
+        &mut self,
+        plan: &DispatchPlan,
+        raster_out: Option<RasterFrame>,
+        fed: Option<(FeedMeta, FrontendOutput)>,
+    ) -> Option<CompletedFrame> {
+        for (qi, r) in &plan.ranges {
             self.queue[*qi].next_chunk = r.end;
         }
-        let completed = rf.map(|rf| {
+        let completed = raster_out.map(|rf| {
             let head = self.queue.pop_front().expect("raster output implies a head frame");
             debug_assert_eq!(head.next_chunk, head.chunks.len());
             CompletedFrame {
@@ -1137,12 +1236,12 @@ impl PipelinedSession {
                 raster: rf,
             }
         });
-        if let (Some(n), Some(fo)) = (next, fo) {
+        if let Some((meta, fo)) = fed {
             let chunks = RasterChunk::plan(fo.bins.tile_count(), self.substages);
             self.queue.push_back(InFlightFrame {
                 frame: PendingFrame {
-                    frame: n.frame,
-                    scene_gaussians: n.scene.len(),
+                    frame: meta.frame,
+                    scene_gaussians: meta.scene_gaussians,
                     frontend: fo,
                 },
                 chunks,
@@ -1165,26 +1264,12 @@ fn run_dispatch(
     frontend: &mut FrontendStage,
     raster: &mut dyn RasterBackend,
     next: Option<&NextFrameInput<'_>>,
-    queue: &VecDeque<InFlightFrame>,
-    plan: &[(usize, std::ops::Range<usize>)],
+    pipe: &PipelinedSession,
+    plan: &DispatchPlan,
     width: usize,
     height: usize,
 ) -> (Option<RasterFrame>, Option<FrontendOutput>) {
-    let run_plan = |raster: &mut dyn RasterBackend| {
-        let mut out = None;
-        for (qi, chunks) in plan {
-            let fe = &queue[*qi].frame.frontend;
-            for ci in chunks.clone() {
-                let chunk = &queue[*qi].chunks[ci];
-                if let Some(rf) =
-                    raster.render_chunk(&fe.projected, &fe.bins, width, height, chunk)
-                {
-                    out = Some(rf);
-                }
-            }
-        }
-        out
-    };
+    let run_plan = |raster: &mut dyn RasterBackend| pipe.run_plan(raster, plan, width, height);
     let Some(n) = next else {
         return (run_plan(raster), None);
     };

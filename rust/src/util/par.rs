@@ -234,6 +234,46 @@ where
     });
 }
 
+/// Deterministic task claimer — the claim half of the crate's
+/// claim/write publication pattern, factored out of the dynamic-claim
+/// loops above for the pool-wide stage scheduler
+/// (`coordinator::steal`). Workers call [`Self::next`] until it returns
+/// `None`: the `fetch_add` hands each ID in `0..len` to exactly one
+/// worker, in ascending order across the claim sequence, so the lowest
+/// unclaimed task always goes to the next idle worker. Claiming carries
+/// no result publication by itself — writers publish their slots to the
+/// coordinating thread through the enclosing `thread::scope` join,
+/// exactly as in [`par_map`]'s dynamic-claim path.
+pub struct TaskClaimer {
+    next: AtomicUsize,
+    len: usize,
+}
+
+impl TaskClaimer {
+    /// A claimer over task IDs `0..len`.
+    pub fn new(len: usize) -> Self {
+        TaskClaimer { next: AtomicUsize::new(0), len }
+    }
+
+    /// Claim the lowest unclaimed task ID; `None` once all are claimed.
+    pub fn next(&self) -> Option<usize> {
+        // Relaxed suffices: the claim only needs RMW uniqueness (a total
+        // modification order on one atomic); publication of the claimed
+        // task's results happens-before via the scope join.
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.len).then_some(i)
+    }
+
+    /// Number of task IDs this claimer hands out.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// Raw-pointer wrapper that crosses `thread::scope` closure boundaries.
 ///
 /// This is the one sanctioned way for the crate's parallel writers (the
@@ -399,6 +439,30 @@ mod tests {
         assert_eq!(num_threads(), 1301);
         let seen = std::thread::spawn(num_threads).join().unwrap();
         assert_ne!(seen, 1301, "local budget leaked to a fresh thread");
+    }
+
+    #[test]
+    fn task_claimer_partitions_ids_exactly_once() {
+        let claimer = TaskClaimer::new(100);
+        assert_eq!(claimer.len(), 100);
+        assert!(!claimer.is_empty());
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..100).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let claimer = &claimer;
+                let hits = &hits;
+                scope.spawn(move || {
+                    while let Some(i) = claimer.next() {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(claimer.next(), None, "drained claimer stays drained");
+        assert!(TaskClaimer::new(0).is_empty());
+        assert_eq!(TaskClaimer::new(0).next(), None);
     }
 
     #[test]

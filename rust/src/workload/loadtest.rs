@@ -26,6 +26,7 @@ use super::scenario::{Scenario, ScenarioSpec};
 use crate::config::LuminaConfig;
 use crate::coordinator::admission::{price_workload, AdmissionController, ADMISSION_HEADROOM};
 use crate::coordinator::report::{tier_rank, FrameReport};
+use crate::coordinator::steal;
 use crate::coordinator::SessionPool;
 use crate::util::prng::Pcg32;
 
@@ -110,6 +111,22 @@ pub struct LoadtestReport {
     pub p50_ns: u64,
     pub p95_ns: u64,
     pub p99_ns: u64,
+    /// Idle worker-frames the run's epochs would cost under the
+    /// **stealing** scheduler at the nominal
+    /// [`steal::MODEL_WORKERS`]-worker pool — the machine-independent
+    /// occupancy model ([`steal::idle_worker_frames_stealing`]) summed
+    /// over every epoch's per-session frame counts. Deliberately **not**
+    /// serialized by [`Self::to_json`]: the SLO bytes must stay
+    /// identical across `pool.scheduler`, while these model fields feed
+    /// the bench gate's scheduler comparison.
+    pub steal_idle_worker_frames: u64,
+    /// Same epochs, priced under the **per-session** scheduler's
+    /// contiguous-chunk split ([`steal::idle_worker_frames_session`]).
+    pub session_idle_worker_frames: u64,
+    /// Summed per-epoch critical path (longest single-session frame
+    /// chain, [`steal::epoch_critical_path_frames`]) — the floor no
+    /// scheduler can beat.
+    pub steal_epoch_critical_path_frames: u64,
 }
 
 impl LoadtestReport {
@@ -232,6 +249,9 @@ pub fn run_spec(scenario: &str, mut spec: ScenarioSpec, seed: u64) -> Result<Loa
     let mut retired = 0usize;
     let mut dropped_at_cap = 0usize;
     let mut peak_sessions = pool.len();
+    let mut steal_idle = 0u64;
+    let mut session_idle = 0u64;
+    let mut critical_path = 0u64;
 
     for epoch in 0..spec.epochs {
         let mut epoch_ns: Vec<u64> = Vec::new();
@@ -286,6 +306,16 @@ pub fn run_spec(scenario: &str, mut spec: ScenarioSpec, seed: u64) -> Result<Loa
         peak_sessions = peak_sessions.max(pool.len());
 
         let frames = pool.run_epoch(ef)?;
+        // Occupancy model over this epoch's per-session frame counts:
+        // churn makes the counts heterogeneous (joiners serve partial
+        // tails, finished sessions serve zero), which is exactly where
+        // the contiguous per-session split strands workers and stealing
+        // does not. Counts are thread-count invariant, so these sums
+        // are as byte-stable as the SLO report itself.
+        let counts: Vec<usize> = frames.iter().map(|v| v.len()).collect();
+        steal_idle += steal::idle_worker_frames_stealing(&counts, steal::MODEL_WORKERS);
+        session_idle += steal::idle_worker_frames_session(&counts, steal::MODEL_WORKERS);
+        critical_path += steal::epoch_critical_path_frames(&counts);
         let ids: Vec<u64> = pool.sessions().iter().map(|c| c.session_id).collect();
         for (i, fs) in frames.iter().enumerate() {
             for f in fs {
@@ -349,6 +379,9 @@ pub fn run_spec(scenario: &str, mut spec: ScenarioSpec, seed: u64) -> Result<Loa
         p50_ns: percentile_ns(&mut all_ns.clone(), 50.0),
         p95_ns: percentile_ns(&mut all_ns.clone(), 95.0),
         p99_ns: percentile_ns(&mut all_ns, 99.0),
+        steal_idle_worker_frames: steal_idle,
+        session_idle_worker_frames: session_idle,
+        steal_epoch_critical_path_frames: critical_path,
     })
 }
 
@@ -454,6 +487,38 @@ mod tests {
         assert!(r.refusals > 0, "saturated pool must refuse: {}", r.to_json());
         let per_epoch: usize = r.epochs.iter().map(|e| e.refused).sum();
         assert_eq!(r.refusals, per_epoch, "epoch rows must account for every refusal");
+    }
+
+    #[test]
+    fn occupancy_model_fields_populate_but_stay_out_of_the_json() {
+        let r = run_loadtest(tiny_base(), &opts(Scenario::FlashCrowd, 7)).unwrap();
+        // The model prices every epoch the pool ran.
+        assert!(r.steal_epoch_critical_path_frames > 0);
+        assert!(
+            r.steal_idle_worker_frames <= r.session_idle_worker_frames,
+            "stealing can only reduce idle worker-frames: {} vs {}",
+            r.steal_idle_worker_frames,
+            r.session_idle_worker_frames
+        );
+        // SLO bytes are scheduler-blind: the model fields must not leak
+        // into the JSON contract.
+        assert!(!r.to_json().contains("idle_worker"));
+        assert!(!r.to_json().contains("critical_path"));
+    }
+
+    #[test]
+    fn report_json_is_byte_identical_across_schedulers() {
+        let mut steal_opts = opts(Scenario::FlashCrowd, 9);
+        steal_opts.overrides = vec!["pool.scheduler=stealing".to_string()];
+        let a = run_loadtest(tiny_base(), &opts(Scenario::FlashCrowd, 9)).unwrap();
+        let b = run_loadtest(tiny_base(), &steal_opts).unwrap();
+        assert_eq!(
+            a.to_json(),
+            b.to_json(),
+            "pool.scheduler must not change a single report byte"
+        );
+        assert_eq!(a.refusals, b.refusals);
+        assert_eq!(a.demotions, b.demotions);
     }
 
     #[test]

@@ -139,7 +139,8 @@ fn pipelined_aggregate_serving_bitwise_deterministic() {
             AdmissionController::new(target, cfg.pool.tiers.clone(), cfg.pool.reduced_fraction)
                 .unwrap()
                 .with_pipeline_depth(2)
-                .with_pricing(PricingMode::Aggregate);
+                .with_pricing(PricingMode::Aggregate)
+                .with_epoch_frames(cfg.pool.epoch_frames);
         let mut pool = SessionPool::builder(cfg.clone()).sessions(3).build().unwrap();
         let r = pool.serve(&ctrl).unwrap();
         par::set_num_threads(0);

@@ -8,11 +8,12 @@
 //! What loom buys over the dynamic 1/2/4-thread tests: it *exhaustively
 //! enumerates* the interleavings (and, via its C11 memory model, the
 //! weak-memory reorderings) of each modeled pattern, rather than
-//! sampling whatever the host scheduler happens to produce. The three
-//! models mirror the crate's three unsafe publication idioms — the
-//! `par_map` atomic-claim raw-slot write, the `par_chunks_mut`
-//! precomputed disjoint ranges, and the sort scatter's exclusive
-//! prefix-sum segments. They cannot model the real functions directly
+//! sampling whatever the host scheduler happens to produce. The models
+//! mirror the crate's unsafe publication idioms — the `par_map`
+//! atomic-claim raw-slot write, the `par_chunks_mut` precomputed
+//! disjoint ranges, the sort scatter's exclusive prefix-sum segments,
+//! and the stealing scheduler's task-claim round
+//! (`coordinator::steal`). They cannot model the real functions directly
 //! (loom requires `'static` spawns and its own sync types, while the
 //! real code uses `std::thread::scope` over borrowed buffers), so each
 //! reproduces the claim/write protocol verbatim at model scale; the
@@ -133,6 +134,61 @@ fn par_chunks_mut_claimed_ranges_are_disjoint_and_complete() {
         }
         for i in 0..LEN {
             assert_eq!(slots.read(i), 10 + i);
+        }
+    });
+}
+
+/// The stealing scheduler's round protocol
+/// (`coordinator::steal::run_round` over `par::TaskClaimer`): a fixed
+/// task list is claimed via `fetch_add`, each claimed task writes one
+/// pre-allocated output slot, and the coordination thread reads every
+/// slot only after joining the workers. Two sessions contribute
+/// heterogeneous rounds (session 0: raster + frontend, session 1: a
+/// whole depth-1 step), standing in for the per-field projections —
+/// tasks 0 and 1 write *different* cells of session 0's pair, modeling
+/// the disjoint `addr_of_mut!` field borrows, while task 2 owns session
+/// 1's cell outright. Loom proves no interleaving lets two workers
+/// touch the same cell, and that every slot's write is visible to the
+/// post-join commit.
+#[test]
+fn steal_round_claims_tasks_once_and_publishes_all_slots() {
+    // Task 0: session 0 raster; task 1: session 0 frontend; task 2:
+    // session 1 step. Session cells: [s0.raster, s0.frontend, s1].
+    const TASKS: usize = 3;
+    const WORKERS: usize = 2;
+    loom::model(|| {
+        let sessions = Slots::new(TASKS);
+        let outs = Slots::new(TASKS);
+        let next = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|_| {
+                let sessions = Arc::clone(&sessions);
+                let outs = Arc::clone(&outs);
+                let next = Arc::clone(&next);
+                thread::spawn(move || loop {
+                    // TaskClaimer::next — Relaxed fetch_add: the claim
+                    // only needs RMW uniqueness; publication of the
+                    // slot writes happens-before via join.
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= TASKS {
+                        break;
+                    }
+                    // "Run" the task: mutate its session cell (the
+                    // field the real task projects), then publish into
+                    // its claimed output slot.
+                    sessions.write(i, 7 + i);
+                    outs.write(i, 70 + i);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Post-join commit in task-ID order: every stage output and
+        // every session mutation is visible, exactly once.
+        for i in 0..TASKS {
+            assert_eq!(sessions.read(i), 7 + i);
+            assert_eq!(outs.read(i), 70 + i);
         }
     });
 }

@@ -1,0 +1,159 @@
+//! Pool-wide work-stealing scheduler integration: `pool.scheduler =
+//! "stealing"` must be an *invisible* optimization — bitwise-identical
+//! rendered frames, reports, and loadtest JSON vs the per-session
+//! scheduler, at 1, 2, and 4 worker threads, through mid-run tier swaps,
+//! retirement churn, and depth-3 raster sub-staging.
+
+use lumina::config::{HardwareVariant, LuminaConfig, SchedulerMode, Tier};
+use lumina::coordinator::{FrameResult, SessionPool};
+use lumina::util::par;
+use lumina::workload::{run_loadtest, LoadtestOptions, Scenario};
+
+/// Tests that flip the global thread count serialize on this lock so
+/// they cannot race each other inside one test binary.
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_cfg(depth: usize) -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 3000;
+    c.camera.width = 48;
+    c.camera.height = 48;
+    c.camera.frames = 6;
+    c.variant = HardwareVariant::Lumina;
+    c.pool.pipeline_depth = depth;
+    c.pool.epoch_frames = 2;
+    c
+}
+
+fn pool_with(cfg: &LuminaConfig, scheduler: SchedulerMode, n: usize) -> SessionPool {
+    let mut cfg = cfg.clone();
+    cfg.pool.scheduler = scheduler;
+    SessionPool::builder(cfg).sessions(n).build().unwrap()
+}
+
+/// Drive a pool to completion in epochs, returning every completed
+/// frame (image included) grouped by epoch and session.
+fn run_all_epochs(pool: &mut SessionPool, ef: usize) -> Vec<Vec<Vec<FrameResult>>> {
+    let mut epochs = Vec::new();
+    while pool.sessions().iter().any(|c| c.remaining() > 0 || c.in_flight() > 0) {
+        epochs.push(pool.run_epoch_results(ef).unwrap());
+    }
+    epochs
+}
+
+fn assert_epochs_bitwise_equal(
+    want: &[Vec<Vec<FrameResult>>],
+    got: &[Vec<Vec<FrameResult>>],
+    ctx: &str,
+) {
+    assert_eq!(want.len(), got.len(), "{ctx}: epoch count");
+    for (e, (we, ge)) in want.iter().zip(got).enumerate() {
+        assert_eq!(we.len(), ge.len(), "{ctx}: epoch {e} session count");
+        for (s, (ws, gs)) in we.iter().zip(ge).enumerate() {
+            assert_eq!(ws.len(), gs.len(), "{ctx}: epoch {e} session {s} frames");
+            for (w, g) in ws.iter().zip(gs) {
+                assert_eq!(w.report, g.report, "{ctx}: epoch {e} session {s} report");
+                assert_eq!(
+                    w.image.data, g.image.data,
+                    "{ctx}: epoch {e} session {s} frame {} image bits",
+                    w.report.frame
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stealing_renders_bitwise_identical_frames_at_any_thread_count() {
+    let _lock = lock();
+    for depth in [1usize, 2] {
+        let cfg = small_cfg(depth);
+        // Reference: the per-session scheduler on one thread.
+        par::set_num_threads(1);
+        let want = run_all_epochs(&mut pool_with(&cfg, SchedulerMode::Session, 3), 2);
+        par::set_num_threads(0);
+        for threads in [1usize, 2, 4] {
+            par::set_num_threads(threads);
+            let got = run_all_epochs(&mut pool_with(&cfg, SchedulerMode::Stealing, 3), 2);
+            par::set_num_threads(0);
+            assert_epochs_bitwise_equal(
+                &want,
+                &got,
+                &format!("depth {depth}, stealing @ {threads} threads"),
+            );
+        }
+    }
+}
+
+#[test]
+fn stealing_matches_session_at_depth_three_with_substages() {
+    let _lock = lock();
+    let mut cfg = small_cfg(3);
+    cfg.pool.raster_substages = 3;
+    par::set_num_threads(4);
+    let want = run_all_epochs(&mut pool_with(&cfg, SchedulerMode::Session, 2), 2);
+    let got = run_all_epochs(&mut pool_with(&cfg, SchedulerMode::Stealing, 2), 2);
+    par::set_num_threads(0);
+    assert_epochs_bitwise_equal(&want, &got, "depth 3 with raster sub-stages");
+}
+
+#[test]
+fn stealing_survives_midrun_tier_swap_and_retirement_bitwise() {
+    let _lock = lock();
+    let cfg = small_cfg(2);
+    // The same mid-run churn script under both schedulers: one epoch,
+    // then demote session 1 (drains its frame slots into `drained`,
+    // exercising the inline zero-work delivery) and retire session 0
+    // (index shift), then run out the rest.
+    let script = |scheduler: SchedulerMode| {
+        let mut pool = pool_with(&cfg, scheduler, 3);
+        let mut epochs = vec![pool.run_epoch_results(2).unwrap()];
+        pool.set_session_tier(1, Tier::Reduced).unwrap();
+        let retired = pool.retire(0).unwrap();
+        epochs.extend(run_all_epochs(&mut pool, 2));
+        (epochs, retired)
+    };
+    par::set_num_threads(4);
+    let (want, want_retired) = script(SchedulerMode::Session);
+    let (got, got_retired) = script(SchedulerMode::Stealing);
+    par::set_num_threads(0);
+    assert_eq!(want_retired, got_retired, "retire must drain identical frames");
+    assert_epochs_bitwise_equal(&want, &got, "mid-run tier swap + retirement");
+}
+
+#[test]
+fn stealing_loadtest_json_is_byte_identical_across_thread_counts() {
+    let _lock = lock();
+    let mut base = LuminaConfig::quick_test();
+    base.scene.count = 2500;
+    base.camera.width = 32;
+    base.camera.height = 32;
+    base.pool.epoch_frames = 2;
+    let opts = |scheduler: &str| LoadtestOptions {
+        scenario: Scenario::FlashCrowd,
+        seed: 7,
+        epochs: Some(3),
+        smoke: true,
+        overrides: vec![format!("pool.scheduler={scheduler}")],
+    };
+    par::set_num_threads(1);
+    let reference = run_loadtest(base.clone(), &opts("session")).unwrap().to_json();
+    par::set_num_threads(0);
+    for threads in [1usize, 2, 4] {
+        par::set_num_threads(threads);
+        let steal = run_loadtest(base.clone(), &opts("stealing")).unwrap();
+        par::set_num_threads(0);
+        assert_eq!(
+            reference,
+            steal.to_json(),
+            "stealing loadtest JSON diverged from the session scheduler at {threads} threads"
+        );
+        // The occupancy model is epoch-shape arithmetic, so it is as
+        // thread-invariant as the report itself.
+        assert!(steal.steal_idle_worker_frames <= steal.session_idle_worker_frames);
+    }
+}

@@ -1,0 +1,14 @@
+//! Seeded scheduler fixture: the stealing scheduler's worker-pool
+//! sizing read is the one justified thread-count site outside
+//! util/par.rs; the same read without its annotation trips R4.
+
+pub fn worker_pool_size(tasks: usize) -> usize {
+    // detlint: allow(thread-count) -- scheduling site: sizes the claiming worker pool; task outputs are thread-budget invariant
+    let total = par::num_threads();
+    total.min(tasks).max(1)
+}
+
+pub fn bad_chunking(tasks: usize) -> usize {
+    // Violation: the same read feeding chunk math, no justification.
+    tasks.div_ceil(par::num_threads().max(1))
+}

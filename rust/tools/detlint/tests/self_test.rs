@@ -59,6 +59,18 @@ fn r4_fixture_trips_thread_count_only() {
     assert_eq!(vs[0].line, 5);
 }
 
+/// The stealing scheduler's claiming site (`coordinator::steal::
+/// run_round`) is the one sanctioned thread-count read outside
+/// `util/par.rs`: annotated as a scheduling site it scans clean, and
+/// the identical read without the annotation still trips R4.
+#[test]
+fn steal_fixture_allows_scheduler_site_and_trips_unannotated_read() {
+    let vs = scan_fixture("steal");
+    assert_eq!(vs.len(), 1, "only the unannotated read trips:\n{}", render(&vs));
+    assert_eq!(vs[0].rule, RULE_THREAD_COUNT);
+    assert_eq!(vs[0].line, 13, "the annotated claiming site above scans clean");
+}
+
 #[test]
 fn clean_fixture_scans_clean() {
     let vs = scan_fixture("clean");
@@ -67,7 +79,7 @@ fn clean_fixture_scans_clean() {
 
 #[test]
 fn binary_exits_nonzero_on_each_seeded_fixture() {
-    for name in ["r1", "r2", "r3", "r4"] {
+    for name in ["r1", "r2", "r3", "r4", "steal"] {
         let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
             .arg(fixture(name))
             .output()
