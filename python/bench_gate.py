@@ -36,6 +36,13 @@ invariants.  Currently:
   shared-scope (snapshot/merge) radiance cache must reach at least the
   private-scope aggregate hit rate on the convergent-pose pool —
   cross-session sharing never loses hits, it can only add them;
+* whenever both `metric/world_hit_rate` and
+  `metric/geom_shared_hit_rate` exist in the fresh file (the
+  mixed-tier convergent pool, one session demoted to half-res), the
+  world-space hash cache must reach at least the geometry-keyed
+  shared scope's aggregate hit rate — world keys quantize Gaussian
+  positions, so they survive the resolution split that partitions the
+  geometry-keyed snapshots;
 * whenever both `metric/leader_sorts_clustered` and
   `metric/leader_sorts_private` exist, the pool-clustered S² sort scope
   must perform at most as many speculative sorts as private
@@ -163,6 +170,26 @@ def gate(baseline_path, fresh_path, tolerance):
                 f"shared-scope hit rate {shared_rate:.4f} fell below "
                 f"private-scope {private_rate:.4f} — cross-session cache "
                 f"sharing regressed")
+
+    # Same-run world-scope invariant: on the mixed-tier convergent pool
+    # the world-space hash cache keys on quantized Gaussian positions,
+    # so the half-res session keeps hitting the full-res sessions'
+    # entries — it must never fall below the geometry-keyed shared
+    # scope, which the resolution split partitions.
+    wh = fresh_by.get("metric/world_hit_rate")
+    gh = fresh_by.get("metric/geom_shared_hit_rate")
+    if wh is not None and gh is not None:
+        world_rate = wh["median_ns"] / 1e6
+        geom_rate = gh["median_ns"] / 1e6
+        verdict = "ok" if world_rate >= geom_rate else "REGRESSION"
+        print(f"  mixed-tier hit rate: world {world_rate:.4f} vs "
+              f"geometry-shared {geom_rate:.4f}  {verdict}")
+        if world_rate < geom_rate:
+            failures.append(
+                f"world-scope hit rate {world_rate:.4f} fell below "
+                f"geometry-shared {geom_rate:.4f} on the mixed-tier pool "
+                f"— the world-space cache lost its resolution-survival "
+                f"advantage")
 
     # Same-run sort-scope invariant: pool-clustered S² must not sort
     # more often than private per-session windows on the convergent

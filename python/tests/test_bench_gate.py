@@ -75,6 +75,28 @@ def test_cache_hitrate_invariant(tmp_path):
     assert bench_gate.gate(base, ok, 0.15) == 0
 
 
+def test_world_hitrate_invariant(tmp_path):
+    base = write(tmp_path / "base.json", [])
+    # World scope must reach at least the geometry-keyed shared scope's
+    # hit rate on the mixed-tier pool.
+    bad = write(tmp_path / "bad.json",
+                [entry("metric/world_hit_rate", 100_000),
+                 entry("metric/geom_shared_hit_rate", 200_000)])
+    eq = write(tmp_path / "eq.json",
+               [entry("metric/world_hit_rate", 200_000),
+                entry("metric/geom_shared_hit_rate", 200_000)])
+    ok = write(tmp_path / "ok.json",
+               [entry("metric/world_hit_rate", 300_000),
+                entry("metric/geom_shared_hit_rate", 200_000)])
+    assert bench_gate.gate(base, bad, 0.15) == 1
+    assert bench_gate.gate(base, eq, 0.15) == 0
+    assert bench_gate.gate(base, ok, 0.15) == 0
+    # One metric alone (a partial run) must not trip anything.
+    partial = write(tmp_path / "partial.json",
+                    [entry("metric/world_hit_rate", 100_000)])
+    assert bench_gate.gate(base, partial, 0.15) == 0
+
+
 def test_clustered_sort_invariant(tmp_path):
     base = write(tmp_path / "base.json", [])
     # Clustered must sort at most as often as private.

@@ -149,6 +149,46 @@ fn main() {
         }
     }
 
+    // Mixed-tier cross-session caching: the same convergent pool with
+    // one session demoted to the half-res tier. Geometry-keyed sharing
+    // (`shared`) cannot pool across the resolution split — the demoted
+    // session bins a different tile grid — while the world-space scope
+    // keys on quantized Gaussian positions and keeps all three viewers
+    // on one snapshot. The metric rows feed the bench gate's
+    // machine-independent `world >= geom_shared` invariant.
+    for scope in [CacheScope::Shared, CacheScope::World] {
+        let mut run_cfg = ccfg.clone();
+        run_cfg.pool.cache_scope = scope;
+        let stagger = run_cfg.pool.epoch_frames;
+        let bench_cfg = run_cfg.clone();
+        let bench_scene = scene.clone();
+        r.bench(&format!("cache_scope_{}/3xmixed_tier", scope.label()), move || {
+            let mut pool = SessionPool::builder(bench_cfg.clone())
+                .sessions(3)
+                .stagger(stagger)
+                .scene(bench_scene.clone())
+                .build()
+                .unwrap();
+            pool.set_session_tier(2, Tier::Half).unwrap();
+            pool.run().unwrap()
+        });
+        let metric_name = match scope {
+            CacheScope::World => "metric/world_hit_rate",
+            _ => "metric/geom_shared_hit_rate",
+        };
+        if r.enabled(metric_name) {
+            let mut pool = SessionPool::builder(run_cfg)
+                .sessions(3)
+                .stagger(stagger)
+                .scene(scene.clone())
+                .build()
+                .unwrap();
+            pool.set_session_tier(2, Tier::Half).unwrap();
+            let report = pool.run().unwrap();
+            r.metric(metric_name, (report.cache_hit_rate() * 1e6).round() as u64);
+        }
+    }
+
     // Pool-clustered S² sorting: convergent viewers share one leader
     // sort per pose cluster per epoch vs private per-session windows.
     // Timing rows measure the pool end to end; the metric rows export

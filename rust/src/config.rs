@@ -200,6 +200,12 @@ pub enum CacheScope {
     /// merged at epoch boundaries in session-index order, so nearby
     /// viewers serve each other's hits deterministically.
     Shared,
+    /// Pool-shared with world-space keys: the same epoch protocol as
+    /// `shared`, but entries are keyed by quantized Gaussian world
+    /// position + view-direction bucket in a fixed-size hash table
+    /// (`pool.world_*` knobs), so they survive pose, tier, and
+    /// resolution changes and every session shares one table.
+    World,
 }
 
 impl CacheScope {
@@ -207,6 +213,7 @@ impl CacheScope {
         match self {
             CacheScope::Private => "private",
             CacheScope::Shared => "shared",
+            CacheScope::World => "world",
         }
     }
 
@@ -214,8 +221,15 @@ impl CacheScope {
         Ok(match s {
             "private" => CacheScope::Private,
             "shared" => CacheScope::Shared,
-            other => bail!("unknown cache scope: {other} (expected private|shared)"),
+            "world" => CacheScope::World,
+            other => bail!("unknown cache scope: {other} (expected private|shared|world)"),
         })
+    }
+
+    /// Whether sessions render against pool-shared cache state (either
+    /// key scheme) — the scopes that need the hub + epoch merge.
+    pub fn is_pooled(self) -> bool {
+        matches!(self, CacheScope::Shared | CacheScope::World)
     }
 }
 
@@ -358,6 +372,30 @@ pub struct PoolConfig {
     /// Maximum angular distance (radians) between two sessions'
     /// predicted sort poses for them to share one cluster sort.
     pub cluster_radius: f64,
+    /// Maximum positional distance (world units) between two sessions'
+    /// predicted sort poses for them to share one cluster sort — the
+    /// translation-aware gate: distant viewers with parallel gaze must
+    /// not cluster (their tile lists differ even though their view
+    /// directions match). The default is generous enough that co-orbiting
+    /// pools keep clustering; tighten it for scenes where viewers roam.
+    pub cluster_position_radius: f64,
+    /// World-scope cache: fixed hash-table size in cells.
+    pub world_cells: usize,
+    /// World-scope cache: positional cell edge (world units) before
+    /// distance LOD scaling.
+    pub world_cell_size: f64,
+    /// World-scope cache: distance at which positional cells start
+    /// doubling (LOD pivot).
+    pub world_lod_distance: f64,
+    /// World-scope cache: full cell lifetime in pool epochs (decay
+    /// eviction reclaims cells that go this many epochs without a hit).
+    pub world_lifetime: usize,
+    /// World-scope cache: bounded linear-probe chain length on slot
+    /// collision (also the shared-lookup contention multiplier the cost
+    /// models charge).
+    pub world_probe_len: usize,
+    /// World-scope cache: per-axis view-direction buckets of the key.
+    pub world_dir_buckets: usize,
     /// Epoch scheduling policy: `session` (per-session outer workers,
     /// the pre-stealing behavior) or `stealing` (pool-wide
     /// deterministic stage-task claiming — idle workers run other
@@ -378,6 +416,13 @@ impl Default for PoolConfig {
             cache_scope: CacheScope::Private,
             sort_scope: SortScope::Private,
             cluster_radius: 0.35,
+            cluster_position_radius: 16.0,
+            world_cells: 65_536,
+            world_cell_size: 0.25,
+            world_lod_distance: 4.0,
+            world_lifetime: 30,
+            world_probe_len: 3,
+            world_dir_buckets: 4,
             scheduler: SchedulerMode::Session,
         }
     }
@@ -645,6 +690,55 @@ impl LuminaConfig {
             }
             cfg.pool.cluster_radius = r;
         }
+        if let Some(v) = root.get_path("pool.cluster_position_radius") {
+            let r = v.as_float().context("pool.cluster_position_radius must be a number")?;
+            if !(r > 0.0) || !r.is_finite() {
+                bail!("pool.cluster_position_radius must be finite and > 0, got {r}");
+            }
+            cfg.pool.cluster_position_radius = r;
+        }
+        if let Some(v) = root.get_path("pool.world_cells") {
+            let c = v.as_int().context("pool.world_cells")?;
+            if c < 1 {
+                bail!("pool.world_cells must be >= 1, got {c}");
+            }
+            cfg.pool.world_cells = c as usize;
+        }
+        if let Some(v) = root.get_path("pool.world_cell_size") {
+            let s = v.as_float().context("pool.world_cell_size must be a number")?;
+            if !(s > 0.0) || !s.is_finite() {
+                bail!("pool.world_cell_size must be finite and > 0, got {s}");
+            }
+            cfg.pool.world_cell_size = s;
+        }
+        if let Some(v) = root.get_path("pool.world_lod_distance") {
+            let d = v.as_float().context("pool.world_lod_distance must be a number")?;
+            if !(d > 0.0) || !d.is_finite() {
+                bail!("pool.world_lod_distance must be finite and > 0, got {d}");
+            }
+            cfg.pool.world_lod_distance = d;
+        }
+        if let Some(v) = root.get_path("pool.world_lifetime") {
+            let l = v.as_int().context("pool.world_lifetime")?;
+            if !(1..=i64::from(u16::MAX)).contains(&l) {
+                bail!("pool.world_lifetime must be 1..={}, got {l}", u16::MAX);
+            }
+            cfg.pool.world_lifetime = l as usize;
+        }
+        if let Some(v) = root.get_path("pool.world_probe_len") {
+            let p = v.as_int().context("pool.world_probe_len")?;
+            if !(1..=256).contains(&p) {
+                bail!("pool.world_probe_len must be 1..=256, got {p}");
+            }
+            cfg.pool.world_probe_len = p as usize;
+        }
+        if let Some(v) = root.get_path("pool.world_dir_buckets") {
+            let b = v.as_int().context("pool.world_dir_buckets")?;
+            if !(1..=256).contains(&b) {
+                bail!("pool.world_dir_buckets must be 1..=256, got {b}");
+            }
+            cfg.pool.world_dir_buckets = b as usize;
+        }
         if let Some(v) = root.get_path("pool.scheduler") {
             cfg.pool.scheduler =
                 SchedulerMode::parse(v.as_str().context("pool.scheduler must be a string")?)?;
@@ -706,6 +800,25 @@ impl LuminaConfig {
             Value::String(self.pool.sort_scope.label().into()),
         );
         set(&mut root, "pool.cluster_radius", Value::Float(self.pool.cluster_radius));
+        set(
+            &mut root,
+            "pool.cluster_position_radius",
+            Value::Float(self.pool.cluster_position_radius),
+        );
+        set(&mut root, "pool.world_cells", Value::Integer(self.pool.world_cells as i64));
+        set(&mut root, "pool.world_cell_size", Value::Float(self.pool.world_cell_size));
+        set(
+            &mut root,
+            "pool.world_lod_distance",
+            Value::Float(self.pool.world_lod_distance),
+        );
+        set(&mut root, "pool.world_lifetime", Value::Integer(self.pool.world_lifetime as i64));
+        set(&mut root, "pool.world_probe_len", Value::Integer(self.pool.world_probe_len as i64));
+        set(
+            &mut root,
+            "pool.world_dir_buckets",
+            Value::Integer(self.pool.world_dir_buckets as i64),
+        );
         set(
             &mut root,
             "pool.scheduler",
@@ -903,9 +1016,45 @@ mod tests {
         let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
         assert_eq!(back.pool.cache_scope, CacheScope::Shared);
         assert!(c.apply_override("pool.cache_scope=bogus").is_err());
-        for s in [CacheScope::Private, CacheScope::Shared] {
+        for s in [CacheScope::Private, CacheScope::Shared, CacheScope::World] {
             assert_eq!(CacheScope::parse(s.label()).unwrap(), s);
         }
+        assert!(!CacheScope::Private.is_pooled());
+        assert!(CacheScope::Shared.is_pooled());
+        assert!(CacheScope::World.is_pooled());
+    }
+
+    #[test]
+    fn world_cache_knobs_roundtrip_and_validate() {
+        let mut c = LuminaConfig::quick_test();
+        assert_eq!(c.pool.world_cells, 65_536);
+        assert_eq!(c.pool.world_probe_len, 3);
+        c.apply_override("pool.cache_scope=world").unwrap();
+        assert_eq!(c.pool.cache_scope, CacheScope::World);
+        c.apply_override("pool.world_cells=1024").unwrap();
+        c.apply_override("pool.world_cell_size=0.5").unwrap();
+        c.apply_override("pool.world_lod_distance=8.0").unwrap();
+        c.apply_override("pool.world_lifetime=12").unwrap();
+        c.apply_override("pool.world_probe_len=5").unwrap();
+        c.apply_override("pool.world_dir_buckets=8").unwrap();
+        c.apply_override("pool.cluster_position_radius=3.5").unwrap();
+        let back = LuminaConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.pool.cache_scope, CacheScope::World);
+        assert_eq!(back.pool.world_cells, 1024);
+        assert_eq!(back.pool.world_cell_size, 0.5);
+        assert_eq!(back.pool.world_lod_distance, 8.0);
+        assert_eq!(back.pool.world_lifetime, 12);
+        assert_eq!(back.pool.world_probe_len, 5);
+        assert_eq!(back.pool.world_dir_buckets, 8);
+        assert_eq!(back.pool.cluster_position_radius, 3.5);
+        assert!(c.apply_override("pool.world_cells=0").is_err());
+        assert!(c.apply_override("pool.world_cell_size=0").is_err());
+        assert!(c.apply_override("pool.world_lod_distance=-1").is_err());
+        assert!(c.apply_override("pool.world_lifetime=0").is_err());
+        assert!(c.apply_override("pool.world_lifetime=70000").is_err());
+        assert!(c.apply_override("pool.world_probe_len=0").is_err());
+        assert!(c.apply_override("pool.world_dir_buckets=0").is_err());
+        assert!(c.apply_override("pool.cluster_position_radius=0").is_err());
     }
 
     #[test]

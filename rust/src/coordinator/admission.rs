@@ -99,6 +99,12 @@ pub struct SessionDemand {
     /// Whether this session renders against the pool-shared cache
     /// snapshot (false = private scope, today's pricing unchanged).
     pub cache_shared: bool,
+    /// Whether the pool-shared snapshot is the *world-space* hash cache.
+    /// World keys survive resolution and tier changes (they quantize
+    /// Gaussian positions, not pixels), so the hit-rate discount below
+    /// also applies to geometry-changing rungs — a half-res candidate
+    /// still hits the entries full-res sessions populated.
+    pub cache_world: bool,
     /// Pool-wide observed cache hit rate (0..1) across every served
     /// frame so far — the same value for all sessions, because under
     /// shared scope a session's future hits come from the *pool's*
@@ -306,8 +312,11 @@ pub fn price_stages(w: &FrameWorkload, variant: HardwareVariant) -> StagePrices 
         w.tile_list_lens.iter().sum::<usize>(),
     );
     let raster = raster_cost.raster_cost(w);
-    let shared_lookup_s =
-        if w.cache_shared { raster_cost.shared_lookup_cost_s(w.pixels()) } else { 0.0 };
+    let shared_lookup_s = if w.cache_shared {
+        raster_cost.shared_lookup_cost_s(w.pixels(), w.shared_probe_len)
+    } else {
+        0.0
+    };
     StagePrices {
         front_s,
         refresh_floor_s,
@@ -328,7 +337,7 @@ pub fn price_aggregate_stages(a: &AggregateWorkload, variant: HardwareVariant) -
     );
     let raster = raster_cost.raster_cost_aggregate(a);
     let shared_lookup_s = if a.cache_shared {
-        raster_cost.shared_lookup_cost_s(a.width * a.height)
+        raster_cost.shared_lookup_cost_s(a.width * a.height, a.shared_probe_len)
     } else {
         0.0
     };
@@ -521,9 +530,14 @@ impl AdmissionController {
                     // reduced share the render grid (one snapshot),
                     // while the half-res tier re-attaches to a
                     // different — possibly cold — snapshot, so
-                    // geometry-changing rungs are priced cold.
+                    // geometry-changing rungs are priced cold. The
+                    // world scope is the exception: its keys quantize
+                    // Gaussian positions, not pixels, so the same
+                    // snapshot serves every resolution and the rate
+                    // transfers across geometry-changing rungs too.
                     let same_geometry = (t == Tier::Half) == (d.tier == Tier::Half);
-                    let hit_discount = if same_geometry { base_discount } else { 1.0 };
+                    let hit_discount =
+                        if same_geometry || d.cache_world { base_discount } else { 1.0 };
                     // Clustered-S² frontend amortization. On the rung
                     // that keeps a follower in its (multi-member)
                     // cluster, it pays refresh + broadcast instead of
@@ -661,6 +675,7 @@ mod tests {
                 cache_outcomes: None,
                 cache: CacheStats::default(),
                 cache_shared: false,
+                shared_probe_len: 1,
                 swap_bytes: 0,
             },
             tier: Tier::Full,
@@ -668,6 +683,7 @@ mod tests {
             half_capable: true,
             priority,
             cache_shared: false,
+            cache_world: false,
             pool_hit_rate: 0.0,
             sort_clustered: false,
             sort_sharers: 1,

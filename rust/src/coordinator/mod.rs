@@ -32,11 +32,12 @@ use anyhow::{Context, Result};
 
 use crate::camera::trajectory::{generate, Trajectory};
 use crate::camera::{Intrinsics, Pose};
-use crate::config::{HardwareVariant, LuminaConfig, Tier};
+use crate::config::{CacheScope, HardwareVariant, LuminaConfig, Tier};
 use crate::constants::TILE;
 use crate::lumina::ds2::{half_intrinsics, Ds2Raster};
 use crate::lumina::rc::{
     CacheDelta, CacheGeometry, CacheHub, CacheSnapshot, CachedRaster, GroupedRadianceCache,
+    WorldDelta, WorldParams, WorldSnapshot,
 };
 use crate::lumina::s2::{speculative_sort, S2Scheduler, SharedSort, SortGeometry, SortView};
 use crate::pipeline::image::Image;
@@ -191,22 +192,47 @@ fn compose_frontend(cfg: &LuminaConfig, clustered: bool) -> FrontendStage {
     }
 }
 
+/// The world-scope cache parameters a config implies.
+pub(crate) fn world_params_for(cfg: &LuminaConfig) -> WorldParams {
+    WorldParams {
+        cells: cfg.pool.world_cells,
+        base_cell_size: cfg.pool.world_cell_size as f32,
+        lod_distance: cfg.pool.world_lod_distance as f32,
+        lifetime: cfg.pool.world_lifetime as u16,
+        probe_len: cfg.pool.world_probe_len as u32,
+        dir_buckets: cfg.pool.world_dir_buckets as u32,
+    }
+}
+
 /// Compose the raster backend for a config + pipeline resolution +
 /// serving tier. The half-res tier wraps the variant's own backend in
 /// [`Ds2Raster`], so cached variants keep their cache (sized for the
-/// half-res tile grid) while demoted. With a [`CacheHub`] attached
-/// (shared-scope pools) the cached backend renders against the hub's
-/// snapshot for this geometry instead of a private cache.
+/// half-res tile grid) while demoted. With a [`CacheHub`] attached,
+/// the cached backend renders against the hub's pool-wide state
+/// instead of a private cache: per-geometry snapshots under the shared
+/// scope, the single world-space hash table under the world scope.
+/// World keys quantize positions in the *full* scene (reduced tiers
+/// are prefix subsamples, so Gaussian ids stay valid), which is what
+/// lets one snapshot serve every tier and resolution.
 fn compose_raster(
     cfg: &LuminaConfig,
     render_intr: &Intrinsics,
     record_uncached: bool,
     tier: Tier,
     hub: Option<&Arc<CacheHub>>,
+    scene: &Arc<GaussianScene>,
 ) -> Box<dyn RasterBackend> {
     let (tiles_x, tiles_y) = render_intr.tiles(TILE);
     let base: Box<dyn RasterBackend> = if cfg.variant.uses_rc() {
         match hub {
+            Some(h) if cfg.pool.cache_scope == CacheScope::World => {
+                Box::new(CachedRaster::world(
+                    h.world_snapshot(world_params_for(cfg)),
+                    scene.clone(),
+                    cfg.rc.alpha_record,
+                    record_uncached,
+                ))
+            }
             Some(h) => Box::new(CachedRaster::shared(
                 h.snapshot_for(CacheGeometry { tiles_x, tiles_y, k: cfg.rc.alpha_record }),
                 record_uncached,
@@ -273,6 +299,7 @@ impl Coordinator {
             raster_cost.needs_uncached_stats(),
             Tier::Full,
             cache_hub.as_ref(),
+            &scene,
         );
         let pipeline = PipelinedSession::with_substages(
             cfg.pool.pipeline_depth,
@@ -388,13 +415,16 @@ impl Coordinator {
         // for the *new* geometry with a fresh delta — this session's
         // un-merged inserts are invalidated (they referenced the old
         // tile grid), while every other session's snapshot view is
-        // untouched.
+        // untouched. World scope re-attaches to the *same* pool-wide
+        // snapshot (world keys don't reference the tile grid), so only
+        // the un-merged delta is dropped.
         self.raster = compose_raster(
             &self.cfg,
             &self.render_intr,
             self.raster_cost.needs_uncached_stats(),
             tier,
             self.cache_hub.as_ref(),
+            &self.scene,
         );
         self.tier = tier;
         Ok(())
@@ -403,6 +433,11 @@ impl Coordinator {
     /// Whether this session renders against a pool-shared cache.
     pub fn shares_cache(&self) -> bool {
         self.cache_hub.is_some() && self.cfg.variant.uses_rc()
+    }
+
+    /// Whether the pool-shared cache is the world-space hash cache.
+    pub fn caches_world(&self) -> bool {
+        self.shares_cache() && self.cfg.pool.cache_scope == CacheScope::World
     }
 
     /// The cache geometry this session's render pass bins (None for
@@ -426,6 +461,18 @@ impl Coordinator {
     /// scope).
     pub fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
         self.raster.install_cache_snapshot(snapshot, sharers);
+    }
+
+    /// Detach the session's world-scope delta (epoch merge; None
+    /// outside the world scope).
+    pub fn take_world_delta(&mut self) -> Option<WorldDelta> {
+        self.raster.take_world_delta()
+    }
+
+    /// Install the next epoch's merged world snapshot (no-op outside
+    /// the world scope).
+    pub fn install_world_snapshot(&mut self, snapshot: Arc<WorldSnapshot>, sharers: usize) {
+        self.raster.install_world_snapshot(snapshot, sharers);
     }
 
     /// Switch this session's S² frontend between the private and the

@@ -40,12 +40,12 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{CacheScope, LuminaConfig, SchedulerMode, SortScope, Tier};
+use crate::config::{LuminaConfig, SchedulerMode, SortScope, Tier};
 use crate::coordinator::admission::{AdmissionController, SessionDemand};
 use crate::coordinator::report::FrameReport;
 use crate::coordinator::steal;
 use crate::coordinator::{Coordinator, FrameResult, RunReport};
-use crate::lumina::rc::{CacheDelta, CacheGeometry, CacheHub, CacheStats};
+use crate::lumina::rc::{CacheDelta, CacheGeometry, CacheHub, CacheStats, WorldDelta};
 use crate::camera::Pose;
 use crate::lumina::s2::{SharedSort, SortCandidate, SortGeometry, SortHub};
 use crate::scene::synth::synth_scene;
@@ -119,6 +119,11 @@ pub struct SessionPool {
     /// observed hit rate admission pricing consumes (shared scope), and
     /// the warm-handoff rate for viewers admitted mid-run.
     served: CacheStats,
+    /// World-scope cells reclaimed by lifetime decay across every epoch
+    /// merge so far — eviction provenance the summary line surfaces
+    /// (decay happens pool-side at the merge, never inside a frame, so
+    /// no per-frame stat can carry it).
+    world_decay_evictions: u64,
     /// Next [`Coordinator::session_id`] to hand out — monotonic, never
     /// reused, so churn-aware reports keep a stable per-viewer key even
     /// as `retire` shifts session *indices*.
@@ -145,6 +150,9 @@ pub struct PoolReport {
     /// the pool's lifetime, not scoped to the run that produced this
     /// report.
     pub refusals: usize,
+    /// World-scope cells reclaimed by lifetime decay, cumulative over
+    /// the pool's epoch merges (0 outside the world cache scope).
+    pub decay_evictions: u64,
 }
 
 impl PoolReport {
@@ -297,9 +305,24 @@ impl PoolReport {
         } else {
             String::new()
         };
+        // World-scope provenance: mean probe-chain length (from the
+        // per-frame probe histogram) and pool-side decay evictions.
+        let probes = cache.probes_recorded();
+        let world = if probes > 0 || self.decay_evictions > 0 {
+            let chain_sum: u64 = cache
+                .probe_hist
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (i as u64 + 1) * n)
+                .sum();
+            let mean = if probes > 0 { chain_sum as f64 / probes as f64 } else { 0.0 };
+            format!(" | world probe {mean:.2} avg, {} decayed", self.decay_evictions)
+        } else {
+            String::new()
+        };
         format!(
             "pool: {} sessions x {} frames | aggregate {:.1} sim-fps ({:.1}/session) | \
-             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s{}{}{}",
+             pool {:.1} sim-fps | host {:.1} fps | wall {:.3} s{}{}{}{}",
             self.sessions.len(),
             frames,
             self.aggregate_fps(),
@@ -308,6 +331,7 @@ impl PoolReport {
             self.host_fps(),
             self.wall_s,
             hit,
+            world,
             slo,
             refused
         )
@@ -405,12 +429,17 @@ impl PoolBuilder {
         // variant can use them; sessions whose variant lacks the
         // mechanism simply never produce a cache geometry / sort
         // candidate, so mixed pools degrade per-session.
-        let cache_hub = (base.pool.cache_scope == CacheScope::Shared
+        let cache_hub = (base.pool.cache_scope.is_pooled()
             && (0..n).any(|i| variant_at(i).uses_rc()))
         .then(|| Arc::new(CacheHub::new()));
         let sort_hub = (base.pool.sort_scope == SortScope::Clustered
             && (0..n).any(|i| variant_at(i).uses_s2()))
-        .then(|| SortHub::new(base.pool.cluster_radius as f32));
+        .then(|| {
+            SortHub::with_position_radius(
+                base.pool.cluster_radius as f32,
+                base.pool.cluster_position_radius as f32,
+            )
+        });
         let sessions = (0..n)
             .map(|i| {
                 let mut cfg = base.clone();
@@ -433,6 +462,7 @@ impl PoolBuilder {
             sort_hub,
             sort_published: Vec::new(),
             served: CacheStats::default(),
+            world_decay_evictions: 0,
             next_id: n as u64,
             refused: 0,
         };
@@ -534,6 +564,21 @@ impl SessionPool {
     /// unchanged snapshot is free, so this is idempotent.
     fn sync_shared_cache(&mut self) {
         let Some(hub) = self.cache_hub.clone() else { return };
+        // World scope: one pool-wide snapshot regardless of tier or
+        // resolution (world keys don't reference the tile grid), so
+        // every world-caching session shares the same install and the
+        // swap/decay traffic amortizes over all of them.
+        let world_sharers = self.sessions.iter().filter(|c| c.caches_world()).count();
+        if world_sharers > 0 {
+            let params = super::world_params_for(
+                &self.sessions.iter().find(|c| c.caches_world()).expect("counted above").cfg,
+            );
+            let snap = hub.world_snapshot(params);
+            for c in self.sessions.iter_mut().filter(|c| c.caches_world()) {
+                c.install_world_snapshot(snap.clone(), world_sharers);
+            }
+            return;
+        }
         let geoms: Vec<Option<CacheGeometry>> =
             self.sessions.iter().map(|c| c.cache_geometry()).collect();
         for (i, g) in geoms.iter().enumerate() {
@@ -552,6 +597,13 @@ impl SessionPool {
     /// A no-op under private scope.
     fn merge_cache_epoch(&mut self) {
         let Some(hub) = self.cache_hub.clone() else { return };
+        // Exactly one of the two collections is non-empty: a session's
+        // view is either tile-keyed (shared) or world-keyed, never both.
+        let world: Vec<WorldDelta> =
+            self.sessions.iter_mut().filter_map(|c| c.take_world_delta()).collect();
+        if !world.is_empty() {
+            self.world_decay_evictions += hub.merge_world_in_order(world);
+        }
         let deltas: Vec<CacheDelta> =
             self.sessions.iter_mut().filter_map(|c| c.take_cache_delta()).collect();
         hub.merge_in_order(deltas);
@@ -794,6 +846,7 @@ impl SessionPool {
             half_capable: c.tier_servable(Tier::Half),
             priority: c.priority,
             cache_shared: c.shares_cache(),
+            cache_world: c.caches_world(),
             pool_hit_rate,
             sort_clustered: c.sorts_clustered(),
             sort_sharers: c.sort_sharers(),
@@ -924,6 +977,7 @@ impl SessionPool {
         // — otherwise retire timing inside an epoch would change the
         // pool's cache bits.
         let _ = departing.take_cache_delta();
+        let _ = departing.take_world_delta();
         self.sync_shared_cache();
         self.sync_shared_sorts();
         Ok(drained)
@@ -1091,7 +1145,13 @@ impl SessionPool {
             .map(|c| c.pipeline_depth())
             .max()
             .unwrap_or(1);
-        PoolReport { sessions, wall_s, pipeline_depth, refusals: self.refused }
+        PoolReport {
+            sessions,
+            wall_s,
+            pipeline_depth,
+            refusals: self.refused,
+            decay_evictions: self.world_decay_evictions,
+        }
     }
 }
 

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use crate::camera::{Intrinsics, Pose};
-use crate::lumina::rc::{CacheDelta, CacheSnapshot};
+use crate::lumina::rc::{CacheDelta, CacheSnapshot, WorldDelta, WorldSnapshot};
 use crate::pipeline::image::Image;
 use crate::pipeline::project::{project, ProjectedScene};
 use crate::pipeline::raster::{rasterize, RasterConfig};
@@ -110,6 +110,14 @@ impl RasterBackend for Ds2Raster {
 
     fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
         self.inner.install_cache_snapshot(snapshot, sharers);
+    }
+
+    fn take_world_delta(&mut self) -> Option<WorldDelta> {
+        self.inner.take_world_delta()
+    }
+
+    fn install_world_snapshot(&mut self, snapshot: Arc<WorldSnapshot>, sharers: usize) {
+        self.inner.install_world_snapshot(snapshot, sharers);
     }
 }
 

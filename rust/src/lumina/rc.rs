@@ -27,18 +27,26 @@
 //! the deltas into the next snapshot **in session-index order**
 //! ([`CacheHub::merge_in_order`]), so shared-scope output is bitwise
 //! identical at any thread count and pipeline depth.
+//!
+//! A third scope, `world`, replaces the screen-tile tag with a
+//! world-space hash key (quantized first-significant-Gaussian position +
+//! view-direction bucket, distance-scaled cell sizes), so entries stay
+//! meaningful across poses, tiers, and resolutions — see
+//! [`WorldRadianceCache`] and DESIGN.md "World-space radiance cache".
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::constants::{
     CACHE_ID_BITS, CACHE_ID_LO_BIT, CACHE_SETS, CACHE_TILE_GROUP, CACHE_WAYS, T_EPS,
 };
+use crate::math::Vec3;
 use crate::pipeline::image::Image;
 use crate::pipeline::project::ProjectedScene;
 use crate::pipeline::raster::{gather_tile, splat_alpha, GatheredSplat, RasterStats, MAX_SIG_K};
 use crate::pipeline::sort::TileBins;
 use crate::pipeline::stage::{RasterBackend, RasterFrame, RasterWork};
+use crate::scene::GaussianScene;
 
 /// Bytes one cache entry occupies in DRAM during a group save/reload:
 /// 10 B tag material + 3 B RGB (paper Sec. 5).
@@ -77,7 +85,20 @@ pub struct CacheStats {
     /// Pixels whose ray met fewer than k significant Gaussians
     /// (uncacheable; rendered fully).
     pub short_rays: u64,
+    /// World-scope provenance: cells freed by the per-epoch lifetime
+    /// decay sweep (always 0 under private/geometry-shared scope, where
+    /// eviction is pLRU and counted in `evictions`).
+    pub decay_evictions: u64,
+    /// World-scope provenance: histogram of linear-probe chain lengths
+    /// observed against the frozen world table — bucket `i` counts
+    /// probes that examined `i + 1` slots (the last bucket saturates).
+    /// All-zero under private/geometry-shared scope.
+    pub probe_hist: [u64; PROBE_HIST_BUCKETS],
 }
+
+/// Buckets of [`CacheStats::probe_hist`] (chain lengths 1..=8, last
+/// bucket saturating). Sized to cover any sane `pool.world_probe_len`.
+pub const PROBE_HIST_BUCKETS: usize = 8;
 
 impl CacheStats {
     pub fn hit_rate(&self) -> f64 {
@@ -95,6 +116,21 @@ impl CacheStats {
         self.inserts += o.inserts;
         self.evictions += o.evictions;
         self.short_rays += o.short_rays;
+        self.decay_evictions += o.decay_evictions;
+        for (a, b) in self.probe_hist.iter_mut().zip(&o.probe_hist) {
+            *a += b;
+        }
+    }
+
+    /// Record one frozen-table probe that examined `slots` slots.
+    fn record_probe(&mut self, slots: u32) {
+        let b = (slots.max(1) as usize - 1).min(PROBE_HIST_BUCKETS - 1);
+        self.probe_hist[b] += 1;
+    }
+
+    /// Total frozen-table probes recorded (world scope only).
+    pub fn probes_recorded(&self) -> u64 {
+        self.probe_hist.iter().sum()
     }
 }
 
@@ -591,6 +627,296 @@ impl CacheDelta {
     }
 }
 
+/// Bytes one world-cache entry occupies in DRAM during a snapshot
+/// save/reload: 4 B checksum + 12 B RGB + 2 B lifetime.
+pub const WORLD_ENTRY_BYTES: usize = 18;
+
+/// Parameters of the world-space hash cache (`pool.world_*` knobs),
+/// frozen into every [`WorldSnapshot`] so sessions and the epoch merge
+/// agree on key derivation and probe bounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorldParams {
+    /// Fixed table size in cells.
+    pub cells: usize,
+    /// Positional cell edge (world units) before distance LOD scaling.
+    pub base_cell_size: f32,
+    /// Distance at which positional cells start doubling: the edge
+    /// doubles every power-of-two multiple of this (positional LOD, so
+    /// far geometry lands in coarse cells and near geometry keeps fine
+    /// ones).
+    pub lod_distance: f32,
+    /// Full lifetime, in pool epochs, a cell is granted on insert and
+    /// reset to on every snapshot hit. Cells age one per epoch and are
+    /// freed at zero — the world scope's eviction policy.
+    pub lifetime: u16,
+    /// Bounded linear-probe chain length on slot collision.
+    pub probe_len: u32,
+    /// Per-axis view-direction buckets of the key.
+    pub dir_buckets: u32,
+}
+
+/// Distance-scaled positional cell edge: doubles every time the camera
+/// distance crosses another power-of-two multiple of `lod_distance`
+/// (bevy_solari-style positional LOD).
+fn world_cell_size(dist: f32, params: &WorldParams) -> f32 {
+    let lod = (dist / params.lod_distance.max(1e-6)).max(1.0).log2().floor() as u32;
+    params.base_cell_size.max(1e-6) * (1u64 << lod.min(24)) as f32
+}
+
+/// Mix a quantized (position cell, direction bucket) tuple into the
+/// 64-bit world key — splitmix64-style finalization per lane, pure
+/// integer arithmetic, platform-independent.
+fn world_key(qp: [i32; 3], qd: [u32; 3]) -> u64 {
+    let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+    for v in [qp[0] as u32, qp[1] as u32, qp[2] as u32, qd[0], qd[1], qd[2]] {
+        h ^= u64::from(v);
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 31;
+    }
+    h
+}
+
+/// Build the world key for a Gaussian world position seen from `cam`:
+/// quantize the position into its distance-scaled cell and bucket the
+/// view direction per axis.
+fn world_key_for(pos: Vec3, cam: [f32; 3], params: &WorldParams) -> u64 {
+    let d = [pos.x - cam[0], pos.y - cam[1], pos.z - cam[2]];
+    let dist = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+    let cell = world_cell_size(dist, params);
+    let q = |v: f32| (v / cell).floor() as i32;
+    let inv = if dist > 1e-6 { 1.0 / dist } else { 0.0 };
+    let buckets = params.dir_buckets.max(1);
+    let bucket = |v: f32| (((v * inv + 1.0) * 0.5 * buckets as f32) as u32).min(buckets - 1);
+    world_key(
+        [q(pos.x), q(pos.y), q(pos.z)],
+        [bucket(d[0]), bucket(d[1]), bucket(d[2])],
+    )
+}
+
+/// Slot-chain start of a key.
+fn world_slot(key: u64, cells: usize) -> usize {
+    (key % cells.max(1) as u64) as usize
+}
+
+/// Occupancy checksum of a key: a second, independent hash round forced
+/// nonzero (0 marks an empty cell). Two distinct keys alias a cell only
+/// if they collide on *both* the slot chain and this 32-bit checksum.
+fn world_checksum(key: u64) -> u32 {
+    let mut h = key ^ 0xC2B2_AE3D_27D4_EB4F;
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 29;
+    (h as u32).max(1)
+}
+
+/// The fixed-size world-space hash table: flat checksum/value/lifetime
+/// arrays, no per-tile banks — one table serves every pose, tier, and
+/// resolution in the pool. Slots are claimed by checksum, chained by
+/// bounded linear probing, and reclaimed by lifetime decay at the epoch
+/// merge ([`CacheHub::merge_world_in_order`]).
+#[derive(Debug, Clone)]
+pub struct WorldRadianceCache {
+    /// Per-cell key checksum; 0 = empty.
+    checksums: Vec<u32>,
+    values: Vec<[f32; 3]>,
+    lifetimes: Vec<u16>,
+}
+
+impl WorldRadianceCache {
+    pub fn new(cells: usize) -> Self {
+        let cells = cells.max(1);
+        WorldRadianceCache {
+            checksums: vec![0; cells],
+            values: vec![[0.0; 3]; cells],
+            lifetimes: vec![0; cells],
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.checksums.len()
+    }
+
+    /// Live (claimed) cells.
+    pub fn occupancy(&self) -> usize {
+        self.checksums.iter().filter(|&&c| c != 0).count()
+    }
+
+    /// Bounded linear probe for `key`: `(Some(slot), probes)` on a
+    /// checksum match, `(None, probes)` when the chain reached an empty
+    /// cell (the key cannot be further along — claims always take the
+    /// first empty slot) or exhausted the bound.
+    fn find(&self, key: u64, probe_len: u32) -> (Option<usize>, u32) {
+        let cells = self.checksums.len();
+        let cs = world_checksum(key);
+        let start = world_slot(key, cells);
+        let n = (probe_len.max(1) as usize).min(cells);
+        for i in 0..n {
+            let slot = (start + i) % cells;
+            match self.checksums[slot] {
+                0 => return (None, i as u32 + 1),
+                c if c == cs => return (Some(slot), i as u32 + 1),
+                _ => {}
+            }
+        }
+        (None, n as u32)
+    }
+
+    /// Claim-or-update along the probe chain: checksum match updates the
+    /// value (keeping the higher lifetime), an empty cell is claimed,
+    /// and an exhausted chain replaces its weakest (minimum-lifetime,
+    /// first-occurrence) slot only when the candidate's lifetime is
+    /// strictly higher — otherwise the insert is dropped. Returns
+    /// whether the value landed.
+    fn insert(&mut self, key: u64, value: [f32; 3], lifetime: u16, probe_len: u32) -> bool {
+        let cells = self.checksums.len();
+        let cs = world_checksum(key);
+        let start = world_slot(key, cells);
+        let n = (probe_len.max(1) as usize).min(cells);
+        let (mut weakest, mut weakest_life) = (usize::MAX, u16::MAX);
+        for i in 0..n {
+            let slot = (start + i) % cells;
+            match self.checksums[slot] {
+                0 => {
+                    self.checksums[slot] = cs;
+                    self.values[slot] = value;
+                    self.lifetimes[slot] = lifetime;
+                    return true;
+                }
+                c if c == cs => {
+                    self.values[slot] = value;
+                    self.lifetimes[slot] = self.lifetimes[slot].max(lifetime);
+                    return true;
+                }
+                _ => {
+                    if self.lifetimes[slot] < weakest_life {
+                        weakest_life = self.lifetimes[slot];
+                        weakest = slot;
+                    }
+                }
+            }
+        }
+        if weakest != usize::MAX && lifetime > weakest_life {
+            self.checksums[weakest] = cs;
+            self.values[weakest] = value;
+            self.lifetimes[weakest] = lifetime;
+            return true;
+        }
+        false
+    }
+}
+
+/// An immutable, epoch-stamped view of the merged world cache: what
+/// every world-scope session reads for the whole epoch. One snapshot
+/// per pool — world keys are geometry-independent, so all tiers and
+/// resolutions share it (the cross-tier sharing the screen-tile
+/// [`CacheSnapshot`] structurally cannot offer).
+#[derive(Debug, Clone)]
+pub struct WorldSnapshot {
+    table: WorldRadianceCache,
+    params: WorldParams,
+    epoch: u64,
+    /// DRAM bytes the merge's decay sweep moved to produce this
+    /// snapshot — charged once per pool epoch, amortized over sharers
+    /// by [`CacheView::install_world_snapshot`].
+    decay_sweep_bytes: u64,
+}
+
+impl WorldSnapshot {
+    /// An empty snapshot (epoch 0).
+    pub fn empty(params: WorldParams) -> Self {
+        WorldSnapshot {
+            table: WorldRadianceCache::new(params.cells),
+            params,
+            epoch: 0,
+            decay_sweep_bytes: 0,
+        }
+    }
+
+    pub fn params(&self) -> WorldParams {
+        self.params
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Live cells.
+    pub fn occupancy(&self) -> usize {
+        self.table.occupancy()
+    }
+
+    /// Frozen lookup: the cached RGB for a world key plus the chain
+    /// slots examined (probe-histogram material).
+    pub fn probe(&self, key: u64) -> (Option<[f32; 3]>, u32) {
+        let (slot, probes) = self.table.find(key, self.params.probe_len);
+        (slot.map(|s| self.table.values[s]), probes)
+    }
+
+    /// DRAM bytes to save + reload the snapshot once — charged once per
+    /// pool epoch, amortized over sharers.
+    pub fn swap_traffic_bytes(&self) -> usize {
+        self.table.occupancy() * WORLD_ENTRY_BYTES * 2
+    }
+
+    /// DRAM bytes the producing merge's decay sweep moved.
+    pub fn decay_sweep_bytes(&self) -> u64 {
+        self.decay_sweep_bytes
+    }
+}
+
+/// One logged world-cache insert with its within-epoch re-store count —
+/// the frequency the lifetime-weighted merge consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct WorldInsert {
+    key: u64,
+    value: [f32; 3],
+    freq: u32,
+}
+
+/// A session's private epoch-local world-cache state: a point-lookup
+/// overlay answering the session's own fresh inserts, the per-key
+/// compacted insert log, and the set of snapshot keys the session hit
+/// (whose lifetimes the merge refreshes). Nothing here is visible to
+/// other sessions until the epoch merge publishes it.
+#[derive(Debug, Default)]
+pub struct WorldDelta {
+    /// Own fresh inserts for intra-epoch self-hits. Point lookups only
+    /// — never iterated, so hash order stays off the render path.
+    overlay: HashMap<u64, [f32; 3]>,
+    /// Insert log, compacted per key at record time: a re-store folds
+    /// into its existing entry (exact — the merge is last-value-wins
+    /// per (key, session)) and bumps `freq`.
+    log: Vec<WorldInsert>,
+    log_index: HashMap<u64, u32>,
+    /// Snapshot keys hit this epoch, first-touch order (dedup via
+    /// `touched_set`); the merge unions these across sessions.
+    touched: Vec<u64>,
+    touched_set: HashSet<u64>,
+    stats: CacheStats,
+}
+
+impl WorldDelta {
+    pub fn new() -> Self {
+        WorldDelta::default()
+    }
+
+    /// Distinct keys logged for insert this epoch.
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    /// True when the delta carries nothing the merge would act on —
+    /// neither inserts nor lifetime refreshes.
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty() && self.touched.is_empty()
+    }
+
+    /// View statistics accumulated while rendering against this delta.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
 /// The cache-topology seam: where one session's lookups and inserts go.
 pub enum CacheView {
     /// Session-owned cache — the pre-sharing behavior, bit-for-bit.
@@ -604,6 +930,25 @@ pub enum CacheView {
         /// Snapshot-reload DRAM bytes still to charge — the session's
         /// amortized share of the once-per-pool-epoch snapshot swap,
         /// consumed by the next rendered frame.
+        pending_snapshot_bytes: u64,
+    },
+    /// Pool-shared with world-space keys: same epoch protocol as
+    /// `Shared` (frozen snapshot reads + private delta writes), but the
+    /// tag survives pose, tier, and resolution changes.
+    World {
+        snapshot: Arc<WorldSnapshot>,
+        delta: WorldDelta,
+        /// Full source scene the world keys index by global Gaussian
+        /// ID. Tier reductions are prefix subsamples, so reduced-tier
+        /// IDs stay valid indices into the full scene — one scene Arc
+        /// serves every tier.
+        scene: Arc<GaussianScene>,
+        /// Alpha-record length: the query is gated on the first k
+        /// significant Gaussians exactly like the geometry scopes; the
+        /// key just collapses to the first one's world cell.
+        k: usize,
+        /// Snapshot-reload + decay-sweep DRAM bytes still to charge
+        /// (the session's amortized share, consumed by the next frame).
         pending_snapshot_bytes: u64,
     },
 }
@@ -624,14 +969,46 @@ impl CacheView {
         CacheView::Shared { snapshot, delta, pending_snapshot_bytes: pending }
     }
 
+    /// A world-scope view over the pool snapshot, with a fresh (empty)
+    /// delta. Like [`Self::shared`], the freshly attached session
+    /// reloads the whole snapshot once.
+    pub fn world(snapshot: Arc<WorldSnapshot>, scene: Arc<GaussianScene>, k: usize) -> Self {
+        let pending = snapshot.swap_traffic_bytes() as u64;
+        CacheView::World {
+            snapshot,
+            delta: WorldDelta::new(),
+            scene,
+            k,
+            pending_snapshot_bytes: pending,
+        }
+    }
+
+    /// Whether lookups go through pool-shared state — the structural
+    /// contention flag the cost models price ([`FrameWorkload::cache_shared`]).
+    /// World scope shares one table pool-wide, so it counts.
+    ///
+    /// [`FrameWorkload::cache_shared`]: crate::pipeline::stage::FrameWorkload::cache_shared
     pub fn is_shared(&self) -> bool {
-        matches!(self, CacheView::Shared { .. })
+        matches!(self, CacheView::Shared { .. } | CacheView::World { .. })
     }
 
     pub fn k(&self) -> usize {
         match self {
             CacheView::Private(c) => c.k(),
             CacheView::Shared { delta, .. } => delta.overlay.k(),
+            CacheView::World { k, .. } => *k,
+        }
+    }
+
+    /// Worst-case probe-chain length a shared lookup walks — the
+    /// multiplier on [`shared_lookup_cost_s`]. Geometry scopes resolve
+    /// a tag in one set access; the world table may chain.
+    ///
+    /// [`shared_lookup_cost_s`]: crate::sim::cost::CostModel::shared_lookup_cost_s
+    pub fn shared_probe_len(&self) -> u32 {
+        match self {
+            CacheView::Private(_) | CacheView::Shared { .. } => 1,
+            CacheView::World { snapshot, .. } => snapshot.params.probe_len.max(1),
         }
     }
 
@@ -641,6 +1018,7 @@ impl CacheView {
         match self {
             CacheView::Private(c) => c.stats(),
             CacheView::Shared { delta, .. } => delta.stats,
+            CacheView::World { delta, .. } => delta.stats,
         }
     }
 
@@ -649,11 +1027,21 @@ impl CacheView {
     /// boundary, in session-index order.
     pub fn take_delta(&mut self) -> Option<CacheDelta> {
         match self {
-            CacheView::Private(_) => None,
+            CacheView::Private(_) | CacheView::World { .. } => None,
             CacheView::Shared { delta, .. } => {
                 let fresh = CacheDelta::new(delta.geometry());
                 Some(std::mem::replace(delta, fresh))
             }
+        }
+    }
+
+    /// Detach the accumulated world delta, leaving a fresh one behind
+    /// (`None` outside world scope). Epoch-boundary path, session-index
+    /// order — same contract as [`Self::take_delta`].
+    pub fn take_world_delta(&mut self) -> Option<WorldDelta> {
+        match self {
+            CacheView::World { delta, .. } => Some(std::mem::take(delta)),
+            _ => None,
         }
     }
 
@@ -679,6 +1067,21 @@ impl CacheView {
         }
     }
 
+    /// Swap in the next epoch's merged world snapshot. The amortized
+    /// share covers the snapshot save+reload *and* the merge's decay
+    /// sweep — both once-per-pool-epoch DRAM costs. Re-installing the
+    /// same snapshot charges nothing.
+    pub fn install_world_snapshot(&mut self, snap: Arc<WorldSnapshot>, sharers: usize) {
+        if let CacheView::World { snapshot, pending_snapshot_bytes, .. } = self {
+            if Arc::ptr_eq(snapshot, &snap) {
+                return;
+            }
+            *pending_snapshot_bytes += (snap.swap_traffic_bytes() as u64 + snap.decay_sweep_bytes)
+                .div_ceil(sharers.max(1) as u64);
+            *snapshot = snap;
+        }
+    }
+
     /// DRAM swap traffic to charge the frame that is being rendered
     /// right now. Private: the whole cache is spilled/refilled around
     /// the frame's tile batches, every frame (the pre-sharing model,
@@ -692,6 +1095,10 @@ impl CacheView {
             CacheView::Shared { delta, pending_snapshot_bytes, .. } => {
                 let snapshot_share = std::mem::take(pending_snapshot_bytes);
                 snapshot_share + delta.overlay.swap_traffic_bytes() as u64
+            }
+            CacheView::World { delta, pending_snapshot_bytes, .. } => {
+                let snapshot_share = std::mem::take(pending_snapshot_bytes);
+                snapshot_share + (delta.overlay.len() * WORLD_ENTRY_BYTES * 2) as u64
             }
         }
     }
@@ -709,6 +1116,9 @@ impl CacheView {
 #[derive(Debug, Default)]
 pub struct CacheHub {
     snapshots: Mutex<HashMap<CacheGeometry, Arc<CacheSnapshot>>>,
+    /// The pool-wide world-scope snapshot (one table for every tier and
+    /// resolution; `None` until the first world-scope session attaches).
+    world: Mutex<Option<Arc<WorldSnapshot>>>,
 }
 
 impl CacheHub {
@@ -758,6 +1168,118 @@ impl CacheHub {
         for (geom, (cache, epoch)) in dirty {
             map.insert(geom, Arc::new(CacheSnapshot { cache, epoch: epoch + 1 }));
         }
+    }
+
+    /// The pool-wide world snapshot (an empty epoch-0 snapshot with
+    /// `params` is created on first request). Unlike
+    /// [`Self::snapshot_for`] there is no geometry key: world keys are
+    /// geometry-independent, so every tier and resolution reads the
+    /// same table.
+    pub fn world_snapshot(&self, params: WorldParams) -> Arc<WorldSnapshot> {
+        self.world
+            .lock()
+            .expect("cache hub poisoned")
+            .get_or_insert_with(|| Arc::new(WorldSnapshot::empty(params)))
+            .clone()
+    }
+
+    /// Merge world deltas into the next-epoch snapshot, returning the
+    /// cells freed by the decay sweep.
+    ///
+    /// The pool passes session-index order, but unlike
+    /// [`Self::merge_in_order`] the outcome does **not** trust replay
+    /// order — it is a function of the delta *set* plus each delta's
+    /// session index:
+    ///
+    /// 1. **Refresh.** The union of snapshot-hit keys (a set union —
+    ///    order-free) resets each found cell's lifetime to full.
+    /// 2. **Decay.** A slot-order sweep ages every occupied,
+    ///    un-refreshed cell by one epoch; cells at zero are freed — the
+    ///    eviction policy.
+    /// 3. **Insert.** Per key, one winner is chosen by max (candidate
+    ///    lifetime, session index), where candidate lifetime = base
+    ///    lifetime + (within-epoch re-store count - 1) — the
+    ///    lifetime/frequency-weighted merge. Winners land in ascending
+    ///    key order through the same probe/claim path queries use, so
+    ///    same-cell conflicts between *different* keys resolve
+    ///    deterministically too (first claim wins; an exhausted chain
+    ///    replaces its weakest slot only when strictly stronger).
+    ///
+    /// Every step is independent of how sessions were partitioned
+    /// across threads, pipeline depths, or schedulers — the world
+    /// scope's half of the bitwise-determinism contract.
+    ///
+    /// Deltas with nothing to act on keep the current snapshot (same
+    /// `Arc`, same epoch), so idle epochs charge no swap or sweep.
+    pub fn merge_world_in_order(&self, deltas: Vec<WorldDelta>) -> u64 {
+        if deltas.iter().all(|d| d.is_empty()) {
+            return 0;
+        }
+        let mut guard = self.world.lock().expect("cache hub poisoned");
+        let (params, mut table, epoch) = match guard.as_ref() {
+            Some(cur) => (cur.params, cur.table.clone(), cur.epoch),
+            None => return 0,
+        };
+        let cells = table.cells();
+
+        // (1) Lifetime refresh over the union of touched keys.
+        let touched: BTreeSet<u64> =
+            deltas.iter().flat_map(|d| d.touched.iter().copied()).collect();
+        let mut refreshed = vec![false; cells];
+        for &key in &touched {
+            if let (Some(slot), _) = table.find(key, params.probe_len) {
+                table.lifetimes[slot] = params.lifetime;
+                refreshed[slot] = true;
+            }
+        }
+
+        // (2) Decay sweep: the sweep reads every occupied entry and
+        // writes aged lifetimes back — once-per-pool-epoch DRAM,
+        // amortized over sharers at install time.
+        let mut decay_evictions = 0u64;
+        let occupied = table.occupancy() as u64;
+        for slot in 0..cells {
+            if table.checksums[slot] != 0 && !refreshed[slot] {
+                table.lifetimes[slot] = table.lifetimes[slot].saturating_sub(1);
+                if table.lifetimes[slot] == 0 {
+                    table.checksums[slot] = 0;
+                    table.values[slot] = [0.0; 3];
+                    decay_evictions += 1;
+                }
+            }
+        }
+        let decay_sweep_bytes = occupied * WORLD_ENTRY_BYTES as u64;
+
+        // (3) Lifetime/frequency-weighted winner per key, inserted in
+        // ascending key order.
+        let mut winners: BTreeMap<u64, (u16, usize, [f32; 3])> = BTreeMap::new();
+        for (si, d) in deltas.iter().enumerate() {
+            for ins in &d.log {
+                let granted = u32::from(params.lifetime)
+                    .saturating_add(ins.freq.saturating_sub(1))
+                    .min(u32::from(u16::MAX)) as u16;
+                let cand = (granted, si, ins.value);
+                winners
+                    .entry(ins.key)
+                    .and_modify(|w| {
+                        if (granted, si) > (w.0, w.1) {
+                            *w = cand;
+                        }
+                    })
+                    .or_insert(cand);
+            }
+        }
+        for (key, (granted, _si, value)) in winners {
+            table.insert(key, value, granted, params.probe_len);
+        }
+
+        *guard = Some(Arc::new(WorldSnapshot {
+            table,
+            params,
+            epoch: epoch + 1,
+            decay_sweep_bytes,
+        }));
+        decay_evictions
     }
 }
 
@@ -840,6 +1362,10 @@ pub fn rasterize_cached_ex(
 
 /// Report only one call's statistics: `after` minus `before`.
 fn stats_delta(after: CacheStats, before: CacheStats) -> CacheStats {
+    let mut probe_hist = [0u64; PROBE_HIST_BUCKETS];
+    for (i, p) in probe_hist.iter_mut().enumerate() {
+        *p = after.probe_hist[i] - before.probe_hist[i];
+    }
     CacheStats {
         lookups: after.lookups - before.lookups,
         hits: after.hits - before.hits,
@@ -847,6 +1373,8 @@ fn stats_delta(after: CacheStats, before: CacheStats) -> CacheStats {
         inserts: after.inserts - before.inserts,
         evictions: after.evictions - before.evictions,
         short_rays: after.short_rays - before.short_rays,
+        decay_evictions: after.decay_evictions - before.decay_evictions,
+        probe_hist,
     }
 }
 
@@ -870,6 +1398,13 @@ pub fn rasterize_cached_view(
             );
             TileSource::Shared { snapshot: &**snapshot, delta }
         }
+        CacheView::World { snapshot, delta, scene, k, .. } => TileSource::World {
+            snapshot: &**snapshot,
+            delta,
+            positions: &scene.pos,
+            cam: projected.cam_pos,
+            k: *k,
+        },
     };
     rasterize_cached_source(projected, bins, width, height, &mut source, record_uncached)
 }
@@ -883,6 +1418,13 @@ pub fn rasterize_cached_view(
 enum TileSource<'s> {
     Private(&'s mut GroupedRadianceCache),
     Shared { snapshot: &'s CacheSnapshot, delta: &'s mut CacheDelta },
+    World {
+        snapshot: &'s WorldSnapshot,
+        delta: &'s mut WorldDelta,
+        positions: &'s [Vec3],
+        cam: [f32; 3],
+        k: usize,
+    },
 }
 
 impl TileSource<'_> {
@@ -890,6 +1432,7 @@ impl TileSource<'_> {
         match self {
             TileSource::Private(c) => c.k(),
             TileSource::Shared { delta, .. } => delta.overlay.k(),
+            TileSource::World { k, .. } => *k,
         }
     }
 
@@ -897,6 +1440,7 @@ impl TileSource<'_> {
         match self {
             TileSource::Private(c) => c.stats(),
             TileSource::Shared { delta, .. } => delta.stats,
+            TileSource::World { delta, .. } => delta.stats,
         }
     }
 }
@@ -944,6 +1488,32 @@ fn rasterize_cached_source(
                         last_in_set,
                         stats,
                         group,
+                    };
+                    run_tile(
+                        &mut bank,
+                        &splats,
+                        (tx, ty),
+                        ts,
+                        (width, height),
+                        k,
+                        record_uncached,
+                        &mut image,
+                        &mut outcomes,
+                    );
+                }
+                TileSource::World { snapshot, delta, positions, cam, .. } => {
+                    let WorldDelta { overlay, log, log_index, touched, touched_set, stats } =
+                        &mut **delta;
+                    let mut bank = WorldBank {
+                        frozen: snapshot,
+                        overlay,
+                        log,
+                        log_index,
+                        touched,
+                        touched_set,
+                        stats,
+                        positions,
+                        cam: *cam,
                     };
                     run_tile(
                         &mut bank,
@@ -1143,6 +1713,83 @@ impl PixelCache for SharedBank<'_> {
     }
 }
 
+/// One tile's world-scope cache endpoint: the frozen world snapshot +
+/// the session's overlay/log/touched state. Unlike the geometry scopes
+/// there are no per-tile banks — every tile probes the same table; the
+/// struct is rebuilt per tile only to mirror the driver's shape.
+struct WorldBank<'a> {
+    frozen: &'a WorldSnapshot,
+    overlay: &'a mut HashMap<u64, [f32; 3]>,
+    log: &'a mut Vec<WorldInsert>,
+    log_index: &'a mut HashMap<u64, u32>,
+    touched: &'a mut Vec<u64>,
+    touched_set: &'a mut HashSet<u64>,
+    stats: &'a mut CacheStats,
+    positions: &'a [Vec3],
+    cam: [f32; 3],
+}
+
+impl WorldBank<'_> {
+    /// The tag collapses to the *first* significant Gaussian's world
+    /// cell + view-direction bucket: rays whose integration starts at
+    /// the same surface from the same direction band share radiance
+    /// across poses, tiers, and resolutions. The query stays gated on a
+    /// full k-long alpha-record (identical control flow to the geometry
+    /// scopes — the coarser key can only widen the hit set).
+    fn key_for(&self, ids: &[u32]) -> u64 {
+        world_key_for(self.positions[ids[0] as usize], self.cam, &self.frozen.params)
+    }
+}
+
+impl PixelCache for WorldBank<'_> {
+    fn query(&mut self, ids: &[u32]) -> Option<([f32; 3], bool)> {
+        self.stats.lookups += 1;
+        let key = self.key_for(ids);
+        // The session's own inserts are freshest: overlay first (a
+        // point lookup — hash iteration stays off the render path).
+        if let Some(&v) = self.overlay.get(&key) {
+            self.stats.hits += 1;
+            return Some((v, false));
+        }
+        let (slot, probes) = self.frozen.table.find(key, self.frozen.params.probe_len);
+        self.stats.record_probe(probes);
+        if let Some(slot) = slot {
+            self.stats.hits += 1;
+            self.stats.snapshot_hits += 1;
+            if self.touched_set.insert(key) {
+                self.touched.push(key);
+            }
+            return Some((self.frozen.table.values[slot], true));
+        }
+        None
+    }
+
+    fn store(&mut self, ids: &[u32], value: [f32; 3]) {
+        let key = self.key_for(ids);
+        match self.log_index.get(&key) {
+            Some(&idx) => {
+                // Per-key net-effect fold: the merge is last-value-wins
+                // per (key, session), so collapsing re-stores in place
+                // is exact; `freq` keeps the re-store count for the
+                // lifetime-weighted merge.
+                let e = &mut self.log[idx as usize];
+                e.value = value;
+                e.freq = e.freq.saturating_add(1);
+            }
+            None => {
+                self.log_index.insert(key, self.log.len() as u32);
+                self.log.push(WorldInsert { key, value, freq: 1 });
+                self.stats.inserts += 1;
+            }
+        }
+        self.overlay.insert(key, value);
+    }
+
+    fn short_ray(&mut self) {
+        self.stats.short_rays += 1;
+    }
+}
+
 /// The compositing loop shared by both topologies — identical math and
 /// control flow to the original private-path compositor; only the cache
 /// endpoint is generic.
@@ -1292,6 +1939,20 @@ impl CachedRaster {
         CachedRaster { view: CacheView::shared(snapshot), record_uncached }
     }
 
+    /// World scope: render against the pool's world-space snapshot,
+    /// logging inserts into a fresh session delta. `scene` must be the
+    /// *full* source scene (tier reductions are prefix subsamples, so
+    /// reduced-tier Gaussian IDs stay valid indices into it); `k` is
+    /// the alpha-record length gating the query.
+    pub fn world(
+        snapshot: Arc<WorldSnapshot>,
+        scene: Arc<GaussianScene>,
+        k: usize,
+        record_uncached: bool,
+    ) -> Self {
+        CachedRaster { view: CacheView::world(snapshot, scene, k), record_uncached }
+    }
+
     /// The underlying cache view (for occupancy/stats inspection).
     pub fn view(&self) -> &CacheView {
         &self.view
@@ -1339,6 +2000,7 @@ impl RasterBackend for CachedRaster {
                 ),
                 cache: out.stats,
                 cache_shared: self.view.is_shared(),
+                shared_probe_len: self.view.shared_probe_len(),
                 swap_bytes,
             },
         }
@@ -1350,6 +2012,14 @@ impl RasterBackend for CachedRaster {
 
     fn install_cache_snapshot(&mut self, snapshot: Arc<CacheSnapshot>, sharers: usize) {
         self.view.install_snapshot(snapshot, sharers);
+    }
+
+    fn take_world_delta(&mut self) -> Option<WorldDelta> {
+        self.view.take_world_delta()
+    }
+
+    fn install_world_snapshot(&mut self, snapshot: Arc<WorldSnapshot>, sharers: usize) {
+        self.view.install_world_snapshot(snapshot, sharers);
     }
 }
 
@@ -1627,6 +2297,8 @@ mod tests {
             inserts: 6,
             evictions: 1,
             short_rays: 3,
+            decay_evictions: 2,
+            probe_hist: [4, 3, 1, 0, 0, 0, 0, 0],
         };
         a.merge(&b);
         assert_eq!(a, b);
@@ -1994,6 +2666,258 @@ mod tests {
         // B hits at least as often as a private second pass over the
         // same pose would, since A's inserts cover the same rays.
         assert!(warm.stats.hit_rate() > 0.5, "hit rate {}", warm.stats.hit_rate());
+    }
+
+    // ---- world-space hash cache -------------------------------------
+
+    fn wparams(cells: usize, lifetime: u16) -> WorldParams {
+        WorldParams {
+            cells,
+            base_cell_size: 0.25,
+            lod_distance: 4.0,
+            lifetime,
+            probe_len: 4,
+            dir_buckets: 4,
+        }
+    }
+
+    /// Build a session delta the way [`WorldBank::store`]/`query` would:
+    /// one compacted log entry per key plus the touched-key set.
+    fn wdelta(inserts: &[(u64, [f32; 3], u32)], touched: &[u64]) -> WorldDelta {
+        let mut d = WorldDelta::new();
+        for &(key, value, freq) in inserts {
+            d.log_index.insert(key, d.log.len() as u32);
+            d.log.push(WorldInsert { key, value, freq });
+            d.overlay.insert(key, value);
+        }
+        for &key in touched {
+            if d.touched_set.insert(key) {
+                d.touched.push(key);
+            }
+        }
+        d
+    }
+
+    fn world_table_eq(a: &WorldSnapshot, b: &WorldSnapshot) -> bool {
+        a.table.checksums == b.table.checksums
+            && a.table.values == b.table.values
+            && a.table.lifetimes == b.table.lifetimes
+    }
+
+    #[test]
+    fn world_cell_size_doubles_with_distance() {
+        let p = wparams(64, 3);
+        assert_eq!(world_cell_size(0.0, &p), p.base_cell_size);
+        assert_eq!(world_cell_size(p.lod_distance * 0.9, &p), p.base_cell_size);
+        assert_eq!(world_cell_size(p.lod_distance * 2.0, &p), p.base_cell_size * 2.0);
+        assert_eq!(world_cell_size(p.lod_distance * 5.0, &p), p.base_cell_size * 4.0);
+        // Two nearby surface points split fine cells up close but share
+        // one coarse cell seen from afar — the positional LOD.
+        let a = Vec3::new(0.05, 0.0, 0.0);
+        let b = Vec3::new(0.30, 0.0, 0.0);
+        let near_cam = [0.0f32, 0.0, -1.0];
+        let far_cam = [0.0f32, 0.0, -40.0];
+        assert_ne!(world_key_for(a, near_cam, &p), world_key_for(b, near_cam, &p));
+        assert_eq!(world_key_for(a, far_cam, &p), world_key_for(b, far_cam, &p));
+    }
+
+    #[test]
+    fn world_probe_chain_never_exceeds_bound() {
+        let params = wparams(61, 3);
+        let mut table = WorldRadianceCache::new(params.cells);
+        // Saturate the table with twice as many distinct keys as cells.
+        for i in 0..122 {
+            let key = world_key([i, 1, 2], [0, 1, 2]);
+            table.insert(key, [i as f32; 3], 3, params.probe_len);
+        }
+        assert!(table.occupancy() <= table.cells());
+        // Every lookup — hit, miss, or chain-exhausted — stays bounded.
+        for i in 0..488 {
+            let key = world_key([i, 7, 9], [1, 0, 3]);
+            let (_, probes) = table.find(key, params.probe_len);
+            assert!(probes >= 1 && probes <= params.probe_len, "probe count {probes}");
+        }
+        // A full chain with no strictly-weaker slot drops the insert.
+        let mut full = WorldRadianceCache::new(4);
+        for key in [0u64, 4, 8, 12] {
+            assert!(full.insert(key, [0.5; 3], 5, 4));
+        }
+        assert_eq!(full.occupancy(), 4);
+        assert!(!full.insert(16, [0.9; 3], 5, 4), "equal lifetime must not displace");
+        assert!(full.insert(16, [0.9; 3], 6, 4), "strictly stronger replaces the weakest");
+        assert_eq!(full.occupancy(), 4);
+    }
+
+    #[test]
+    fn world_checksum_collisions_never_alias_cells() {
+        let cells = 64usize;
+        let mut table = WorldRadianceCache::new(cells);
+        let k1 = world_key([3, 1, 4], [1, 2, 3]);
+        let k2 = k1 + cells as u64; // same slot-chain start, distinct key
+        assert_eq!(world_slot(k1, cells), world_slot(k2, cells));
+        assert_ne!(world_checksum(k1), world_checksum(k2));
+        assert!(table.insert(k1, [0.1; 3], 5, 4));
+        // The occupied cell belongs to k1's checksum: k2 must probe past
+        // it, not read it.
+        let (miss, _) = table.find(k2, 4);
+        assert!(miss.is_none(), "a foreign checksum must not alias the cell");
+        assert!(table.insert(k2, [0.9; 3], 5, 4));
+        let (s1, _) = table.find(k1, 4);
+        let (s2, _) = table.find(k2, 4);
+        let (s1, s2) = (s1.unwrap(), s2.unwrap());
+        assert_ne!(s1, s2);
+        assert_eq!(table.values[s1], [0.1; 3]);
+        assert_eq!(table.values[s2], [0.9; 3]);
+    }
+
+    #[test]
+    fn world_merge_weighs_lifetime_frequency_then_session_index() {
+        let params = wparams(64, 3);
+        let k = world_key([1, 2, 3], [0, 0, 0]);
+        // Higher within-epoch frequency beats a later session index...
+        let hub = CacheHub::new();
+        hub.world_snapshot(params);
+        hub.merge_world_in_order(vec![
+            wdelta(&[(k, [0.1; 3], 3)], &[]),
+            wdelta(&[(k, [0.9; 3], 1)], &[]),
+        ]);
+        let snap = hub.world_snapshot(params);
+        let (slot, _) = snap.table.find(k, params.probe_len);
+        let slot = slot.unwrap();
+        assert_eq!(snap.table.values[slot], [0.1; 3]);
+        assert_eq!(snap.table.lifetimes[slot], params.lifetime + 2);
+        // ... and on equal frequency the higher session index wins.
+        let hub2 = CacheHub::new();
+        hub2.world_snapshot(params);
+        hub2.merge_world_in_order(vec![
+            wdelta(&[(k, [0.1; 3], 2)], &[]),
+            wdelta(&[(k, [0.9; 3], 2)], &[]),
+        ]);
+        let snap2 = hub2.world_snapshot(params);
+        let (slot2, _) = snap2.table.find(k, params.probe_len);
+        assert_eq!(snap2.table.values[slot2.unwrap()], [0.9; 3]);
+    }
+
+    #[test]
+    fn world_decay_evicts_unrefreshed_and_refresh_protects() {
+        let params = wparams(64, 2);
+        let hub = CacheHub::new();
+        hub.world_snapshot(params);
+        let ka = world_key([1, 0, 0], [0, 0, 0]);
+        let kb = world_key([2, 0, 0], [0, 0, 0]);
+        let seed = wdelta(&[(ka, [0.4; 3], 1), (kb, [0.7; 3], 1)], &[]);
+        assert_eq!(hub.merge_world_in_order(vec![seed]), 0);
+        let s1 = hub.world_snapshot(params);
+        assert_eq!(s1.epoch(), 1);
+        assert_eq!(s1.occupancy(), 2);
+        assert_eq!(s1.decay_sweep_bytes(), 0, "the first merge swept an empty table");
+        // Epoch 2: only ka is hit, so kb ages 2 -> 1 while ka resets.
+        assert_eq!(hub.merge_world_in_order(vec![wdelta(&[], &[ka])]), 0);
+        let s2 = hub.world_snapshot(params);
+        assert_eq!(s2.occupancy(), 2);
+        assert_eq!(s2.decay_sweep_bytes(), 2 * WORLD_ENTRY_BYTES as u64);
+        // Epoch 3: kb hits zero and is freed; ka survives refreshed.
+        assert_eq!(hub.merge_world_in_order(vec![wdelta(&[], &[ka])]), 1);
+        let s3 = hub.world_snapshot(params);
+        assert_eq!(s3.epoch(), 3);
+        assert_eq!(s3.occupancy(), 1);
+        assert_eq!(s3.probe(ka).0, Some([0.4; 3]));
+        assert_eq!(s3.probe(kb).0, None);
+        // Idle epochs keep the same snapshot Arc: no swap, no sweep.
+        assert_eq!(hub.merge_world_in_order(vec![WorldDelta::new()]), 0);
+        assert!(Arc::ptr_eq(&s3, &hub.world_snapshot(params)));
+    }
+
+    #[test]
+    fn world_merge_independent_of_delta_partitioning() {
+        // The same insert/refresh stream split 1/2/4 ways across session
+        // deltas (disjoint keys per session, as distinct viewers
+        // produce) must merge to a bitwise-identical table — the merge
+        // is a function of the delta set, not of how sessions were
+        // scheduled onto threads.
+        let params = wparams(97, 3);
+        let keys: Vec<u64> = (0..64).map(|i| world_key([i, 0, 0], [0, 0, 0])).collect();
+        let inserts: Vec<(u64, [f32; 3], u32)> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| (k, [i as f32; 3], 1 + (i as u32 % 3)))
+            .collect();
+        let touched: Vec<u64> = keys.iter().copied().step_by(2).collect();
+        let merge = |ways: usize| {
+            let hub = CacheHub::new();
+            hub.world_snapshot(params);
+            let split = |items: &[(u64, [f32; 3], u32)], hit: &[u64]| -> Vec<WorldDelta> {
+                (0..ways)
+                    .map(|w| {
+                        let part: Vec<_> =
+                            items.iter().copied().skip(w).step_by(ways).collect();
+                        let t: Vec<_> = hit.iter().copied().skip(w).step_by(ways).collect();
+                        wdelta(&part, &t)
+                    })
+                    .collect()
+            };
+            hub.merge_world_in_order(split(&inserts, &[]));
+            hub.merge_world_in_order(split(&[], &touched));
+            hub.world_snapshot(params)
+        };
+        let one = merge(1);
+        let two = merge(2);
+        let four = merge(4);
+        assert_eq!(one.epoch(), 2);
+        assert!(one.occupancy() > 0);
+        assert!(world_table_eq(&one, &two), "2-way split diverged from serial merge");
+        assert!(world_table_eq(&one, &four), "4-way split diverged from serial merge");
+    }
+
+    #[test]
+    fn world_scope_half_res_session_hits_full_res_entries() {
+        // A full-res session renders and merges; a half-res session at
+        // the same pose shares the SAME pool snapshot (world keys carry
+        // no tile geometry) and its keys — quantized Gaussian positions
+        // — coincide with the full-res session's, so it must hit.
+        // Geometry-keyed sharing structurally cannot do this: the
+        // half-res tile grid is a different CacheGeometry.
+        let scene = Arc::new(clamped_scene(77, 4000));
+        let pose = Pose::look_at(Vec3::new(0.0, 0.0, -4.0), Vec3::ZERO);
+        let full = Intrinsics::with_fov(128, 128, 0.9);
+        let half = crate::lumina::ds2::half_intrinsics(&full);
+        let params = wparams(65_536, 30);
+        let hub = CacheHub::new();
+
+        let pf = project(&scene, &pose, &full, 0.2, 100.0, 0.0);
+        let bf = bin_and_sort(&pf, &full, 16, 0.0);
+        let mut a = CacheView::world(hub.world_snapshot(params), scene.clone(), 5);
+        let cold = rasterize_cached_view(&pf, &bf, full.width, full.height, &mut a, false);
+        assert_eq!(cold.stats.snapshot_hits, 0, "cold snapshot cannot hit");
+        assert!(cold.stats.inserts > 0);
+        hub.merge_world_in_order(vec![a.take_world_delta().unwrap()]);
+
+        let ph = project(&scene, &pose, &half, 0.2, 100.0, 0.0);
+        let bh = bin_and_sort(&ph, &half, 16, 0.0);
+        let mut b = CacheView::world(hub.world_snapshot(params), scene.clone(), 5);
+        let warm = rasterize_cached_view(&ph, &bh, half.width, half.height, &mut b, false);
+        assert!(
+            warm.stats.snapshot_hits > 0,
+            "cross-resolution hits expected: {:?}",
+            warm.stats
+        );
+        assert!(warm.stats.probes_recorded() > 0, "frozen probes must be histogrammed");
+    }
+
+    #[test]
+    fn probe_histogram_buckets_saturate_and_merge() {
+        let mut s = CacheStats::default();
+        s.record_probe(1);
+        s.record_probe(2);
+        s.record_probe(8);
+        s.record_probe(20); // saturates into the last bucket
+        assert_eq!(s.probe_hist, [1, 1, 0, 0, 0, 0, 0, 2]);
+        assert_eq!(s.probes_recorded(), 4);
+        let mut merged = CacheStats::default();
+        merged.merge(&s);
+        merged.merge(&s);
+        assert_eq!(merged.probe_hist, [2, 2, 0, 0, 0, 0, 0, 4]);
+        assert_eq!(merged.probes_recorded(), 8);
     }
 }
 

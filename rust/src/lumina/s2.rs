@@ -549,36 +549,51 @@ pub struct SortCandidate {
 #[derive(Debug, Clone, Copy)]
 pub struct SortHub {
     cluster_radius: f32,
+    position_radius: f32,
 }
 
 impl SortHub {
     /// `cluster_radius` is the maximum angular distance (radians)
     /// between predicted poses of a leader and any member it absorbs.
+    /// This constructor keeps the historical rotation-only gate
+    /// (positional spread unbounded); pools use
+    /// [`Self::with_position_radius`].
     pub fn new(cluster_radius: f32) -> Self {
-        SortHub { cluster_radius }
+        Self::with_position_radius(cluster_radius, f32::INFINITY)
+    }
+
+    /// [`Self::new`] plus the translation-aware gate: a member must
+    /// also sit within `position_radius` world units of the leader's
+    /// predicted position. Distant viewers with parallel gaze see
+    /// disjoint tile lists — sorting them together trades follower
+    /// quality for nothing — so the pool path bounds both terms.
+    pub fn with_position_radius(cluster_radius: f32, position_radius: f32) -> Self {
+        SortHub { cluster_radius, position_radius }
     }
 
     pub fn cluster_radius(&self) -> f32 {
         self.cluster_radius
     }
 
+    pub fn position_radius(&self) -> f32 {
+        self.position_radius
+    }
+
     /// Greedy index-ordered clustering: walk candidates in session
     /// order; each still-unassigned session founds a cluster (becoming
     /// its leader — lowest index by construction) and absorbs every
     /// later unassigned session with the same sort geometry whose
-    /// predicted pose sits within the cluster radius of the leader's.
-    /// Every candidate lands in exactly one cluster (possibly a
-    /// singleton), and the result is a pure function of the candidate
-    /// list — deterministic at any thread count.
+    /// predicted pose sits within the cluster radius — angular
+    /// ([`Pose::angular_distance`]) *and* positional (Euclidean, world
+    /// units) — of the leader's. Every candidate lands in exactly one
+    /// cluster (possibly a singleton), and the result is a pure
+    /// function of the candidate list — deterministic at any thread
+    /// count.
     ///
-    /// The gate is rotation-only ([`Pose::angular_distance`]): the S²
-    /// expanded margin plus the per-frame geometry refresh is what
-    /// absorbs the members' *positional* spread, exactly as it absorbs
-    /// pose drift across a private window — viewers far apart but
-    /// looking the same way will cluster, trading follower quality for
-    /// the shared sort. A translation-aware gate (position distance
-    /// scaled by scene extent) and margin auto-widening with cluster
-    /// spread are recorded ROADMAP follow-ons.
+    /// Within the gates, the S² expanded margin plus the per-frame
+    /// geometry refresh absorbs the members' residual spread, exactly
+    /// as it absorbs pose drift across a private window. Margin
+    /// auto-widening with cluster spread remains a ROADMAP follow-on.
     pub fn cluster(&self, cands: &[SortCandidate]) -> Vec<Vec<usize>> {
         let mut assigned = vec![false; cands.len()];
         let mut clusters = Vec::new();
@@ -593,7 +608,10 @@ impl SortHub {
                 if assigned[j] || cands[j].geometry != leader.geometry {
                     continue;
                 }
-                if leader.pose.angular_distance(&cands[j].pose) <= self.cluster_radius {
+                if leader.pose.angular_distance(&cands[j].pose) <= self.cluster_radius
+                    && (leader.pose.position - cands[j].pose.position).norm()
+                        <= self.position_radius
+                {
                     assigned[j] = true;
                     members.push(cands[j].session);
                 }
@@ -837,6 +855,43 @@ mod tests {
 
         // Zero candidates: zero clusters.
         assert!(hub.cluster(&[]).is_empty());
+    }
+
+    #[test]
+    fn position_gate_splits_far_apart_parallel_gaze_pair() {
+        // Two viewers 40 world units apart, both looking straight down
+        // -z (identical rotation, angular distance 0). The rotation-only
+        // hub clusters them; the translation-aware gate must not — their
+        // tile lists are disjoint, so a shared sort only costs follower
+        // quality.
+        let geometry = SortGeometry {
+            width: 128,
+            height: 128,
+            tile_size: 16,
+            scene_gaussians: 5000,
+        };
+        let gaze = |x: f32| {
+            Pose::look_at(Vec3::new(x, 0.0, -4.0), Vec3::new(x, 0.0, 0.0))
+        };
+        let cands = vec![
+            SortCandidate { session: 0, geometry, pose: gaze(0.0) },
+            SortCandidate { session: 1, geometry, pose: gaze(40.0) },
+            // A third viewer near session 0: stays absorbed.
+            SortCandidate { session: 2, geometry, pose: gaze(1.0) },
+        ];
+        let legacy = SortHub::new(0.2);
+        assert_eq!(
+            legacy.cluster(&cands),
+            vec![vec![0, 1, 2]],
+            "rotation-only gate clusters parallel gaze regardless of distance"
+        );
+        let gated = SortHub::with_position_radius(0.2, 16.0);
+        assert_eq!(gated.position_radius(), 16.0);
+        assert_eq!(
+            gated.cluster(&cands),
+            vec![vec![0, 2], vec![1]],
+            "positional gate splits the far pair, keeps the near one"
+        );
     }
 
     #[test]

@@ -90,8 +90,10 @@ fn print_help() {
            --raster-substages <n> tile-range chunks per frame at\n\
                                   pipeline depth 3 (serve cmd)\n\
            --cache-scope <s>      radiance-cache ownership: private\n\
-                                  (per-session) or shared (one pool-wide\n\
-                                  snapshot/merge cache) (serve cmd)\n\
+                                  (per-session), shared (one pool-wide\n\
+                                  snapshot/merge cache per tile geometry),\n\
+                                  or world (pose/tier/resolution-invariant\n\
+                                  world-space hash cache) (serve cmd)\n\
            --sort-scope <s>       S^2 speculative-sort ownership: private\n\
                                   (per-session windows) or clustered (one\n\
                                   pool-wide sort per pose cluster per\n\
@@ -298,7 +300,11 @@ fn cmd_loadtest(args: &cli::Args) -> Result<()> {
 ///    byte-identical (churn + admission refusals are deterministic);
 /// 2. `spectator_broadcast` under clustered then private sort scope —
 ///    the clustered-scope p99 must not exceed the private-scope p99
-///    (bench_gate enforces both invariants from the metric/ rows).
+///    (bench_gate enforces both invariants from the metric/ rows);
+/// 3. `flash_crowd` under the world-space cache scope at 1, 2, and 4
+///    render threads — the three reports must be byte-identical (the
+///    world merge is a function of the delta set, never of how
+///    sessions were scheduled onto threads).
 ///
 /// Rows are written through [`lumina::util::bench::results_json`]
 /// directly rather than via `bench::Runner`, whose positional-arg
@@ -386,7 +392,7 @@ fn loadtest_smoke(
         &opts(Scenario::SpectatorBroadcast, &["pool.sort_scope=clustered"]),
     )?;
     let private = run_loadtest(
-        base,
+        base.clone(),
         &opts(Scenario::SpectatorBroadcast, &["pool.sort_scope=private"]),
     )?;
     eprintln!(
@@ -397,6 +403,30 @@ fn loadtest_smoke(
     metric(&mut rows, "metric/loadtest_broadcast_p99_private_ns", private.p99_ns);
     metric(&mut rows, "metric/loadtest_broadcast_sorted_clustered", clustered.sorted_frames as u64);
     metric(&mut rows, "metric/loadtest_broadcast_sorted_private", private.sorted_frames as u64);
+
+    // World-scope determinism across render thread counts: the same
+    // flash-crowd churn with every pooled session on the world-space
+    // hash cache must serialize byte-identically at 1, 2, and 4
+    // threads (the epoch merge is a function of the delta set alone).
+    let world_json: Vec<String> = [1usize, 2, 4]
+        .iter()
+        .map(|&threads| {
+            lumina::util::par::set_num_threads(threads);
+            let r = run_loadtest(
+                base.clone(),
+                &opts(Scenario::FlashCrowd, &["pool.cache_scope=world"]),
+            )
+            .map(|r| r.to_json());
+            lumina::util::par::set_num_threads(0);
+            r
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        world_json[0] == world_json[1] && world_json[0] == world_json[2],
+        "world-scope flash_crowd loadtest diverged across 1/2/4 threads at seed {seed}: \
+         world-cache determinism regression"
+    );
+    eprintln!("flash_crowd @ world scope: byte-identical across 1/2/4 threads");
 
     if let Ok(path) = std::env::var("LUMINA_BENCH_JSON") {
         std::fs::write(&path, results_json("loadtest", &rows))

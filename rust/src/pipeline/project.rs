@@ -36,6 +36,11 @@ pub struct ProjectedScene {
     /// hoisted here so tile binning and every rasterizer read one
     /// per-splat value instead of recomputing it per (splat, tile).
     pub r2_sig: Vec<f32>,
+    /// Camera position the projection (or latest reprojection) was
+    /// evaluated at. The world-space radiance cache derives its
+    /// view-direction buckets and distance-scaled cell sizes from this,
+    /// so it must track the *render* pose, not the speculative sort pose.
+    pub cam_pos: [f32; 3],
 }
 
 impl ProjectedScene {
@@ -161,6 +166,7 @@ pub fn project(
         });
 
     let mut out = ProjectedScene::default();
+    out.cam_pos = [cam_center.x, cam_center.y, cam_center.z];
     let visible = splats.iter().flatten().count();
     out.ids.reserve(visible);
     out.means.reserve(visible);
@@ -220,6 +226,7 @@ pub fn reproject_geometry(
     let w2c = pose.world_to_cam();
     let cam_center = pose.position;
     let (fx, fy, cx, cy) = (intr.fx, intr.fy, intr.cx, intr.cy);
+    projected.cam_pos = [cam_center.x, cam_center.y, cam_center.z];
     let n = projected.len();
     let ids = std::mem::take(&mut projected.ids);
     let means = &mut projected.means;

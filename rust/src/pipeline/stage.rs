@@ -41,7 +41,7 @@ use std::sync::Arc;
 
 use crate::camera::{Intrinsics, Pose};
 use crate::config::Tier;
-use crate::lumina::rc::{CacheDelta, CacheSnapshot, CacheStats};
+use crate::lumina::rc::{CacheDelta, CacheSnapshot, CacheStats, WorldDelta, WorldSnapshot};
 use crate::lumina::s2::{S2Scheduler, SortView};
 use crate::pipeline::image::Image;
 use crate::pipeline::project::{project, ProjectedScene};
@@ -110,6 +110,12 @@ pub struct FrameWorkload {
     /// [`Self::tier_estimate`]'s normalization and the cost models can
     /// keep pricing the contention the paper warns about.
     pub cache_shared: bool,
+    /// Worst-case probe-chain length a shared lookup walks (1 for the
+    /// geometry scopes, whose tag resolves in one set access;
+    /// `pool.world_probe_len` under world scope). Structural like
+    /// `cache_shared` — it multiplies the shared-lookup contention the
+    /// cost models charge, and survives tier normalization.
+    pub shared_probe_len: u32,
     /// LuminCache group save/reload traffic (bytes). Scope-aware at the
     /// source: a private cache swaps per frame, a shared snapshot is
     /// charged once per pool epoch (amortized over its sharers).
@@ -144,6 +150,7 @@ impl FrameWorkload {
             cache_outcomes: raster.cache_outcomes,
             cache: raster.cache,
             cache_shared: raster.cache_shared,
+            shared_probe_len: raster.shared_probe_len,
             swap_bytes: raster.swap_bytes,
         }
     }
@@ -208,6 +215,7 @@ impl FrameWorkload {
             bin_candidates: w.bin_candidates,
             refreshed_gaussians: w.refreshed_gaussians,
             cache_shared: w.cache_shared,
+            shared_probe_len: w.shared_probe_len,
             swap_bytes: w.swap_bytes,
             tiles,
         }
@@ -462,6 +470,9 @@ pub struct AggregateWorkload {
     /// Shared-cache scope flag, mirrored from the per-pixel record so
     /// both pricing paths charge the same contention.
     pub cache_shared: bool,
+    /// Shared-lookup probe-chain bound, mirrored from the per-pixel
+    /// record (see [`FrameWorkload::shared_probe_len`]).
+    pub shared_probe_len: u32,
     pub swap_bytes: u64,
     pub tiles: Vec<TileAggregate>,
 }
@@ -622,6 +633,7 @@ impl AggregateWorkload {
             bin_candidates: scale_round(self.bin_candidates, entry_scale),
             refreshed_gaussians: self.refreshed_gaussians,
             cache_shared: self.cache_shared,
+            shared_probe_len: self.shared_probe_len,
             swap_bytes: self.swap_bytes,
             tiles,
         }
@@ -759,6 +771,9 @@ pub struct RasterWork {
     /// True when the backend rendered against a pool-shared cache
     /// snapshot (see [`FrameWorkload::cache_shared`]).
     pub cache_shared: bool,
+    /// Shared-lookup probe-chain bound (see
+    /// [`FrameWorkload::shared_probe_len`]; 1 for single-access scopes).
+    pub shared_probe_len: u32,
     pub swap_bytes: u64,
 }
 
@@ -871,6 +886,20 @@ pub trait RasterBackend: Send {
     /// once-per-pool-epoch snapshot swap traffic across the sessions
     /// reading it.
     fn install_cache_snapshot(&mut self, _snapshot: Arc<CacheSnapshot>, _sharers: usize) {}
+
+    /// Detach the session's accumulated world-scope insert delta,
+    /// leaving a fresh one behind. `None` outside world scope. Same
+    /// epoch-boundary, session-index-order contract as
+    /// [`Self::take_cache_delta`].
+    fn take_world_delta(&mut self) -> Option<WorldDelta> {
+        None
+    }
+
+    /// Install the next epoch's merged world snapshot (no-op outside
+    /// world scope). `sharers` amortizes the once-per-pool-epoch
+    /// snapshot swap + decay-sweep traffic across the sessions reading
+    /// it.
+    fn install_world_snapshot(&mut self, _snapshot: Arc<WorldSnapshot>, _sharers: usize) {}
 }
 
 /// Exact 3DGS rasterization (no cache). Holds the partially rasterized
@@ -904,6 +933,7 @@ impl PlainRaster {
                 cache_outcomes: None,
                 cache: CacheStats::default(),
                 cache_shared: false,
+                shared_probe_len: 1,
                 swap_bytes: 0,
             },
         }
@@ -1561,6 +1591,7 @@ mod tests {
             cache_outcomes: None,
             cache: CacheStats::default(),
             cache_shared: false,
+            shared_probe_len: 1,
             swap_bytes: 0,
         };
         for (measured, target) in [

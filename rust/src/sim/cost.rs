@@ -84,12 +84,16 @@ pub trait CostModel: Send {
 
     /// Pool-shared cache lookup contention for a frame of `pixels`
     /// lookups — the *structural* cost of sharing (paid warm or cold,
-    /// at any tier; cache hits cannot save it). Implementations add it
-    /// to `raster_cost`/`raster_cost_aggregate` whenever the workload's
+    /// at any tier; cache hits cannot save it). `probe_len` is the
+    /// scope's worst-case probe-chain length (1 for the geometry
+    /// scopes, `pool.world_probe_len` under world scope): each extra
+    /// chain slot is another contended access, so the charge scales
+    /// linearly. Implementations add it to
+    /// `raster_cost`/`raster_cost_aggregate` whenever the workload's
     /// `cache_shared` flag is set, and the admission planner excludes
     /// it from the pool-hit-rate discount. 0 for models that never
     /// price a shared cache (GSCore's variant has no RC).
-    fn shared_lookup_cost_s(&self, _pixels: usize) -> f64 {
+    fn shared_lookup_cost_s(&self, _pixels: usize, _probe_len: u32) -> f64 {
         0.0
     }
 }
@@ -203,7 +207,7 @@ impl CostModel for GpuModel {
             // Cross-session lock contention on the shared cache — a
             // structural charge (independent of the stripped outcome
             // maps), so tier estimates keep paying it.
-            t += CostModel::shared_lookup_cost_s(self, w.pixels());
+            t += CostModel::shared_lookup_cost_s(self, w.pixels(), w.shared_probe_len);
         }
         RasterCost {
             time_s: t,
@@ -222,7 +226,7 @@ impl CostModel for GpuModel {
         let mut t = self.raster_time_s(&agg);
         if a.cache_shared {
             // Same structural contention charge as the exact path.
-            t += CostModel::shared_lookup_cost_s(self, a.width * a.height);
+            t += CostModel::shared_lookup_cost_s(self, a.width * a.height, a.shared_probe_len);
         }
         RasterCost {
             time_s: t,
@@ -238,8 +242,11 @@ impl CostModel for GpuModel {
         self.launch_overhead_s
     }
 
-    fn shared_lookup_cost_s(&self, pixels: usize) -> f64 {
-        GPU_SHARED_LOOKUP_FACTOR * self.rc_overhead_time_s(pixels)
+    fn shared_lookup_cost_s(&self, pixels: usize, probe_len: u32) -> f64 {
+        // Each probe-chain slot is another lock-serialized access, so
+        // the chain bound multiplies the base contention (probe_len = 1
+        // reproduces the geometry-scope charge exactly).
+        f64::from(probe_len.max(1)) * GPU_SHARED_LOOKUP_FACTOR * self.rc_overhead_time_s(pixels)
     }
 }
 
@@ -272,7 +279,7 @@ impl CostModel for LuminCoreSim {
             // structural charge, so it survives the planner's
             // normalized tier estimates and admission pricing consumes
             // it.
-            time_s += CostModel::shared_lookup_cost_s(self, w.pixels());
+            time_s += CostModel::shared_lookup_cost_s(self, w.pixels(), w.shared_probe_len);
         }
         RasterCost { time_s, energy, pe_utilization: frame.pe_utilization }
     }
@@ -286,7 +293,7 @@ impl CostModel for LuminCoreSim {
             // Same structural contention charge as the exact path —
             // both derive it from the pixel count, so the two pricing
             // paths stay in lockstep.
-            time_s += CostModel::shared_lookup_cost_s(self, a.width * a.height);
+            time_s += CostModel::shared_lookup_cost_s(self, a.width * a.height, a.shared_probe_len);
         }
         RasterCost { time_s, energy, pe_utilization: frame.pe_utilization }
     }
@@ -297,8 +304,11 @@ impl CostModel for LuminCoreSim {
         0.1 * GpuModel::xavier_volta().launch_overhead_s
     }
 
-    fn shared_lookup_cost_s(&self, pixels: usize) -> f64 {
-        LuminCoreSim::shared_contention_s(self, pixels as u64)
+    fn shared_lookup_cost_s(&self, pixels: usize, probe_len: u32) -> f64 {
+        // Every chain slot is another arbitration round against the
+        // other sessions' ports (probe_len = 1 reproduces the
+        // geometry-scope charge exactly).
+        f64::from(probe_len.max(1)) * LuminCoreSim::shared_contention_s(self, pixels as u64)
     }
 }
 
@@ -359,6 +369,7 @@ mod tests {
             cache_outcomes: None,
             cache: CacheStats::default(),
             cache_shared: false,
+            shared_probe_len: 1,
             swap_bytes: 0,
         }
     }
@@ -475,13 +486,35 @@ mod tests {
         let w = workload(64 * 64);
         let mut shared = w.clone();
         shared.cache_shared = true;
-        let expect = CostModel::shared_lookup_cost_s(&gpu, 64 * 64);
+        let expect = CostModel::shared_lookup_cost_s(&gpu, 64 * 64, 1);
         assert!(expect > 0.0);
         let d = gpu.raster_cost(&shared).time_s - gpu.raster_cost(&w).time_s;
         assert!((d - expect).abs() < 1e-15, "exact path: {d} vs {expect}");
         let agg_d = gpu.raster_cost_aggregate(&shared.aggregate()).time_s
             - gpu.raster_cost_aggregate(&w.aggregate()).time_s;
         assert!((agg_d - expect).abs() < 1e-15, "aggregate path: {agg_d} vs {expect}");
+    }
+
+    #[test]
+    fn probe_chain_length_multiplies_shared_contention() {
+        // World scope's bounded probing: each chain slot is another
+        // contended access, so the charge is linear in the bound on
+        // both RC-capable models — and probe_len = 1 reproduces the
+        // geometry-scope charge exactly (backward compatibility of the
+        // widened seam).
+        let lc = LuminCoreSim::paper_default();
+        let one = CostModel::shared_lookup_cost_s(&lc, 64 * 64, 1);
+        assert_eq!(one, lc.shared_contention_s((64 * 64) as u64));
+        let three = CostModel::shared_lookup_cost_s(&lc, 64 * 64, 3);
+        assert!((three - 3.0 * one).abs() <= 1e-12 * one, "{three} vs 3x{one}");
+        let gpu = GpuModel::xavier_volta();
+        let one = CostModel::shared_lookup_cost_s(&gpu, 64 * 64, 1);
+        assert_eq!(one, GPU_SHARED_LOOKUP_FACTOR * gpu.rc_overhead_time_s(64 * 64));
+        let three = CostModel::shared_lookup_cost_s(&gpu, 64 * 64, 3);
+        assert!((three - 3.0 * one).abs() <= 1e-12 * one, "{three} vs 3x{one}");
+        // GSCore has no RC: chain length cannot conjure a charge.
+        let gs = GsCoreModel::published();
+        assert_eq!(CostModel::shared_lookup_cost_s(&gs, 64 * 64, 3), 0.0);
     }
 
     #[test]

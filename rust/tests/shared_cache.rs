@@ -185,6 +185,7 @@ fn warm_handoff_prices_late_joiner_with_pool_hit_rate() {
         half_capable: true,
         priority: 1.0,
         cache_shared: true,
+        cache_world: false,
         pool_hit_rate: rate,
         sort_clustered: false,
         sort_sharers: 1,

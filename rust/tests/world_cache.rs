@@ -1,0 +1,254 @@
+//! World-space hash radiance cache: the pool-wide snapshot must stay
+//! bitwise deterministic across thread counts, pipeline depths, both
+//! schedulers, and mid-run `set_tier`/`admit`/`retire`; its keys must
+//! survive the resolution split that partitions geometry-keyed sharing;
+//! and its probe-chain length, decay sweeps, and cross-tier hit-rate
+//! discount must all surface through the admission-pricing seams.
+
+use lumina::config::{CacheScope, HardwareVariant, LuminaConfig, SchedulerMode, Tier};
+use lumina::coordinator::admission::{
+    price_stages, price_workload, SessionDemand, ADMISSION_HEADROOM,
+    SHARED_HIT_RASTER_SAVINGS,
+};
+use lumina::coordinator::{AdmissionController, FrameReport, SessionPool};
+use lumina::lumina::rc::CacheStats;
+use lumina::util::par;
+
+/// Tests that flip the global thread count serialize on this lock so
+/// they cannot race each other inside one test binary.
+static THREAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn world_cfg() -> LuminaConfig {
+    let mut c = LuminaConfig::quick_test();
+    c.scene.count = 4000;
+    c.camera.width = 32;
+    c.camera.height = 32;
+    c.camera.frames = 6;
+    c.pool.epoch_frames = 2;
+    c.variant = HardwareVariant::Lumina;
+    c.pool.cache_scope = CacheScope::World;
+    c
+}
+
+/// A pool of `n` viewers converging on one camera path, staggered by
+/// `stagger` frames — the trailing viewers revisit world cells the pool
+/// has already cached (same workload shape as `tests/shared_cache.rs`,
+/// so the two scopes are compared on one footing).
+fn convergent_pool(cfg: &LuminaConfig, n: usize, stagger: usize) -> SessionPool {
+    SessionPool::builder(cfg.clone()).sessions(n).stagger(stagger).build().unwrap()
+}
+
+#[test]
+fn world_pool_bitwise_deterministic_through_full_lifecycle() {
+    let _lock = lock();
+    // The acceptance contract: a world-scope pool is bitwise identical
+    // across 1/2/4 threads, pipeline depths 1-3, and both schedulers,
+    // through a mid-run demotion + promotion, a late-joiner admit, and
+    // a retire (which drops the departing session's un-merged delta).
+    let run = |threads: usize,
+               depth: usize,
+               scheduler: SchedulerMode|
+     -> Vec<Vec<Vec<FrameReport>>> {
+        par::set_num_threads(threads);
+        let mut cfg = world_cfg();
+        cfg.pool.pipeline_depth = depth;
+        cfg.pool.scheduler = scheduler;
+        let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+        let mut out = Vec::new();
+        out.push(pool.run_epoch(2).unwrap());
+        // Mid-run tier swap: the world snapshot carries no tile
+        // geometry, so the demoted session re-attaches to the *same*
+        // pool snapshot (only its private delta is dropped).
+        pool.set_session_tier(1, Tier::Half).unwrap();
+        out.push(pool.run_epoch(2).unwrap());
+        pool.set_session_tier(1, Tier::Full).unwrap();
+        // A convergent late joiner enters the warm pool...
+        let join_cfg = pool.sessions()[0].cfg.clone();
+        let generous = AdmissionController::new(
+            1e-3,
+            cfg.pool.tiers.clone(),
+            cfg.pool.reduced_fraction,
+        )
+        .unwrap();
+        assert_eq!(pool.admit(join_cfg, &generous).unwrap(), 3);
+        // ...and the first viewer leaves mid-epoch-cycle.
+        out.push(vec![pool.retire(0).unwrap()]);
+        out.push(pool.run_epoch(2).unwrap());
+        out.push(pool.run_epoch(2).unwrap());
+        out.push(pool.run_epoch(2).unwrap());
+        par::set_num_threads(0);
+        out
+    };
+    let reference = run(1, 1, SchedulerMode::Session);
+    for (threads, depth, scheduler) in [
+        (2usize, 1usize, SchedulerMode::Session),
+        (4, 1, SchedulerMode::Session),
+        (1, 2, SchedulerMode::Session),
+        (4, 2, SchedulerMode::Session),
+        (2, 3, SchedulerMode::Session),
+        (1, 1, SchedulerMode::Stealing),
+        (4, 2, SchedulerMode::Stealing),
+        (4, 3, SchedulerMode::Stealing),
+    ] {
+        let got = run(threads, depth, scheduler);
+        assert_eq!(
+            reference,
+            got,
+            "world-scope pool diverged at {threads} threads, depth {depth}, {} scheduler",
+            scheduler.label()
+        );
+    }
+    // The gauntlet really happened: the demoted session served a
+    // half-res epoch and came back full.
+    let tiers: Vec<&str> = reference[1][1].iter().map(|f| f.tier).collect();
+    assert_eq!(tiers, vec!["half", "half"]);
+    let back: Vec<&str> = reference[3][0].iter().map(|f| f.tier).collect();
+    assert_eq!(back, vec!["full", "full"]);
+    // And the sharing is real: cross-session snapshot hits occurred.
+    let snapshot_hits: u64 = reference
+        .iter()
+        .flatten()
+        .flatten()
+        .map(|f| f.cache.snapshot_hits)
+        .sum();
+    assert!(snapshot_hits > 0, "convergent world pool produced no cross-session hits");
+}
+
+#[test]
+fn world_scope_survives_resolution_split_geometry_scope_partitions() {
+    // One session demoted to half-res before the first frame: under the
+    // geometry-keyed scope it bins a different tile grid and can only
+    // hit its own merged entries, while the world scope keeps all three
+    // viewers on one snapshot — the bench gate's `world >= geom_shared`
+    // invariant, asserted end to end.
+    let run = |scope: CacheScope| -> (CacheStats, CacheStats) {
+        let mut cfg = world_cfg();
+        cfg.pool.cache_scope = scope;
+        let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+        pool.set_session_tier(2, Tier::Half).unwrap();
+        let mut pool_stats = CacheStats::default();
+        let mut half_stats = CacheStats::default();
+        for _ in 0..3 {
+            for (i, frames) in pool.run_epoch(2).unwrap().into_iter().enumerate() {
+                for f in frames {
+                    pool_stats.merge(&f.cache);
+                    if i == 2 {
+                        half_stats.merge(&f.cache);
+                    }
+                }
+            }
+        }
+        (pool_stats, half_stats)
+    };
+    let (world, world_half) = run(CacheScope::World);
+    let (geom, geom_half) = run(CacheScope::Shared);
+    assert!(world.lookups > 0 && geom.lookups > 0);
+    assert!(
+        world.hit_rate() >= geom.hit_rate(),
+        "world keys must survive the resolution split: world {:.4} vs geometry-shared {:.4}",
+        world.hit_rate(),
+        geom.hit_rate()
+    );
+    assert!(
+        world_half.snapshot_hits > 0,
+        "the half-res viewer must hit the pool's world entries"
+    );
+    assert!(
+        world_half.snapshot_hits >= geom_half.snapshot_hits,
+        "the half-res viewer must gain from the pool-wide snapshot: \
+         world {} vs geometry-shared {}",
+        world_half.snapshot_hits,
+        geom_half.snapshot_hits
+    );
+    assert!(world.probes_recorded() > 0, "frozen probes must be histogrammed");
+    assert_eq!(geom.probes_recorded(), 0, "geometry scopes never chain");
+}
+
+#[test]
+fn world_decay_provenance_surfaces_in_pool_report() {
+    // Lifetime 1: anything not re-hit in the very next epoch is freed,
+    // so a moving convergent pool must record decay evictions — and the
+    // report/summary must surface them with the probe histogram.
+    let mut cfg = world_cfg();
+    cfg.pool.world_lifetime = 1;
+    let report = convergent_pool(&cfg, 3, cfg.pool.epoch_frames).run().unwrap();
+    assert!(report.decay_evictions > 0, "lifetime-1 pool must decay-evict");
+    assert!(report.cache_stats().probes_recorded() > 0);
+    let s = report.summary();
+    assert!(s.contains("world probe"), "summary: {s}");
+    assert!(s.contains("decayed"), "summary: {s}");
+    // The default lifetime keeps the provenance quiet on the geometry
+    // scopes: a shared-scope pool reports no decay and no chains.
+    let mut geom_cfg = world_cfg();
+    geom_cfg.pool.cache_scope = CacheScope::Shared;
+    let geom_report = convergent_pool(&geom_cfg, 3, geom_cfg.pool.epoch_frames)
+        .run()
+        .unwrap();
+    assert_eq!(geom_report.decay_evictions, 0);
+    assert!(!geom_report.summary().contains("world probe"));
+}
+
+#[test]
+fn world_demands_price_probe_chains_and_keep_discount_across_tiers() {
+    // Pricing seams, end to end: world demands carry scope provenance
+    // and the probe-chain multiplier, and the pool-hit-rate discount
+    // transfers to the geometry-changing half rung — which the
+    // geometry-keyed scope must keep pricing cold.
+    let cfg = world_cfg();
+    let mut pool = convergent_pool(&cfg, 3, cfg.pool.epoch_frames);
+    pool.run_epoch(2).unwrap();
+    pool.run_epoch(2).unwrap();
+    let rate = pool.pool_hit_rate();
+    assert!(rate > 0.0, "convergent epochs must produce an observed hit rate");
+    let demands = pool.probe_demands().unwrap();
+    assert!(
+        demands.iter().all(|d| d.cache_shared && d.cache_world),
+        "world demands must carry both scope flags"
+    );
+    let w = &demands[0].workload;
+    assert_eq!(w.shared_probe_len, cfg.pool.world_probe_len as u32);
+    // Probe chains are priced: a probe-1 twin is strictly cheaper.
+    let mut short = w.clone();
+    short.shared_probe_len = 1;
+    assert!(
+        price_workload(w, cfg.variant) > price_workload(&short, cfg.variant),
+        "the probe-chain bound must multiply the shared-lookup price"
+    );
+
+    // Mirror the planner's exact half-rung arithmetic (depth-1
+    // controller: front + raster) to pick a budget between the warm
+    // (discounted) and cold prices.
+    let est = w.tier_estimate(Tier::Full, Tier::Half, cfg.pool.reduced_fraction);
+    let p = price_stages(&est, cfg.variant);
+    let cold = p.front_s + p.raster_s;
+    let warm = p.front_s
+        + p.discounted_raster_s(1.0 - rate.clamp(0.0, 1.0) * SHARED_HIT_RASTER_SAVINGS);
+    assert!(warm < cold, "the warm discount must bite on the half rung");
+    let target = (1.0 - ADMISSION_HEADROOM) / ((cold + warm) / 2.0);
+    let ctrl =
+        AdmissionController::new(target, vec![Tier::Half], cfg.pool.reduced_fraction)
+            .unwrap();
+    let mk = |cache_world: bool| SessionDemand {
+        workload: w.clone(),
+        tier: Tier::Full,
+        variant: cfg.variant,
+        half_capable: true,
+        priority: 1.0,
+        cache_shared: true,
+        cache_world,
+        pool_hit_rate: rate,
+        sort_clustered: false,
+        sort_sharers: 1,
+        sort_leader: true,
+    };
+    assert!(
+        ctrl.plan(&[mk(false)]).is_err(),
+        "the geometry-keyed scope must price the geometry-changing rung cold"
+    );
+    let plan = ctrl.plan(&[mk(true)]).unwrap();
+    assert_eq!(plan.tiers, vec![Tier::Half], "world keys keep the discount across tiers");
+}

@@ -1,0 +1,41 @@
+//! World-cache delta fixture: the render path probes its hash overlay
+//! point-wise (clean); the epoch merge must walk the insertion-ordered
+//! log, not the hash table — the seeded drain is the one violation.
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+pub struct WorldDelta {
+    overlay: HashMap<u64, [f32; 3]>,
+    touched: Vec<u64>,
+    touched_set: HashSet<u64>,
+}
+
+impl WorldDelta {
+    pub fn lookup(&self, key: u64) -> Option<[f32; 3]> {
+        // Probe-only access never observes hash order: unflagged.
+        self.overlay.get(&key).copied()
+    }
+
+    pub fn touch(&mut self, key: u64) {
+        // `insert` is a probe too: no order observed.
+        if self.touched_set.insert(key) {
+            self.touched.push(key);
+        }
+    }
+
+    pub fn merge_wrong(&mut self, table: &mut BTreeMap<u64, [f32; 3]>) {
+        // Violation: draining the overlay observes hash order.
+        for (k, v) in self.overlay.drain() {
+            table.insert(k, v);
+        }
+    }
+
+    pub fn merge_right(&self, table: &mut BTreeMap<u64, [f32; 3]>) {
+        // The house pattern: replay the insertion-ordered touch log and
+        // probe the overlay per key — bitwise stable at any thread count.
+        for &k in &self.touched {
+            if let Some(v) = self.overlay.get(&k) {
+                table.insert(k, *v);
+            }
+        }
+    }
+}

@@ -71,6 +71,17 @@ fn steal_fixture_allows_scheduler_site_and_trips_unannotated_read() {
     assert_eq!(vs[0].line, 13, "the annotated claiming site above scans clean");
 }
 
+/// The world-cache delta pattern (PR 10): point probes on the hash
+/// overlay and the insertion-ordered log replay scan clean; only the
+/// seeded hash-order drain in the merge trips R1.
+#[test]
+fn world_fixture_probes_clean_and_trips_only_the_merge_drain() {
+    let vs = scan_fixture("world");
+    assert_eq!(vs.len(), 1, "only the drain trips:\n{}", render(&vs));
+    assert_eq!(vs[0].rule, RULE_HASH_ITER);
+    assert_eq!(vs[0].line, 27, "the seeded hash-order drain in merge_wrong");
+}
+
 #[test]
 fn clean_fixture_scans_clean() {
     let vs = scan_fixture("clean");
@@ -79,7 +90,7 @@ fn clean_fixture_scans_clean() {
 
 #[test]
 fn binary_exits_nonzero_on_each_seeded_fixture() {
-    for name in ["r1", "r2", "r3", "r4", "steal"] {
+    for name in ["r1", "r2", "r3", "r4", "steal", "world"] {
         let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
             .arg(fixture(name))
             .output()
